@@ -1,0 +1,50 @@
+//! Distributed data parallelism: worker threads, ring all-reduce,
+//! tensor fusion and the simulated interconnect (§3.3 / Table 8).
+//!
+//! Shows the communication-volume story directly: Eva all-reduces
+//! gradients + O(d) KVs every step; K-FAC moves O(d²) factors on
+//! refresh steps.
+//!
+//! Run: `cargo run --release --example distributed_dp [workers]`
+
+use eva::config::ModelArch;
+use eva::coordinator::{DataParallelCfg, DataParallelTrainer, SimNetwork};
+
+fn main() -> anyhow::Result<()> {
+    let workers: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    println!("== data-parallel training, {workers} workers, simulated 100 Gb/s ring ==\n");
+    for (optimizer, interval) in [("sgd", 1usize), ("eva", 1), ("kfac", 5)] {
+        let mut cfg = DataParallelCfg::new(workers, optimizer);
+        cfg.arch = ModelArch::Classifier { hidden: vec![256, 128] };
+        cfg.steps = 10;
+        cfg.hp.update_interval = interval;
+        cfg.network = SimNetwork::datacenter(workers);
+        let mut trainer = DataParallelTrainer::new(cfg).map_err(anyhow::Error::msg)?;
+        let (grad_b, kv_b, kf_b) = trainer.traffic_summary();
+        let report = trainer.run().map_err(anyhow::Error::msg)?;
+        println!(
+            "{optimizer:>5}@{interval}: loss {:.3}  val acc {:.1}%  throughput {:>7.0} samples/s (sim)",
+            report.final_loss,
+            100.0 * trainer.val_accuracy(),
+            report.throughput
+        );
+        println!(
+            "        comm {:>7.1} KiB/step in {} fused msgs   \
+             (grad {:.1} KiB, KV {:.2} KiB, KF {:.0} KiB)",
+            report.comm_bytes_per_step as f64 / 1024.0,
+            report.messages_per_step,
+            grad_b as f64 / 1024.0,
+            kv_b as f64 / 1024.0,
+            kf_b as f64 / 1024.0
+        );
+        println!(
+            "        sim step: compute {:.2} ms + comm {:.3} ms + precondition {:.2} ms\n",
+            1e3 * report.sim_compute_s,
+            1e3 * report.sim_comm_s,
+            1e3 * report.sim_precond_s
+        );
+    }
+    println!("(note how Eva's KV traffic is negligible next to the gradient itself,");
+    println!(" while K-FAC's factor traffic dwarfs both on refresh steps)");
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Quickstart: train a classifier with Eva and compare against SGD.
+//!
+//! Exercises the public API end to end on the native engine, then — if
+//! `make artifacts` has been run — repeats the Eva run through the
+//! fused PJRT artifact to show both engines agree on the outcome.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use eva::config::{Engine, TrainConfig};
+use eva::train::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    println!("== eva quickstart: c10-small, 41k-param classifier ==\n");
+
+    // --- native engine: SGD vs Eva under the same budget ----------------
+    for optimizer in ["sgd", "eva"] {
+        let mut cfg = TrainConfig::preset("quickstart");
+        cfg.optim.algorithm = optimizer.into();
+        cfg.base_lr = if optimizer == "sgd" { 0.1 } else { 0.05 };
+        cfg.epochs = 4;
+        let mut trainer = Trainer::from_config(&cfg)?;
+        let report = trainer.run()?;
+        println!(
+            "native {optimizer:>4}: best val acc {:.2}%  final loss {:.4}  \
+             mean step {:.2} ms  optimizer state {} KiB",
+            100.0 * report.best_val_acc,
+            report.final_loss,
+            report.mean_step_ms,
+            report.optimizer_state_bytes / 1024
+        );
+    }
+
+    // --- fused PJRT engine (the optimized hot path) -----------------------
+    println!();
+    let mut cfg = TrainConfig::preset("quickstart");
+    cfg.optim.algorithm = "eva".into();
+    cfg.base_lr = 0.05;
+    cfg.epochs = 4;
+    cfg.engine = Engine::Pjrt { model: "quickstart".into() };
+    match Trainer::from_config(&cfg) {
+        Ok(mut trainer) => {
+            let report = trainer.run()?;
+            println!(
+                "pjrt   eva : best val acc {:.2}%  final loss {:.4}  mean step {:.2} ms",
+                100.0 * report.best_val_acc,
+                report.final_loss,
+                report.mean_step_ms
+            );
+            println!("\n(one fused XLA computation per step — fwd, bwd, Pallas Eq.13, KL clip, update)");
+        }
+        Err(e) => {
+            println!("pjrt engine unavailable ({e}); run `make artifacts` first");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,256 @@
+"""AOT export: lower every L2 graph to HLO text + write the manifest.
+
+Interchange format is HLO **text**, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids that the runtime's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --outdir ../artifacts``
+Emitted per model config:
+
+* ``<name>.eva_step.hlo.txt``   -- fused Eva training step (hot path)
+* ``<name>.sgd_step.hlo.txt``   -- fused SGD baseline step
+* ``<name>.fwdbwd_kv.hlo.txt``  -- fwd/bwd with KV capture (for the
+                                   rust-side optimizer zoo)
+* ``<name>.predict.hlo.txt``    -- inference graph (eval/serving)
+
+plus standalone Pallas kernel probes (``kernel.eva*``) used by rust
+integration tests to cross-check PJRT numerics against the native
+implementation, and ``manifest.json`` describing every artifact's
+input/output ordering, shapes and model metadata.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile import steps
+from compile.kernels import eva as kernels
+
+BATCHES = {"quickstart": 64, "ae-small": 64, "e2e": 128}
+
+CONFIGS = {
+    "quickstart": M.ModelCfg.classifier([256, 128, 64, 10]),
+    "ae-small": M.ModelCfg.autoencoder([784, 200, 100, 50, 16, 50, 100, 200, 784]),
+    "e2e": M.ModelCfg.classifier([784, 1024, 1024, 512, 10]),
+}
+
+# Standalone kernel probes: (d_out, d_in) gradient shapes.
+KERNEL_PROBE_SHAPE = (48, 40)
+
+
+def to_hlo_text(lowered) -> str:
+    # compiler_ir(dialect="hlo") converts through XLA's own pipeline and
+    # handles the stablehlo ops emitted by pallas interpret-mode lowering
+    # (dynamic_slice inside the grid loop) that the legacy
+    # mlir_module_to_xla_computation text parser rejects. NOTE: the
+    # entry root is a tuple only when the jitted function has more than
+    # one output; the manifest records the output count so the rust
+    # runtime can unwrap either form.
+    return lowered.compiler_ir(dialect="hlo").as_hlo_text()
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def arr_meta(name, shape):
+    return {"name": name, "shape": list(shape)}
+
+
+def model_io(cfg: M.ModelCfg, batch: int):
+    """Common per-layer array specs."""
+    ll = cfg.num_layers
+    ws = [("w%d" % l, (cfg.dims[l + 1], cfg.dims[l])) for l in range(ll)]
+    bs = [("b%d" % l, (cfg.dims[l + 1],)) for l in range(ll)]
+    a_bars = [("abar%d" % l, (cfg.dims[l],)) for l in range(ll)]
+    b_bars = [("bbar%d" % l, (cfg.dims[l + 1],)) for l in range(ll)]
+    x = ("x", (batch, cfg.dims[0]))
+    y = ("y", (batch, cfg.dims[-1]))
+    return ws, bs, a_bars, b_bars, x, y
+
+
+def lower_graphs(name: str, cfg: M.ModelCfg, batch: int):
+    """Yield (graph_name, lowered, inputs_meta, outputs_meta)."""
+    ll = cfg.num_layers
+    ws, bs, a_bars, b_bars, x, y = model_io(cfg, batch)
+    hp = ("hp", (6,))
+
+    def specs(items):
+        return [spec(s) for _, s in items]
+
+    # --- eva_step ----------------------------------------------------------
+    def eva_fn(*args):
+        i = 0
+        w = list(args[i : i + ll]); i += ll
+        b = list(args[i : i + ll]); i += ll
+        mw = list(args[i : i + ll]); i += ll
+        mb = list(args[i : i + ll]); i += ll
+        ab = list(args[i : i + ll]); i += ll
+        bb = list(args[i : i + ll]); i += ll
+        xx, yy, hpv = args[i], args[i + 1], args[i + 2]
+        out = steps.eva_step(cfg, w, b, mw, mb, ab, bb, xx, yy, hpv)
+        w2, b2, mw2, mb2, ab2, bb2, loss = out
+        return tuple(w2 + b2 + mw2 + mb2 + ab2 + bb2 + [loss])
+
+    mom_w = [("mw%d" % l, s) for (_, s) in ws for l in [0]]  # placeholder
+    mom_w = [("mw%d" % l, ws[l][1]) for l in range(ll)]
+    mom_b = [("mb%d" % l, bs[l][1]) for l in range(ll)]
+    eva_inputs = ws + bs + mom_w + mom_b + a_bars + b_bars + [x, y, hp]
+    eva_outputs = (
+        [("w%d'" % l, ws[l][1]) for l in range(ll)]
+        + [("b%d'" % l, bs[l][1]) for l in range(ll)]
+        + [("mw%d'" % l, ws[l][1]) for l in range(ll)]
+        + [("mb%d'" % l, bs[l][1]) for l in range(ll)]
+        + [("abar%d'" % l, a_bars[l][1]) for l in range(ll)]
+        + [("bbar%d'" % l, b_bars[l][1]) for l in range(ll)]
+        + [("loss", ())]
+    )
+    yield "eva_step", jax.jit(eva_fn).lower(*specs(eva_inputs)), eva_inputs, eva_outputs
+
+    # --- sgd_step ----------------------------------------------------------
+    def sgd_fn(*args):
+        i = 0
+        w = list(args[i : i + ll]); i += ll
+        b = list(args[i : i + ll]); i += ll
+        mw = list(args[i : i + ll]); i += ll
+        mb = list(args[i : i + ll]); i += ll
+        xx, yy, hpv = args[i], args[i + 1], args[i + 2]
+        w2, b2, mw2, mb2, loss = steps.sgd_step(cfg, w, b, mw, mb, xx, yy, hpv)
+        return tuple(w2 + b2 + mw2 + mb2 + [loss])
+
+    sgd_inputs = ws + bs + mom_w + mom_b + [x, y, hp]
+    sgd_outputs = (
+        [("w%d'" % l, ws[l][1]) for l in range(ll)]
+        + [("b%d'" % l, bs[l][1]) for l in range(ll)]
+        + [("mw%d'" % l, ws[l][1]) for l in range(ll)]
+        + [("mb%d'" % l, bs[l][1]) for l in range(ll)]
+        + [("loss", ())]
+    )
+    yield "sgd_step", jax.jit(sgd_fn).lower(*specs(sgd_inputs)), sgd_inputs, sgd_outputs
+
+    # --- fwdbwd_kv ---------------------------------------------------------
+    def fwdbwd_fn(*args):
+        i = 0
+        w = list(args[i : i + ll]); i += ll
+        b = list(args[i : i + ll]); i += ll
+        xx, yy = args[i], args[i + 1]
+        params = list(zip(w, b))
+        loss, wg, bg, am, bm = M.fwd_bwd_kv(cfg, params, xx, yy)
+        return tuple([loss] + wg + bg + am + bm)
+
+    fb_inputs = ws + bs + [x, y]
+    fb_outputs = (
+        [("loss", ())]
+        + [("gw%d" % l, ws[l][1]) for l in range(ll)]
+        + [("gb%d" % l, bs[l][1]) for l in range(ll)]
+        + [("amean%d" % l, a_bars[l][1]) for l in range(ll)]
+        + [("bmean%d" % l, b_bars[l][1]) for l in range(ll)]
+    )
+    yield "fwdbwd_kv", jax.jit(fwdbwd_fn).lower(*specs(fb_inputs)), fb_inputs, fb_outputs
+
+    # --- predict -----------------------------------------------------------
+    def predict_fn(*args):
+        w = list(args[:ll])
+        b = list(args[ll : 2 * ll])
+        xx = args[2 * ll]
+        return (M.predict(cfg, list(zip(w, b)), xx),)
+
+    pr_inputs = ws + bs + [x]
+    pr_outputs = [("out", (batch, cfg.dims[-1]))]
+    yield "predict", jax.jit(predict_fn).lower(*specs(pr_inputs)), pr_inputs, pr_outputs
+
+
+def kernel_probes():
+    """Standalone Pallas kernel artifacts for rust cross-checks."""
+    d_out, d_in = KERNEL_PROBE_SHAPE
+    g = spec((d_out, d_in))
+    a = spec((d_in,))
+    b = spec((d_out,))
+    gamma = spec((1,))
+
+    def eva_fn(gv, av, bv, gm):
+        return (kernels.eva_precondition(gv, av, bv, gm[0]),)
+
+    def eva_f_fn(gv, av, gm):
+        return (kernels.eva_f_precondition(gv, av, gm[0]),)
+
+    def eva_s_fn(gv, gm):
+        return (kernels.eva_s_precondition(gv, gm[0]),)
+
+    out = [("p", (d_out, d_in))]
+    yield (
+        "kernel.eva_precond",
+        jax.jit(eva_fn).lower(g, a, b, gamma),
+        [("g", (d_out, d_in)), ("abar", (d_in,)), ("bbar", (d_out,)), ("gamma", (1,))],
+        out,
+    )
+    yield (
+        "kernel.eva_f_precond",
+        jax.jit(eva_f_fn).lower(g, a, gamma),
+        [("g", (d_out, d_in)), ("abar", (d_in,)), ("gamma", (1,))],
+        out,
+    )
+    yield (
+        "kernel.eva_s_precond",
+        jax.jit(eva_s_fn).lower(g, gamma),
+        [("g", (d_out, d_in)), ("gamma", (1,))],
+        out,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="restrict to one model config")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    manifest = {"artifacts": {}, "models": {}}
+
+    def emit(key, lowered, inputs, outputs, meta=None):
+        text = to_hlo_text(lowered)
+        fname = f"{key}.hlo.txt"
+        with open(os.path.join(args.outdir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][key] = {
+            "file": fname,
+            "inputs": [arr_meta(n, s) for n, s in inputs],
+            "outputs": [arr_meta(n, s) for n, s in outputs],
+        }
+        if meta:
+            manifest["artifacts"][key]["meta"] = meta
+        print(f"  wrote {fname} ({len(text) // 1024} KiB)")
+
+    for name, cfg in CONFIGS.items():
+        if args.only and name != args.only:
+            continue
+        batch = BATCHES[name]
+        print(f"[aot] model '{name}' dims={cfg.dims} batch={batch} "
+              f"params={cfg.num_params():,}")
+        manifest["models"][name] = {
+            "dims": cfg.dims,
+            "loss": cfg.loss,
+            "hidden_act": cfg.hidden_act,
+            "output_act": cfg.output_act,
+            "batch": batch,
+            "num_params": cfg.num_params(),
+        }
+        for gname, lowered, inputs, outputs in lower_graphs(name, cfg, batch):
+            emit(f"{name}.{gname}", lowered, inputs, outputs,
+                 meta={"model": name, "graph": gname})
+
+    print("[aot] kernel probes")
+    for key, lowered, inputs, outputs in kernel_probes():
+        emit(key, lowered, inputs, outputs)
+
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] manifest.json with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,201 @@
+"""Layer-1 Pallas kernels: Eva's rank-one Sherman-Morrison preconditioners.
+
+The paper's per-step hot spot is Eq. 13 (and its Eva-f / Eva-s variants,
+Eq. 21 / Eq. 23): an O(d^2) bilinear form plus an O(d^2) rank-one
+correction over the gradient matrix. Both are expressed here as Pallas
+kernels tiled over row-blocks of G:
+
+* ``bilinear_form``   -- b^T G a via grid accumulation (two-stage
+  reduction: each row-block contributes a partial sum).
+* ``rank1_correct``   -- p = (G - coeff * outer(b, a)) * inv_gamma,
+  streaming G through VMEM one row-block at a time.
+* ``batch_mean``      -- column means over the batch (KV extraction,
+  Eq. 10) with the same row-block streaming.
+
+TPU adaptation (DESIGN.md #Hardware-Adaptation): the row-block size BM
+is the VMEM tile height; on a real TPU each (BM, d_in) block of G plus
+the two vectors fit in VMEM (BM*d_in*4 bytes + 2*d*4), the bilinear form
+feeds the MXU as a (BM, d_in) x (d_in,) matvec, and the correction is a
+VPU elementwise op -- no d x d matrix is ever materialized, which is the
+entire point of the paper. ``interpret=True`` everywhere: the CPU PJRT
+plugin cannot execute Mosaic custom-calls; numerics are validated against
+``ref.py`` by pytest/hypothesis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-block height: VMEM tile. 128 rows x d_in columns of f32; at
+# d_in = 4096 a block is 2 MiB, comfortably inside the ~16 MiB VMEM
+# budget next to the output block and the two KVs.
+#
+# PERF (EXPERIMENTS.md #Perf L1): on the CPU PJRT backend the grid loop
+# lowers (interpret mode) to a fori_loop of dynamic slices that XLA
+# cannot fuse across, costing ~4x on the fused step. Kernels therefore
+# accept bm=None = "one block over all rows" — semantically identical
+# (asserted by the block-size-invariance tests), and the right tiling
+# choice on a backend whose caches replace explicit VMEM staging. On a
+# real TPU one would keep BM at 128 and let Mosaic pipeline the blocks.
+BM = 128
+
+
+def _resolve_bm(bm, rows):
+    if bm is None:
+        return max(_ceil_to(max(rows, 1), 8), 8)
+    return bm
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pad_rows(g, bm):
+    m = g.shape[0]
+    mp = _ceil_to(max(m, 1), bm)
+    if mp != m:
+        g = jnp.pad(g, ((0, mp - m), (0, 0)))
+    return g, m
+
+
+# ---------------------------------------------------------------------------
+# bilinear form  s = b^T G a
+# ---------------------------------------------------------------------------
+
+
+def _bilinear_kernel(g_ref, b_ref, a_ref, acc_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # (BM, d) @ (d,) -> (BM,), then weighted by the b-block: one MXU
+    # matvec + one VPU reduction per block.
+    ga = g_ref[...] @ a_ref[...]
+    acc_ref[...] += jnp.sum(b_ref[...] * ga)
+
+
+def bilinear_form(g, b, a, *, bm=None):
+    """``b^T G a`` for G of shape (d_out, d_in); zero-padding the row
+    dimension is exact because padded b entries are zero."""
+    bm = _resolve_bm(bm, g.shape[0])
+    g, _m = _pad_rows(g, bm)
+    b = jnp.pad(b, (0, g.shape[0] - b.shape[0]))
+    d_in = g.shape[1]
+    grid = (g.shape[0] // bm,)
+    return pl.pallas_call(
+        _bilinear_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((d_in,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((), lambda i: ()),
+        out_shape=jax.ShapeDtypeStruct((), g.dtype),
+        interpret=True,
+    )(g, b, a)
+
+
+# ---------------------------------------------------------------------------
+# rank-one correction  p = (G - coeff * outer(b, a)) * inv_gamma
+# ---------------------------------------------------------------------------
+
+
+def _rank1_kernel(g_ref, b_ref, a_ref, c_ref, o_ref):
+    coeff = c_ref[0]
+    inv_gamma = c_ref[1]
+    o_ref[...] = (g_ref[...] - coeff * b_ref[...][:, None] * a_ref[...][None, :]) * inv_gamma
+
+
+def rank1_correct(g, b, a, coeff, inv_gamma, *, bm=None):
+    """``(G - coeff * b a^T) * inv_gamma`` tiled over row blocks."""
+    bm = _resolve_bm(bm, g.shape[0])
+    gp, m = _pad_rows(g, bm)
+    bp = jnp.pad(b, (0, gp.shape[0] - b.shape[0]))
+    d_in = gp.shape[1]
+    grid = (gp.shape[0] // bm,)
+    scal = jnp.stack([jnp.asarray(coeff, gp.dtype), jnp.asarray(inv_gamma, gp.dtype)])
+    out = pl.pallas_call(
+        _rank1_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((d_in,), lambda i: (0,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, d_in), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(gp.shape, gp.dtype),
+        interpret=True,
+    )(gp, bp, a, scal)
+    return out[:m]
+
+
+# ---------------------------------------------------------------------------
+# batch mean (KV extraction, Eq. 10)
+# ---------------------------------------------------------------------------
+
+
+def _batch_mean_kernel(x_ref, acc_ref, *, inv_n):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.sum(x_ref[...], axis=0) * inv_n
+
+
+def batch_mean(x, *, bm=None):
+    """Column means of an (n, d) batch -- ``mean-col`` in the paper.
+    Zero padding is exact because the divisor is the true n."""
+    n = x.shape[0]
+    bm = _resolve_bm(bm, n)
+    xp, _ = _pad_rows(x, bm)
+    d = xp.shape[1]
+    grid = (xp.shape[0] // bm,)
+    return pl.pallas_call(
+        functools.partial(_batch_mean_kernel, inv_n=1.0 / n),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((d,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), x.dtype),
+        interpret=True,
+    )(xp)
+
+
+# ---------------------------------------------------------------------------
+# Full preconditioners (Eq. 13 / 21 / 23)
+# ---------------------------------------------------------------------------
+
+
+def eva_precondition(g, a_bar, b_bar, gamma):
+    """Eva Eq. 13: ``(1/gamma) (G - (b^T G a)/(gamma + |a|^2 |b|^2) b a^T)``.
+
+    The O(d) dot products stay in jnp (XLA fuses them); both O(d^2)
+    stages run in Pallas.
+    """
+    num = bilinear_form(g, b_bar, a_bar)
+    denom = gamma + jnp.dot(a_bar, a_bar) * jnp.dot(b_bar, b_bar)
+    return rank1_correct(g, b_bar, a_bar, num / denom, 1.0 / gamma)
+
+
+def eva_f_precondition(g, a_bar, gamma):
+    """Eva-f Eq. 21: ``(1/gamma) (G - (G a) a^T / (gamma + a^T a))``."""
+    ga = g @ a_bar  # (d_out,) matvec; MXU-friendly, fused by XLA
+    denom = gamma + jnp.dot(a_bar, a_bar)
+    return rank1_correct(g, ga, a_bar, 1.0 / denom, 1.0 / gamma)
+
+
+def eva_s_precondition(g, gamma):
+    """Eva-s Eq. 23 (matrix case k=2): KVs are the gradient's own
+    row/column means."""
+    v1 = jnp.mean(g, axis=1)
+    v2 = batch_mean(g)  # mean over rows == mean_{-2}
+    num = bilinear_form(g, v1, v2)
+    denom = gamma + jnp.dot(v1, v1) * jnp.dot(v2, v2)
+    return rank1_correct(g, v1, v2, num / denom, 1.0 / gamma)

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every function mirrors one kernel in ``eva.py`` with straight-line
+jax.numpy; pytest/hypothesis assert allclose between the two across
+shape/dtype sweeps. ``*_dense`` variants additionally materialize the
+full damped curvature matrix and invert it -- the expensive path Eva
+replaces -- to validate the Sherman-Morrison algebra end to end.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def bilinear_form_ref(g, b, a):
+    return b @ g @ a
+
+
+def rank1_correct_ref(g, b, a, coeff, inv_gamma):
+    return (g - coeff * jnp.outer(b, a)) * inv_gamma
+
+
+def batch_mean_ref(x):
+    return jnp.mean(x, axis=0)
+
+
+def eva_precondition_ref(g, a_bar, b_bar, gamma):
+    num = b_bar @ g @ a_bar
+    denom = gamma + (a_bar @ a_bar) * (b_bar @ b_bar)
+    return (g - (num / denom) * jnp.outer(b_bar, a_bar)) / gamma
+
+
+def eva_f_precondition_ref(g, a_bar, gamma):
+    denom = gamma + a_bar @ a_bar
+    return (g - jnp.outer(g @ a_bar, a_bar) / denom) / gamma
+
+
+def eva_s_precondition_ref(g, gamma):
+    v1 = jnp.mean(g, axis=1)
+    v2 = jnp.mean(g, axis=0)
+    num = v1 @ g @ v2
+    denom = gamma + (v1 @ v1) * (v2 @ v2)
+    return (g - (num / denom) * jnp.outer(v1, v2)) / gamma
+
+
+# ---------------------------------------------------------------------------
+# Dense ground truth: explicit (C + gamma I)^{-1} g
+# ---------------------------------------------------------------------------
+
+
+def eva_precondition_dense(g, a_bar, b_bar, gamma):
+    """Materialize C = (b (x) a)(b (x) a)^T and solve -- numpy float64."""
+    g = np.asarray(g, np.float64)
+    a = np.asarray(a_bar, np.float64)
+    b = np.asarray(b_bar, np.float64)
+    v = np.kron(b, a)  # row-major flatten of b a^T
+    n = v.size
+    c = np.outer(v, v) + gamma * np.eye(n)
+    p = np.linalg.solve(c, g.reshape(-1))
+    return p.reshape(g.shape)
+
+
+def eva_f_precondition_dense(g, a_bar, gamma):
+    g = np.asarray(g, np.float64)
+    a = np.asarray(a_bar, np.float64)
+    r = np.outer(a, a) + gamma * np.eye(a.size)
+    return g @ np.linalg.inv(r)

@@ -1,0 +1,143 @@
+"""Layer-2 JAX models: MLP family with curvature-statistic capture.
+
+Mirrors the Rust native path (rust/src/nn) exactly — same conventions:
+
+* batch-major activations ``X`` of shape (n, d);
+* ``B_hat`` = per-sample pre-activation gradients of the *per-sample*
+  loss, so the mean weight gradient is ``G = B_hat^T X / n``;
+* KVs: ``a_bar = mean(X, axis=0)``, ``b_bar = mean(B_hat, axis=0)``
+  (paper Eq. 10, computed with the Pallas ``batch_mean`` kernel).
+
+Pre-activation gradients are captured with the zero-probe trick: every
+layer adds a zeros (n, d_out) probe to its pre-activation; the gradient
+w.r.t. the probe is exactly dL/ds, obtained from the same backward pass
+that produces the weight gradients (one fused HLO graph).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import eva as kernels
+
+ACTS = {
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+    "sigmoid": jax.nn.sigmoid,
+    "identity": lambda x: x,
+}
+
+
+class ModelCfg:
+    """Architecture + loss configuration (matches rust MlpSpec)."""
+
+    def __init__(self, dims, hidden_act="relu", output_act="identity", loss="ce"):
+        assert loss in ("ce", "mse")
+        self.dims = list(dims)
+        self.hidden_act = hidden_act
+        self.output_act = output_act
+        self.loss = loss
+
+    @property
+    def num_layers(self):
+        return len(self.dims) - 1
+
+    def act_at(self, layer):
+        return self.output_act if layer + 1 == self.num_layers else self.hidden_act
+
+    @staticmethod
+    def classifier(dims):
+        return ModelCfg(dims, "relu", "identity", "ce")
+
+    @staticmethod
+    def autoencoder(dims):
+        return ModelCfg(dims, "tanh", "sigmoid", "mse")
+
+    def num_params(self):
+        return sum(i * o + o for i, o in zip(self.dims[:-1], self.dims[1:]))
+
+
+def init_params(cfg: ModelCfg, key):
+    """He/Xavier init matching rust nn::Mlp::init conventions."""
+    params = []
+    for l in range(cfg.num_layers):
+        d_in, d_out = cfg.dims[l], cfg.dims[l + 1]
+        key, sub = jax.random.split(key)
+        std = (2.0 / d_in) ** 0.5 if cfg.hidden_act == "relu" else (1.0 / d_in) ** 0.5
+        w = std * jax.random.normal(sub, (d_out, d_in), jnp.float32)
+        b = jnp.zeros((d_out,), jnp.float32)
+        params.append((w, b))
+    return params
+
+
+def forward(cfg: ModelCfg, params, x, probes=None):
+    """Returns (output, activations list). ``activations[l]`` is the
+    input to layer l (A_{l-1} in the paper)."""
+    acts = [x]
+    h = x
+    for l, (w, b) in enumerate(params):
+        s = h @ w.T + b
+        if probes is not None:
+            s = s + probes[l]
+        h = ACTS[cfg.act_at(l)](s)
+        acts.append(h)
+    return h, acts
+
+
+def loss_fn(cfg: ModelCfg, params, probes, x, y_onehot):
+    """Mean loss; aux = layer input activations."""
+    out, acts = forward(cfg, params, x, probes)
+    if cfg.loss == "ce":
+        logp = jax.nn.log_softmax(out, axis=-1)
+        loss = -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+    else:
+        # 0.5 sum over dims, mean over batch; target is the input.
+        loss = 0.5 * jnp.mean(jnp.sum((out - x) ** 2, axis=-1))
+    return loss, acts
+
+
+def zero_probes(cfg: ModelCfg, n):
+    return [jnp.zeros((n, d), jnp.float32) for d in cfg.dims[1:]]
+
+
+def fwd_bwd_kv(cfg: ModelCfg, params, x, y_onehot):
+    """One fused forward+backward with KV capture.
+
+    Returns ``(loss, w_grads, b_grads, a_means, b_means)`` with the
+    exact semantics of rust ``Mlp::forward_backward(.., KvOnly)``:
+
+    * ``w_grads[l]``: mean-loss weight gradient (d_out, d_in)
+    * ``b_grads[l]``: mean-loss bias gradient (d_out,)
+    * ``a_means[l]``: mean input activation over the batch
+    * ``b_means[l]``: sum over the batch of dL_mean/ds (== mean of
+      per-sample-loss pre-activation grads)
+    """
+    probes = zero_probes(cfg, x.shape[0])
+    grad_fn = jax.grad(lambda p, pr: loss_fn(cfg, p, pr, x, y_onehot), argnums=(0, 1), has_aux=True)
+    (param_grads, probe_grads), acts = grad_fn(params, probes)
+    loss, _ = loss_fn(cfg, params, None, x, y_onehot)
+    w_grads = [g[0] for g in param_grads]
+    b_grads = [g[1] for g in param_grads]
+    # Pallas KV extraction (Eq. 10): a over inputs, b over probe grads.
+    a_means = [kernels.batch_mean(acts[l]) for l in range(cfg.num_layers)]
+    b_means = [jnp.sum(pg, axis=0) for pg in probe_grads]
+    return loss, w_grads, b_grads, a_means, b_means
+
+
+def predict(cfg: ModelCfg, params, x):
+    out, _ = forward(cfg, params, x)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Parameter flattening helpers (artifact input/output ordering)
+# ---------------------------------------------------------------------------
+
+
+def flatten_params(params):
+    """Canonical ordering: all weights, then all biases."""
+    return [w for w, _ in params] + [b for _, b in params]
+
+
+def unflatten_params(cfg: ModelCfg, flat):
+    ll = cfg.num_layers
+    return [(flat[l], flat[ll + l]) for l in range(ll)]

@@ -1,0 +1,77 @@
+"""Fused training-step graphs: the optimized hot path (L2 + L1 in one HLO).
+
+``eva_step`` fuses, into a single XLA computation: forward, backward,
+KV running averages (Eq. 14-15), the Pallas Eq. 13 preconditioner per
+layer, global KL clipping (Eq. 16), momentum, weight decay, and the
+parameter update. The Rust coordinator executes this one artifact per
+step -- Python never runs at training time.
+
+``sgd_step`` is the identically-structured first-order baseline so that
+Table 5's "relative iteration time over SGD" can be measured on the
+same runtime.
+
+Input/output orderings are recorded in the manifest by ``aot.py``;
+scalars travel as shape-(1,) f32 arrays (hp = [lr, gamma, xi, kappa,
+momentum, weight_decay]).
+"""
+
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.kernels import eva as kernels
+
+
+def eva_step(cfg: M.ModelCfg, weights, biases, mom_w, mom_b, a_bars, b_bars, x, y_onehot, hp):
+    """One fused Eva training step.
+
+    Args are lists per layer; ``hp`` is a (6,) f32 array
+    [lr, gamma, xi, kappa, momentum, weight_decay].
+    Returns (weights', biases', mom_w', mom_b', a_bars', b_bars', loss).
+    """
+    lr, gamma, xi, kappa, mu, wd = (hp[i] for i in range(6))
+    params = list(zip(weights, biases))
+    loss, w_grads, b_grads, a_news, b_news = M.fwd_bwd_kv(cfg, params, x, y_onehot)
+
+    # Running-average KVs (Eq. 14-15).
+    a_bars2 = [xi * an + (1.0 - xi) * ab for an, ab in zip(a_news, a_bars)]
+    b_bars2 = [xi * bn + (1.0 - xi) * bb for bn, bb in zip(b_news, b_bars)]
+
+    # Weight decay (coupled) then the Pallas Eq. 13 preconditioner.
+    gs = [g + wd * w for g, w in zip(w_grads, weights)]
+    ps = [
+        kernels.eva_precondition(g, ab, bb, gamma)
+        for g, ab, bb in zip(gs, a_bars2, b_bars2)
+    ]
+
+    # KL clipping (Eq. 16) over the weight tensors.
+    pg = sum(jnp.vdot(p, g) for p, g in zip(ps, gs))
+    nu = jnp.minimum(1.0, jnp.sqrt(kappa / jnp.maximum(lr * lr * pg, 1e-30)))
+    ps = [nu * p for p in ps]
+
+    # Momentum on the preconditioned gradient; biases follow plain SGD.
+    mom_w2 = [mu * m + p for m, p in zip(mom_w, ps)]
+    mom_b2 = [mu * m + g for m, g in zip(mom_b, b_grads)]
+    weights2 = [w - lr * m for w, m in zip(weights, mom_w2)]
+    biases2 = [b - lr * m for b, m in zip(biases, mom_b2)]
+    return weights2, biases2, mom_w2, mom_b2, a_bars2, b_bars2, loss
+
+
+def sgd_step(cfg: M.ModelCfg, weights, biases, mom_w, mom_b, x, y_onehot, hp):
+    """Identically-shaped SGD+momentum step (baseline for Table 5)."""
+    lr, _gamma, _xi, _kappa, mu, wd = (hp[i] for i in range(6))
+    params = list(zip(weights, biases))
+    probes = M.zero_probes(cfg, x.shape[0])
+    import jax
+
+    grad_fn = jax.grad(
+        lambda p, pr: M.loss_fn(cfg, p, pr, x, y_onehot), argnums=0, has_aux=True
+    )
+    param_grads, _acts = grad_fn(params, probes)
+    loss, _ = M.loss_fn(cfg, params, None, x, y_onehot)
+    w_grads = [g[0] + wd * w for g, w in zip(param_grads, weights)]
+    b_grads = [g[1] for g in param_grads]
+    mom_w2 = [mu * m + g for m, g in zip(mom_w, w_grads)]
+    mom_b2 = [mu * m + g for m, g in zip(mom_b, b_grads)]
+    weights2 = [w - lr * m for w, m in zip(weights, mom_w2)]
+    biases2 = [b - lr * m for b, m in zip(biases, mom_b2)]
+    return weights2, biases2, mom_w2, mom_b2, loss

@@ -1,0 +1,150 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle + dense algebra.
+
+Hypothesis sweeps shapes (including non-multiples of the block size) and
+dtypes; the dense checks validate the Sherman-Morrison identity against
+an explicit (C + gamma I)^{-1} solve in float64.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import eva as K
+from compile.kernels import ref as R
+
+SHAPES = st.tuples(st.integers(1, 70), st.integers(1, 70))
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=SHAPES, seed=st.integers(0, 2**16))
+def test_bilinear_form_matches_ref(shape, seed):
+    d_out, d_in = shape
+    g = rand(seed, (d_out, d_in))
+    b = rand(seed + 1, (d_out,))
+    a = rand(seed + 2, (d_in,))
+    got = K.bilinear_form(g, b, a, bm=16)
+    want = R.bilinear_form_ref(g, b, a)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=SHAPES, seed=st.integers(0, 2**16),
+       coeff=st.floats(-2.0, 2.0), gamma=st.floats(0.01, 1.0))
+def test_rank1_correct_matches_ref(shape, seed, coeff, gamma):
+    d_out, d_in = shape
+    g = rand(seed, (d_out, d_in))
+    b = rand(seed + 1, (d_out,))
+    a = rand(seed + 2, (d_in,))
+    got = K.rank1_correct(g, b, a, coeff, 1.0 / gamma, bm=16)
+    want = R.rank1_correct_ref(g, b, a, coeff, 1.0 / gamma)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=SHAPES, seed=st.integers(0, 2**16))
+def test_batch_mean_matches_ref(shape, seed):
+    n, d = shape
+    x = rand(seed, (n, d))
+    got = K.batch_mean(x, bm=16)
+    want = R.batch_mean_ref(x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=SHAPES, seed=st.integers(0, 2**16), gamma=st.floats(0.01, 1.0))
+def test_eva_precondition_matches_ref(shape, seed, gamma):
+    d_out, d_in = shape
+    g = rand(seed, (d_out, d_in))
+    a = rand(seed + 1, (d_in,))
+    b = rand(seed + 2, (d_out,))
+    got = K.eva_precondition(g, a, b, gamma)
+    want = R.eva_precondition_ref(g, a, b, gamma)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=SHAPES, seed=st.integers(0, 2**16), gamma=st.floats(0.01, 1.0))
+def test_eva_f_precondition_matches_ref(shape, seed, gamma):
+    d_out, d_in = shape
+    g = rand(seed, (d_out, d_in))
+    a = rand(seed + 1, (d_in,))
+    got = K.eva_f_precondition(g, a, gamma)
+    want = R.eva_f_precondition_ref(g, a, gamma)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=SHAPES, seed=st.integers(0, 2**16), gamma=st.floats(0.01, 1.0))
+def test_eva_s_precondition_matches_ref(shape, seed, gamma):
+    g = rand(seed, shape)
+    got = K.eva_s_precondition(g, gamma)
+    want = R.eva_s_precondition_ref(g, gamma)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# dtype coverage (bf16 runs through the same kernels)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernels_support_dtype(dtype):
+    g = rand(0, (20, 12), jnp.float32).astype(dtype)
+    a = rand(1, (12,), jnp.float32).astype(dtype)
+    b = rand(2, (20,), jnp.float32).astype(dtype)
+    got = K.eva_precondition(g, a, b, 0.1).astype(jnp.float32)
+    want = R.eva_precondition_ref(
+        g.astype(jnp.float32), a.astype(jnp.float32), b.astype(jnp.float32), 0.1
+    )
+    tol = 1e-4 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * np.abs(want).max())
+
+
+# ---------------------------------------------------------------------------
+# Sherman-Morrison algebra vs dense float64 inverse
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape,gamma", [((5, 4), 0.3), ((8, 3), 0.05), ((2, 9), 1.0)])
+def test_eva_matches_dense_inverse(shape, gamma):
+    d_out, d_in = shape
+    g = np.asarray(rand(3, (d_out, d_in)))
+    a = np.asarray(rand(4, (d_in,)))
+    b = np.asarray(rand(5, (d_out,)))
+    fast = np.asarray(K.eva_precondition(jnp.asarray(g), jnp.asarray(a), jnp.asarray(b), gamma))
+    dense = R.eva_precondition_dense(g, a, b, gamma)
+    np.testing.assert_allclose(fast, dense, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("shape,gamma", [((5, 4), 0.3), ((3, 7), 0.05)])
+def test_eva_f_matches_dense_inverse(shape, gamma):
+    d_out, d_in = shape
+    g = np.asarray(rand(6, (d_out, d_in)))
+    a = np.asarray(rand(7, (d_in,)))
+    fast = np.asarray(K.eva_f_precondition(jnp.asarray(g), jnp.asarray(a), gamma))
+    dense = R.eva_f_precondition_dense(g, a, gamma)
+    np.testing.assert_allclose(fast, dense, rtol=1e-3, atol=1e-3)
+
+
+def test_block_size_invariance():
+    """Result must not depend on the VMEM tile height."""
+    g = rand(8, (37, 23))
+    b = rand(9, (37,))
+    a = rand(10, (23,))
+    outs = [np.asarray(K.rank1_correct(g, b, a, 0.7, 2.0, bm=bm)) for bm in (1, 8, 64)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-6)
+    sums = [float(K.bilinear_form(g, b, a, bm=bm)) for bm in (1, 8, 64)]
+    for s in sums[1:]:
+        assert abs(s - sums[0]) < 1e-3 * (1 + abs(sums[0]))

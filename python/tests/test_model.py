@@ -1,0 +1,150 @@
+"""L2 correctness: model fwd/bwd + statistic capture semantics.
+
+The strongest check: ``b_means`` from the fused probe-gradient trick
+must equal the mean of *per-sample* pre-activation gradients computed
+independently with a vmap'd per-sample jax.grad.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import steps
+
+
+def onehot(labels, c):
+    return jax.nn.one_hot(jnp.asarray(labels), c, dtype=jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = M.ModelCfg.classifier([6, 8, 4])
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 6), jnp.float32)
+    y = onehot([0, 1, 2, 3, 0], 4)
+    return cfg, params, x, y
+
+
+def test_forward_shapes(tiny):
+    cfg, params, x, _ = tiny
+    out, acts = M.forward(cfg, params, x)
+    assert out.shape == (5, 4)
+    assert len(acts) == cfg.num_layers + 1
+    assert acts[0].shape == (5, 6)
+
+
+def test_weight_grads_match_jax_grad(tiny):
+    cfg, params, x, y = tiny
+    loss, wg, bg, _, _ = M.fwd_bwd_kv(cfg, params, x, y)
+    ref = jax.grad(lambda p: M.loss_fn(cfg, p, None, x, y)[0])(params)
+    for l in range(cfg.num_layers):
+        np.testing.assert_allclose(wg[l], ref[l][0], rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(bg[l], ref[l][1], rtol=1e-5, atol=1e-6)
+    ref_loss = M.loss_fn(cfg, params, None, x, y)[0]
+    np.testing.assert_allclose(loss, ref_loss, rtol=1e-6)
+
+
+def test_b_means_equal_vmapped_per_sample_grads(tiny):
+    cfg, params, x, y = tiny
+
+    def per_sample_probe_grads(xi, yi):
+        """Per-sample-loss grads w.r.t. each layer's pre-activation."""
+        probes = M.zero_probes(cfg, 1)
+        g = jax.grad(
+            lambda pr: M.loss_fn(cfg, params, pr, xi[None, :], yi[None, :])[0]
+        )(probes)
+        return [gi[0] for gi in g]
+
+    _, _, _, a_means, b_means = M.fwd_bwd_kv(cfg, params, x, y)
+    per = jax.vmap(per_sample_probe_grads)(x, y)
+    for l in range(cfg.num_layers):
+        want = jnp.mean(per[l], axis=0)
+        np.testing.assert_allclose(b_means[l], want, rtol=1e-4, atol=1e-6)
+    # a_means == column means of the layer inputs.
+    _, acts = M.forward(cfg, params, x)
+    for l in range(cfg.num_layers):
+        np.testing.assert_allclose(a_means[l], jnp.mean(acts[l], axis=0), rtol=1e-5, atol=1e-6)
+
+
+def test_single_sample_gradient_is_outer_product(tiny):
+    """G == b_bar a_bar^T for n = 1 — the Eva rank-one identity."""
+    cfg, params, _, _ = tiny
+    x = jax.random.normal(jax.random.PRNGKey(7), (1, 6), jnp.float32)
+    y = onehot([2], 4)
+    _, wg, _, a_means, b_means = M.fwd_bwd_kv(cfg, params, x, y)
+    for l in range(cfg.num_layers):
+        np.testing.assert_allclose(
+            wg[l], jnp.outer(b_means[l], a_means[l]), rtol=1e-4, atol=1e-5
+        )
+
+
+def test_mse_autoencoder_grads():
+    cfg = M.ModelCfg.autoencoder([5, 7, 3, 7, 5])
+    params = M.init_params(cfg, jax.random.PRNGKey(3))
+    x = jax.random.uniform(jax.random.PRNGKey(4), (4, 5), jnp.float32)
+    y = jnp.zeros((4, 5), jnp.float32)  # ignored by mse
+    loss, wg, _, _, _ = M.fwd_bwd_kv(cfg, params, x, y)
+    ref = jax.grad(lambda p: M.loss_fn(cfg, p, None, x, y)[0])(params)
+    for l in range(cfg.num_layers):
+        np.testing.assert_allclose(wg[l], ref[l][0], rtol=1e-4, atol=1e-6)
+    assert float(loss) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# fused steps
+# ---------------------------------------------------------------------------
+
+
+def hp_vec(lr=0.1, gamma=0.03, xi=1.0, kappa=1e9, mu=0.0, wd=0.0):
+    return jnp.asarray([lr, gamma, xi, kappa, mu, wd], jnp.float32)
+
+
+def test_sgd_step_matches_manual(tiny):
+    cfg, params, x, y = tiny
+    ws = [w for w, _ in params]
+    bs = [b for _, b in params]
+    zw = [jnp.zeros_like(w) for w in ws]
+    zb = [jnp.zeros_like(b) for b in bs]
+    w2, b2, _, _, loss = steps.sgd_step(cfg, ws, bs, zw, zb, x, y, hp_vec())
+    ref = jax.grad(lambda p: M.loss_fn(cfg, p, None, x, y)[0])(params)
+    for l in range(cfg.num_layers):
+        np.testing.assert_allclose(w2[l], ws[l] - 0.1 * ref[l][0], rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(b2[l], bs[l] - 0.1 * ref[l][1], rtol=1e-5, atol=1e-6)
+    assert float(loss) > 0.0
+
+
+def test_eva_step_reduces_loss(tiny):
+    cfg, params, x, y = tiny
+    ws = [w for w, _ in params]
+    bs = [b for _, b in params]
+    zw = [jnp.zeros_like(w) for w in ws]
+    zb = [jnp.zeros_like(b) for b in bs]
+    ab = [jnp.zeros((d,), jnp.float32) for d in cfg.dims[:-1]]
+    bb = [jnp.zeros((d,), jnp.float32) for d in cfg.dims[1:]]
+    hp = hp_vec(lr=0.05, gamma=0.1, xi=1.0, kappa=1e-3, mu=0.9)
+    state = (ws, bs, zw, zb, ab, bb)
+    losses = []
+    step = jax.jit(lambda *a: steps.eva_step(cfg, *a[:6], x, y, hp))
+    for _ in range(30):
+        *state, loss = step(*state)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses[::10]
+
+
+def test_eva_step_updates_running_kvs(tiny):
+    cfg, params, x, y = tiny
+    ws = [w for w, _ in params]
+    bs = [b for _, b in params]
+    zw = [jnp.zeros_like(w) for w in ws]
+    zb = [jnp.zeros_like(b) for b in bs]
+    ab = [jnp.zeros((d,), jnp.float32) for d in cfg.dims[:-1]]
+    bb = [jnp.zeros((d,), jnp.float32) for d in cfg.dims[1:]]
+    # xi = 0.25: new state must be 0.25 * fresh KV.
+    hp = hp_vec(xi=0.25)
+    out = steps.eva_step(cfg, ws, bs, zw, zb, ab, bb, x, y, hp)
+    ab2 = out[4]
+    _, _, _, a_means, _ = M.fwd_bwd_kv(cfg, params, x, y)
+    for l in range(cfg.num_layers):
+        np.testing.assert_allclose(ab2[l], 0.25 * a_means[l], rtol=1e-5, atol=1e-6)

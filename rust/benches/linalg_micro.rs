@@ -1,0 +1,63 @@
+//! Microbenchmarks for the linear-algebra substrate (used to track the
+//! §Perf iteration log in EXPERIMENTS.md).
+//!
+//! Run: `cargo bench --bench linalg_micro`
+
+use std::time::Instant;
+
+use eva::linalg::{damped_inverse, eigh_jacobi, spd_power};
+use eva::rng::Pcg64;
+use eva::tensor::{matmul, matmul_a_bt, matmul_at_b, Tensor};
+
+fn random(rng: &mut Pcg64, r: usize, c: usize) -> Tensor {
+    let mut t = Tensor::zeros(r, c);
+    rng.fill_normal(t.data_mut(), 1.0);
+    t
+}
+
+fn time(label: &str, flops: f64, mut f: impl FnMut()) {
+    // Warmup + measure.
+    f();
+    let reps = 3;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    let s = t0.elapsed().as_secs_f64() / reps as f64;
+    println!("{label:<28} {:>9.3} ms   {:>7.2} GFLOP/s", s * 1e3, flops / s / 1e9);
+}
+
+fn main() {
+    let mut rng = Pcg64::seeded(1);
+    for n in [128usize, 256, 512] {
+        let a = random(&mut rng, n, n);
+        let b = random(&mut rng, n, n);
+        let fl = 2.0 * (n as f64).powi(3);
+        time(&format!("matmul {n}x{n}"), fl, || {
+            std::hint::black_box(matmul(&a, &b));
+        });
+        time(&format!("matmul_at_b {n}x{n}"), fl, || {
+            std::hint::black_box(matmul_at_b(&a, &b));
+        });
+        time(&format!("matmul_a_bt {n}x{n}"), fl, || {
+            std::hint::black_box(matmul_a_bt(&a, &b));
+        });
+    }
+    for n in [64usize, 128, 256] {
+        let x = random(&mut rng, n, 2 * n);
+        let mut spd = matmul_a_bt(&x, &x);
+        spd.scale(1.0 / (2 * n) as f32);
+        spd.add_diag(0.05);
+        time(&format!("damped_inverse {n}"), (n as f64).powi(3) / 3.0, || {
+            std::hint::black_box(damped_inverse(&spd, 0.03).unwrap());
+        });
+        if n <= 128 {
+            time(&format!("eigh_jacobi {n}"), 8.0 * (n as f64).powi(3), || {
+                std::hint::black_box(eigh_jacobi(&spd, 30));
+            });
+            time(&format!("spd_power -1/4 {n}"), 10.0 * (n as f64).powi(3), || {
+                std::hint::black_box(spd_power(&spd, 0.03, -0.25));
+            });
+        }
+    }
+}

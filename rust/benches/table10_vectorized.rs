@@ -1,0 +1,34 @@
+//! Bench: Table 10 — Eva-f / Eva-s per-update cost against their
+//! un-vectorized originals (FOOF / Shampoo) across layer dims.
+//!
+//! Run: `cargo bench --bench table10_vectorized`
+
+fn main() -> anyhow::Result<()> {
+    println!("bench table10_vectorized — per-update ms for one (d,d) layer");
+    println!(
+        "{:<10} {:>10} {:>10} {:>10}",
+        "optimizer", "d=64", "d=128", "d=256"
+    );
+    let dims = [64usize, 128, 256];
+    let mut base: Vec<f64> = Vec::new();
+    for opt in ["foof", "eva-f", "shampoo", "eva-s"] {
+        let mut cells = Vec::new();
+        let mut row = Vec::new();
+        for &d in &dims {
+            let reps = if matches!(opt, "foof" | "shampoo") && d >= 128 { 2 } else { 5 };
+            let (t, _) = eva::exp::complexity::measure(opt, d, reps)?;
+            row.push(t);
+            cells.push(format!("{:>10.4}", t * 1e3));
+        }
+        if opt == "foof" || opt == "shampoo" {
+            base = row.clone();
+            println!("{:<10} {}", opt, cells.join(" "));
+        } else {
+            let speedups: Vec<String> =
+                row.iter().zip(&base).map(|(v, b)| format!("{:.0}x", b / v)).collect();
+            println!("{:<10} {}   (speedup {} )", opt, cells.join(" "), speedups.join("/"));
+        }
+    }
+    println!("\n(vectorization should win by growing factors as d grows — O(d³) → O(d²))");
+    Ok(())
+}

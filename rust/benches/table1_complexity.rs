@@ -1,0 +1,21 @@
+//! Bench: Table 1 — per-update time of each second-order algorithm vs
+//! layer dimension (hand-rolled harness; no criterion offline).
+//!
+//! Run: `cargo bench --bench table1_complexity`
+
+fn main() -> anyhow::Result<()> {
+    println!("bench table1_complexity — per-update seconds for one (d,d) layer");
+    println!("{:<10} {:>10} {:>10} {:>10} {:>10}", "optimizer", "d=32", "d=64", "d=128", "d=256");
+    let dims = [32usize, 64, 128, 256];
+    for opt in ["eva", "eva-f", "eva-s", "foof", "kfac", "shampoo", "mfac"] {
+        let mut cells = Vec::new();
+        for &d in &dims {
+            let reps = if matches!(opt, "kfac" | "shampoo" | "foof") && d >= 128 { 2 } else { 5 };
+            let (t, _m) = eva::exp::complexity::measure(opt, d, reps)?;
+            cells.push(format!("{:>10.4}", t * 1e3));
+        }
+        println!("{:<10} {} (ms)", opt, cells.join(" "));
+    }
+    println!("\nfitted log-log slopes are printed by `eva experiment table1`");
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Bench: Table 5 — end-to-end per-iteration time of each optimizer on
+//! a full model step (fwd + bwd + stats + preconditioning + update),
+//! reported relative to SGD. Also times the fused PJRT Eva step when
+//! artifacts are present.
+//!
+//! Run: `cargo bench --bench table5_iter_time`
+
+use std::time::Instant;
+
+use eva::config::{Engine, LrSchedule, ModelArch, OptimConfig, TrainConfig};
+use eva::optim::HyperParams;
+use eva::train::Trainer;
+
+fn mean_step_ms(optimizer: &str, interval: usize, engine: Engine) -> anyhow::Result<f64> {
+    let mut hp = HyperParams::default();
+    hp.update_interval = interval;
+    hp.mfac_history = 8;
+    let cfg = TrainConfig {
+        name: "bench".into(),
+        dataset: "c10-small".into(),
+        seed: 3,
+        arch: ModelArch::Classifier { hidden: vec![256, 128] },
+        optim: OptimConfig { algorithm: optimizer.into(), hp },
+        engine,
+        epochs: 1,
+        batch_size: 64,
+        base_lr: 0.05,
+        lr_schedule: LrSchedule::Constant,
+        warmup_steps: 0,
+        max_steps: Some(15),
+        eval_every: 1,
+    };
+    let mut t = Trainer::from_config(&cfg)?;
+    let _warm = t.run()?; // includes compile/alloc warmup inside
+    // Re-run fresh for steady-state measurement.
+    let mut t = Trainer::from_config(&cfg)?;
+    let t0 = Instant::now();
+    let r = t.run()?;
+    Ok(t0.elapsed().as_secs_f64() * 1e3 / r.steps as f64)
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("bench table5_iter_time — ms/step on c10-small [256,128] classifier, batch 64");
+    let sgd = mean_step_ms("sgd", 1, Engine::Native)?;
+    println!("{:<16} {:>8.2} ms   {:>6.2}x", "sgd", sgd, 1.0);
+    for (opt, interval) in [
+        ("eva", 1usize),
+        ("eva-f", 1),
+        ("eva-s", 1),
+        ("kfac", 1),
+        ("kfac", 10),
+        ("foof", 1),
+        ("shampoo", 1),
+        ("shampoo", 10),
+        ("mfac", 1),
+    ] {
+        let ms = mean_step_ms(opt, interval, Engine::Native)?;
+        println!("{:<16} {:>8.2} ms   {:>6.2}x", format!("{opt}@{interval}"), ms, ms / sgd);
+    }
+    // Fused PJRT path (eva + sgd) if artifacts exist.
+    if let Ok(ms) = mean_step_ms("sgd", 1, Engine::Pjrt { model: "quickstart".into() }) {
+        let eva_ms = mean_step_ms("eva", 1, Engine::Pjrt { model: "quickstart".into() })?;
+        println!("{:<16} {:>8.2} ms   (pjrt fused sgd baseline)", "pjrt sgd", ms);
+        println!("{:<16} {:>8.2} ms   {:>6.2}x vs pjrt sgd", "pjrt eva", eva_ms, eva_ms / ms);
+    } else {
+        println!("(pjrt rows skipped — run `make artifacts`)");
+    }
+    Ok(())
+}

@@ -1,0 +1,127 @@
+//! Command-line parsing (substrate; no clap offline).
+//!
+//! Grammar: `eva <command> [positional] [--key value | --flag]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed invocation.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Cli {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Cli {
+    /// Parse an argv (without the program name).
+    pub fn parse(args: &[String]) -> Result<Cli, String> {
+        let mut cli = Cli::default();
+        let mut it = args.iter().peekable();
+        if let Some(cmd) = it.next() {
+            cli.command = cmd.clone();
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    cli.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                    cli.options.insert(name.to_string(), it.next().unwrap().clone());
+                } else {
+                    cli.flags.push(name.to_string());
+                }
+            } else {
+                cli.positional.push(a.clone());
+            }
+        }
+        Ok(cli)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_f32(&self, key: &str) -> Result<Option<f32>, String> {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(s) => s.parse().map(Some).map_err(|_| format!("--{key}: bad number '{s}'")),
+        }
+    }
+
+    pub fn opt_usize(&self, key: &str) -> Result<Option<usize>, String> {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(s) => s.parse().map(Some).map_err(|_| format!("--{key}: bad integer '{s}'")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+pub const USAGE: &str = "\
+eva — vectorized second-order optimization (paper reproduction)
+
+USAGE:
+  eva train [--config FILE | --preset NAME] [--optimizer ALG] [--dataset D]
+            [--epochs N] [--lr F] [--batch N] [--seed N] [--engine native|pjrt:MODEL]
+            [--interval N] [--damping F] [--max-steps N]
+  eva experiment <id|all>     regenerate a paper table/figure (see DESIGN.md §5)
+  eva validate                cross-check PJRT artifacts vs native numerics
+  eva list                    list datasets, optimizers, experiments, artifacts
+  eva info                    runtime + manifest summary
+
+EXAMPLES:
+  eva train --preset quickstart --optimizer eva
+  eva train --dataset c100-small --optimizer kfac --interval 10 --epochs 8
+  eva train --engine pjrt:quickstart --optimizer eva --epochs 4
+  eva experiment table5
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_command_options_flags() {
+        // NOTE: a trailing non-dashed token after `--name` binds as its
+        // value (option-vs-flag is positional, like most getopt-style
+        // parsers) — so positionals come before flags here.
+        let c = Cli::parse(&argv("train pos1 --optimizer eva --epochs 3 --verbose")).unwrap();
+        assert_eq!(c.command, "train");
+        assert_eq!(c.opt("optimizer"), Some("eva"));
+        assert_eq!(c.opt_usize("epochs").unwrap(), Some(3));
+        assert!(c.has_flag("verbose"));
+        assert_eq!(c.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let c = Cli::parse(&argv("train --lr=0.05")).unwrap();
+        assert_eq!(c.opt_f32("lr").unwrap(), Some(0.05));
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let c = Cli::parse(&argv("train --lr abc")).unwrap();
+        assert!(c.opt_f32("lr").is_err());
+    }
+
+    #[test]
+    fn empty_args() {
+        let c = Cli::parse(&[]).unwrap();
+        assert_eq!(c.command, "");
+    }
+}

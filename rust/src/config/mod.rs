@@ -1,0 +1,292 @@
+//! Typed configuration + presets + JSON loading (the "config system").
+//!
+//! A [`TrainConfig`] fully determines a training run: dataset, model
+//! architecture, optimizer + hyper-parameters, schedule, engine
+//! (native Rust fwd/bwd or the fused PJRT artifact), and seed. Configs
+//! load from JSON files (`eva train --config cfg.json`), from named
+//! presets, or are built programmatically; every experiment in
+//! `exp/` is expressed as a set of `TrainConfig`s.
+
+use crate::jsonx::Json;
+use crate::nn::MlpSpec;
+use crate::optim::HyperParams;
+
+/// Model architecture selection.
+#[derive(Clone, Debug)]
+pub enum ModelArch {
+    /// ReLU classifier with the given hidden dims.
+    Classifier { hidden: Vec<usize> },
+    /// The paper's §5.1 autoencoder (hidden [1000,500,250,30,…]).
+    Autoencoder,
+    /// Reduced autoencoder for fast experiments.
+    AutoencoderSmall,
+}
+
+impl ModelArch {
+    /// Resolve to a concrete spec given the dataset's shape.
+    pub fn to_spec(&self, input_dim: usize, num_classes: usize) -> MlpSpec {
+        match self {
+            ModelArch::Classifier { hidden } => {
+                let mut dims = vec![input_dim];
+                dims.extend_from_slice(hidden);
+                dims.push(num_classes);
+                MlpSpec::classifier(dims)
+            }
+            ModelArch::Autoencoder => MlpSpec::autoencoder(input_dim),
+            ModelArch::AutoencoderSmall => MlpSpec::autoencoder_small(input_dim),
+        }
+    }
+}
+
+/// Optimizer selection + hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct OptimConfig {
+    /// One of the `optim::by_name` algorithms.
+    pub algorithm: String,
+    pub hp: HyperParams,
+}
+
+impl Default for OptimConfig {
+    fn default() -> Self {
+        OptimConfig { algorithm: "eva".into(), hp: HyperParams::default() }
+    }
+}
+
+/// Learning-rate schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LrSchedule {
+    Constant,
+    /// Cosine decay to zero over the run.
+    Cosine,
+    /// Linear decay to zero (the paper's autoencoder setup).
+    Linear,
+    /// Step decay ×0.1 at 50% and 75% (the paper's Cifar setup).
+    Step,
+}
+
+impl LrSchedule {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "constant" | "const" => Ok(LrSchedule::Constant),
+            "cosine" => Ok(LrSchedule::Cosine),
+            "linear" => Ok(LrSchedule::Linear),
+            "step" => Ok(LrSchedule::Step),
+            other => Err(format!("unknown lr schedule '{other}'")),
+        }
+    }
+
+    /// LR at `step` of `total` with `warmup` steps of linear ramp.
+    pub fn lr_at(&self, base: f32, step: u64, total: u64, warmup: u64) -> f32 {
+        if warmup > 0 && step < warmup {
+            return base * (step + 1) as f32 / warmup as f32;
+        }
+        let t = ((step.saturating_sub(warmup)) as f32
+            / (total.saturating_sub(warmup)).max(1) as f32)
+            .clamp(0.0, 1.0);
+        match self {
+            LrSchedule::Constant => base,
+            LrSchedule::Cosine => base * 0.5 * (1.0 + (std::f32::consts::PI * t).cos()),
+            LrSchedule::Linear => base * (1.0 - t),
+            LrSchedule::Step => {
+                if t < 0.5 {
+                    base
+                } else if t < 0.75 {
+                    base * 0.1
+                } else {
+                    base * 0.01
+                }
+            }
+        }
+    }
+}
+
+/// Which execution engine drives fwd/bwd.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// Native Rust fwd/bwd + the optimizer zoo (works for every
+    /// algorithm; used by the experiment harness).
+    Native,
+    /// Fused PJRT artifact (`eva_step`/`sgd_step`) — the optimized hot
+    /// path; `model` is the manifest model name.
+    Pjrt { model: String },
+}
+
+/// A fully-specified training run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub name: String,
+    pub dataset: String,
+    pub seed: u64,
+    pub arch: ModelArch,
+    pub optim: OptimConfig,
+    pub engine: Engine,
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub base_lr: f32,
+    pub lr_schedule: LrSchedule,
+    pub warmup_steps: u64,
+    /// Optional hard cap on optimizer steps (overrides epochs if set).
+    pub max_steps: Option<u64>,
+    /// Evaluate on the validation split every N epochs (0 = only at end).
+    pub eval_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            name: "run".into(),
+            dataset: "c10-small".into(),
+            seed: 42,
+            arch: ModelArch::Classifier { hidden: vec![128, 64] },
+            optim: OptimConfig::default(),
+            engine: Engine::Native,
+            epochs: 10,
+            batch_size: 64,
+            base_lr: 0.1,
+            lr_schedule: LrSchedule::Cosine,
+            warmup_steps: 0,
+            max_steps: None,
+            eval_every: 1,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Named presets used by examples and docs.
+    pub fn preset(name: &str) -> Self {
+        let mut c = TrainConfig { name: name.into(), ..TrainConfig::default() };
+        match name {
+            "quickstart" => {
+                c.epochs = 6;
+                c.base_lr = 0.05;
+            }
+            "ae-quick" => {
+                c.dataset = "mnist-like".into();
+                c.arch = ModelArch::AutoencoderSmall;
+                c.epochs = 4;
+                c.base_lr = 0.05;
+                c.lr_schedule = LrSchedule::Linear;
+                c.optim.hp.weight_decay = 0.0;
+            }
+            "c100-bench" => {
+                c.dataset = "c100-small".into();
+                c.arch = ModelArch::Classifier { hidden: vec![256, 128, 64] };
+                c.epochs = 20;
+            }
+            _ => {}
+        }
+        c
+    }
+
+    /// Parse a JSON config. Unknown fields are rejected to catch typos.
+    pub fn from_json(text: &str) -> Result<Self, String> {
+        let v = Json::parse(text)?;
+        let obj = v.as_obj().ok_or("config must be an object")?;
+        let mut c = TrainConfig::default();
+        for (k, val) in obj {
+            match k.as_str() {
+                "name" => c.name = val.as_str().ok_or("name: string")?.to_string(),
+                "dataset" => c.dataset = val.as_str().ok_or("dataset: string")?.to_string(),
+                "seed" => c.seed = val.as_f64().ok_or("seed: number")? as u64,
+                "epochs" => c.epochs = val.as_usize().ok_or("epochs: number")?,
+                "batch_size" => c.batch_size = val.as_usize().ok_or("batch_size: number")?,
+                "base_lr" => c.base_lr = val.as_f64().ok_or("base_lr: number")? as f32,
+                "warmup_steps" => c.warmup_steps = val.as_f64().ok_or("warmup")? as u64,
+                "max_steps" => c.max_steps = Some(val.as_f64().ok_or("max_steps")? as u64),
+                "eval_every" => c.eval_every = val.as_usize().ok_or("eval_every")?,
+                "lr_schedule" => {
+                    c.lr_schedule = LrSchedule::parse(val.as_str().ok_or("lr_schedule")?)?
+                }
+                "engine" => match val.as_str().ok_or("engine: string")? {
+                    "native" => c.engine = Engine::Native,
+                    s if s.starts_with("pjrt:") => {
+                        c.engine = Engine::Pjrt { model: s[5..].to_string() }
+                    }
+                    other => return Err(format!("unknown engine '{other}'")),
+                },
+                "arch" => {
+                    let s = val.as_str().ok_or("arch: string")?;
+                    c.arch = match s {
+                        "autoencoder" => ModelArch::Autoencoder,
+                        "autoencoder-small" => ModelArch::AutoencoderSmall,
+                        _ => return Err(format!("unknown arch '{s}' (use 'hidden' for classifiers)")),
+                    };
+                }
+                "hidden" => {
+                    let dims = val
+                        .as_arr()
+                        .ok_or("hidden: array")?
+                        .iter()
+                        .filter_map(|d| d.as_usize())
+                        .collect();
+                    c.arch = ModelArch::Classifier { hidden: dims };
+                }
+                "optimizer" => c.optim.algorithm = val.as_str().ok_or("optimizer")?.to_string(),
+                "momentum" => c.optim.hp.momentum = val.as_f64().ok_or("momentum")? as f32,
+                "weight_decay" => c.optim.hp.weight_decay = val.as_f64().ok_or("wd")? as f32,
+                "damping" => c.optim.hp.damping = val.as_f64().ok_or("damping")? as f32,
+                "running_avg" => c.optim.hp.running_avg = val.as_f64().ok_or("ra")? as f32,
+                "kl_clip" => c.optim.hp.kl_clip = val.as_f64().ok_or("kl_clip")? as f32,
+                "update_interval" => {
+                    c.optim.hp.update_interval = val.as_usize().ok_or("interval")?
+                }
+                "mfac_history" => c.optim.hp.mfac_history = val.as_usize().ok_or("mfac")?,
+                other => return Err(format!("unknown config key '{other}'")),
+            }
+        }
+        Ok(c)
+    }
+
+    /// Load from a JSON file.
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::from_json(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        for p in ["quickstart", "ae-quick", "c100-bench"] {
+            let c = TrainConfig::preset(p);
+            assert_eq!(c.name, p);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_core_fields() {
+        let c = TrainConfig::from_json(
+            r#"{"name": "t", "dataset": "c10-small", "optimizer": "kfac",
+                "epochs": 3, "base_lr": 0.2, "lr_schedule": "step",
+                "hidden": [32, 16], "update_interval": 10,
+                "engine": "pjrt:quickstart"}"#,
+        )
+        .unwrap();
+        assert_eq!(c.optim.algorithm, "kfac");
+        assert_eq!(c.optim.hp.update_interval, 10);
+        assert_eq!(c.lr_schedule, LrSchedule::Step);
+        assert!(matches!(c.engine, Engine::Pjrt { ref model } if model == "quickstart"));
+        assert!(matches!(c.arch, ModelArch::Classifier { ref hidden } if hidden == &[32, 16]));
+    }
+
+    #[test]
+    fn json_rejects_unknown_keys() {
+        assert!(TrainConfig::from_json(r#"{"learning_rate": 0.1}"#).is_err());
+    }
+
+    #[test]
+    fn schedules_shapes() {
+        let base = 1.0;
+        assert_eq!(LrSchedule::Constant.lr_at(base, 50, 100, 0), 1.0);
+        assert!(LrSchedule::Cosine.lr_at(base, 99, 100, 0) < 0.01);
+        assert!((LrSchedule::Linear.lr_at(base, 50, 100, 0) - 0.5).abs() < 0.02);
+        assert_eq!(LrSchedule::Step.lr_at(base, 10, 100, 0), 1.0);
+        assert!((LrSchedule::Step.lr_at(base, 60, 100, 0) - 0.1).abs() < 1e-6);
+        // Warmup ramps from base/warmup.
+        let w = LrSchedule::Cosine.lr_at(base, 0, 100, 10);
+        assert!((w - 0.1).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,113 @@
+//! Ring all-reduce over in-process workers (correctness path).
+//!
+//! The numerics run for real — each worker contributes a buffer, the
+//! reduce-scatter + all-gather phases exchange actual chunks — so tests
+//! can assert bit-level agreement with a sequential sum. Wall-clock
+//! accounting for the simulated interconnect happens separately via
+//! [`super::network::SimNetwork`].
+
+/// Reduce (sum) `buffers` across workers with a ring schedule; every
+/// buffer ends up holding the elementwise sum. Panics if buffer lengths
+/// differ.
+pub fn ring_allreduce(buffers: &mut [Vec<f32>]) {
+    let w = buffers.len();
+    if w <= 1 {
+        return;
+    }
+    let n = buffers[0].len();
+    assert!(buffers.iter().all(|b| b.len() == n), "buffer length mismatch");
+    if n == 0 {
+        return;
+    }
+    // Chunk boundaries (W chunks, last absorbs the remainder).
+    let chunk = n.div_ceil(w);
+    // Clamp both ends: when n < w some tail chunks are empty.
+    let bounds: Vec<(usize, usize)> =
+        (0..w).map(|c| ((c * chunk).min(n), ((c + 1) * chunk).min(n))).collect();
+    // Reduce-scatter: step s, worker i sends chunk (i - s) to worker i+1.
+    for s in 0..w - 1 {
+        // Gather the chunks to send first (borrow discipline), then add.
+        let mut sends: Vec<(usize, usize, Vec<f32>)> = Vec::with_capacity(w);
+        for i in 0..w {
+            let c = (i + w - s) % w;
+            let (lo, hi) = bounds[c];
+            sends.push(((i + 1) % w, c, buffers[i][lo..hi].to_vec()));
+        }
+        for (dst, c, data) in sends {
+            let (lo, hi) = bounds[c];
+            for (d, v) in buffers[dst][lo..hi].iter_mut().zip(data) {
+                *d += v;
+            }
+        }
+    }
+    // All-gather: worker i owns the fully-reduced chunk (i+1) mod w.
+    for s in 0..w - 1 {
+        let mut sends: Vec<(usize, usize, Vec<f32>)> = Vec::with_capacity(w);
+        for i in 0..w {
+            let c = (i + 1 + w - s) % w;
+            let (lo, hi) = bounds[c];
+            sends.push(((i + 1) % w, c, buffers[i][lo..hi].to_vec()));
+        }
+        for (dst, c, data) in sends {
+            let (lo, hi) = bounds[c];
+            buffers[dst][lo..hi].copy_from_slice(&data);
+        }
+    }
+}
+
+/// Average (all-reduce then scale by 1/W).
+pub fn ring_allreduce_mean(buffers: &mut [Vec<f32>]) {
+    let w = buffers.len().max(1) as f32;
+    ring_allreduce(buffers);
+    for b in buffers.iter_mut() {
+        for v in b.iter_mut() {
+            *v /= w;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check;
+
+    #[test]
+    fn prop_matches_sequential_sum() {
+        check("ring == seq sum", 25, |g| {
+            let w = g.usize_in(1, 9);
+            let n = g.usize_in(1, 57);
+            let buffers: Vec<Vec<f32>> = (0..w).map(|_| g.normal_vec(n)).collect();
+            let mut expect = vec![0.0f32; n];
+            for b in &buffers {
+                for (e, &v) in expect.iter_mut().zip(b) {
+                    *e += v;
+                }
+            }
+            let mut bufs = buffers.clone();
+            ring_allreduce(&mut bufs);
+            for (wi, b) in bufs.iter().enumerate() {
+                for (j, (&got, &want)) in b.iter().zip(&expect).enumerate() {
+                    if (got - want).abs() > 1e-3 * (1.0 + want.abs()) {
+                        return Err(format!("worker {wi} elem {j}: {got} vs {want}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mean_divides() {
+        let mut bufs = vec![vec![1.0f32, 2.0], vec![3.0, 6.0]];
+        ring_allreduce_mean(&mut bufs);
+        assert_eq!(bufs[0], vec![2.0, 4.0]);
+        assert_eq!(bufs[1], vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn single_worker_noop() {
+        let mut bufs = vec![vec![1.0f32, 2.0]];
+        ring_allreduce(&mut bufs);
+        assert_eq!(bufs[0], vec![1.0, 2.0]);
+    }
+}

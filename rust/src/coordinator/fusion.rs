@@ -1,0 +1,118 @@
+//! Tensor fusion: pack many small buffers into few fixed-size fusion
+//! buffers before communication (the Horovod technique §3.3 cites; it
+//! is what makes Eva's many tiny KV vectors cheap to all-reduce).
+
+/// A fusion plan: which input buffers land in which fused message.
+#[derive(Clone, Debug)]
+pub struct FusionPlan {
+    /// For each fused message: (input index, offset within message).
+    pub messages: Vec<Vec<(usize, usize)>>,
+    pub message_bytes: Vec<usize>,
+}
+
+impl FusionPlan {
+    /// Greedy first-fit packing of `sizes` (element counts) into
+    /// messages of at most `budget_bytes` (f32 elements = 4 bytes).
+    /// Buffers larger than the budget get their own message.
+    pub fn build(sizes: &[usize], budget_bytes: usize) -> Self {
+        let mut messages: Vec<Vec<(usize, usize)>> = Vec::new();
+        let mut message_bytes: Vec<usize> = Vec::new();
+        for (i, &n) in sizes.iter().enumerate() {
+            let bytes = 4 * n;
+            let slot = message_bytes
+                .iter()
+                .position(|&used| used + bytes <= budget_bytes)
+                .filter(|_| bytes <= budget_bytes);
+            match slot {
+                Some(s) => {
+                    messages[s].push((i, message_bytes[s] / 4));
+                    message_bytes[s] += bytes;
+                }
+                None => {
+                    messages.push(vec![(i, 0)]);
+                    message_bytes.push(bytes);
+                }
+            }
+        }
+        FusionPlan { messages, message_bytes }
+    }
+
+    pub fn num_messages(&self) -> usize {
+        self.messages.len()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.message_bytes.iter().sum()
+    }
+
+    /// Scatter input buffers into fused messages.
+    pub fn pack(&self, inputs: &[&[f32]]) -> Vec<Vec<f32>> {
+        self.messages
+            .iter()
+            .zip(&self.message_bytes)
+            .map(|(entries, &bytes)| {
+                let mut msg = vec![0.0f32; bytes / 4];
+                for &(idx, off) in entries {
+                    msg[off..off + inputs[idx].len()].copy_from_slice(inputs[idx]);
+                }
+                msg
+            })
+            .collect()
+    }
+
+    /// Gather fused messages back into per-buffer vectors.
+    pub fn unpack(&self, messages: &[Vec<f32>], sizes: &[usize]) -> Vec<Vec<f32>> {
+        let mut out: Vec<Vec<f32>> = sizes.iter().map(|&n| vec![0.0; n]).collect();
+        for (m, entries) in messages.iter().zip(&self.messages) {
+            for &(idx, off) in entries {
+                let n = sizes[idx];
+                out[idx].copy_from_slice(&m[off..off + n]);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check;
+
+    #[test]
+    fn packs_within_budget() {
+        let sizes = [10usize, 20, 30, 1000, 5];
+        let plan = FusionPlan::build(&sizes, 256); // 64 f32s per message
+        assert!(plan.num_messages() < sizes.len());
+        assert_eq!(plan.total_bytes() / 4, 10 + 20 + 30 + 1000 + 5);
+        for (m, &bytes) in plan.messages.iter().zip(&plan.message_bytes) {
+            if m.len() > 1 {
+                assert!(bytes <= 256);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_pack_unpack_roundtrip() {
+        check("fusion roundtrip", 20, |g| {
+            let k = g.usize_in(1, 12);
+            let sizes: Vec<usize> = (0..k).map(|_| g.usize_in(1, 40)).collect();
+            let bufs: Vec<Vec<f32>> = sizes.iter().map(|&n| g.normal_vec(n)).collect();
+            let plan = FusionPlan::build(&sizes, g.usize_in(16, 200) * 4);
+            let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+            let packed = plan.pack(&refs);
+            let unpacked = plan.unpack(&packed, &sizes);
+            if unpacked == bufs {
+                Ok(())
+            } else {
+                Err("roundtrip mismatch".into())
+            }
+        });
+    }
+
+    #[test]
+    fn oversized_buffer_gets_own_message() {
+        let plan = FusionPlan::build(&[1000, 2, 3], 64);
+        assert_eq!(plan.messages[0].len(), 1);
+        assert_eq!(plan.messages[1].len(), 2);
+    }
+}

@@ -1,0 +1,59 @@
+//! L3 distributed coordinator: data-parallel training with KV/KF
+//! communication, tensor fusion and a simulated interconnect.
+//!
+//! Reproduces the paper's §3.3 distributed design points:
+//!
+//! * Workers compute gradients + curvature statistics on their shard in
+//!   parallel (real std threads here; the native fwd/bwd is the
+//!   compute).
+//! * Gradients and statistics are combined with a **ring all-reduce**
+//!   ([`allreduce`]) over a **simulated network** ([`network`]) whose
+//!   bandwidth/latency model provides the paper's communication-time
+//!   accounting (the testbed has no 32-GPU cluster; DESIGN.md §3).
+//! * Small KVs are **tensor-fused** into one message
+//!   ([`fusion`]) — the Horovod trick the paper leans on; the same
+//!   fusion applied to K-FAC's d² factors is what makes KF traffic
+//!   dominate.
+//! * Distributed K-FAC assigns layer inversions round-robin across
+//!   workers ([`dp::InverseAssignment`]), the Osawa/Pauloski scheme the
+//!   paper contrasts with Eva's "every worker preconditions everything
+//!   cheaply".
+
+pub mod allreduce;
+pub mod dp;
+pub mod fusion;
+pub mod network;
+
+pub use dp::{DataParallelCfg, DataParallelTrainer, DpReport};
+pub use network::SimNetwork;
+
+/// Bytes of gradient traffic per step for a model (all-reduce payload).
+pub fn gradient_bytes(layer_sizes: &[(usize, usize)]) -> usize {
+    4 * layer_sizes.iter().map(|(r, c)| r * c + r).sum::<usize>()
+}
+
+/// Bytes of Eva KV traffic per step (ā + b̄ per layer) — sublinear.
+pub fn kv_bytes(layer_sizes: &[(usize, usize)]) -> usize {
+    4 * layer_sizes.iter().map(|(r, c)| r + c).sum::<usize>()
+}
+
+/// Bytes of K-FAC KF traffic per refresh (Q + R per layer) — quadratic.
+pub fn kf_bytes(layer_sizes: &[(usize, usize)]) -> usize {
+    4 * layer_sizes.iter().map(|(r, c)| r * r + c * c).sum::<usize>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traffic_ordering_kv_lt_grad_lt_kf() {
+        // The paper's communication argument: |KV| ≪ |grad| ≪ |KF|.
+        let layers = [(512usize, 1024usize), (256, 512), (10, 256)];
+        let kv = kv_bytes(&layers);
+        let g = gradient_bytes(&layers);
+        let kf = kf_bytes(&layers);
+        assert!(kv * 10 < g, "kv {kv} vs grad {g}");
+        assert!(g < kf, "grad {g} vs kf {kf}");
+    }
+}

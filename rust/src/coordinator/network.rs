@@ -1,0 +1,85 @@
+//! Simulated interconnect: an α–β (latency–bandwidth) cost model.
+//!
+//! The paper's ImageNet runs use 32 GPUs over 100 Gb/s interconnect;
+//! that hardware is substituted (DESIGN.md §3) by this analytic model,
+//! which provides the *time accounting* for all-reduce traffic while
+//! the numerics run on real threads. The α–β model is the standard
+//! collective-communication cost form: `T(bytes) = α + bytes/β`.
+
+/// A symmetric full-duplex network between `workers` peers.
+#[derive(Clone, Copy, Debug)]
+pub struct SimNetwork {
+    /// Per-message latency α in seconds.
+    pub latency_s: f64,
+    /// Bandwidth β in bytes/second.
+    pub bandwidth_bps: f64,
+    pub workers: usize,
+}
+
+impl SimNetwork {
+    /// 100 Gb/s, 20 µs — datacenter RDMA-ish defaults (paper testbed).
+    pub fn datacenter(workers: usize) -> Self {
+        SimNetwork { latency_s: 20e-6, bandwidth_bps: 100e9 / 8.0, workers }
+    }
+
+    /// 10 Gb/s, 50 µs — commodity Ethernet.
+    pub fn commodity(workers: usize) -> Self {
+        SimNetwork { latency_s: 50e-6, bandwidth_bps: 10e9 / 8.0, workers }
+    }
+
+    /// Point-to-point transfer time for a message.
+    pub fn p2p_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+
+    /// Ring all-reduce time: 2(W−1) phases each moving `bytes/W`.
+    pub fn ring_allreduce_time(&self, bytes: usize) -> f64 {
+        if self.workers <= 1 {
+            return 0.0;
+        }
+        let w = self.workers as f64;
+        2.0 * (w - 1.0) * (self.latency_s + (bytes as f64 / w) / self.bandwidth_bps)
+    }
+
+    /// Broadcast (binary tree) time.
+    pub fn broadcast_time(&self, bytes: usize) -> f64 {
+        if self.workers <= 1 {
+            return 0.0;
+        }
+        (self.workers as f64).log2().ceil() * self.p2p_time(bytes)
+    }
+
+    /// All-reduce time for `messages` separate buffers (un-fused): the
+    /// latency term is paid per message — what tensor fusion removes.
+    pub fn ring_allreduce_multi(&self, message_bytes: &[usize]) -> f64 {
+        message_bytes.iter().map(|&b| self.ring_allreduce_time(b)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_scales_with_bytes_not_workers() {
+        // Classic property: ring all-reduce bandwidth term is ~2·bytes/β
+        // independent of W (for large messages).
+        let big = 1usize << 30;
+        let t8 = SimNetwork::datacenter(8).ring_allreduce_time(big);
+        let t32 = SimNetwork::datacenter(32).ring_allreduce_time(big);
+        assert!((t8 / t32 - 1.0).abs() < 0.15, "{t8} vs {t32}");
+    }
+
+    #[test]
+    fn fusion_beats_many_small_messages() {
+        let net = SimNetwork::datacenter(16);
+        let msgs: Vec<usize> = vec![4 * 1024; 64];
+        let fused: usize = msgs.iter().sum();
+        assert!(net.ring_allreduce_time(fused) < net.ring_allreduce_multi(&msgs) / 10.0);
+    }
+
+    #[test]
+    fn single_worker_is_free() {
+        assert_eq!(SimNetwork::datacenter(1).ring_allreduce_time(1 << 20), 0.0);
+    }
+}

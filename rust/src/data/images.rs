@@ -1,0 +1,342 @@
+//! Procedural 28×28 image families for the §5.1 autoencoder suite.
+//!
+//! Four families mirror the paper's MNIST / FMNIST / FACES / CURVES:
+//!
+//! * [`ImageFamily::Digits`]   — stroke skeletons per digit class,
+//!   rendered as Gaussian ink with per-sample affine jitter.
+//! * [`ImageFamily::Textures`] — oriented sinusoid gratings with class-
+//!   dependent frequency/orientation plus speckle (garment-texture
+//!   stand-in).
+//! * [`ImageFamily::Faces`]    — low-rank "eigenface" model: smooth
+//!   spatial basis functions with per-sample coefficients.
+//! * [`ImageFamily::Curves`]   — random cubic Bézier curves rendered as
+//!   anti-aliased strokes (the original CURVES dataset is synthetic
+//!   Bézier images too).
+//!
+//! All images are 784-dim in [0,1], matching the paper's autoencoder
+//! input layer.
+
+use super::{Dataset, Split, Task};
+use crate::rng::Pcg64;
+use crate::tensor::Tensor;
+
+pub const SIDE: usize = 28;
+pub const DIM: usize = SIDE * SIDE;
+
+/// Which procedural family to generate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ImageFamily {
+    Digits,
+    Textures,
+    Faces,
+    Curves,
+}
+
+impl ImageFamily {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ImageFamily::Digits => "mnist-like",
+            ImageFamily::Textures => "fmnist-like",
+            ImageFamily::Faces => "faces-like",
+            ImageFamily::Curves => "curves",
+        }
+    }
+}
+
+/// Number of train / val samples per family (kept modest: the AE suite
+/// runs 5 optimizers × 4 datasets in one experiment).
+const N_TRAIN: usize = 3_000;
+const N_VAL: usize = 600;
+
+/// Generate a dataset for `family`, deterministic in `seed`.
+pub fn generate(family: ImageFamily, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed, 0x1a6e + family as u64);
+    let basis = if family == ImageFamily::Faces { Some(face_basis(&mut rng)) } else { None };
+    let mut make = |n: usize, rng: &mut Pcg64| -> Split {
+        let mut x = Tensor::zeros(n, DIM);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let class = i % 10;
+            labels.push(class);
+            let img = match family {
+                ImageFamily::Digits => digit(class, rng),
+                ImageFamily::Textures => texture(class, rng),
+                ImageFamily::Faces => face(basis.as_ref().unwrap(), rng),
+                ImageFamily::Curves => curve(rng),
+            };
+            x.row_mut(i).copy_from_slice(&img);
+        }
+        Split { inputs: x, labels }
+    };
+    let train = make(N_TRAIN, &mut rng);
+    let val = make(N_VAL, &mut rng);
+    Dataset {
+        name: family.name().into(),
+        task: Task::Autoencoding,
+        num_classes: 10,
+        train,
+        val,
+    }
+}
+
+/// Paint a Gaussian ink dot at (cx, cy) with radius r.
+fn splat(img: &mut [f32], cx: f32, cy: f32, r: f32, intensity: f32) {
+    let rad = (3.0 * r).ceil() as i32;
+    let (icx, icy) = (cx.round() as i32, cy.round() as i32);
+    for dy in -rad..=rad {
+        for dx in -rad..=rad {
+            let (px, py) = (icx + dx, icy + dy);
+            if px < 0 || py < 0 || px >= SIDE as i32 || py >= SIDE as i32 {
+                continue;
+            }
+            let d2 = (px as f32 - cx).powi(2) + (py as f32 - cy).powi(2);
+            let v = intensity * (-d2 / (2.0 * r * r)).exp();
+            let idx = py as usize * SIDE + px as usize;
+            img[idx] = (img[idx] + v).min(1.0);
+        }
+    }
+}
+
+/// Stroke skeletons for the 10 digit classes as polylines in [0,1]².
+fn digit_skeleton(class: usize) -> &'static [(f32, f32)] {
+    // Hand-laid control polylines, roughly tracing each numeral.
+    const D0: &[(f32, f32)] =
+        &[(0.5, 0.15), (0.75, 0.3), (0.75, 0.7), (0.5, 0.85), (0.25, 0.7), (0.25, 0.3), (0.5, 0.15)];
+    const D1: &[(f32, f32)] = &[(0.4, 0.25), (0.55, 0.15), (0.55, 0.85)];
+    const D2: &[(f32, f32)] =
+        &[(0.28, 0.3), (0.5, 0.15), (0.72, 0.3), (0.6, 0.5), (0.3, 0.8), (0.75, 0.82)];
+    const D3: &[(f32, f32)] =
+        &[(0.3, 0.2), (0.7, 0.25), (0.5, 0.48), (0.72, 0.68), (0.32, 0.85)];
+    const D4: &[(f32, f32)] = &[(0.65, 0.85), (0.65, 0.15), (0.28, 0.6), (0.8, 0.6)];
+    const D5: &[(f32, f32)] =
+        &[(0.72, 0.15), (0.3, 0.18), (0.3, 0.48), (0.65, 0.52), (0.68, 0.78), (0.3, 0.85)];
+    const D6: &[(f32, f32)] =
+        &[(0.65, 0.15), (0.35, 0.4), (0.3, 0.7), (0.55, 0.85), (0.7, 0.65), (0.35, 0.58)];
+    const D7: &[(f32, f32)] = &[(0.25, 0.18), (0.75, 0.18), (0.45, 0.85)];
+    const D8: &[(f32, f32)] = &[
+        (0.5, 0.15),
+        (0.7, 0.3),
+        (0.3, 0.55),
+        (0.3, 0.75),
+        (0.5, 0.85),
+        (0.7, 0.75),
+        (0.3, 0.3),
+        (0.5, 0.15),
+    ];
+    const D9: &[(f32, f32)] =
+        &[(0.68, 0.42), (0.4, 0.45), (0.32, 0.25), (0.55, 0.15), (0.68, 0.3), (0.62, 0.85)];
+    match class {
+        0 => D0,
+        1 => D1,
+        2 => D2,
+        3 => D3,
+        4 => D4,
+        5 => D5,
+        6 => D6,
+        7 => D7,
+        8 => D8,
+        _ => D9,
+    }
+}
+
+/// Render a jittered digit image.
+fn digit(class: usize, rng: &mut Pcg64) -> Vec<f32> {
+    let mut img = vec![0.0f32; DIM];
+    let skel = digit_skeleton(class);
+    // Per-sample affine jitter: scale, rotation, translation.
+    let s = rng.uniform_in(0.85, 1.1);
+    let th = rng.uniform_in(-0.18, 0.18);
+    let (tx, ty) = (rng.uniform_in(-1.5, 1.5), rng.uniform_in(-1.5, 1.5));
+    let (cos, sin) = (th.cos(), th.sin());
+    let w = SIDE as f32;
+    let map = |p: (f32, f32)| -> (f32, f32) {
+        let (x, y) = (p.0 - 0.5, p.1 - 0.5);
+        let (xr, yr) = (cos * x - sin * y, sin * x + cos * y);
+        (w * (0.5 + s * xr) + tx, w * (0.5 + s * yr) + ty)
+    };
+    let r = rng.uniform_in(0.9, 1.4);
+    for seg in skel.windows(2) {
+        let (a, b) = (map(seg[0]), map(seg[1]));
+        let len = ((b.0 - a.0).powi(2) + (b.1 - a.1).powi(2)).sqrt();
+        let steps = (len * 2.0).ceil().max(1.0) as usize;
+        for t in 0..=steps {
+            let f = t as f32 / steps as f32;
+            splat(&mut img, a.0 + f * (b.0 - a.0), a.1 + f * (b.1 - a.1), r, 0.75);
+        }
+    }
+    img
+}
+
+/// Oriented grating texture; class sets base frequency + orientation.
+fn texture(class: usize, rng: &mut Pcg64) -> Vec<f32> {
+    let mut img = vec![0.0f32; DIM];
+    let base_freq = 0.25 + 0.08 * (class % 5) as f32;
+    let base_theta = std::f32::consts::PI * (class as f32 / 10.0);
+    let freq = base_freq * rng.uniform_in(0.9, 1.1);
+    let theta = base_theta + rng.uniform_in(-0.1, 0.1);
+    let phase = rng.uniform_in(0.0, std::f32::consts::TAU);
+    let (cx, cy) = (rng.uniform_in(10.0, 18.0), rng.uniform_in(10.0, 18.0));
+    let (dx, dy) = (theta.cos(), theta.sin());
+    for y in 0..SIDE {
+        for x in 0..SIDE {
+            let proj = dx * x as f32 + dy * y as f32;
+            let env = (-((x as f32 - cx).powi(2) + (y as f32 - cy).powi(2)) / 250.0).exp();
+            let v = 0.5 + 0.5 * (freq * proj * std::f32::consts::TAU + phase).sin();
+            let speckle = rng.normal_f32(0.0, 0.04);
+            img[y * SIDE + x] = (env * v + speckle).clamp(0.0, 1.0);
+        }
+    }
+    img
+}
+
+/// Smooth low-rank spatial basis for the eigenface family.
+fn face_basis(rng: &mut Pcg64) -> Vec<Vec<f32>> {
+    const RANK: usize = 16;
+    let mut basis = Vec::with_capacity(RANK);
+    for k in 0..RANK {
+        let mut comp = vec![0.0f32; DIM];
+        // Sum of a few smooth cosine bumps.
+        let terms = 2 + k % 3;
+        let mut params = Vec::new();
+        for _ in 0..terms {
+            params.push((
+                rng.uniform_in(0.05, 0.25),
+                rng.uniform_in(0.05, 0.25),
+                rng.uniform_in(0.0, std::f32::consts::TAU),
+                rng.uniform_in(0.0, std::f32::consts::TAU),
+            ));
+        }
+        for y in 0..SIDE {
+            for x in 0..SIDE {
+                let mut v = 0.0;
+                for &(fx, fy, px, py) in &params {
+                    v += (fx * x as f32 * std::f32::consts::TAU + px).cos()
+                        * (fy * y as f32 * std::f32::consts::TAU + py).cos();
+                }
+                comp[y * SIDE + x] = v / terms as f32;
+            }
+        }
+        basis.push(comp);
+    }
+    basis
+}
+
+/// Sample a face: mean oval + low-rank coefficients.
+fn face(basis: &[Vec<f32>], rng: &mut Pcg64) -> Vec<f32> {
+    let mut img = vec![0.0f32; DIM];
+    // Base head oval.
+    for y in 0..SIDE {
+        for x in 0..SIDE {
+            let nx = (x as f32 - 13.5) / 9.0;
+            let ny = (y as f32 - 13.5) / 11.0;
+            if nx * nx + ny * ny < 1.0 {
+                img[y * SIDE + x] = 0.55;
+            }
+        }
+    }
+    for comp in basis {
+        let c = rng.normal_f32(0.0, 0.18);
+        for (p, &b) in img.iter_mut().zip(comp) {
+            *p += c * b;
+        }
+    }
+    // Eyes + mouth landmarks with jitter, to give identifiable structure.
+    let ej = rng.uniform_in(-0.8, 0.8);
+    splat(&mut img, 9.5 + ej, 11.0, 1.1, 0.4);
+    splat(&mut img, 18.5 + ej, 11.0, 1.1, 0.4);
+    splat(&mut img, 14.0, 19.0 + rng.uniform_in(-1.0, 1.0), 1.3, 0.35);
+    for p in &mut img {
+        *p = p.clamp(0.0, 1.0);
+    }
+    img
+}
+
+/// Random cubic Bézier stroke (CURVES-style).
+fn curve(rng: &mut Pcg64) -> Vec<f32> {
+    let mut img = vec![0.0f32; DIM];
+    let w = SIDE as f32;
+    let p: Vec<(f32, f32)> = (0..4)
+        .map(|_| (rng.uniform_in(0.12 * w, 0.88 * w), rng.uniform_in(0.12 * w, 0.88 * w)))
+        .collect();
+    let r = rng.uniform_in(0.8, 1.2);
+    const STEPS: usize = 96;
+    for t in 0..=STEPS {
+        let u = t as f32 / STEPS as f32;
+        let v = 1.0 - u;
+        // Cubic Bézier point.
+        let bx = v * v * v * p[0].0
+            + 3.0 * v * v * u * p[1].0
+            + 3.0 * v * u * u * p[2].0
+            + u * u * u * p[3].0;
+        let by = v * v * v * p[0].1
+            + 3.0 * v * v * u * p[1].1
+            + 3.0 * v * u * u * p[2].1
+            + u * u * u * p[3].1;
+        splat(&mut img, bx, by, r, 0.6);
+    }
+    img
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_families_produce_valid_pixels() {
+        for fam in [
+            ImageFamily::Digits,
+            ImageFamily::Textures,
+            ImageFamily::Faces,
+            ImageFamily::Curves,
+        ] {
+            let d = generate(fam, 5);
+            assert_eq!(d.input_dim(), DIM);
+            for i in 0..20 {
+                for &v in d.train.inputs.row(i) {
+                    assert!((0.0..=1.0).contains(&v), "{fam:?} pixel {v}");
+                }
+            }
+            // Images are not blank and not saturated.
+            let s: f32 = d.train.inputs.row(0).iter().sum();
+            assert!(s > 1.0 && s < 0.95 * DIM as f32, "{fam:?} sum {s}");
+        }
+    }
+
+    #[test]
+    fn digits_within_class_are_similar_but_not_identical() {
+        let d = generate(ImageFamily::Digits, 6);
+        // rows 0 and 10 are both class 0 with different jitter.
+        let a = d.train.inputs.row(0);
+        let b = d.train.inputs.row(10);
+        assert_ne!(a, b);
+        let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+        let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let nb: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let cos = dot / (na * nb);
+        assert!(cos > 0.35, "same-class cosine {cos}");
+    }
+
+    #[test]
+    fn faces_are_low_rank_dominated() {
+        let d = generate(ImageFamily::Faces, 7);
+        // Mean image explains a large share of pixel variance.
+        let n = 200;
+        let mean = {
+            let mut m = vec![0.0f32; DIM];
+            for i in 0..n {
+                for (mv, &v) in m.iter_mut().zip(d.train.inputs.row(i)) {
+                    *mv += v / n as f32;
+                }
+            }
+            m
+        };
+        let (mut tot, mut res) = (0.0f32, 0.0f32);
+        for i in 0..n {
+            for (j, &v) in d.train.inputs.row(i).iter().enumerate() {
+                tot += v * v;
+                res += (v - mean[j]) * (v - mean[j]);
+            }
+        }
+        assert!(res / tot < 0.5, "residual share {}", res / tot);
+    }
+}

@@ -1,0 +1,192 @@
+//! Synthetic datasets (substrate for Cifar/MNIST/ImageNet etc.).
+//!
+//! The paper's datasets are unavailable offline; per the substitution
+//! policy (DESIGN.md §3) the repo generates deterministic synthetic
+//! workloads that exercise identical code paths:
+//!
+//! * [`classify`] — Gaussian-mixture latents pushed through a frozen
+//!   random nonlinear map (stand-in for Cifar-10/100/ImageNet
+//!   classification).
+//! * [`images`] — 28×28 procedural image families for the §5.1
+//!   autoencoder suite: blob-digits (mnist-like), gratings
+//!   (fmnist-like), low-rank eigenfaces (faces-like), and Bézier curve
+//!   renderings (curves — the original CURVES dataset is itself
+//!   synthetic).
+//!
+//! Every generator is a pure function of its config + seed.
+
+pub mod classify;
+pub mod images;
+
+use crate::tensor::Tensor;
+
+/// Task type a dataset carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// Softmax cross-entropy over `num_classes`.
+    Classification,
+    /// Reconstruct the input (MSE); labels are ignored.
+    Autoencoding,
+}
+
+/// An in-memory dataset split. `inputs` is `(n, dim)` row-major;
+/// `labels[i]` is the class id (0 for autoencoding).
+#[derive(Clone, Debug)]
+pub struct Split {
+    pub inputs: Tensor,
+    pub labels: Vec<usize>,
+}
+
+impl Split {
+    pub fn len(&self) -> usize {
+        self.inputs.rows()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Gather a batch by indices into `(batch, dim)` inputs + labels.
+    pub fn gather(&self, idx: &[usize]) -> (Tensor, Vec<usize>) {
+        let dim = self.inputs.cols();
+        let mut x = Tensor::zeros(idx.len(), dim);
+        let mut y = Vec::with_capacity(idx.len());
+        for (r, &i) in idx.iter().enumerate() {
+            x.row_mut(r).copy_from_slice(self.inputs.row(i));
+            y.push(self.labels[i]);
+        }
+        (x, y)
+    }
+}
+
+/// A full dataset: train + validation splits and task metadata.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub task: Task,
+    pub num_classes: usize,
+    pub train: Split,
+    pub val: Split,
+}
+
+impl Dataset {
+    pub fn input_dim(&self) -> usize {
+        self.train.inputs.cols()
+    }
+}
+
+/// Epoch-shuffled mini-batch iterator over a [`Split`].
+pub struct Batcher {
+    order: Vec<usize>,
+    pos: usize,
+    batch: usize,
+    rng: crate::rng::Pcg64,
+}
+
+impl Batcher {
+    pub fn new(n: usize, batch: usize, seed: u64) -> Self {
+        assert!(batch > 0 && n > 0);
+        let mut rng = crate::rng::Pcg64::new(seed, 0x6a7c);
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        Batcher { order, pos: 0, batch, rng }
+    }
+
+    /// Number of batches per epoch (drop-last semantics when the tail is
+    /// smaller than half a batch — mirrors common loader behaviour of
+    /// keeping partial batches).
+    pub fn batches_per_epoch(&self) -> usize {
+        self.order.len().div_ceil(self.batch)
+    }
+
+    /// Next batch of indices; reshuffles at epoch boundaries.
+    pub fn next_indices(&mut self) -> &[usize] {
+        if self.pos >= self.order.len() {
+            self.rng.shuffle(&mut self.order);
+            self.pos = 0;
+        }
+        let end = (self.pos + self.batch).min(self.order.len());
+        let s = &self.order[self.pos..end];
+        self.pos = end;
+        s
+    }
+}
+
+/// Resolve a dataset by its config name. Names mirror the paper's
+/// benchmarks (`c10`/`c100` classification stand-ins; `mnist`, `fmnist`,
+/// `faces`, `curves` autoencoder suite).
+pub fn by_name(name: &str, seed: u64) -> Result<Dataset, String> {
+    match name {
+        "c10-like" => Ok(classify::generate(&classify::ClassifyCfg::c10_like(), seed)),
+        "c100-like" => Ok(classify::generate(&classify::ClassifyCfg::c100_like(), seed)),
+        "c10-small" => Ok(classify::generate(&classify::ClassifyCfg::small(10), seed)),
+        "c100-small" => Ok(classify::generate(&classify::ClassifyCfg::small(20), seed)),
+        "mnist-like" => Ok(images::generate(images::ImageFamily::Digits, seed)),
+        "fmnist-like" => Ok(images::generate(images::ImageFamily::Textures, seed)),
+        "faces-like" => Ok(images::generate(images::ImageFamily::Faces, seed)),
+        "curves" => Ok(images::generate(images::ImageFamily::Curves, seed)),
+        other => Err(format!("unknown dataset '{other}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batcher_covers_all_indices_each_epoch() {
+        let mut b = Batcher::new(10, 3, 0);
+        let mut seen = vec![0usize; 10];
+        for _ in 0..b.batches_per_epoch() {
+            for &i in b.next_indices().to_vec().iter() {
+                seen[i] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+    }
+
+    #[test]
+    fn batcher_reshuffles() {
+        let mut b = Batcher::new(64, 64, 1);
+        let e1 = b.next_indices().to_vec();
+        let e2 = b.next_indices().to_vec();
+        assert_ne!(e1, e2);
+        let mut s = e2.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn by_name_resolves_all() {
+        for n in [
+            "c10-small",
+            "c100-small",
+            "mnist-like",
+            "fmnist-like",
+            "faces-like",
+            "curves",
+        ] {
+            let d = by_name(n, 7).unwrap();
+            assert!(d.train.len() > 0 && d.val.len() > 0, "{n}");
+            assert!(d.train.inputs.all_finite(), "{n}");
+        }
+        assert!(by_name("bogus", 0).is_err());
+    }
+
+    #[test]
+    fn gather_extracts_rows() {
+        let d = by_name("c10-small", 3).unwrap();
+        let (x, y) = d.train.gather(&[0, 5]);
+        assert_eq!(x.rows(), 2);
+        assert_eq!(y.len(), 2);
+        assert_eq!(x.row(1), d.train.inputs.row(5));
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = by_name("c10-small", 9).unwrap();
+        let b = by_name("c10-small", 9).unwrap();
+        assert_eq!(a.train.inputs, b.train.inputs);
+        let c = by_name("c10-small", 10).unwrap();
+        assert_ne!(a.train.inputs, c.train.inputs);
+    }
+}

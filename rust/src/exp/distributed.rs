@@ -1,0 +1,104 @@
+//! Table 8 — data-parallel throughput under the simulated interconnect
+//! (the paper's 32×RTX2080Ti ImageNet setup, substituted per DESIGN.md
+//! §3: worker threads + the α–β network model).
+//!
+//! The paper's setting: SGD/Eva run per-GPU batch 96; K-FAC@50 and
+//! Shampoo@50 must drop to 64 to fit factor state in memory. Here the
+//! batch asymmetry is reproduced directly and throughput is global
+//! samples per simulated second.
+
+use anyhow::Result;
+
+use super::TablePrinter;
+use crate::config::ModelArch;
+use crate::coordinator::{DataParallelCfg, DataParallelTrainer, SimNetwork};
+use crate::train::Metrics;
+
+fn dp_cfg(opt: &str, workers: usize, batch: usize, interval: usize) -> DataParallelCfg {
+    let mut c = DataParallelCfg::new(workers, opt);
+    c.per_worker_batch = batch;
+    c.steps = 8;
+    c.arch = ModelArch::Classifier { hidden: vec![256, 128] };
+    c.dataset = "c10-small".into();
+    c.hp.update_interval = interval;
+    c.network = SimNetwork::datacenter(workers);
+    c
+}
+
+pub fn table8() -> Result<()> {
+    println!("Table 8 — simulated data-parallel throughput (8 workers; paper uses 32 GPUs)");
+    let tp = TablePrinter::new(
+        &["algorithm", "batch", "throughput", "comm KB/step", "msgs", "step breakdown (comp/comm/prec ms)"],
+        &[11, 6, 11, 13, 5, 36],
+    );
+    let mut csv = Metrics::new(
+        "results/table8.csv",
+        "algorithm,batch,throughput,comm_bytes,messages,compute_ms,comm_ms,precond_ms",
+    );
+    let runs = [
+        ("sgd", 96usize, 1usize),
+        ("eva", 96, 1),
+        ("shampoo", 64, 50),
+        ("kfac", 64, 50),
+    ];
+    let workers = 8;
+    let mut tput = std::collections::BTreeMap::new();
+    for (opt, batch, interval) in runs {
+        let mut t = DataParallelTrainer::new(dp_cfg(opt, workers, batch, interval))
+            .map_err(anyhow::Error::msg)?;
+        let r = t.run().map_err(anyhow::Error::msg)?;
+        tput.insert(opt, r.throughput);
+        csv.row(&[
+            opt.into(),
+            batch.to_string(),
+            format!("{:.1}", r.throughput),
+            r.comm_bytes_per_step.to_string(),
+            r.messages_per_step.to_string(),
+            format!("{:.2}", 1e3 * r.sim_compute_s),
+            format!("{:.2}", 1e3 * r.sim_comm_s),
+            format!("{:.2}", 1e3 * r.sim_precond_s),
+        ]);
+        tp.row(&[
+            format!("{opt}@{interval}"),
+            batch.to_string(),
+            format!("{:.0}/s", r.throughput),
+            format!("{:.1}", r.comm_bytes_per_step as f64 / 1024.0),
+            r.messages_per_step.to_string(),
+            format!(
+                "{:.1} / {:.2} / {:.1}",
+                1e3 * r.sim_compute_s,
+                1e3 * r.sim_comm_s,
+                1e3 * r.sim_precond_s
+            ),
+        ]);
+    }
+    csv.flush()?;
+    println!(
+        "\n(expect ordering: sgd ≥ eva ≫ kfac@50 ≥ shampoo@50 — paper: 7420/6857/5520/4367)"
+    );
+    println!("csv: results/table8.csv");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Throughput ordering is the Table 8 claim.
+    #[test]
+    fn throughput_ordering_holds() {
+        let run = |opt: &str, batch: usize, interval: usize| {
+            let mut c = dp_cfg(opt, 4, batch, interval);
+            c.steps = 4;
+            c.arch = ModelArch::Classifier { hidden: vec![96, 64] };
+            DataParallelTrainer::new(c).unwrap().run().unwrap().throughput
+        };
+        let sgd = run("sgd", 96, 1);
+        let eva = run("eva", 96, 1);
+        let kfac = run("kfac", 64, 2); // refresh every other step
+        // Wall-clock-based ordering — generous margins to stay robust
+        // against scheduler noise on a loaded single-core test box.
+        assert!(eva <= sgd * 1.8, "eva {eva} vs sgd {sgd}");
+        assert!(eva > kfac * 0.9, "eva {eva} vs kfac {kfac}");
+    }
+}

@@ -1,0 +1,102 @@
+//! Fig. 7 — hyper-parameter study: learning rate, batch size, damping,
+//! running average.
+
+use anyhow::Result;
+
+use super::{cfg, default_lr, TablePrinter};
+use crate::config::ModelArch;
+use crate::train::{Metrics, Trainer};
+
+fn arch() -> ModelArch {
+    ModelArch::Classifier { hidden: vec![64; 4] } // resnet-like (deep thin)
+}
+
+fn run_one(opt: &str, lr: f32, batch: usize, damping: f32, ra: f32) -> Result<f32> {
+    let mut c = cfg("fig7", "c10-small", arch(), opt, 2, lr, 31);
+    c.batch_size = batch;
+    c.optim.hp.damping = damping;
+    c.optim.hp.running_avg = ra;
+    let mut t = Trainer::from_config(&c)?;
+    Ok(t.run()?.best_val_acc)
+}
+
+pub fn fig7() -> Result<()> {
+    println!("Fig. 7 — hyper-parameter sensitivity (val acc %, resnet-like on c10-small)");
+    let mut csv = Metrics::new("results/fig7.csv", "sweep,setting,optimizer,acc");
+
+    // (a) learning rate.
+    println!("\n(a) learning rate");
+    let lrs = [0.01f32, 0.05, 0.1, 0.3];
+    let tp = TablePrinter::new(&["optimizer", "0.01", "0.05", "0.1", "0.3"], &[9, 7, 7, 7, 7]);
+    for opt in ["sgd", "kfac", "eva"] {
+        let mut cells = vec![opt.to_string()];
+        for &lr in &lrs {
+            let acc = run_one(opt, lr, 64, 0.03, 0.95)?;
+            csv.row(&["lr".into(), format!("{lr}"), opt.into(), format!("{acc:.4}")]);
+            cells.push(format!("{:.1}", 100.0 * acc));
+        }
+        tp.row(&cells);
+    }
+
+    // (b) batch size.
+    println!("\n(b) batch size");
+    let batches = [32usize, 64, 128, 256];
+    let tp = TablePrinter::new(&["optimizer", "32", "64", "128", "256"], &[9, 7, 7, 7, 7]);
+    for opt in ["sgd", "kfac", "eva"] {
+        let mut cells = vec![opt.to_string()];
+        for &b in &batches {
+            let acc = run_one(opt, default_lr(opt), b, 0.03, 0.95)?;
+            csv.row(&["batch".into(), b.to_string(), opt.into(), format!("{acc:.4}")]);
+            cells.push(format!("{:.1}", 100.0 * acc));
+        }
+        tp.row(&cells);
+    }
+
+    // (c) damping (second-order only).
+    println!("\n(c) damping γ");
+    let gammas = [0.003f32, 0.03, 0.3];
+    let tp = TablePrinter::new(&["optimizer", "0.003", "0.03", "0.3"], &[9, 7, 7, 7]);
+    for opt in ["kfac", "eva"] {
+        let mut cells = vec![opt.to_string()];
+        for &g in &gammas {
+            let acc = run_one(opt, default_lr(opt), 64, g, 0.95)?;
+            csv.row(&["damping".into(), format!("{g}"), opt.into(), format!("{acc:.4}")]);
+            cells.push(format!("{:.1}", 100.0 * acc));
+        }
+        tp.row(&cells);
+    }
+
+    // (d) running average ξ.
+    println!("\n(d) running average ξ");
+    let ras = [0.5f32, 0.95, 0.99];
+    let tp = TablePrinter::new(&["optimizer", "0.5", "0.95", "0.99"], &[9, 7, 7, 7]);
+    for opt in ["kfac", "eva"] {
+        let mut cells = vec![opt.to_string()];
+        for &ra in &ras {
+            let acc = run_one(opt, default_lr(opt), 64, 0.03, ra)?;
+            csv.row(&["running_avg".into(), format!("{ra}"), opt.into(), format!("{acc:.4}")]);
+            cells.push(format!("{:.1}", 100.0 * acc));
+        }
+        tp.row(&cells);
+    }
+
+    csv.flush()?;
+    println!("\n(expect: eva ≈ kfac across settings, robust to γ and ξ; sgd degrades at large lr/batch)");
+    println!("csv: results/fig7.csv");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn damping_robustness_of_eva() {
+        // Fig. 7(c) at miniature scale: two orders of magnitude of γ
+        // both beat the 10% chance level by a wide margin (the KL clip
+        // is what keeps the tiny-γ end trainable at all).
+        let lo = run_one("eva", 0.05, 64, 0.003, 0.95).unwrap();
+        let hi = run_one("eva", 0.05, 64, 0.3, 0.95).unwrap();
+        assert!(lo > 0.14 && hi > 0.14, "lo {lo} hi {hi}");
+    }
+}

@@ -1,0 +1,211 @@
+//! Experiment harness: regenerates every table and figure of the paper.
+//!
+//! `eva experiment <id>` runs one entry of the index below (scaled to
+//! this single-core CPU testbed — see DESIGN.md §3 and §5 for the
+//! substitutions and the expected *shape* of each result); `eva
+//! experiment all` runs the full sweep. Each experiment prints a
+//! paper-style table and writes CSV series under `results/`.
+//!
+//! | id | paper | module |
+//! |---|---|---|
+//! | `table1` | complexity vs layer dim | [`complexity`] |
+//! | `fig3` | FOOF vs rank-1 FOOF | [`convergence`] |
+//! | `fig4` | autoencoder suite | [`convergence`] |
+//! | `table4` | SGD/K-FAC/Eva accuracy grid | [`convergence`] |
+//! | `table5` | iteration time & memory | [`efficiency`] |
+//! | `table6` | finetuning | [`convergence`] |
+//! | `table7` | more optimizers | [`convergence`] |
+//! | `table8` | DP throughput | [`distributed`] |
+//! | `fig5` | wall-clock to accuracy | [`efficiency`] |
+//! | `fig6` | K-FAC interval sweep | [`efficiency`] |
+//! | `fig7` | hyper-parameter study | [`hyper`] |
+//! | `table9` | Eva ablations | [`convergence`] |
+//! | `fig8` | Eva-f/FOOF, Eva-s/Shampoo | [`convergence`] |
+//! | `validate` | PJRT vs native cross-check | [`validate`] |
+
+pub mod complexity;
+pub mod convergence;
+pub mod distributed;
+pub mod efficiency;
+pub mod hyper;
+pub mod validate;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{LrSchedule, ModelArch, OptimConfig, TrainConfig};
+use crate::optim::HyperParams;
+use crate::train::{Report, Trainer};
+
+/// All experiment ids, in paper order.
+pub const ALL: &[&str] = &[
+    "table1", "fig3", "fig4", "table4", "table5", "table6", "table7", "table8", "fig5",
+    "fig6", "fig7", "table9", "fig8", "table10", "validate",
+];
+
+/// Run one experiment by id (or `all`).
+pub fn run(id: &str) -> Result<()> {
+    match id {
+        "table1" => complexity::table1(),
+        "fig3" => convergence::fig3(),
+        "fig4" => convergence::fig4(),
+        "table4" => convergence::table4(),
+        "table5" => efficiency::table5(),
+        "table6" => convergence::table6(),
+        "table7" => convergence::table7(),
+        "table8" => distributed::table8(),
+        "fig5" => efficiency::fig5(),
+        "fig6" => efficiency::fig6(),
+        "fig7" => hyper::fig7(),
+        "table9" => convergence::table9(),
+        "fig8" => convergence::fig8(),
+        "table10" => efficiency::table10(),
+        "validate" => validate::run(),
+        "all" => {
+            for id in ALL {
+                println!("\n================ experiment {id} ================");
+                run(id)?;
+            }
+            Ok(())
+        }
+        other => Err(anyhow!("unknown experiment '{other}' (try: {})", ALL.join(", "))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared helpers
+// ---------------------------------------------------------------------------
+
+/// The three model families standing in for VGG-19 / ResNet-110 /
+/// WRN-28-10 (DESIGN.md §3): wide-shallow, deep-thin, wide.
+pub fn model_zoo() -> Vec<(&'static str, ModelArch)> {
+    vec![
+        ("vgg-like", ModelArch::Classifier { hidden: vec![256, 128] }),
+        ("resnet-like", ModelArch::Classifier { hidden: vec![64; 6] }),
+        ("wrn-like", ModelArch::Classifier { hidden: vec![320, 320] }),
+    ]
+}
+
+/// Build a training config for experiments.
+pub fn cfg(
+    name: &str,
+    dataset: &str,
+    arch: ModelArch,
+    optimizer: &str,
+    epochs: usize,
+    lr: f32,
+    seed: u64,
+) -> TrainConfig {
+    let mut hp = HyperParams::default();
+    // Expensive-inverse baselines run on the paper's increased update
+    // interval by default (Table 5's parenthetical regime); Eva runs at
+    // interval 1 — its headline property.
+    if optimizer == "shampoo" || optimizer == "kfac" || optimizer == "foof" {
+        hp.update_interval = 10;
+    }
+    TrainConfig {
+        name: name.into(),
+        dataset: dataset.into(),
+        seed,
+        arch,
+        optim: OptimConfig { algorithm: optimizer.into(), hp },
+        engine: crate::config::Engine::Native,
+        epochs,
+        batch_size: 64,
+        base_lr: lr,
+        lr_schedule: LrSchedule::Cosine,
+        warmup_steps: 0,
+        max_steps: None,
+        eval_every: 1,
+    }
+}
+
+/// Run a config across seeds; returns (mean, std) of best val accuracy
+/// plus the last report.
+pub fn run_seeds(base: &TrainConfig, seeds: &[u64]) -> Result<(f32, f32, Report)> {
+    let mut accs = Vec::new();
+    let mut last = None;
+    for &s in seeds {
+        let mut c = base.clone();
+        c.seed = s;
+        let mut t = Trainer::from_config(&c)?;
+        let r = t.run()?;
+        accs.push(r.best_val_acc);
+        last = Some(r);
+    }
+    let mean = accs.iter().sum::<f32>() / accs.len() as f32;
+    let var =
+        accs.iter().map(|a| (a - mean) * (a - mean)).sum::<f32>() / accs.len() as f32;
+    Ok((mean, var.sqrt(), last.unwrap()))
+}
+
+/// Default LR per optimizer family (tuned once on the quickstart task;
+/// mirrors the paper's "same hyper-parameters for fairness" setup).
+pub fn default_lr(optimizer: &str) -> f32 {
+    match optimizer {
+        "sgd" => 0.1,
+        "adagrad" => 0.02,
+        "adam" | "adamw" => 0.002,
+        "mfac" => 0.03,
+        // Eva family: the KL clip (Eq. 16) absorbs the 1/γ scale, so it
+        // runs at SGD-like rates; the fig7 lr sweep confirms accuracy
+        // still rising at 0.3 (paper uses the SGD grid for Eva too).
+        "eva" | "eva-f" | "eva-s" => 0.3,
+        // remaining second-order methods share one LR (paper §5.2).
+        _ => 0.05,
+    }
+}
+
+/// Fixed-width table printer.
+pub struct TablePrinter {
+    widths: Vec<usize>,
+}
+
+impl TablePrinter {
+    pub fn new(header: &[&str], widths: &[usize]) -> Self {
+        let t = TablePrinter { widths: widths.to_vec() };
+        t.row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        t
+    }
+
+    pub fn row(&self, cells: &[String]) {
+        let mut line = String::new();
+        for (c, w) in cells.iter().zip(&self.widths) {
+            line.push_str(&format!("{:<width$}  ", c, width = w));
+        }
+        println!("{}", line.trim_end());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_rejects_unknown() {
+        assert!(run("table99").is_err());
+    }
+
+    #[test]
+    fn model_zoo_has_three_families() {
+        assert_eq!(model_zoo().len(), 3);
+    }
+
+    #[test]
+    fn run_seeds_aggregates() {
+        let mut c = cfg(
+            "t",
+            "c10-small",
+            ModelArch::Classifier { hidden: vec![16] },
+            "sgd",
+            1,
+            0.1,
+            0,
+        );
+        c.max_steps = Some(10);
+        let (mean, std, r) = run_seeds(&c, &[1, 2]).unwrap();
+        assert!(mean >= 0.0 && mean <= 1.0);
+        assert!(std >= 0.0);
+        assert_eq!(r.steps, 10);
+    }
+}

@@ -1,0 +1,50 @@
+//! # Eva — vectorized second-order optimization, reproduced end to end
+//!
+//! This crate is a production-shaped reproduction of *"Eva: A General
+//! Vectorized Approximation Framework for Second-order Optimization"*
+//! (Zhang, Shi, Li — 2023). It is the L3 (Rust) layer of a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`): Pallas kernels for the Eva /
+//!   Eva-f / Eva-s rank-one Sherman–Morrison preconditioners.
+//! * **L2** (`python/compile/model.py`): JAX model fwd/bwd emitting the
+//!   per-layer curvature statistics (KVs `ā, b̄` and KFs `AAᵀ, BBᵀ`),
+//!   AOT-lowered to HLO text under `artifacts/`.
+//! * **L3** (this crate): training framework — datasets, the optimizer
+//!   zoo (Eva + all paper baselines), a PJRT runtime that executes the
+//!   AOT artifacts, a data-parallel coordinator, and the experiment
+//!   harness that regenerates every table and figure of the paper.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use eva::config::TrainConfig;
+//! use eva::train::Trainer;
+//!
+//! let mut cfg = TrainConfig::preset("quickstart");
+//! cfg.optim.algorithm = "eva".into();
+//! let mut trainer = Trainer::from_config(&cfg).unwrap();
+//! let report = trainer.run().unwrap();
+//! println!("final loss {:.4}  acc {:.2}%", report.final_loss, 100.0 * report.best_val_acc);
+//! ```
+//!
+//! See `examples/` for runnable scenarios and `eva experiment <id>` for
+//! the paper's tables/figures.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod jsonx;
+pub mod linalg;
+pub mod nn;
+pub mod optim;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;
+pub mod train;
+
+/// Crate version string (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,309 @@
+//! Dense linear algebra for the second-order baselines (substrate).
+//!
+//! K-FAC and FOOF need damped SPD inverses; Shampoo needs inverse 2k-th
+//! roots of SPD gradient statistics. No LAPACK exists in this offline
+//! environment, so the repo ships:
+//!
+//! * [`cholesky`] / [`cholesky_solve`] / [`spd_inverse`] — `O(d³/3)`
+//!   factor + triangular solves for `(M + γI)⁻¹`.
+//! * [`eigh_jacobi`] — cyclic Jacobi symmetric eigendecomposition,
+//!   quadratically convergent; used for matrix functions.
+//! * [`spd_power`] — `M^p` (any real `p`, e.g. `-1/(2k)` for Shampoo)
+//!   via the eigendecomposition.
+//!
+//! These are the exact "expensive inverse" code paths whose cost Eva's
+//! Sherman–Morrison identity eliminates — Table 1 / Table 5 benches call
+//! them directly.
+
+use crate::tensor::{matmul, Tensor};
+
+/// Cholesky factorization `M = L Lᵀ` of a symmetric positive-definite
+/// matrix. Returns the lower-triangular factor; fails if a pivot is not
+/// strictly positive (matrix not PD).
+pub fn cholesky(m: &Tensor) -> Result<Tensor, String> {
+    let n = m.rows();
+    assert_eq!(n, m.cols(), "cholesky: square matrix required");
+    let mut l = Tensor::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            // dot of row prefixes — contiguous in row-major layout.
+            let s = crate::tensor::dot(&l.row(i)[..j], &l.row(j)[..j]);
+            if i == j {
+                let d = m.at(i, i) - s;
+                if d <= 0.0 || !d.is_finite() {
+                    return Err(format!("cholesky: non-PD pivot {d} at {i}"));
+                }
+                *l.at_mut(i, j) = d.sqrt();
+            } else {
+                *l.at_mut(i, j) = (m.at(i, j) - s) / l.at(j, j);
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `M x = b` given the Cholesky factor `L` of `M`.
+pub fn cholesky_solve(l: &Tensor, b: &[f32]) -> Vec<f32> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    // Forward: L y = b
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let s = crate::tensor::dot(&l.row(i)[..i], &y[..i]);
+        y[i] = (b[i] - s) / l.at(i, i);
+    }
+    // Backward: Lᵀ x = y
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut s = 0.0;
+        for k in i + 1..n {
+            s += l.at(k, i) * x[k];
+        }
+        x[i] = (y[i] - s) / l.at(i, i);
+    }
+    x
+}
+
+/// Dense inverse of an SPD matrix via Cholesky (column-by-column solve).
+pub fn spd_inverse(m: &Tensor) -> Result<Tensor, String> {
+    let n = m.rows();
+    let l = cholesky(m)?;
+    let mut inv = Tensor::zeros(n, n);
+    let mut e = vec![0.0f32; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let col = cholesky_solve(&l, &e);
+        e[j] = 0.0;
+        for i in 0..n {
+            *inv.at_mut(i, j) = col[i];
+        }
+    }
+    Ok(inv)
+}
+
+/// Inverse of `M + γI` for symmetric PSD `M` (the damped preconditioner
+/// inverse used by K-FAC Eq. 5 and FOOF Eq. 6).
+pub fn damped_inverse(m: &Tensor, gamma: f32) -> Result<Tensor, String> {
+    let mut d = m.clone();
+    d.add_diag(gamma);
+    spd_inverse(&d)
+}
+
+/// Symmetric eigendecomposition `M = V diag(λ) Vᵀ` by the cyclic Jacobi
+/// method. Returns `(eigenvalues, V)` with eigenvectors in the *columns*
+/// of `V`, eigenvalues unordered.
+pub fn eigh_jacobi(m: &Tensor, max_sweeps: usize) -> (Vec<f32>, Tensor) {
+    let n = m.rows();
+    assert_eq!(n, m.cols());
+    let mut a = m.clone();
+    let mut v = Tensor::eye(n);
+    // Relative convergence: off-diagonal mass vs total mass (an
+    // absolute 1e-18 made well-scaled matrices sweep to no effect —
+    // see EXPERIMENTS.md §Perf L3).
+    let total: f64 = a.data().iter().map(|&x| (x as f64) * (x as f64)).sum();
+    let tol = (total.max(1e-30)) * 1e-14;
+    for _sweep in 0..max_sweeps {
+        // Off-diagonal Frobenius mass.
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in i + 1..n {
+                off += (a.at(i, j) as f64).powi(2);
+            }
+        }
+        if off < tol {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = a.at(p, q);
+                if apq.abs() < 1e-12 {
+                    continue;
+                }
+                let app = a.at(p, p);
+                let aqq = a.at(q, q);
+                let theta = (aqq - app) as f64 / (2.0 * apq as f64);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                let (c, s) = (c as f32, s as f32);
+                // Rotate rows/cols p and q of A.
+                for k in 0..n {
+                    let akp = a.at(k, p);
+                    let akq = a.at(k, q);
+                    *a.at_mut(k, p) = c * akp - s * akq;
+                    *a.at_mut(k, q) = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a.at(p, k);
+                    let aqk = a.at(q, k);
+                    *a.at_mut(p, k) = c * apk - s * aqk;
+                    *a.at_mut(q, k) = s * apk + c * aqk;
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v.at(k, p);
+                    let vkq = v.at(k, q);
+                    *v.at_mut(k, p) = c * vkp - s * vkq;
+                    *v.at_mut(k, q) = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let lambda = (0..n).map(|i| a.at(i, i)).collect();
+    (lambda, v)
+}
+
+/// `(M + γI)^p` for symmetric PSD `M` and real exponent `p` via Jacobi
+/// eigendecomposition — Shampoo's inverse 2k-th roots use
+/// `p = -1/(2k)`. Negative eigenvalues (numerical noise) are clamped to
+/// zero before damping.
+pub fn spd_power(m: &Tensor, gamma: f32, p: f32) -> Tensor {
+    let n = m.rows();
+    let (lambda, v) = eigh_jacobi(m, 30);
+    // W = V diag((λ+γ)^p)
+    let mut w = Tensor::zeros(n, n);
+    for j in 0..n {
+        let lj = (lambda[j].max(0.0) + gamma).powf(p);
+        for i in 0..n {
+            *w.at_mut(i, j) = v.at(i, j) * lj;
+        }
+    }
+    matmul(&w, &v.transpose())
+}
+
+/// Largest eigenvalue + eigenvector by power iteration (used by the
+/// rank-1 FOOF approximation of Fig. 3 and the PSD-ordering tests).
+pub fn power_iteration(m: &Tensor, iters: usize, seed: u64) -> (f32, Vec<f32>) {
+    let n = m.rows();
+    let mut rng = crate::rng::Pcg64::seeded(seed);
+    let mut x: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut lambda = 0.0;
+    for _ in 0..iters {
+        let y = m.matvec(&x);
+        let ny = crate::tensor::norm(&y);
+        if ny < 1e-30 {
+            return (0.0, x);
+        }
+        x = y.iter().map(|v| v / ny).collect();
+        lambda = ny;
+    }
+    // Rayleigh quotient for the final estimate.
+    let y = m.matvec(&x);
+    lambda = crate::tensor::dot(&x, &y).max(lambda * 0.0);
+    (lambda, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    /// Random SPD matrix `XXᵀ/n + εI`.
+    fn random_spd(n: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg64::seeded(seed);
+        let mut x = Tensor::zeros(n, 2 * n);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let mut m = crate::tensor::matmul_a_bt(&x, &x);
+        m.scale(1.0 / (2 * n) as f32);
+        m.add_diag(0.05);
+        m
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let m = random_spd(8, 1);
+        let l = cholesky(&m).unwrap();
+        let rec = crate::tensor::matmul_a_bt(&l, &l);
+        assert!(rec.max_abs_diff(&m) < 1e-4);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let m = Tensor::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eig −1, 3
+        assert!(cholesky(&m).is_err());
+    }
+
+    #[test]
+    fn solve_matches_inverse() {
+        let m = random_spd(6, 2);
+        let l = cholesky(&m).unwrap();
+        let b = [1.0, -2.0, 0.5, 3.0, 0.0, 1.5];
+        let x = cholesky_solve(&l, &b);
+        let back = m.matvec(&x);
+        for (bi, bb) in back.iter().zip(&b) {
+            assert!((bi - bb).abs() < 1e-3, "{back:?}");
+        }
+    }
+
+    #[test]
+    fn spd_inverse_is_inverse() {
+        let m = random_spd(10, 3);
+        let inv = spd_inverse(&m).unwrap();
+        let prod = crate::tensor::matmul(&m, &inv);
+        assert!(prod.max_abs_diff(&Tensor::eye(10)) < 1e-3);
+    }
+
+    #[test]
+    fn jacobi_diagonalizes() {
+        let m = random_spd(9, 4);
+        let (lambda, v) = eigh_jacobi(&m, 30);
+        // M V = V diag(λ)
+        for j in 0..9 {
+            let col: Vec<f32> = (0..9).map(|i| v.at(i, j)).collect();
+            let mv = m.matvec(&col);
+            for i in 0..9 {
+                assert!((mv[i] - lambda[j] * col[i]).abs() < 1e-3);
+            }
+        }
+        // Eigenvalues of SPD matrix are positive.
+        assert!(lambda.iter().all(|&l| l > 0.0));
+    }
+
+    #[test]
+    fn spd_power_inverse_root_squares_back() {
+        // (M+γI)^{-1/2} squared == (M+γI)^{-1}.
+        let m = random_spd(7, 5);
+        let gamma = 0.1;
+        let half = spd_power(&m, gamma, -0.5);
+        let sq = crate::tensor::matmul(&half, &half);
+        let inv = damped_inverse(&m, gamma).unwrap();
+        assert!(sq.max_abs_diff(&inv) < 2e-3);
+    }
+
+    #[test]
+    fn spd_power_identity_exponent() {
+        let m = random_spd(5, 6);
+        let p1 = spd_power(&m, 0.0, 1.0);
+        assert!(p1.max_abs_diff(&m) < 1e-3);
+    }
+
+    #[test]
+    fn power_iteration_finds_top_eig() {
+        let m = random_spd(8, 7);
+        let (lmax, _v) = power_iteration(&m, 200, 0);
+        let (lambda, _) = eigh_jacobi(&m, 30);
+        let top = lambda.iter().cloned().fold(f32::MIN, f32::max);
+        assert!((lmax - top).abs() / top < 1e-2, "{lmax} vs {top}");
+    }
+
+    /// The identity behind Eva: Sherman–Morrison inverse of a damped
+    /// rank-one matrix equals the dense inverse.
+    #[test]
+    fn sherman_morrison_matches_dense() {
+        let n = 12;
+        let mut rng = Pcg64::seeded(8);
+        let u: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let gamma = 0.3f32;
+        // C = u uᵀ + γI
+        let mut c = Tensor::zeros(n, n);
+        c.add_outer(1.0, &u, &u);
+        c.add_diag(gamma);
+        let dense = spd_inverse(&c).unwrap();
+        // SM: (γI + uuᵀ)⁻¹ = (1/γ)(I − uuᵀ/(γ + uᵀu))
+        let uu = crate::tensor::dot(&u, &u);
+        let mut sm = Tensor::eye(n);
+        sm.add_outer(-1.0 / (gamma + uu), &u, &u);
+        sm.scale(1.0 / gamma);
+        assert!(sm.max_abs_diff(&dense) < 1e-3);
+    }
+}

@@ -1,0 +1,150 @@
+//! `eva` — launcher binary: training runs, experiments, validation.
+
+use anyhow::{anyhow, Result};
+
+use eva::cli::{Cli, USAGE};
+use eva::config::{Engine, LrSchedule, ModelArch, TrainConfig};
+use eva::train::Trainer;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let cli = Cli::parse(args).map_err(|e| anyhow!(e))?;
+    match cli.command.as_str() {
+        "" | "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        "train" => train(&cli),
+        "experiment" => {
+            let id = cli
+                .positional
+                .first()
+                .ok_or_else(|| anyhow!("usage: eva experiment <id|all>"))?;
+            eva::exp::run(id)
+        }
+        "validate" => eva::exp::validate::run(),
+        "list" => list(),
+        "info" => info(),
+        other => Err(anyhow!("unknown command '{other}'\n\n{USAGE}")),
+    }
+}
+
+fn train(cli: &Cli) -> Result<()> {
+    let mut cfg = if let Some(path) = cli.opt("config") {
+        TrainConfig::from_file(path).map_err(|e| anyhow!(e))?
+    } else {
+        TrainConfig::preset(&cli.opt_or("preset", "quickstart"))
+    };
+    if let Some(o) = cli.opt("optimizer") {
+        cfg.optim.algorithm = o.to_string();
+    }
+    if let Some(d) = cli.opt("dataset") {
+        cfg.dataset = d.to_string();
+    }
+    if let Some(e) = cli.opt_usize("epochs").map_err(|e| anyhow!(e))? {
+        cfg.epochs = e;
+    }
+    if let Some(l) = cli.opt_f32("lr").map_err(|e| anyhow!(e))? {
+        cfg.base_lr = l;
+    }
+    if let Some(b) = cli.opt_usize("batch").map_err(|e| anyhow!(e))? {
+        cfg.batch_size = b;
+    }
+    if let Some(s) = cli.opt_usize("seed").map_err(|e| anyhow!(e))? {
+        cfg.seed = s as u64;
+    }
+    if let Some(i) = cli.opt_usize("interval").map_err(|e| anyhow!(e))? {
+        cfg.optim.hp.update_interval = i;
+    }
+    if let Some(d) = cli.opt_f32("damping").map_err(|e| anyhow!(e))? {
+        cfg.optim.hp.damping = d;
+    }
+    if let Some(m) = cli.opt_usize("max-steps").map_err(|e| anyhow!(e))? {
+        cfg.max_steps = Some(m as u64);
+    }
+    if let Some(s) = cli.opt("schedule") {
+        cfg.lr_schedule = LrSchedule::parse(s).map_err(|e| anyhow!(e))?;
+    }
+    if let Some(hidden) = cli.opt("hidden") {
+        let dims: Vec<usize> = hidden
+            .split(',')
+            .map(|s| s.trim().parse().map_err(|_| anyhow!("--hidden: bad dims '{hidden}'")))
+            .collect::<Result<_>>()?;
+        cfg.arch = ModelArch::Classifier { hidden: dims };
+    }
+    if let Some(e) = cli.opt("engine") {
+        cfg.engine = match e {
+            "native" => Engine::Native,
+            s if s.starts_with("pjrt:") => Engine::Pjrt { model: s[5..].to_string() },
+            other => return Err(anyhow!("unknown engine '{other}'")),
+        };
+    }
+    println!(
+        "train: dataset={} optimizer={} epochs={} batch={} lr={} engine={:?}",
+        cfg.dataset, cfg.optim.algorithm, cfg.epochs, cfg.batch_size, cfg.base_lr, cfg.engine
+    );
+    let mut trainer = Trainer::from_config(&cfg)?;
+    let total = trainer.total_steps();
+    println!("total steps: {total}");
+    let report = trainer.run()?;
+    println!("\nepoch  train_loss  val_metric  step_ms");
+    for e in &report.history {
+        println!(
+            "{:>5}  {:>10.4}  {:>10.4}  {:>7.2}",
+            e.epoch, e.train_loss, e.val_metric, e.mean_step_ms
+        );
+    }
+    println!(
+        "\nfinal loss {:.4} | best val acc {:.2}% | optimizer state {} KiB | total {:.1}s",
+        report.final_loss,
+        100.0 * report.best_val_acc,
+        report.optimizer_state_bytes / 1024,
+        report.total_time_s
+    );
+    Ok(())
+}
+
+fn list() -> Result<()> {
+    println!("datasets:    c10-like c100-like c10-small c100-small mnist-like fmnist-like faces-like curves");
+    println!("optimizers:  sgd adagrad adam adamw eva eva-f eva-s kfac foof foof-rank1 shampoo mfac");
+    println!("experiments: {}", eva::exp::ALL.join(" "));
+    match eva::runtime::Runtime::open_default() {
+        Ok(rt) => {
+            println!("artifacts:   ({} compiled graphs)", rt.manifest().artifacts.len());
+            for k in rt.manifest().artifacts.keys() {
+                println!("  {k}");
+            }
+        }
+        Err(_) => println!("artifacts:   (none — run `make artifacts`)"),
+    }
+    Ok(())
+}
+
+fn info() -> Result<()> {
+    println!(
+        "eva {} — three-layer Rust+JAX+Pallas reproduction of Eva (Zhang et al. 2023)",
+        eva::VERSION
+    );
+    match eva::runtime::Runtime::open_default() {
+        Ok(rt) => {
+            for (name, m) in &rt.manifest().models {
+                println!(
+                    "model {name}: dims {:?}, {} params, batch {}, loss {}",
+                    m.dims, m.num_params, m.batch, m.loss
+                );
+            }
+        }
+        Err(e) => println!("runtime unavailable: {e}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,121 @@
+//! Loss functions and their per-sample gradients.
+
+use crate::tensor::Tensor;
+
+/// Row-wise softmax of a logits matrix `(n, C)`, numerically stabilized.
+pub fn softmax_rows(logits: &Tensor) -> Tensor {
+    let mut p = logits.clone();
+    for i in 0..p.rows() {
+        let row = p.row_mut(i);
+        let m = row.iter().cloned().fold(f32::MIN, f32::max);
+        let mut z = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            z += *v;
+        }
+        let inv = 1.0 / z;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+    p
+}
+
+/// Softmax cross-entropy. Returns `(mean_loss, B̂, correct)` where `B̂`
+/// is the `(n, C)` matrix of per-sample gradients w.r.t. the logits of
+/// the *per-sample* loss: `p_i − onehot(y_i)`.
+pub fn cross_entropy_grad(logits: &Tensor, labels: &[usize]) -> (f32, Tensor, usize) {
+    let n = logits.rows();
+    assert_eq!(labels.len(), n);
+    let mut b = softmax_rows(logits);
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    for i in 0..n {
+        let y = labels[i];
+        let row = b.row_mut(i);
+        // top-1 before mutation
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(j, _)| j)
+            .unwrap();
+        if argmax == y {
+            correct += 1;
+        }
+        loss += -(row[y].max(1e-30) as f64).ln();
+        row[y] -= 1.0;
+    }
+    ((loss / n as f64) as f32, b, correct)
+}
+
+/// Mean squared error `0.5·Σ_dims (o−t)²` averaged over the batch.
+/// Returns `(mean_loss, B̂)` with per-sample gradient `o_i − t_i`.
+pub fn mse_grad(out: &Tensor, target: &Tensor) -> (f32, Tensor) {
+    assert_eq!(out.shape(), target.shape());
+    let n = out.rows();
+    let mut b = out.clone();
+    b.axpy(-1.0, target);
+    let loss = 0.5 * b.norm_sq() / n as f32;
+    (loss, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let l = Tensor::from_rows(&[&[1.0, 2.0, 3.0], &[-5.0, 0.0, 5.0]]);
+        let p = softmax_rows(&l);
+        for i in 0..2 {
+            let s: f32 = p.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(p.row(i).iter().all(|&v| v > 0.0));
+        }
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant() {
+        let a = Tensor::from_rows(&[&[100.0, 101.0]]);
+        let b = Tensor::from_rows(&[&[0.0, 1.0]]);
+        assert!(softmax_rows(&a).max_abs_diff(&softmax_rows(&b)) < 1e-5);
+    }
+
+    #[test]
+    fn ce_loss_and_grad_finite_difference() {
+        let logits = Tensor::from_rows(&[&[0.5, -0.2, 0.1], &[-1.0, 2.0, 0.3]]);
+        let labels = [2usize, 0];
+        let (l0, g, _c) = cross_entropy_grad(&logits, &labels);
+        let eps = 1e-3f32;
+        for i in 0..2 {
+            for j in 0..3 {
+                let mut lp = logits.clone();
+                *lp.at_mut(i, j) += eps;
+                let (l1, _, _) = cross_entropy_grad(&lp, &labels);
+                let fd = (l1 - l0) / eps;
+                // g holds per-sample grads; mean-loss grad is g/n.
+                let analytic = g.at(i, j) / 2.0;
+                assert!((fd - analytic).abs() < 1e-2, "({i},{j}): {fd} vs {analytic}");
+            }
+        }
+    }
+
+    #[test]
+    fn ce_counts_correct_predictions() {
+        let logits = Tensor::from_rows(&[&[3.0, 0.0], &[0.0, 3.0], &[3.0, 0.0]]);
+        let (_, _, correct) = cross_entropy_grad(&logits, &[0, 1, 1]);
+        assert_eq!(correct, 2);
+    }
+
+    #[test]
+    fn mse_matches_manual() {
+        let o = Tensor::from_rows(&[&[1.0, 2.0], &[0.0, 0.0]]);
+        let t = Tensor::from_rows(&[&[0.0, 2.0], &[0.0, -2.0]]);
+        let (loss, g) = mse_grad(&o, &t);
+        // 0.5*((1)^2 + 0 + 0 + (2)^2)/2 = 0.5*5/2
+        assert!((loss - 1.25).abs() < 1e-6);
+        assert_eq!(g.at(0, 0), 1.0);
+        assert_eq!(g.at(1, 1), 2.0);
+    }
+}

@@ -1,0 +1,481 @@
+//! The native MLP: forward, backward, and curvature-stat capture.
+
+use super::{Activation, BackwardResult, LayerStats, Loss, StatsMode};
+use crate::rng::Pcg64;
+use crate::tensor::{matmul, matmul_a_bt, matmul_at_b, Tensor};
+
+/// Architecture description: `dims = [d0, d1, …, dL]` with an activation
+/// per hidden layer and at the output.
+#[derive(Clone, Debug)]
+pub struct MlpSpec {
+    pub dims: Vec<usize>,
+    pub hidden_act: Activation,
+    pub output_act: Activation,
+    pub loss: Loss,
+}
+
+impl MlpSpec {
+    /// A classifier: ReLU hidden layers, linear logits, softmax-CE.
+    pub fn classifier(dims: Vec<usize>) -> Self {
+        MlpSpec {
+            dims,
+            hidden_act: Activation::Relu,
+            output_act: Activation::Identity,
+            loss: Loss::SoftmaxCrossEntropy,
+        }
+    }
+
+    /// The paper's §5.1 autoencoder: hidden dims
+    /// `[1000, 500, 250, 30, 250, 500, 1000]` around the input dim, tanh
+    /// units, sigmoid output, MSE loss (8 learnable layers).
+    pub fn autoencoder(input_dim: usize) -> Self {
+        let mut dims = vec![input_dim];
+        dims.extend_from_slice(&[1000, 500, 250, 30, 250, 500, 1000]);
+        dims.push(input_dim);
+        MlpSpec {
+            dims,
+            hidden_act: Activation::Tanh,
+            output_act: Activation::Sigmoid,
+            loss: Loss::Mse,
+        }
+    }
+
+    /// A reduced autoencoder for fast experiments/tests (same depth,
+    /// smaller widths).
+    pub fn autoencoder_small(input_dim: usize) -> Self {
+        let mut dims = vec![input_dim];
+        dims.extend_from_slice(&[200, 100, 50, 16, 50, 100, 200]);
+        dims.push(input_dim);
+        MlpSpec {
+            dims,
+            hidden_act: Activation::Tanh,
+            output_act: Activation::Sigmoid,
+            loss: Loss::Mse,
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    /// Total learnable parameters (weights + biases).
+    pub fn num_params(&self) -> usize {
+        self.dims.windows(2).map(|w| w[0] * w[1] + w[1]).sum()
+    }
+
+    fn act_at(&self, layer: usize) -> Activation {
+        if layer + 1 == self.num_layers() {
+            self.output_act
+        } else {
+            self.hidden_act
+        }
+    }
+}
+
+/// A multilayer perceptron with per-layer weight matrices `(d_out, d_in)`
+/// and bias vectors.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub spec: MlpSpec,
+    pub weights: Vec<Tensor>,
+    pub biases: Vec<Vec<f32>>,
+}
+
+impl Mlp {
+    /// He/Xavier initialization keyed by the hidden activation.
+    pub fn init(spec: MlpSpec, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed, 0x3317);
+        let mut weights = Vec::new();
+        let mut biases = Vec::new();
+        for l in 0..spec.num_layers() {
+            let (d_in, d_out) = (spec.dims[l], spec.dims[l + 1]);
+            let std = match spec.hidden_act {
+                Activation::Relu => (2.0 / d_in as f32).sqrt(),
+                _ => (1.0 / d_in as f32).sqrt(),
+            };
+            let mut w = Tensor::zeros(d_out, d_in);
+            rng.fill_normal(w.data_mut(), std);
+            weights.push(w);
+            biases.push(vec![0.0; d_out]);
+        }
+        Mlp { spec, weights, biases }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.spec.num_params()
+    }
+
+    /// Forward pass only: returns the output `(n, dL)`.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let mut h = x.clone();
+        for l in 0..self.num_layers() {
+            h = self.layer_forward(l, &h);
+        }
+        h
+    }
+
+    /// One layer: `act(X Wᵀ + b)`.
+    fn layer_forward(&self, l: usize, x: &Tensor) -> Tensor {
+        let mut s = matmul_a_bt(x, &self.weights[l]);
+        let act = self.spec.act_at(l);
+        let b = &self.biases[l];
+        for i in 0..s.rows() {
+            let row = s.row_mut(i);
+            for (v, &bj) in row.iter_mut().zip(b) {
+                *v = act.apply(*v + bj);
+            }
+        }
+        s
+    }
+
+    /// Forward + backward over a batch.
+    ///
+    /// `x` is `(n, d0)`. For classification pass `labels`; for
+    /// autoencoding the reconstruction target is `x` itself and `labels`
+    /// is ignored. `stats` selects which curvature statistics to
+    /// capture (see [`StatsMode`]).
+    pub fn forward_backward(
+        &self,
+        x: &Tensor,
+        labels: &[usize],
+        stats: StatsMode,
+    ) -> BackwardResult {
+        let n = x.rows();
+        let ll = self.num_layers();
+        // ---- forward, keeping every layer's output -----------------------
+        let mut acts: Vec<Tensor> = Vec::with_capacity(ll + 1);
+        acts.push(x.clone());
+        for l in 0..ll {
+            let next = self.layer_forward(l, &acts[l]);
+            acts.push(next);
+        }
+        // ---- output loss + initial per-sample pre-activation grads -------
+        let out = &acts[ll];
+        let (loss, mut bhat, correct) = match self.spec.loss {
+            Loss::SoftmaxCrossEntropy => {
+                // output activation must be identity for CE.
+                let (l, g, c) = super::loss::cross_entropy_grad(out, labels);
+                (l, g, c)
+            }
+            Loss::Mse => {
+                let (l, mut g) = super::loss::mse_grad(out, x);
+                // chain through the output activation
+                let act = self.spec.act_at(ll - 1);
+                if act != Activation::Identity {
+                    for i in 0..g.rows() {
+                        for (gv, &ov) in g.row_mut(i).iter_mut().zip(out.row(i)) {
+                            *gv *= act.grad_from_output(ov);
+                        }
+                    }
+                }
+                (l, g, 0)
+            }
+        };
+        // ---- backward through layers --------------------------------------
+        let mut grads = vec![Tensor::zeros(0, 0); ll];
+        let mut bias_grads = vec![Vec::new(); ll];
+        let mut layer_stats = Vec::with_capacity(ll);
+        let inv_n = 1.0 / n as f32;
+        for l in (0..ll).rev() {
+            let a_in = &acts[l];
+            // Mean weight gradient G = B̂ᵀ X / n  → (d_out, d_in)
+            let mut g = matmul_at_b(&bhat, a_in);
+            g.scale(inv_n);
+            // Mean bias gradient: per-sample grads averaged over the
+            // batch (mean_rows divides by n), matching G's scale.
+            grads[l] = g;
+            bias_grads[l] = bhat.mean_rows();
+            // ---- curvature statistics ------------------------------------
+            let st = match stats {
+                StatsMode::None => LayerStats::empty(0, 0),
+                StatsMode::KvOnly => LayerStats {
+                    a_mean: a_in.mean_rows(),
+                    b_mean: bhat.mean_rows(),
+                    aat: None,
+                    bbt: None,
+                },
+                StatsMode::Full => {
+                    let mut aat = matmul_at_b(a_in, a_in);
+                    aat.scale(inv_n);
+                    let mut bbt = matmul_at_b(&bhat, &bhat);
+                    bbt.scale(inv_n);
+                    LayerStats {
+                        a_mean: a_in.mean_rows(),
+                        b_mean: bhat.mean_rows(),
+                        aat: Some(aat),
+                        bbt: Some(bbt),
+                    }
+                }
+            };
+            layer_stats.push(st);
+            // ---- propagate to previous layer ------------------------------
+            if l > 0 {
+                // dL/dX = B̂ W  → (n, d_in); then chain prev activation.
+                let mut dx = matmul(&bhat, &self.weights[l]);
+                let act = self.spec.act_at(l - 1);
+                if act != Activation::Identity {
+                    // acts[l] is the *output* of layer l-1; chain rule
+                    // through its activation using grad_from_output.
+                    for i in 0..dx.rows() {
+                        let arow = acts[l].row(i).to_vec();
+                        for (dv, av) in dx.row_mut(i).iter_mut().zip(arow) {
+                            *dv *= act.grad_from_output(av);
+                        }
+                    }
+                }
+                bhat = dx;
+            }
+        }
+        layer_stats.reverse();
+        BackwardResult { loss, grads, bias_grads, stats: layer_stats, correct }
+    }
+
+    /// Apply a parameter update: `W_l += deltas[l]`, `b_l += bias_deltas[l]`.
+    pub fn apply_update(&mut self, deltas: &[Tensor], bias_deltas: &[Vec<f32>]) {
+        for l in 0..self.num_layers() {
+            self.weights[l].axpy(1.0, &deltas[l]);
+            for (b, &d) in self.biases[l].iter_mut().zip(&bias_deltas[l]) {
+                *b += d;
+            }
+        }
+    }
+
+    /// Classification accuracy over a split, batched.
+    pub fn accuracy(&self, inputs: &Tensor, labels: &[usize], batch: usize) -> f32 {
+        let n = inputs.rows();
+        let mut correct = 0usize;
+        let mut i = 0;
+        while i < n {
+            let end = (i + batch).min(n);
+            let mut xb = Tensor::zeros(end - i, inputs.cols());
+            for r in i..end {
+                xb.row_mut(r - i).copy_from_slice(inputs.row(r));
+            }
+            let out = self.forward(&xb);
+            for r in 0..out.rows() {
+                let row = out.row(r);
+                let argmax = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(j, _)| j)
+                    .unwrap();
+                if argmax == labels[i + r] {
+                    correct += 1;
+                }
+            }
+            i = end;
+        }
+        correct as f32 / n as f32
+    }
+
+    /// Mean reconstruction loss over a split (autoencoding).
+    pub fn reconstruction_loss(&self, inputs: &Tensor, batch: usize) -> f32 {
+        let n = inputs.rows();
+        let mut total = 0.0f64;
+        let mut i = 0;
+        while i < n {
+            let end = (i + batch).min(n);
+            let mut xb = Tensor::zeros(end - i, inputs.cols());
+            for r in i..end {
+                xb.row_mut(r - i).copy_from_slice(inputs.row(r));
+            }
+            let out = self.forward(&xb);
+            let (l, _) = super::loss::mse_grad(&out, &xb);
+            total += l as f64 * (end - i) as f64;
+            i = end;
+        }
+        (total / n as f64) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, close};
+
+    fn tiny_classifier(seed: u64) -> Mlp {
+        Mlp::init(MlpSpec::classifier(vec![6, 8, 4]), seed)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let m = tiny_classifier(0);
+        let x = Tensor::full(5, 6, 0.1);
+        let out = m.forward(&x);
+        assert_eq!(out.shape(), (5, 4));
+    }
+
+    #[test]
+    fn weight_gradients_match_finite_difference() {
+        let mut m = tiny_classifier(1);
+        let mut rng = Pcg64::seeded(2);
+        let mut x = Tensor::zeros(3, 6);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let labels = [0usize, 2, 3];
+        let res = m.forward_backward(&x, &labels, StatsMode::None);
+        let eps = 1e-2f32;
+        for l in 0..m.num_layers() {
+            for &(i, j) in &[(0usize, 0usize), (1, 3), (2, 5.min(m.weights[l].cols() - 1))] {
+                let orig = m.weights[l].at(i, j);
+                *m.weights[l].at_mut(i, j) = orig + eps;
+                let lp = m.forward_backward(&x, &labels, StatsMode::None).loss;
+                *m.weights[l].at_mut(i, j) = orig - eps;
+                let lm = m.forward_backward(&x, &labels, StatsMode::None).loss;
+                *m.weights[l].at_mut(i, j) = orig;
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = res.grads[l].at(i, j);
+                assert!(
+                    (fd - an).abs() < 2e-2 * (1.0 + an.abs()),
+                    "layer {l} ({i},{j}): fd {fd} vs analytic {an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bias_gradients_match_finite_difference() {
+        let mut m = tiny_classifier(3);
+        let mut rng = Pcg64::seeded(4);
+        let mut x = Tensor::zeros(4, 6);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let labels = [1usize, 0, 3, 2];
+        let res = m.forward_backward(&x, &labels, StatsMode::None);
+        let eps = 1e-2f32;
+        for l in 0..m.num_layers() {
+            for j in 0..m.biases[l].len().min(3) {
+                let orig = m.biases[l][j];
+                m.biases[l][j] = orig + eps;
+                let lp = m.forward_backward(&x, &labels, StatsMode::None).loss;
+                m.biases[l][j] = orig - eps;
+                let lm = m.forward_backward(&x, &labels, StatsMode::None).loss;
+                m.biases[l][j] = orig;
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = res.bias_grads[l][j];
+                assert!((fd - an).abs() < 2e-2, "layer {l} bias {j}: {fd} vs {an}");
+            }
+        }
+    }
+
+    #[test]
+    fn autoencoder_gradients_match_finite_difference() {
+        let spec = MlpSpec {
+            dims: vec![5, 7, 3, 7, 5],
+            hidden_act: Activation::Tanh,
+            output_act: Activation::Sigmoid,
+            loss: Loss::Mse,
+        };
+        let mut m = Mlp::init(spec, 5);
+        let mut rng = Pcg64::seeded(6);
+        let mut x = Tensor::zeros(3, 5);
+        for v in x.data_mut() {
+            *v = rng.uniform() as f32;
+        }
+        let res = m.forward_backward(&x, &[], StatsMode::None);
+        let eps = 1e-2f32;
+        for l in [0usize, 2] {
+            let orig = m.weights[l].at(1, 1);
+            *m.weights[l].at_mut(1, 1) = orig + eps;
+            let lp = m.forward_backward(&x, &[], StatsMode::None).loss;
+            *m.weights[l].at_mut(1, 1) = orig - eps;
+            let lm = m.forward_backward(&x, &[], StatsMode::None).loss;
+            *m.weights[l].at_mut(1, 1) = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = res.grads[l].at(1, 1);
+            assert!((fd - an).abs() < 2e-2 * (1.0 + an.abs()), "layer {l}: {fd} vs {an}");
+        }
+    }
+
+    /// Property: G == b̄ āᵀ exactly when the batch has one sample
+    /// (rank-one identity underpinning Eva's approximation).
+    #[test]
+    fn prop_single_sample_gradient_is_outer_product() {
+        check("G == b̄āᵀ for n=1", 20, |g| {
+            let d_in = g.usize_in(2, 10);
+            let d_hidden = g.usize_in(2, 10);
+            let classes = g.usize_in(2, 5);
+            let m = Mlp::init(
+                MlpSpec::classifier(vec![d_in, d_hidden, classes]),
+                g.rng().next_u64(),
+            );
+            let x = g.normal_tensor(1, d_in);
+            let label = vec![g.usize_in(0, classes - 1)];
+            let res = m.forward_backward(&x, &label, StatsMode::KvOnly);
+            for l in 0..m.num_layers() {
+                let st = &res.stats[l];
+                let mut outer = Tensor::zeros(st.b_mean.len(), st.a_mean.len());
+                outer.add_outer(1.0, &st.b_mean, &st.a_mean);
+                crate::testing::tensors_close(&outer, &res.grads[l], 1e-4, "G vs b̄āᵀ")?;
+            }
+            Ok(())
+        });
+    }
+
+    /// Property: KFs dominate KVs in the PSD order — `R ⪰ āāᵀ`
+    /// (Eq. 19; this is the trust-region containment argument).
+    #[test]
+    fn prop_kf_dominates_kv_psd() {
+        check("AAᵀ/n ⪰ āāᵀ", 15, |g| {
+            let d = g.usize_in(2, 8);
+            let n = g.usize_in(2, 12);
+            let a = g.normal_tensor(n, d); // batch-major activations
+            let mut r = matmul_at_b(&a, &a);
+            r.scale(1.0 / n as f32);
+            let abar = a.mean_rows();
+            // M = R − āāᵀ must be PSD: check Cholesky of M + tiny ridge.
+            let mut m = r.clone();
+            m.add_outer(-1.0, &abar, &abar);
+            m.add_diag(1e-4);
+            crate::linalg::cholesky(&m).map(|_| ()).map_err(|e| format!("not PSD: {e}"))
+        });
+    }
+
+    #[test]
+    fn stats_shapes_match_layers() {
+        let m = tiny_classifier(7);
+        let x = Tensor::full(4, 6, 0.3);
+        let res = m.forward_backward(&x, &[0, 1, 2, 3], StatsMode::Full);
+        assert_eq!(res.stats.len(), 2);
+        assert_eq!(res.stats[0].a_mean.len(), 6);
+        assert_eq!(res.stats[0].b_mean.len(), 8);
+        assert_eq!(res.stats[0].aat.as_ref().unwrap().shape(), (6, 6));
+        assert_eq!(res.stats[1].bbt.as_ref().unwrap().shape(), (4, 4));
+    }
+
+    #[test]
+    fn sgd_steps_reduce_loss() {
+        let mut m = tiny_classifier(8);
+        let mut rng = Pcg64::seeded(9);
+        let mut x = Tensor::zeros(16, 6);
+        rng.fill_normal(x.data_mut(), 1.0);
+        let labels: Vec<usize> = (0..16).map(|i| i % 4).collect();
+        let first = m.forward_backward(&x, &labels, StatsMode::None).loss;
+        for _ in 0..60 {
+            let res = m.forward_backward(&x, &labels, StatsMode::None);
+            let deltas: Vec<Tensor> = res
+                .grads
+                .iter()
+                .map(|g| {
+                    let mut d = g.clone();
+                    d.scale(-0.5);
+                    d
+                })
+                .collect();
+            let bias_deltas: Vec<Vec<f32>> = res
+                .bias_grads
+                .iter()
+                .map(|g| g.iter().map(|v| -0.5 * v).collect())
+                .collect();
+            m.apply_update(&deltas, &bias_deltas);
+        }
+        let last = m.forward_backward(&x, &labels, StatsMode::None).loss;
+        assert!(last < first * 0.5, "loss {first} -> {last}");
+        close(m.accuracy(&x, &labels, 8), 1.0, 0.3, "train acc").unwrap();
+    }
+
+    use crate::rng::Pcg64;
+}

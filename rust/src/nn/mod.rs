@@ -1,0 +1,160 @@
+//! Neural-network layer + model definitions (native Rust path).
+//!
+//! The native MLP implements exactly the computation the L2 JAX model
+//! performs, including capture of the per-layer statistics every
+//! optimizer in the paper consumes:
+//!
+//! * `ā = mean-col(A)`, `b̄ = mean-col(B)` — Eva's Kronecker **vectors**
+//!   (Eq. 10),
+//! * `R = AAᵀ/n`, `Q = BBᵀ/n` — K-FAC/FOOF Kronecker **factors** (Eq. 4).
+//!
+//! Convention (see DESIGN.md): activations `A` are stored batch-major
+//! `(n, d)`; `B̂` holds per-sample pre-activation gradients of the
+//! *per-sample* loss, so the mean weight gradient is `G = B̂ᵀX / n` and
+//! the empirical-Fisher factors are `Q = B̂ᵀB̂ / n`, `R = XᵀX / n`.
+//!
+//! The native path exists so that (a) the optimizer zoo and coordinator
+//! are testable without artifacts, (b) finite-difference and PJRT
+//! cross-checks triangulate correctness, and (c) experiments can run
+//! at CPU-friendly sizes. The fused-Eva PJRT artifact is the optimized
+//! hot path (see `runtime`).
+
+mod loss;
+mod mlp;
+
+pub use loss::{cross_entropy_grad, mse_grad, softmax_rows};
+pub use mlp::{Mlp, MlpSpec};
+
+use crate::tensor::Tensor;
+
+/// Elementwise nonlinearity of a layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Relu,
+    Tanh,
+    Sigmoid,
+    Identity,
+}
+
+impl Activation {
+    pub fn apply(&self, x: f32) -> f32 {
+        match self {
+            Activation::Relu => x.max(0.0),
+            Activation::Tanh => x.tanh(),
+            Activation::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+            Activation::Identity => x,
+        }
+    }
+
+    /// Derivative expressed through the *output* value `y = f(x)` (all
+    /// four activations admit this form, which avoids storing `x`).
+    pub fn grad_from_output(&self, y: f32) -> f32 {
+        match self {
+            Activation::Relu => {
+                if y > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Activation::Tanh => 1.0 - y * y,
+            Activation::Sigmoid => y * (1.0 - y),
+            Activation::Identity => 1.0,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "relu" => Ok(Activation::Relu),
+            "tanh" => Ok(Activation::Tanh),
+            "sigmoid" => Ok(Activation::Sigmoid),
+            "identity" | "linear" => Ok(Activation::Identity),
+            other => Err(format!("unknown activation '{other}'")),
+        }
+    }
+}
+
+/// The training objective at the output layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Loss {
+    /// Softmax cross-entropy over class logits.
+    SoftmaxCrossEntropy,
+    /// 0.5·Σ_dims (o−t)², averaged over the batch (autoencoding).
+    Mse,
+}
+
+/// Which curvature statistics the backward pass should compute.
+///
+/// `KvOnly` is Eva's O(d) capture; `Full` additionally builds the d×d
+/// Kronecker factors K-FAC/FOOF need (the expensive path Table 1/5
+/// measures).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StatsMode {
+    None,
+    KvOnly,
+    Full,
+}
+
+/// Per-layer curvature statistics captured during backward.
+#[derive(Clone, Debug)]
+pub struct LayerStats {
+    /// Mean input activation `ā` (length d_in).
+    pub a_mean: Vec<f32>,
+    /// Mean pre-activation gradient `b̄` (length d_out).
+    pub b_mean: Vec<f32>,
+    /// `R = XᵀX/n` (d_in × d_in) when `StatsMode::Full`.
+    pub aat: Option<Tensor>,
+    /// `Q = B̂ᵀB̂/n` (d_out × d_out) when `StatsMode::Full`.
+    pub bbt: Option<Tensor>,
+}
+
+impl LayerStats {
+    pub fn empty(d_in: usize, d_out: usize) -> Self {
+        LayerStats {
+            a_mean: vec![0.0; d_in],
+            b_mean: vec![0.0; d_out],
+            aat: None,
+            bbt: None,
+        }
+    }
+}
+
+/// Output of one forward+backward pass over a mini-batch.
+#[derive(Clone, Debug)]
+pub struct BackwardResult {
+    /// Mean loss over the batch.
+    pub loss: f32,
+    /// Per-layer mean weight gradients `(d_out, d_in)`.
+    pub grads: Vec<Tensor>,
+    /// Per-layer mean bias gradients.
+    pub bias_grads: Vec<Vec<f32>>,
+    /// Per-layer curvature statistics (empty vec when `StatsMode::None`).
+    pub stats: Vec<LayerStats>,
+    /// Number of correct top-1 predictions (classification only).
+    pub correct: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn activation_grads_match_finite_difference() {
+        let eps = 1e-3f32;
+        for act in [Activation::Relu, Activation::Tanh, Activation::Sigmoid, Activation::Identity]
+        {
+            for &x in &[-1.7f32, -0.3, 0.4, 2.1] {
+                let y = act.apply(x);
+                let g = act.grad_from_output(y);
+                let fd = (act.apply(x + eps) - act.apply(x - eps)) / (2.0 * eps);
+                assert!((g - fd).abs() < 5e-3, "{act:?} at {x}: {g} vs {fd}");
+            }
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(Activation::parse("relu").unwrap(), Activation::Relu);
+        assert!(Activation::parse("gelu").is_err());
+    }
+}

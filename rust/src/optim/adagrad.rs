@@ -1,0 +1,96 @@
+//! Adagrad (Duchi et al.) — diagonal adaptive baseline of Table 7 /
+//! Fig. 4. Shampoo is its full-matrix generalization, which is the
+//! paper's framing for the Eva-s comparison.
+
+use super::{decayed_grads, HyperParams, Optimizer, StepCtx, Update};
+use crate::nn::StatsMode;
+use crate::tensor::Tensor;
+
+pub struct Adagrad {
+    hp: HyperParams,
+    accum_w: Vec<Tensor>,
+    accum_b: Vec<Vec<f32>>,
+    initialized: bool,
+}
+
+impl Adagrad {
+    pub fn new(hp: HyperParams) -> Self {
+        Adagrad { hp, accum_w: Vec::new(), accum_b: Vec::new(), initialized: false }
+    }
+}
+
+impl Optimizer for Adagrad {
+    fn name(&self) -> &'static str {
+        "adagrad"
+    }
+
+    fn stats_mode(&self) -> StatsMode {
+        StatsMode::None
+    }
+
+    fn step(&mut self, ctx: &StepCtx) -> Update {
+        let grads = decayed_grads(ctx, self.hp.weight_decay);
+        if !self.initialized {
+            self.accum_w = grads.iter().map(|g| Tensor::zeros(g.rows(), g.cols())).collect();
+            self.accum_b = ctx.bias_grads.iter().map(|b| vec![0.0; b.len()]).collect();
+            self.initialized = true;
+        }
+        let eps = self.hp.eps.max(1e-10);
+        let mut deltas = Vec::with_capacity(grads.len());
+        for (acc, g) in self.accum_w.iter_mut().zip(&grads) {
+            let mut d = g.clone();
+            for (av, (dv, &gv)) in
+                acc.data_mut().iter_mut().zip(d.data_mut().iter_mut().zip(g.data()))
+            {
+                *av += gv * gv;
+                *dv = -ctx.lr * gv / (av.sqrt() + eps);
+            }
+            deltas.push(d);
+        }
+        let mut bias_deltas = Vec::with_capacity(ctx.bias_grads.len());
+        for (acc, g) in self.accum_b.iter_mut().zip(ctx.bias_grads) {
+            let mut d = Vec::with_capacity(g.len());
+            for (av, &gv) in acc.iter_mut().zip(g) {
+                *av += gv * gv;
+                d.push(-ctx.lr * gv / (av.sqrt() + eps));
+            }
+            bias_deltas.push(d);
+        }
+        Update { deltas, bias_deltas }
+    }
+
+    fn state_bytes(&self) -> usize {
+        let w: usize = self.accum_w.iter().map(|t| t.len()).sum();
+        let b: usize = self.accum_b.iter().map(|v| v.len()).sum();
+        4 * (w + b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_size_shrinks_over_time() {
+        let mut hp = HyperParams::default();
+        hp.weight_decay = 0.0;
+        let mut opt = Adagrad::new(hp);
+        let params = vec![Tensor::full(1, 1, 0.0)];
+        let grads = vec![Tensor::full(1, 1, 1.0)];
+        let bias_grads = vec![vec![]];
+        let ctx = StepCtx {
+            params: &params,
+            grads: &grads,
+            bias_grads: &bias_grads,
+            stats: &[],
+            lr: 1.0,
+            step: 0,
+        };
+        let d1 = opt.step(&ctx).deltas[0].data()[0].abs();
+        let d2 = opt.step(&ctx).deltas[0].data()[0].abs();
+        let d3 = opt.step(&ctx).deltas[0].data()[0].abs();
+        assert!(d1 > d2 && d2 > d3, "{d1} {d2} {d3}");
+        // First step ≈ lr (accumulator = g²).
+        assert!((d1 - 1.0).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,161 @@
+//! Adam / AdamW — adaptive first-order baselines (Table 7).
+
+use super::{HyperParams, Optimizer, StepCtx, Update};
+use crate::nn::StatsMode;
+use crate::tensor::Tensor;
+
+pub struct Adam {
+    hp: HyperParams,
+    decoupled: bool,
+    m_w: Vec<Tensor>,
+    v_w: Vec<Tensor>,
+    m_b: Vec<Vec<f32>>,
+    v_b: Vec<Vec<f32>>,
+    t: u64,
+    initialized: bool,
+}
+
+impl Adam {
+    /// `decoupled = true` gives AdamW (weight decay applied directly to
+    /// parameters, not through the moment estimates).
+    pub fn new(hp: HyperParams, decoupled: bool) -> Self {
+        Adam {
+            hp,
+            decoupled,
+            m_w: Vec::new(),
+            v_w: Vec::new(),
+            m_b: Vec::new(),
+            v_b: Vec::new(),
+            t: 0,
+            initialized: false,
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn name(&self) -> &'static str {
+        if self.decoupled {
+            "adamw"
+        } else {
+            "adam"
+        }
+    }
+
+    fn stats_mode(&self) -> StatsMode {
+        StatsMode::None
+    }
+
+    fn step(&mut self, ctx: &StepCtx) -> Update {
+        if !self.initialized {
+            self.m_w = ctx.grads.iter().map(|g| Tensor::zeros(g.rows(), g.cols())).collect();
+            self.v_w = self.m_w.clone();
+            self.m_b = ctx.bias_grads.iter().map(|b| vec![0.0; b.len()]).collect();
+            self.v_b = self.m_b.clone();
+            self.initialized = true;
+        }
+        self.t += 1;
+        let (b1, b2, eps) = (self.hp.beta1, self.hp.beta2, self.hp.eps);
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        let wd = self.hp.weight_decay;
+        let mut deltas = Vec::with_capacity(ctx.grads.len());
+        for l in 0..ctx.grads.len() {
+            let g = &ctx.grads[l];
+            let w = &ctx.params[l];
+            let mut d = Tensor::zeros(g.rows(), g.cols());
+            for i in 0..g.len() {
+                let mut gv = g.data()[i];
+                if !self.decoupled && wd > 0.0 {
+                    gv += wd * w.data()[i];
+                }
+                let m = &mut self.m_w[l].data_mut()[i];
+                *m = b1 * *m + (1.0 - b1) * gv;
+                let v = &mut self.v_w[l].data_mut()[i];
+                *v = b2 * *v + (1.0 - b2) * gv * gv;
+                let mhat = *m / bc1;
+                let vhat = *v / bc2;
+                let mut dv = -ctx.lr * mhat / (vhat.sqrt() + eps);
+                if self.decoupled && wd > 0.0 {
+                    dv -= ctx.lr * wd * w.data()[i];
+                }
+                d.data_mut()[i] = dv;
+            }
+            deltas.push(d);
+        }
+        let mut bias_deltas = Vec::with_capacity(ctx.bias_grads.len());
+        for l in 0..ctx.bias_grads.len() {
+            let g = &ctx.bias_grads[l];
+            let mut d = Vec::with_capacity(g.len());
+            for (i, &gv) in g.iter().enumerate() {
+                let m = &mut self.m_b[l][i];
+                *m = b1 * *m + (1.0 - b1) * gv;
+                let v = &mut self.v_b[l][i];
+                *v = b2 * *v + (1.0 - b2) * gv * gv;
+                d.push(-ctx.lr * (*m / bc1) / ((*v / bc2).sqrt() + eps));
+            }
+            bias_deltas.push(d);
+        }
+        Update { deltas, bias_deltas }
+    }
+
+    fn state_bytes(&self) -> usize {
+        let w: usize = self.m_w.iter().chain(&self.v_w).map(|t| t.len()).sum();
+        let b: usize = self.m_b.iter().chain(&self.v_b).map(|v| v.len()).sum();
+        4 * (w + b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx_1d<'a>(
+        params: &'a [Tensor],
+        grads: &'a [Tensor],
+        bias: &'a [Vec<f32>],
+        lr: f32,
+    ) -> StepCtx<'a> {
+        StepCtx { params, grads, bias_grads: bias, stats: &[], lr, step: 0 }
+    }
+
+    #[test]
+    fn first_step_is_lr_sized() {
+        // With bias correction the first Adam step ≈ lr·sign(g).
+        let mut hp = HyperParams::default();
+        hp.weight_decay = 0.0;
+        let mut opt = Adam::new(hp, false);
+        let params = vec![Tensor::full(1, 1, 0.0)];
+        let grads = vec![Tensor::full(1, 1, 0.3)];
+        let bias = vec![vec![]];
+        let u = opt.step(&ctx_1d(&params, &grads, &bias, 0.01));
+        assert!((u.deltas[0].data()[0] + 0.01).abs() < 1e-4, "{}", u.deltas[0].data()[0]);
+    }
+
+    #[test]
+    fn adamw_decay_is_decoupled() {
+        let mut hp = HyperParams::default();
+        hp.weight_decay = 0.1;
+        let mut opt = Adam::new(hp, true);
+        let params = vec![Tensor::full(1, 1, 5.0)];
+        let grads = vec![Tensor::zeros(1, 1)];
+        let bias = vec![vec![]];
+        let u = opt.step(&ctx_1d(&params, &grads, &bias, 0.1));
+        // Zero gradient → pure decay step −lr·wd·w = −0.05.
+        assert!((u.deltas[0].data()[0] + 0.05).abs() < 1e-6);
+    }
+
+    #[test]
+    fn state_is_two_moments() {
+        let mut hp = HyperParams::default();
+        hp.weight_decay = 0.0;
+        let mut opt = Adam::new(hp, false);
+        let params = vec![Tensor::zeros(4, 4)];
+        let grads = vec![Tensor::full(4, 4, 1.0)];
+        let bias = vec![vec![0.0; 4]];
+        let bg = vec![vec![1.0; 4]];
+        let _ =
+            opt.step(&StepCtx { params: &params, grads: &grads, bias_grads: &bg, stats: &[], lr: 0.1, step: 0 });
+        assert_eq!(opt.state_bytes(), 4 * (2 * 16 + 2 * 4));
+        let _ = bias;
+    }
+}

@@ -1,0 +1,174 @@
+//! **Eva-f** — vectorized FOOF (§4.1, Eq. 20–21).
+//!
+//! Replaces FOOF's Kronecker factor `R = AAᵀ` with the rank-one
+//! `āāᵀ`, so the damped inverse is closed-form:
+//!
+//! ```text
+//! ΔW = −(α/γ) ( G − (G ā) āᵀ / (γ + āᵀā) )                    (Eq. 21)
+//! ```
+//!
+//! Stabilized by **KL normalization** instead of clipping (§4.1): the
+//! preconditioned gradients are scaled by `1/√(Σ_l p_lᵀ g_l)`, removing
+//! the κ hyper-parameter entirely.
+
+use super::{decayed_grads, HyperParams, MomentumState, Optimizer, StepCtx, Update};
+use crate::nn::StatsMode;
+use crate::tensor::{dot, Tensor};
+
+pub struct EvaF {
+    hp: HyperParams,
+    a_bar: Vec<Vec<f32>>,
+    momentum: MomentumState,
+    initialized: bool,
+    /// KL normalization (on by default; off recovers raw Eq. 21).
+    pub use_kl_norm: bool,
+}
+
+impl EvaF {
+    pub fn new(hp: HyperParams) -> Self {
+        EvaF {
+            hp,
+            a_bar: Vec::new(),
+            momentum: MomentumState::new(),
+            initialized: false,
+            use_kl_norm: true,
+        }
+    }
+
+    /// Eq. 21 on one layer.
+    fn precondition_layer(g: &Tensor, a_bar: &[f32], gamma: f32) -> Tensor {
+        let ga = g.matvec(a_bar); // (d_out)
+        let denom = gamma + dot(a_bar, a_bar);
+        let mut p = g.clone();
+        p.add_outer(-1.0 / denom, &ga, a_bar);
+        p.scale(1.0 / gamma);
+        p
+    }
+}
+
+impl Optimizer for EvaF {
+    fn name(&self) -> &'static str {
+        "eva-f"
+    }
+
+    fn stats_mode(&self) -> StatsMode {
+        StatsMode::KvOnly
+    }
+
+    fn step(&mut self, ctx: &StepCtx) -> Update {
+        let xi = self.hp.running_avg;
+        if !self.initialized {
+            self.a_bar = ctx.stats.iter().map(|s| s.a_mean.clone()).collect();
+            self.initialized = true;
+        } else {
+            for (state, s) in self.a_bar.iter_mut().zip(ctx.stats) {
+                for (sv, &nv) in state.iter_mut().zip(&s.a_mean) {
+                    *sv = xi * nv + (1.0 - xi) * *sv;
+                }
+            }
+        }
+        let gamma = self.hp.damping;
+        let grads = decayed_grads(ctx, self.hp.weight_decay);
+        let mut pre: Vec<Tensor> = grads
+            .iter()
+            .enumerate()
+            .map(|(l, g)| Self::precondition_layer(g, &self.a_bar[l], gamma))
+            .collect();
+        if self.use_kl_norm {
+            // KL normalization: p ← p/√(Σ pᵀg). pᵀg ≥ 0 (PD preconditioner).
+            let pg = super::pg_inner(&pre, &grads).max(1e-12);
+            let inv = 1.0 / pg.sqrt();
+            for p in &mut pre {
+                p.scale(inv);
+            }
+        }
+        self.momentum.apply(self.hp.momentum, ctx.lr, pre, ctx.bias_grads.to_vec())
+    }
+
+    fn state_bytes(&self) -> usize {
+        let kv: usize = self.a_bar.iter().map(|v| v.len()).sum();
+        4 * kv + self.momentum.state_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::damped_inverse;
+    use crate::testing::{check, tensors_close, Gen};
+
+    /// Eq. 21 equals G·(āāᵀ+γI)⁻¹ computed densely.
+    #[test]
+    fn prop_matches_dense_right_inverse() {
+        check("eva-f == G(āāᵀ+γI)⁻¹", 20, |g: &mut Gen| {
+            let d_out = g.usize_in(1, 7);
+            let d_in = g.usize_in(2, 7);
+            let gamma = g.f32_in(0.05, 0.5);
+            let grad = g.normal_tensor(d_out, d_in);
+            let a = g.normal_vec(d_in);
+            let fast = EvaF::precondition_layer(&grad, &a, gamma);
+            let mut aat = Tensor::zeros(d_in, d_in);
+            aat.add_outer(1.0, &a, &a);
+            let inv = damped_inverse(&aat, gamma).map_err(|e| e)?;
+            let mut dense = crate::tensor::matmul(&grad, &inv);
+            // precondition_layer includes the 1/γ? No: Eq.21 already is
+            // (1/γ)(G − …) == G(āāᵀ+γI)⁻¹. Dense path needs no scaling.
+            tensors_close(&fast, &mut dense, 2e-2, "eva-f vs dense")
+        });
+    }
+
+    /// Eva-f solves the "gradient descent on neurons" least squares
+    /// (Eq. 27–28): ΔW minimizes ‖ΔW ā āᵀ − G‖² + γ‖ΔW‖².
+    #[test]
+    fn prop_least_squares_stationarity() {
+        check("eva-f normal equations", 15, |g: &mut Gen| {
+            let d_out = g.usize_in(1, 5);
+            let d_in = g.usize_in(2, 5);
+            let gamma = g.f32_in(0.1, 0.6);
+            let grad = g.normal_tensor(d_out, d_in);
+            let a = g.normal_vec(d_in);
+            let p = EvaF::precondition_layer(&grad, &a, gamma);
+            // Stationarity: P(āāᵀ + γI) = G.
+            let mut aat = Tensor::zeros(d_in, d_in);
+            aat.add_outer(1.0, &a, &a);
+            aat.add_diag(gamma);
+            let back = crate::tensor::matmul(&p, &aat);
+            tensors_close(&back, &grad, 2e-2, "P(āāᵀ+γI) vs G")
+        });
+    }
+
+    #[test]
+    fn kl_norm_makes_update_scale_invariant() {
+        // Scaling the gradient by c scales p by c too; KL-normalized
+        // update scales by c/√(c²) = 1 in direction · magnitude ∝ √(pᵀg).
+        let mut hp = HyperParams::default();
+        hp.momentum = 0.0;
+        hp.weight_decay = 0.0;
+        let mut opt1 = EvaF::new(hp.clone());
+        let mut opt2 = EvaF::new(hp);
+        let params = vec![Tensor::zeros(2, 3)];
+        let g1 = vec![Tensor::full(2, 3, 0.2)];
+        let mut g2 = g1.clone();
+        g2[0].scale(10.0);
+        let bias = vec![vec![]];
+        let stats = vec![crate::nn::LayerStats {
+            a_mean: vec![0.3, -0.2, 0.5],
+            b_mean: vec![],
+            aat: None,
+            bbt: None,
+        }];
+        fn mk<'a>(
+            params: &'a [Tensor],
+            grads: &'a [Tensor],
+            bias: &'a [Vec<f32>],
+            stats: &'a [crate::nn::LayerStats],
+        ) -> StepCtx<'a> {
+            StepCtx { params, grads, bias_grads: bias, stats, lr: 1.0, step: 0 }
+        }
+        let u1 = opt1.step(&mk(&params, &g1, &bias, &stats));
+        let u2 = opt2.step(&mk(&params, &g2, &bias, &stats));
+        // ‖Δ2‖/‖Δ1‖ == 10/√100 = 1 exactly under KL normalization.
+        let r = u2.deltas[0].norm() / u1.deltas[0].norm();
+        assert!((r - 1.0).abs() < 1e-4, "ratio {r}");
+    }
+}

@@ -1,0 +1,154 @@
+//! **Eva-s** — vectorized Shampoo (§4.2, Eq. 22–23).
+//!
+//! Shampoo's per-dimension gradient statistics `M_i = mat_i(G)mat_i(G)ᵀ`
+//! are vectorized to `v_i = mean_{-i}(G)`, giving the rank-one curvature
+//! `C = (⊗_i v_i)(⊗_i v_i)ᵀ` and closed-form update (matrix case k=2):
+//!
+//! ```text
+//! ΔW = −(α/γ) ( G − (v₁ᵀ G v₂)/(γ + (v₁ᵀv₁)(v₂ᵀv₂)) · v₁v₂ᵀ )  (Eq. 23)
+//! ```
+//!
+//! Stabilized by **gradient-magnitude grafting** (§4.2): each layer's
+//! preconditioned gradient is rescaled to the raw gradient's norm,
+//! `p ← p·√(gᵀg/pᵀp)`, following Anil et al.'s grafting but without a
+//! second optimizer's state.
+
+use super::{decayed_grads, HyperParams, MomentumState, Optimizer, StepCtx, Update};
+use crate::nn::StatsMode;
+use crate::tensor::{dot, Tensor};
+
+pub struct EvaS {
+    hp: HyperParams,
+    momentum: MomentumState,
+    /// Grafting on by default (off recovers raw Eq. 23).
+    pub use_grafting: bool,
+}
+
+impl EvaS {
+    pub fn new(hp: HyperParams) -> Self {
+        EvaS { hp, momentum: MomentumState::new(), use_grafting: true }
+    }
+
+    /// KVs from the gradient itself: v₁ = row means, v₂ = column means
+    /// (`mean_{-i}` of the order-2 tensor).
+    pub fn kvs_of(g: &Tensor) -> (Vec<f32>, Vec<f32>) {
+        (g.mean_cols(), g.mean_rows())
+    }
+
+    /// Eq. 23 on one layer.
+    fn precondition_layer(g: &Tensor, gamma: f32) -> Tensor {
+        let (v1, v2) = Self::kvs_of(g);
+        let gv2 = g.matvec(&v2); // (d_out)
+        let num = dot(&gv2, &v1); // v₁ᵀ G v₂
+        let denom = gamma + dot(&v1, &v1) * dot(&v2, &v2);
+        let mut p = g.clone();
+        p.add_outer(-num / denom, &v1, &v2);
+        p.scale(1.0 / gamma);
+        p
+    }
+}
+
+impl Optimizer for EvaS {
+    fn name(&self) -> &'static str {
+        "eva-s"
+    }
+
+    fn stats_mode(&self) -> StatsMode {
+        StatsMode::None // KVs are derived from G directly.
+    }
+
+    fn step(&mut self, ctx: &StepCtx) -> Update {
+        let gamma = self.hp.damping;
+        let grads = decayed_grads(ctx, self.hp.weight_decay);
+        let mut pre: Vec<Tensor> =
+            grads.iter().map(|g| Self::precondition_layer(g, gamma)).collect();
+        if self.use_grafting {
+            for (p, g) in pre.iter_mut().zip(&grads) {
+                let pn = p.norm_sq();
+                if pn > 1e-24 {
+                    p.scale((g.norm_sq() / pn).sqrt());
+                }
+            }
+        }
+        self.momentum.apply(self.hp.momentum, ctx.lr, pre, ctx.bias_grads.to_vec())
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.momentum.state_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::spd_inverse;
+    use crate::testing::{check, tensors_close, Gen};
+
+    /// Eq. 23 equals the dense (C+γI)⁻¹g with C = (v₁⊗v₂)(v₁⊗v₂)ᵀ.
+    #[test]
+    fn prop_matches_dense_rank_one_inverse() {
+        check("eva-s == dense", 20, |g: &mut Gen| {
+            let d_out = g.usize_in(2, 6);
+            let d_in = g.usize_in(2, 6);
+            let gamma = g.f32_in(0.05, 0.5);
+            let grad = g.normal_tensor(d_out, d_in);
+            let fast = EvaS::precondition_layer(&grad, gamma);
+            let (v1, v2) = EvaS::kvs_of(&grad);
+            let n = d_out * d_in;
+            let mut v = vec![0.0f32; n];
+            for i in 0..d_out {
+                for j in 0..d_in {
+                    v[i * d_in + j] = v1[i] * v2[j];
+                }
+            }
+            let mut c = Tensor::zeros(n, n);
+            c.add_outer(1.0, &v, &v);
+            c.add_diag(gamma);
+            let cinv = spd_inverse(&c).map_err(|e| e)?;
+            let dense = Tensor::from_vec(d_out, d_in, cinv.matvec(grad.data()));
+            tensors_close(&fast, &dense, 2e-2, "eva-s vs dense")
+        });
+    }
+
+    #[test]
+    fn grafting_preserves_gradient_magnitude() {
+        let mut hp = HyperParams::default();
+        hp.momentum = 0.0;
+        hp.weight_decay = 0.0;
+        let mut opt = EvaS::new(hp);
+        let params = vec![Tensor::zeros(3, 3)];
+        let mut g = Tensor::zeros(3, 3);
+        crate::rng::Pcg64::seeded(3).fill_normal(g.data_mut(), 1.0);
+        let grads = vec![g.clone()];
+        let bias = vec![vec![]];
+        let ctx = StepCtx {
+            params: &params,
+            grads: &grads,
+            bias_grads: &bias,
+            stats: &[],
+            lr: 1.0,
+            step: 0,
+        };
+        let u = opt.step(&ctx);
+        assert!((u.deltas[0].norm() - g.norm()).abs() / g.norm() < 1e-4);
+    }
+
+    #[test]
+    fn mean_kvs_are_consistent() {
+        let g = Tensor::from_rows(&[&[1.0, 3.0], &[5.0, 7.0]]);
+        let (v1, v2) = EvaS::kvs_of(&g);
+        assert_eq!(v1, vec![2.0, 6.0]); // row means (mean over dim 2)
+        assert_eq!(v2, vec![3.0, 5.0]); // col means (mean over dim 1)
+    }
+
+    /// Rank-one correction vanishes for zero-mean gradients: if both
+    /// v₁, v₂ are ~0, Eva-s reduces to scaled SGD.
+    #[test]
+    fn zero_mean_gradient_reduces_to_scaled_sgd() {
+        let g = Tensor::from_rows(&[&[1.0, -1.0], &[-1.0, 1.0]]);
+        let p = EvaS::precondition_layer(&g, 0.1);
+        let mut expect = g.clone();
+        expect.scale(10.0);
+        assert!(p.max_abs_diff(&expect) < 1e-5);
+    }
+}

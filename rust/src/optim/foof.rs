@@ -1,0 +1,230 @@
+//! FOOF (Benzing 2022) — gradient descent on neurons (Eq. 6), plus the
+//! rank-1 eigen-approximation of Fig. 3 / Eq. 24–26.
+//!
+//! `ΔW = −α G (R + γI)⁻¹`, `R = AAᵀ/n` with a running average. In
+//! `rank1` mode the damped inverse is replaced by the paper's rank-one
+//! eigendecomposition approximation
+//! `p ≈ (1/γ)(G − λ₁/(γ+λ₁) · G u₁u₁ᵀ)` (Eq. 26) — the observation
+//! that motivates Eva-f.
+//!
+//! Both variants use KL normalization like Eva-f so the Fig. 8
+//! convergence pairing is apples-to-apples (the FOOF paper's own
+//! step-size control is learning-rate based; see DESIGN.md).
+
+use super::{decayed_grads, HyperParams, MomentumState, Optimizer, StepCtx, Update};
+use crate::linalg::{damped_inverse, power_iteration};
+use crate::nn::StatsMode;
+use crate::tensor::{matmul, Tensor};
+
+pub struct Foof {
+    hp: HyperParams,
+    rank1: bool,
+    r: Vec<Tensor>,
+    r_inv: Vec<Tensor>,
+    /// Rank-1 mode cache: (λ₁, u₁) per layer.
+    eig: Vec<(f32, Vec<f32>)>,
+    momentum: MomentumState,
+    initialized: bool,
+    pub use_kl_norm: bool,
+}
+
+impl Foof {
+    pub fn new(hp: HyperParams, rank1: bool) -> Self {
+        Foof {
+            hp,
+            rank1,
+            r: Vec::new(),
+            r_inv: Vec::new(),
+            eig: Vec::new(),
+            momentum: MomentumState::new(),
+            initialized: false,
+            use_kl_norm: true,
+        }
+    }
+
+    pub fn is_refresh_step(&self, step: u64) -> bool {
+        step % self.hp.update_interval.max(1) as u64 == 0
+    }
+
+    fn refresh(&mut self, ctx: &StepCtx) {
+        let xi = self.hp.running_avg;
+        if !self.initialized {
+            self.r = ctx
+                .stats
+                .iter()
+                .map(|s| s.aat.clone().expect("foof needs Full stats"))
+                .collect();
+            self.initialized = true;
+        } else {
+            for (state, s) in self.r.iter_mut().zip(ctx.stats) {
+                state.blend(1.0 - xi, xi, s.aat.as_ref().unwrap());
+            }
+        }
+        let gamma = self.hp.damping;
+        if self.rank1 {
+            self.eig = self
+                .r
+                .iter()
+                .map(|r| power_iteration(r, 50, 0x0f00))
+                .collect();
+        } else {
+            self.r_inv.clear();
+            for r in &self.r {
+                self.r_inv.push(damped_inverse(r, gamma).expect("R+γI must be PD"));
+            }
+        }
+    }
+}
+
+impl Optimizer for Foof {
+    fn name(&self) -> &'static str {
+        if self.rank1 {
+            "foof-rank1"
+        } else {
+            "foof"
+        }
+    }
+
+    fn stats_mode(&self) -> StatsMode {
+        StatsMode::Full
+    }
+
+    fn step(&mut self, ctx: &StepCtx) -> Update {
+        if self.is_refresh_step(ctx.step) {
+            self.refresh(ctx);
+        }
+        assert!(self.initialized, "first FOOF step must be a refresh step");
+        let gamma = self.hp.damping;
+        let grads = decayed_grads(ctx, self.hp.weight_decay);
+        let mut pre: Vec<Tensor> = grads
+            .iter()
+            .enumerate()
+            .map(|(l, g)| {
+                if self.rank1 {
+                    // Eq. 26: (1/γ)(G − λ₁/(γ+λ₁)·(G u₁)u₁ᵀ)
+                    let (l1, u1) = &self.eig[l];
+                    let gu = g.matvec(u1);
+                    let mut p = g.clone();
+                    p.add_outer(-l1 / (gamma + l1), &gu, u1);
+                    p.scale(1.0 / gamma);
+                    p
+                } else {
+                    matmul(g, &self.r_inv[l])
+                }
+            })
+            .collect();
+        if self.use_kl_norm {
+            let pg = super::pg_inner(&pre, &grads).max(1e-12);
+            let inv = 1.0 / pg.sqrt();
+            for p in &mut pre {
+                p.scale(inv);
+            }
+        }
+        self.momentum.apply(self.hp.momentum, ctx.lr, pre, ctx.bias_grads.to_vec())
+    }
+
+    fn state_bytes(&self) -> usize {
+        let f: usize = self.r.iter().chain(&self.r_inv).map(|t| t.len()).sum();
+        let e: usize = self.eig.iter().map(|(_, u)| u.len() + 1).sum();
+        4 * (f + e) + self.momentum.state_bytes()
+    }
+
+    /// Full KFs only on refresh steps.
+    fn stats_mode_at(&self, step: u64) -> StatsMode {
+        if self.is_refresh_step(step) {
+            StatsMode::Full
+        } else {
+            StatsMode::None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::LayerStats;
+    use crate::testing::{check, Gen};
+
+    fn plain_hp() -> HyperParams {
+        HyperParams {
+            momentum: 0.0,
+            weight_decay: 0.0,
+            running_avg: 1.0,
+            ..HyperParams::default()
+        }
+    }
+
+    fn rank1_dominant_stats(g: &mut Gen, d: usize) -> LayerStats {
+        // R with one dominant direction, like real activations with a
+        // large mean component.
+        let u = g.normal_vec(d);
+        let mut r = g.spd_tensor(d, 0.001);
+        r.scale(0.005);
+        r.add_outer(4.0, &u, &u);
+        LayerStats { a_mean: vec![0.0; d], b_mean: vec![], aat: Some(r), bbt: None }
+    }
+
+    /// Rank-1 FOOF approximates full FOOF when R is near rank-one — the
+    /// Fig. 3 observation.
+    #[test]
+    fn prop_rank1_close_to_full_on_lowrank_r() {
+        check("foof-rank1 ≈ foof", 10, |g: &mut Gen| {
+            let d = g.usize_in(3, 8);
+            let stats = vec![rank1_dominant_stats(g, d)];
+            let grads = vec![g.normal_tensor(2, d)];
+            let params = vec![Tensor::zeros(2, d)];
+            let bias = vec![vec![]];
+            let ctx = StepCtx {
+                params: &params,
+                grads: &grads,
+                bias_grads: &bias,
+                stats: &stats,
+                lr: 1.0,
+                step: 0,
+            };
+            let mut full = Foof::new(plain_hp(), false);
+            full.use_kl_norm = false;
+            let mut r1 = Foof::new(plain_hp(), true);
+            r1.use_kl_norm = false;
+            let uf = full.step(&ctx);
+            let ur = r1.step(&ctx);
+            // Cosine similarity of the two updates should be high.
+            let (a, b) = (&uf.deltas[0], &ur.deltas[0]);
+            let cos = a.dot(b) / (a.norm() * b.norm());
+            if cos > 0.95 {
+                Ok(())
+            } else {
+                Err(format!("cos {cos}"))
+            }
+        });
+    }
+
+    #[test]
+    fn foof_matches_manual_right_preconditioning() {
+        let mut opt = Foof::new(plain_hp(), false);
+        opt.use_kl_norm = false;
+        let params = vec![Tensor::zeros(2, 2)];
+        let grads = vec![Tensor::from_rows(&[&[1.0, 0.0], &[0.0, 1.0]])];
+        let bias = vec![vec![]];
+        let r = Tensor::from_rows(&[&[2.0, 0.0], &[0.0, 4.0]]);
+        let stats = vec![LayerStats {
+            a_mean: vec![0.0; 2],
+            b_mean: vec![],
+            aat: Some(r),
+            bbt: None,
+        }];
+        let ctx = StepCtx {
+            params: &params,
+            grads: &grads,
+            bias_grads: &bias,
+            stats: &stats,
+            lr: 1.0,
+            step: 0,
+        };
+        let gamma = HyperParams::default().damping;
+        let u = opt.step(&ctx);
+        assert!((u.deltas[0].at(0, 0) + 1.0 / (2.0 + gamma)).abs() < 1e-4);
+        assert!((u.deltas[0].at(1, 1) + 1.0 / (4.0 + gamma)).abs() < 1e-4);
+        assert!(u.deltas[0].at(0, 1).abs() < 1e-6);
+    }
+}

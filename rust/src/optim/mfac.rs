@@ -1,0 +1,187 @@
+//! M-FAC (Frantar et al.) — matrix-free FIM baseline (§2.2).
+//!
+//! Estimates the empirical Fisher from the last `m` *whole-model*
+//! gradients, `F = λI + (1/m) Σᵢ gᵢgᵢᵀ`, and computes `F⁻¹g` by chained
+//! Sherman–Morrison over the gradient history (the recursive
+//! Woodbury scheme). No matrix is ever materialized, but the history
+//! costs `O(m·d)` memory and `O(m²·d)` time per step — the paper's
+//! point about M-FAC being memory-hungry (m = 1024 suggested; scaled to
+//! `hp.mfac_history` here, see DESIGN.md).
+
+use super::{decayed_grads, HyperParams, MomentumState, Optimizer, StepCtx, Update};
+use crate::nn::StatsMode;
+use crate::tensor::{axpy, dot, Tensor};
+
+pub struct MFac {
+    hp: HyperParams,
+    /// Ring buffer of the last m flattened whole-model gradients.
+    history: Vec<Vec<f32>>,
+    next_slot: usize,
+    momentum: MomentumState,
+    /// Layer shapes for unflattening.
+    shapes: Vec<(usize, usize)>,
+}
+
+impl MFac {
+    pub fn new(hp: HyperParams) -> Self {
+        MFac {
+            hp,
+            history: Vec::new(),
+            next_slot: 0,
+            momentum: MomentumState::new(),
+            shapes: Vec::new(),
+        }
+    }
+
+    fn flatten(grads: &[Tensor]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(grads.iter().map(|g| g.len()).sum());
+        for g in grads {
+            out.extend_from_slice(g.data());
+        }
+        out
+    }
+
+    fn unflatten(&self, flat: &[f32]) -> Vec<Tensor> {
+        let mut out = Vec::with_capacity(self.shapes.len());
+        let mut off = 0;
+        for &(r, c) in &self.shapes {
+            out.push(Tensor::from_vec(r, c, flat[off..off + r * c].to_vec()));
+            off += r * c;
+        }
+        out
+    }
+
+    /// `F⁻¹ v` via chained Sherman–Morrison over the history.
+    ///
+    /// With `F_0 = λI`, `F_k = F_{k-1} + (1/m) g_k g_kᵀ`:
+    /// `F_k⁻¹v = F_{k-1}⁻¹v − c_k (g_kᵀ F_{k-1}⁻¹ v) / d_k` where
+    /// `c_k = F_{k-1}⁻¹ g_k`, `d_k = m + g_kᵀ c_k`. The `c_k` are built
+    /// by running the length-(k−1) chain on `g_k` itself.
+    fn inv_apply(&self, v: &[f32], lambda: f32) -> Vec<f32> {
+        let m = self.history.len();
+        let inv_l = 1.0 / lambda;
+        // Pass 1: compute c_k and denominators d_k.
+        let mut cs: Vec<Vec<f32>> = Vec::with_capacity(m);
+        let mut ds: Vec<f32> = Vec::with_capacity(m);
+        for k in 0..m {
+            let gk = &self.history[k];
+            let mut w: Vec<f32> = gk.iter().map(|x| x * inv_l).collect();
+            for j in 0..k {
+                let coeff = dot(&self.history[j], &w) / ds[j];
+                axpy(-coeff, &cs[j], &mut w);
+            }
+            let d = m as f32 + dot(gk, &w);
+            cs.push(w);
+            ds.push(d);
+        }
+        // Pass 2: run the full chain on v.
+        let mut w: Vec<f32> = v.iter().map(|x| x * inv_l).collect();
+        for j in 0..m {
+            let coeff = dot(&self.history[j], &w) / ds[j];
+            axpy(-coeff, &cs[j], &mut w);
+        }
+        w
+    }
+}
+
+impl Optimizer for MFac {
+    fn name(&self) -> &'static str {
+        "mfac"
+    }
+
+    fn stats_mode(&self) -> StatsMode {
+        StatsMode::None
+    }
+
+    fn step(&mut self, ctx: &StepCtx) -> Update {
+        if self.shapes.is_empty() {
+            self.shapes = ctx.grads.iter().map(|g| g.shape()).collect();
+        }
+        let grads = decayed_grads(ctx, self.hp.weight_decay);
+        let flat = Self::flatten(&grads);
+        // Insert into the ring buffer.
+        let m = self.hp.mfac_history.max(1);
+        if self.history.len() < m {
+            self.history.push(flat.clone());
+        } else {
+            self.history[self.next_slot] = flat.clone();
+            self.next_slot = (self.next_slot + 1) % m;
+        }
+        let pre_flat = self.inv_apply(&flat, self.hp.damping);
+        let pre = self.unflatten(&pre_flat);
+        self.momentum.apply(self.hp.momentum, ctx.lr, pre, ctx.bias_grads.to_vec())
+    }
+
+    fn state_bytes(&self) -> usize {
+        let h: usize = self.history.iter().map(|g| g.len()).sum();
+        4 * h + self.momentum.state_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::spd_inverse;
+    use crate::testing::{check, Gen};
+
+    /// inv_apply equals a dense (λI + (1/m)Σggᵀ)⁻¹ solve.
+    #[test]
+    fn prop_inv_apply_matches_dense() {
+        check("mfac woodbury == dense", 12, |g: &mut Gen| {
+            let d = g.usize_in(2, 10);
+            let m = g.usize_in(1, 6);
+            let lambda = g.f32_in(0.1, 1.0);
+            let mut opt = MFac::new(HyperParams::default());
+            let mut f = Tensor::zeros(d, d);
+            for _ in 0..m {
+                let gi = g.normal_vec(d);
+                f.add_outer(1.0 / m as f32, &gi, &gi);
+                opt.history.push(gi);
+            }
+            f.add_diag(lambda);
+            let dense = spd_inverse(&f).map_err(|e| e)?;
+            let v = g.normal_vec(d);
+            let fast = opt.inv_apply(&v, lambda);
+            let slow = dense.matvec(&v);
+            for (a, b) in fast.iter().zip(&slow) {
+                if (a - b).abs() > 2e-2 * (1.0 + b.abs()) {
+                    return Err(format!("{a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ring_buffer_caps_history() {
+        let mut hp = HyperParams::default();
+        hp.mfac_history = 3;
+        hp.momentum = 0.0;
+        hp.weight_decay = 0.0;
+        let mut opt = MFac::new(hp);
+        let params = vec![Tensor::zeros(2, 2)];
+        let bias = vec![vec![]];
+        for step in 0..5 {
+            let grads = vec![Tensor::full(2, 2, step as f32 + 1.0)];
+            let ctx = StepCtx {
+                params: &params,
+                grads: &grads,
+                bias_grads: &bias,
+                stats: &[],
+                lr: 0.1,
+                step,
+            };
+            let _ = opt.step(&ctx);
+        }
+        assert_eq!(opt.history.len(), 3);
+        // Memory accounting: 3 grads × 4 floats each.
+        assert_eq!(opt.state_bytes(), 4 * (3 * 4 + 4));
+    }
+
+    #[test]
+    fn empty_history_is_scaled_identity() {
+        let opt = MFac::new(HyperParams::default());
+        let out = opt.inv_apply(&[2.0, -4.0], 0.5);
+        assert_eq!(out, vec![4.0, -8.0]);
+    }
+}

@@ -1,0 +1,300 @@
+//! The optimizer zoo: Eva + every baseline the paper evaluates.
+//!
+//! | module | algorithm | paper eq. | preconditioner |
+//! |---|---|---|---|
+//! | [`sgd`] | SGD(+momentum) | Eq. 2 | identity |
+//! | [`adagrad`] | Adagrad | — | diagonal |
+//! | [`adam`] | Adam / AdamW | — | diagonal |
+//! | [`eva`] | **Eva** | Eq. 13 | rank-one KV Kronecker |
+//! | [`eva_f`] | **Eva-f** | Eq. 21 | right-side rank-one |
+//! | [`eva_s`] | **Eva-s** | Eq. 23 | per-dim rank-one |
+//! | [`kfac`] | K-FAC | Eq. 5 | Kronecker factors |
+//! | [`foof`] | FOOF (+rank-1 variant, Fig. 3) | Eq. 6 | right KF |
+//! | [`shampoo`] | Shampoo | Eq. 8 | inverse 2k-th roots |
+//! | [`mfac`] | M-FAC | §2.2 | matrix-free Woodbury |
+//!
+//! All optimizers implement [`Optimizer`]: given gradients + curvature
+//! statistics they produce parameter deltas, report how many bytes of
+//! state they hold (Table 5/10 memory rows), and declare which
+//! statistics ([`StatsMode`]) the backward pass must capture for them —
+//! Eva needs only KVs (O(d)), K-FAC/FOOF need full KFs (O(d²)),
+//! SGD/Adam/Shampoo/M-FAC need none.
+
+pub mod adagrad;
+pub mod adam;
+pub mod eva;
+pub mod eva_f;
+pub mod eva_s;
+pub mod foof;
+pub mod kfac;
+pub mod mfac;
+pub mod sgd;
+pub mod shampoo;
+
+pub use adagrad::Adagrad;
+pub use adam::Adam;
+pub use eva::Eva;
+pub use eva_f::EvaF;
+pub use eva_s::EvaS;
+pub use foof::Foof;
+pub use kfac::Kfac;
+pub use mfac::MFac;
+pub use sgd::Sgd;
+pub use shampoo::Shampoo;
+
+use crate::nn::{LayerStats, StatsMode};
+use crate::tensor::Tensor;
+
+/// Hyper-parameters shared across the zoo. Every algorithm reads the
+/// subset it needs; defaults follow the paper's §5 configurations.
+#[derive(Clone, Debug)]
+pub struct HyperParams {
+    /// Momentum coefficient (paper: 0.9 everywhere).
+    pub momentum: f32,
+    /// L2 weight decay, applied to the raw gradient before
+    /// preconditioning (paper setup for Cifar models).
+    pub weight_decay: f32,
+    /// Damping γ (paper default 0.03 for K-FAC/Eva).
+    pub damping: f32,
+    /// Running-average factor ξ for curvature statistics (paper: 0.95).
+    pub running_avg: f32,
+    /// KL-clipping threshold κ (paper: 1e-3, following Pauloski et al.).
+    pub kl_clip: f32,
+    /// Second-order statistics/inverse refresh interval (1 = every
+    /// step, the Eva regime; K-FAC@10/@50 in Table 5 / Fig. 6).
+    pub update_interval: usize,
+    /// History length m for M-FAC (paper suggests 1024; scaled here).
+    pub mfac_history: usize,
+    /// Blocked-Shampoo tile cap (Anil et al.'s dimension cap; 1024 on
+    /// their GPUs, scaled to this CPU).
+    pub shampoo_block: usize,
+    /// Adam β₁/β₂/ε.
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// Decoupled weight decay (AdamW) instead of L2-coupled.
+    pub decoupled_wd: bool,
+}
+
+impl Default for HyperParams {
+    fn default() -> Self {
+        HyperParams {
+            momentum: 0.9,
+            weight_decay: 5e-4,
+            damping: 0.03,
+            running_avg: 0.95,
+            kl_clip: 1e-3,
+            update_interval: 1,
+            mfac_history: 32,
+            shampoo_block: 128,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            decoupled_wd: false,
+        }
+    }
+}
+
+/// Per-step inputs handed to an optimizer.
+pub struct StepCtx<'a> {
+    /// Current parameters (read-only; used for weight decay).
+    pub params: &'a [Tensor],
+    /// Mean weight gradients per layer.
+    pub grads: &'a [Tensor],
+    /// Mean bias gradients per layer.
+    pub bias_grads: &'a [Vec<f32>],
+    /// Curvature statistics captured by the backward pass.
+    pub stats: &'a [LayerStats],
+    /// Learning rate α for this step (schedules live in `train`).
+    pub lr: f32,
+    /// Global step counter (0-based).
+    pub step: u64,
+}
+
+/// Parameter deltas produced by [`Optimizer::step`]; applied as
+/// `W += delta`.
+pub struct Update {
+    pub deltas: Vec<Tensor>,
+    pub bias_deltas: Vec<Vec<f32>>,
+}
+
+/// Common interface for all training algorithms.
+pub trait Optimizer: Send {
+    /// Display name (matches the config string).
+    fn name(&self) -> &'static str;
+
+    /// Which curvature statistics the backward pass must capture
+    /// (worst case over steps).
+    fn stats_mode(&self) -> StatsMode;
+
+    /// Per-step statistics requirement. Interval-based optimizers
+    /// (K-FAC@T, FOOF@T) override this to request full KFs only on
+    /// refresh steps — the stale-preconditioner regime of Table 5/Fig 6.
+    fn stats_mode_at(&self, _step: u64) -> StatsMode {
+        self.stats_mode()
+    }
+
+    /// Compute the parameter update for one step.
+    fn step(&mut self, ctx: &StepCtx) -> Update;
+
+    /// Bytes of persistent optimizer state currently held (the paper's
+    /// memory rows). Gradients themselves are not counted — every
+    /// optimizer receives those.
+    fn state_bytes(&self) -> usize;
+}
+
+/// Build an optimizer by config name.
+///
+/// Recognized: `sgd`, `adagrad`, `adam`, `adamw`, `eva`, `eva-f`,
+/// `eva-s`, `kfac`, `foof`, `foof-rank1`, `shampoo`, `mfac`.
+pub fn by_name(name: &str, hp: &HyperParams) -> Result<Box<dyn Optimizer>, String> {
+    let hp = hp.clone();
+    Ok(match name {
+        "sgd" => Box::new(Sgd::new(hp)),
+        "adagrad" => Box::new(Adagrad::new(hp)),
+        "adam" => Box::new(Adam::new(hp, false)),
+        "adamw" => Box::new(Adam::new(
+            HyperParams { decoupled_wd: true, ..hp },
+            true,
+        )),
+        "eva" => Box::new(Eva::new(hp)),
+        "eva-f" => Box::new(EvaF::new(hp)),
+        "eva-s" => Box::new(EvaS::new(hp)),
+        "kfac" => Box::new(Kfac::new(hp)),
+        "foof" => Box::new(Foof::new(hp, false)),
+        "foof-rank1" => Box::new(Foof::new(hp, true)),
+        "shampoo" => Box::new(Shampoo::new(hp)),
+        "mfac" => Box::new(MFac::new(hp)),
+        other => return Err(format!("unknown optimizer '{other}'")),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Shared helpers
+// ---------------------------------------------------------------------------
+
+/// KL-clipping factor ν = min(1, sqrt(κ / (α² Σ_l p_lᵀ g_l))) (Eq. 16).
+/// `pg_sum` is Σ_l p_lᵀ g_l over weight tensors.
+pub fn kl_clip_factor(kappa: f32, lr: f32, pg_sum: f32) -> f32 {
+    let denom = lr * lr * pg_sum;
+    if denom <= 0.0 {
+        return 1.0;
+    }
+    (kappa / denom).sqrt().min(1.0)
+}
+
+/// Σ_l p_lᵀ g_l over a preconditioned/raw gradient pair.
+pub fn pg_inner(p: &[Tensor], g: &[Tensor]) -> f32 {
+    p.iter().zip(g).map(|(pl, gl)| pl.dot(gl)).sum()
+}
+
+/// Momentum buffers + the common "precondition → clip → momentum →
+/// −α·step" tail every second-order method shares.
+pub struct MomentumState {
+    pub weights: Vec<Tensor>,
+    pub biases: Vec<Vec<f32>>,
+    initialized: bool,
+}
+
+impl MomentumState {
+    pub fn new() -> Self {
+        MomentumState { weights: Vec::new(), biases: Vec::new(), initialized: false }
+    }
+
+    /// `buf = μ·buf + v` per layer, lazily shaped on first use; returns
+    /// deltas `−lr·buf`.
+    pub fn apply(
+        &mut self,
+        mu: f32,
+        lr: f32,
+        pre_w: Vec<Tensor>,
+        pre_b: Vec<Vec<f32>>,
+    ) -> Update {
+        if !self.initialized {
+            self.weights = pre_w.iter().map(|t| Tensor::zeros(t.rows(), t.cols())).collect();
+            self.biases = pre_b.iter().map(|b| vec![0.0; b.len()]).collect();
+            self.initialized = true;
+        }
+        let mut deltas = Vec::with_capacity(pre_w.len());
+        for (buf, p) in self.weights.iter_mut().zip(pre_w) {
+            buf.scale(mu);
+            buf.axpy(1.0, &p);
+            let mut d = buf.clone();
+            d.scale(-lr);
+            deltas.push(d);
+        }
+        let mut bias_deltas = Vec::with_capacity(pre_b.len());
+        for (buf, p) in self.biases.iter_mut().zip(pre_b) {
+            for (bv, pv) in buf.iter_mut().zip(p) {
+                *bv = mu * *bv + pv;
+            }
+            bias_deltas.push(buf.iter().map(|v| -lr * v).collect());
+        }
+        Update { deltas, bias_deltas }
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        let w: usize = self.weights.iter().map(|t| t.len()).sum();
+        let b: usize = self.biases.iter().map(|v| v.len()).sum();
+        4 * (w + b)
+    }
+}
+
+impl Default for MomentumState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Apply L2 weight decay to raw gradients (coupled, pre-preconditioning).
+pub fn decayed_grads(ctx: &StepCtx, wd: f32) -> Vec<Tensor> {
+    ctx.grads
+        .iter()
+        .zip(ctx.params)
+        .map(|(g, w)| {
+            let mut d = g.clone();
+            if wd > 0.0 {
+                d.axpy(wd, w);
+            }
+            d
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kl_clip_caps_at_one() {
+        assert_eq!(kl_clip_factor(1e-3, 0.1, 1e-9), 1.0);
+        let v = kl_clip_factor(1e-3, 0.1, 100.0);
+        assert!(v < 1.0 && v > 0.0);
+        // ν² α² pg == κ at the boundary
+        assert!((v * v * 0.1 * 0.1 * 100.0 - 1e-3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn by_name_builds_all() {
+        let hp = HyperParams::default();
+        for n in [
+            "sgd", "adagrad", "adam", "adamw", "eva", "eva-f", "eva-s", "kfac", "foof",
+            "foof-rank1", "shampoo", "mfac",
+        ] {
+            let opt = by_name(n, &hp).unwrap();
+            assert!(!opt.name().is_empty());
+        }
+        assert!(by_name("newton", &hp).is_err());
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut m = MomentumState::new();
+        let g = vec![Tensor::full(1, 2, 1.0)];
+        let u1 = m.apply(0.9, 1.0, g.clone(), vec![vec![]]);
+        assert_eq!(u1.deltas[0].data(), &[-1.0, -1.0]);
+        let u2 = m.apply(0.9, 1.0, g, vec![vec![]]);
+        // buf = 0.9*1 + 1 = 1.9
+        assert!((u2.deltas[0].data()[0] + 1.9).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,84 @@
+//! SGD with momentum and L2 weight decay (paper Eq. 2; the first-order
+//! baseline every table normalizes against).
+
+use super::{decayed_grads, HyperParams, MomentumState, Optimizer, StepCtx, Update};
+use crate::nn::StatsMode;
+
+pub struct Sgd {
+    hp: HyperParams,
+    momentum: MomentumState,
+}
+
+impl Sgd {
+    pub fn new(hp: HyperParams) -> Self {
+        Sgd { hp, momentum: MomentumState::new() }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn stats_mode(&self) -> StatsMode {
+        StatsMode::None
+    }
+
+    fn step(&mut self, ctx: &StepCtx) -> Update {
+        let g = decayed_grads(ctx, self.hp.weight_decay);
+        self.momentum.apply(self.hp.momentum, ctx.lr, g, ctx.bias_grads.to_vec())
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.momentum.state_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn plain_step_is_negative_gradient() {
+        let mut hp = HyperParams::default();
+        hp.momentum = 0.0;
+        hp.weight_decay = 0.0;
+        let mut opt = Sgd::new(hp);
+        let params = vec![Tensor::full(2, 2, 1.0)];
+        let grads = vec![Tensor::full(2, 2, 2.0)];
+        let bias_grads = vec![vec![1.0, 1.0]];
+        let ctx = StepCtx {
+            params: &params,
+            grads: &grads,
+            bias_grads: &bias_grads,
+            stats: &[],
+            lr: 0.5,
+            step: 0,
+        };
+        let u = opt.step(&ctx);
+        assert_eq!(u.deltas[0].data(), &[-1.0; 4]);
+        assert_eq!(u.bias_deltas[0], vec![-0.5, -0.5]);
+    }
+
+    #[test]
+    fn weight_decay_pulls_toward_zero() {
+        let mut hp = HyperParams::default();
+        hp.momentum = 0.0;
+        hp.weight_decay = 0.1;
+        let mut opt = Sgd::new(hp);
+        let params = vec![Tensor::full(1, 1, 10.0)];
+        let grads = vec![Tensor::zeros(1, 1)];
+        let bias_grads = vec![vec![]];
+        let ctx = StepCtx {
+            params: &params,
+            grads: &grads,
+            bias_grads: &bias_grads,
+            stats: &[],
+            lr: 1.0,
+            step: 0,
+        };
+        let u = opt.step(&ctx);
+        assert!((u.deltas[0].data()[0] + 1.0).abs() < 1e-6);
+    }
+}

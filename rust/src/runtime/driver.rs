@@ -1,0 +1,223 @@
+//! Stateful fused-step driver: the optimized training hot path.
+//!
+//! Owns parameters, momentum and KV state for one model and advances
+//! one optimizer step per [`StepDriver::step`] call by executing the
+//! fused `<model>.eva_step` (or `<model>.sgd_step`) artifact — forward,
+//! backward, Pallas preconditioning, KL clip, momentum and update all
+//! inside a single XLA computation.
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use super::{Executable, HostArray, ModelMeta, Runtime};
+use crate::rng::Pcg64;
+use crate::tensor::Tensor;
+
+/// Which fused step graph to drive.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepKind {
+    Eva,
+    Sgd,
+}
+
+impl StepKind {
+    fn graph(&self) -> &'static str {
+        match self {
+            StepKind::Eva => "eva_step",
+            StepKind::Sgd => "sgd_step",
+        }
+    }
+}
+
+/// Hyper-parameters packed as the artifact's `hp` input
+/// `[lr, gamma, xi, kappa, momentum, weight_decay]`.
+#[derive(Clone, Copy, Debug)]
+pub struct StepHp {
+    pub lr: f32,
+    pub gamma: f32,
+    pub xi: f32,
+    pub kappa: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for StepHp {
+    fn default() -> Self {
+        StepHp {
+            lr: 0.1,
+            gamma: 0.03,
+            xi: 0.95,
+            kappa: 1e-3,
+            momentum: 0.9,
+            weight_decay: 5e-4,
+        }
+    }
+}
+
+/// Stateful driver over a fused step artifact.
+pub struct StepDriver {
+    step_exe: Rc<Executable>,
+    predict_exe: Rc<Executable>,
+    pub meta: ModelMeta,
+    pub kind: StepKind,
+    pub hp: StepHp,
+    /// weights, biases, momentum_w, momentum_b (+ a_bars, b_bars for Eva),
+    /// in artifact input order.
+    weights: Vec<HostArray>,
+    biases: Vec<HostArray>,
+    mom_w: Vec<HostArray>,
+    mom_b: Vec<HostArray>,
+    a_bars: Vec<HostArray>,
+    b_bars: Vec<HostArray>,
+    pub steps_taken: u64,
+}
+
+impl StepDriver {
+    /// Build for a manifest model (`"quickstart"`, `"ae-small"`, `"e2e"`),
+    /// initializing parameters with the same scheme as `Mlp::init`.
+    pub fn new(rt: &mut Runtime, model: &str, kind: StepKind, hp: StepHp, seed: u64) -> Result<Self> {
+        let meta = rt
+            .manifest()
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow!("model '{model}' not in manifest"))?
+            .clone();
+        let step_exe = rt.load(&format!("{model}.{}", kind.graph()))?;
+        let predict_exe = rt.load(&format!("{model}.predict"))?;
+        let mut rng = Pcg64::new(seed, 0x3317);
+        let ll = meta.num_layers();
+        let relu = meta.hidden_act == "relu";
+        let mut weights = Vec::with_capacity(ll);
+        let mut biases = Vec::with_capacity(ll);
+        for l in 0..ll {
+            let (d_in, d_out) = (meta.dims[l], meta.dims[l + 1]);
+            let std = if relu { (2.0 / d_in as f32).sqrt() } else { (1.0 / d_in as f32).sqrt() };
+            let mut w = vec![0.0f32; d_out * d_in];
+            rng.fill_normal(&mut w, std);
+            weights.push(HostArray::new(vec![d_out, d_in], w));
+            biases.push(HostArray::zeros(&[d_out]));
+        }
+        let mom_w = weights.iter().map(|w| HostArray::zeros(&w.shape)).collect();
+        let mom_b = biases.iter().map(|b| HostArray::zeros(&b.shape)).collect();
+        let a_bars = (0..ll).map(|l| HostArray::zeros(&[meta.dims[l]])).collect();
+        let b_bars = (0..ll).map(|l| HostArray::zeros(&[meta.dims[l + 1]])).collect();
+        Ok(StepDriver {
+            step_exe,
+            predict_exe,
+            meta,
+            kind,
+            hp,
+            weights,
+            biases,
+            mom_w,
+            mom_b,
+            a_bars,
+            b_bars,
+            steps_taken: 0,
+        })
+    }
+
+    fn hp_array(&self) -> HostArray {
+        HostArray::from_vec1(vec![
+            self.hp.lr,
+            self.hp.gamma,
+            self.hp.xi,
+            self.hp.kappa,
+            self.hp.momentum,
+            self.hp.weight_decay,
+        ])
+    }
+
+    /// One fused training step. `x` is `(batch, d0)`, `y_onehot`
+    /// `(batch, d_last)` (ignored by MSE models). Returns the loss.
+    pub fn step(&mut self, x: &HostArray, y_onehot: &HostArray) -> Result<f32> {
+        let mut inputs: Vec<HostArray> = Vec::new();
+        inputs.extend(self.weights.iter().cloned());
+        inputs.extend(self.biases.iter().cloned());
+        inputs.extend(self.mom_w.iter().cloned());
+        inputs.extend(self.mom_b.iter().cloned());
+        if self.kind == StepKind::Eva {
+            inputs.extend(self.a_bars.iter().cloned());
+            inputs.extend(self.b_bars.iter().cloned());
+        }
+        inputs.push(x.clone());
+        inputs.push(y_onehot.clone());
+        inputs.push(self.hp_array());
+        let mut out = self.step_exe.run(&inputs)?;
+        let loss = out.pop().expect("loss output").scalar_value();
+        let ll = self.meta.num_layers();
+        // Outputs: w', b', mw', mb' (+ abar', bbar' for Eva).
+        let mut it = out.into_iter();
+        self.weights = (&mut it).take(ll).collect();
+        self.biases = (&mut it).take(ll).collect();
+        self.mom_w = (&mut it).take(ll).collect();
+        self.mom_b = (&mut it).take(ll).collect();
+        if self.kind == StepKind::Eva {
+            self.a_bars = (&mut it).take(ll).collect();
+            self.b_bars = (&mut it).take(ll).collect();
+        }
+        self.steps_taken += 1;
+        Ok(loss)
+    }
+
+    /// Run the predict artifact on one batch.
+    pub fn predict(&self, x: &HostArray) -> Result<HostArray> {
+        let mut inputs: Vec<HostArray> = Vec::new();
+        inputs.extend(self.weights.iter().cloned());
+        inputs.extend(self.biases.iter().cloned());
+        inputs.push(x.clone());
+        Ok(self.predict_exe.run(&inputs)?.pop().expect("predict output"))
+    }
+
+    /// Batched top-1 accuracy over a labeled split (classification).
+    pub fn accuracy(&self, inputs: &Tensor, labels: &[usize]) -> Result<f32> {
+        let batch = self.meta.batch;
+        let n = inputs.rows();
+        let d = inputs.cols();
+        let mut correct = 0usize;
+        let mut counted = 0usize;
+        let mut i = 0;
+        while i + batch <= n {
+            let mut xb = vec![0.0f32; batch * d];
+            for r in 0..batch {
+                xb[r * d..(r + 1) * d].copy_from_slice(inputs.row(i + r));
+            }
+            let out = self.predict(&HostArray::new(vec![batch, d], xb))?;
+            let classes = *out.shape.last().unwrap();
+            for r in 0..batch {
+                let row = &out.data[r * classes..(r + 1) * classes];
+                let argmax = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(j, _)| j)
+                    .unwrap();
+                if argmax == labels[i + r] {
+                    correct += 1;
+                }
+            }
+            counted += batch;
+            i += batch;
+        }
+        Ok(correct as f32 / counted.max(1) as f32)
+    }
+
+    /// Export current parameters as tensors (weights only).
+    pub fn weights_as_tensors(&self) -> Vec<Tensor> {
+        self.weights.iter().map(|w| w.to_tensor()).collect()
+    }
+
+    /// Bytes of optimizer state (momentum + KVs) — Table 5 accounting
+    /// for the fused path.
+    pub fn optimizer_state_bytes(&self) -> usize {
+        let mom: usize =
+            self.mom_w.iter().chain(&self.mom_b).map(|a| a.data.len()).sum();
+        let kv: usize = if self.kind == StepKind::Eva {
+            self.a_bars.iter().chain(&self.b_bars).map(|a| a.data.len()).sum()
+        } else {
+            0
+        };
+        4 * (mom + kv)
+    }
+}

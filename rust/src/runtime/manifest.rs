@@ -1,0 +1,162 @@
+//! Artifact manifest parsing (written by `python/compile/aot.py`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::jsonx::Json;
+
+/// One named array in an artifact signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArraySpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ArraySpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact: HLO file + ordered input/output signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<ArraySpec>,
+    pub outputs: Vec<ArraySpec>,
+}
+
+/// Model metadata block (mirrors `ModelCfg` in model.py).
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub dims: Vec<usize>,
+    pub loss: String,
+    pub hidden_act: String,
+    pub output_act: String,
+    pub batch: usize,
+    pub num_params: usize,
+}
+
+impl ModelMeta {
+    pub fn num_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub models: BTreeMap<String, ModelMeta>,
+}
+
+fn parse_arrays(v: &Json) -> Result<Vec<ArraySpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected array of specs"))?
+        .iter()
+        .map(|a| {
+            let name = a.get_str("name").ok_or_else(|| anyhow!("spec missing name"))?.to_string();
+            let shape = a
+                .get("shape")
+                .and_then(|s| s.as_arr())
+                .ok_or_else(|| anyhow!("spec missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(ArraySpec { name, shape })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let mut artifacts = BTreeMap::new();
+        for (k, a) in v.get("artifacts").and_then(|x| x.as_obj()).into_iter().flatten() {
+            artifacts.insert(
+                k.clone(),
+                ArtifactSpec {
+                    file: a
+                        .get_str("file")
+                        .ok_or_else(|| anyhow!("artifact {k} missing file"))?
+                        .to_string(),
+                    inputs: parse_arrays(a.get("inputs").ok_or_else(|| anyhow!("no inputs"))?)?,
+                    outputs: parse_arrays(a.get("outputs").ok_or_else(|| anyhow!("no outputs"))?)?,
+                },
+            );
+        }
+        let mut models = BTreeMap::new();
+        for (k, m) in v.get("models").and_then(|x| x.as_obj()).into_iter().flatten() {
+            models.insert(
+                k.clone(),
+                ModelMeta {
+                    dims: m
+                        .get("dims")
+                        .and_then(|d| d.as_arr())
+                        .ok_or_else(|| anyhow!("model {k} missing dims"))?
+                        .iter()
+                        .filter_map(|d| d.as_usize())
+                        .collect(),
+                    loss: m.get_str("loss").unwrap_or("ce").to_string(),
+                    hidden_act: m.get_str("hidden_act").unwrap_or("relu").to_string(),
+                    output_act: m.get_str("output_act").unwrap_or("identity").to_string(),
+                    batch: m.get_usize("batch").unwrap_or(64),
+                    num_params: m.get_usize("num_params").unwrap_or(0),
+                },
+            );
+        }
+        Ok(Manifest { artifacts, models })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": {
+        "m.predict": {
+          "file": "m.predict.hlo.txt",
+          "inputs": [{"name": "w0", "shape": [4, 3]}, {"name": "x", "shape": [8, 3]}],
+          "outputs": [{"name": "out", "shape": [8, 4]}]
+        }
+      },
+      "models": {
+        "m": {"dims": [3, 4], "loss": "ce", "hidden_act": "relu",
+               "output_act": "identity", "batch": 8, "num_params": 16}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = &m.artifacts["m.predict"];
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].shape, vec![4, 3]);
+        assert_eq!(a.outputs[0].numel(), 32);
+        assert_eq!(m.models["m"].dims, vec![3, 4]);
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // Integration-ish: when artifacts were built, validate the file.
+        let p = Path::new("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::load(p).unwrap();
+            assert!(m.artifacts.contains_key("quickstart.eva_step"));
+            assert!(m.models.contains_key("quickstart"));
+            let spec = &m.artifacts["quickstart.eva_step"];
+            // params(2L) + momentum(2L) + kv(2L) + x, y, hp
+            let ll = m.models["quickstart"].num_layers();
+            assert_eq!(spec.inputs.len(), 6 * ll + 3);
+            assert_eq!(spec.outputs.len(), 6 * ll + 1);
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! PJRT runtime: load and execute the AOT artifacts from the hot path.
+//!
+//! `make artifacts` (Python, build-time only) writes `artifacts/*.hlo.txt`
+//! plus `manifest.json`; this module is everything the self-contained
+//! Rust binary needs to run them:
+//!
+//! * [`Manifest`] — parsed artifact index (names, input/output specs,
+//!   model metadata).
+//! * [`Runtime`] — a `PjRtClient::cpu()` plus an executable cache:
+//!   `HloModuleProto::from_text_file` → `XlaComputation` → `compile`.
+//! * [`Executable::run`] — marshals [`HostArray`]s to literals, executes,
+//!   and unwraps the result (tuple root only when the graph has >1
+//!   output — see `aot.py`).
+//! * [`StepDriver`] — stateful wrapper around the fused
+//!   `<model>.eva_step` / `<model>.sgd_step` artifacts: owns parameters,
+//!   momentum and KV state and advances one optimizer step per call.
+//!   This is the paper's optimized hot path: one XLA computation per
+//!   training step, Python nowhere in sight.
+
+mod driver;
+mod manifest;
+
+pub use driver::{StepDriver, StepHp, StepKind};
+pub use manifest::{ArraySpec, ArtifactSpec, Manifest, ModelMeta};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A host-side array: f32 data + shape (0-, 1- or 2-d in practice).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostArray {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostArray {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostArray { shape, data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        HostArray { shape: vec![], data: vec![v] }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        HostArray { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_tensor(t: &crate::tensor::Tensor) -> Self {
+        HostArray { shape: vec![t.rows(), t.cols()], data: t.data().to_vec() }
+    }
+
+    pub fn from_vec1(v: Vec<f32>) -> Self {
+        HostArray { shape: vec![v.len()], data: v }
+    }
+
+    /// View as a 2-d tensor (0-/1-d arrays become a single row).
+    pub fn to_tensor(&self) -> crate::tensor::Tensor {
+        match self.shape.len() {
+            0 => crate::tensor::Tensor::from_vec(1, 1, self.data.clone()),
+            1 => crate::tensor::Tensor::from_vec(1, self.shape[0], self.data.clone()),
+            2 => crate::tensor::Tensor::from_vec(self.shape[0], self.shape[1], self.data.clone()),
+            _ => panic!("HostArray rank {} unsupported", self.shape.len()),
+        }
+    }
+
+    pub fn scalar_value(&self) -> f32 {
+        self.data[0]
+    }
+
+    /// Reinterpret with an explicit shape (asserts element count).
+    pub fn reshaped(mut self, shape: Vec<usize>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+}
+
+/// The PJRT client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: HashMap<String, std::rc::Rc<Executable>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (must contain `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, manifest, dir, cache: HashMap::new() })
+    }
+
+    /// Default artifact location relative to the repo root.
+    pub fn open_default() -> Result<Self> {
+        Self::open("artifacts")
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Load (or fetch from cache) a compiled artifact by manifest key,
+    /// e.g. `"quickstart.eva_step"`.
+    pub fn load(&mut self, key: &str) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.get(key) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .artifacts
+            .get(key)
+            .ok_or_else(|| anyhow!("artifact '{key}' not in manifest"))?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {key}: {e:?}"))?;
+        let exec = std::rc::Rc::new(Executable { exe, spec, key: key.to_string() });
+        self.cache.insert(key.to_string(), exec.clone());
+        Ok(exec)
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+    key: String,
+}
+
+impl Executable {
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Execute with host inputs; returns outputs in manifest order.
+    pub fn run(&self, inputs: &[HostArray]) -> Result<Vec<HostArray>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.key,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (arr, ispec) in inputs.iter().zip(&self.spec.inputs) {
+            if arr.shape != ispec.shape {
+                bail!(
+                    "{}: input '{}' shape {:?} != expected {:?}",
+                    self.key,
+                    ispec.name,
+                    arr.shape,
+                    ispec.shape
+                );
+            }
+            let dims: Vec<i64> = arr.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&arr.data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape input '{}': {e:?}", ispec.name))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.key))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {}: {e:?}", self.key))?;
+        let outs: Vec<xla::Literal> = if self.spec.outputs.len() > 1 {
+            root.to_tuple().map_err(|e| anyhow!("tuple decompose: {e:?}"))?
+        } else {
+            vec![root]
+        };
+        if outs.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.key,
+                outs.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut arrays = Vec::with_capacity(outs.len());
+        for (lit, ospec) in outs.iter().zip(&self.spec.outputs) {
+            let data: Vec<f32> =
+                lit.to_vec().map_err(|e| anyhow!("output '{}': {e:?}", ospec.name))?;
+            arrays.push(HostArray::new(ospec.shape.clone(), data));
+        }
+        Ok(arrays)
+    }
+}

@@ -1,0 +1,398 @@
+//! Dense row-major f32 tensors (substrate).
+//!
+//! A deliberately small tensor library: just what the native training
+//! path, the optimizer zoo, and the linear-algebra substrate need.
+//! Matrices are row-major `(rows, cols)`. The matmul family is written
+//! as blocked kernels over contiguous rows so the hot loops
+//! auto-vectorize; see `rust/benches/linalg_micro.rs` and
+//! EXPERIMENTS.md §Perf for measured throughput.
+
+mod matmul;
+pub use matmul::{matmul, matmul_at_b, matmul_a_bt, matmul_into};
+
+/// A dense, row-major matrix of `f32`.
+///
+/// The name `Tensor` is kept for parity with the paper's notation; all
+/// per-layer quantities in Eva/K-FAC are matrices (order-2) after
+/// `mat_i` reshaping, which is how Shampoo's tensor case is handled too.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled `(rows, cols)` matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Tensor { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix filled with a constant.
+    pub fn full(rows: usize, cols: usize, v: f32) -> Self {
+        Tensor { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// Identity matrix of size `n`.
+    pub fn eye(n: usize) -> Self {
+        let mut t = Self::zeros(n, n);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    /// Build from an existing buffer. `data.len()` must equal `rows*cols`.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Tensor { rows, cols, data }
+    }
+
+    /// Build from a row-major slice of slices (tests/fixtures).
+    pub fn from_rows(rows: &[&[f32]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c);
+            data.extend_from_slice(row);
+        }
+        Tensor { rows: r, cols: c, data }
+    }
+
+    /// A column vector from a slice.
+    pub fn col_vec(xs: &[f32]) -> Self {
+        Tensor { rows: xs.len(), cols: 1, data: xs.to_vec() }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    /// Total number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Immutable row slice.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row slice.
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Element access (row, col).
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    /// Mutable element access (row, col).
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    /// Reinterpret as a `(rows, cols)` matrix with the same element count.
+    pub fn reshaped(mut self, rows: usize, cols: usize) -> Self {
+        assert_eq!(rows * cols, self.data.len(), "reshape element mismatch");
+        self.rows = rows;
+        self.cols = cols;
+        self
+    }
+
+    /// Out-of-place transpose.
+    pub fn transpose(&self) -> Self {
+        let mut t = Tensor::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on big matrices.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Elementwise map into a new tensor.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Self {
+        Tensor {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Elementwise in-place map.
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+    }
+
+    /// self += alpha * other (same shape).
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, &b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    /// self = beta*self + alpha*other (running averages).
+    pub fn blend(&mut self, beta: f32, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, &b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a = beta * *a + alpha * b;
+        }
+    }
+
+    /// Scale all elements in place.
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// Frobenius inner product <self, other>.
+    pub fn dot(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        dot(&self.data, &other.data)
+    }
+
+    /// Squared Frobenius norm.
+    pub fn norm_sq(&self) -> f32 {
+        dot(&self.data, &self.data)
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f32 {
+        self.norm_sq().sqrt()
+    }
+
+    /// Mean over columns: returns a length-`rows` vector (the paper's
+    /// `mean-col` used to build KVs from batched activations of shape
+    /// `(d, n)`).
+    pub fn mean_cols(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows];
+        for i in 0..self.rows {
+            let r = self.row(i);
+            out[i] = r.iter().sum::<f32>() / self.cols as f32;
+        }
+        out
+    }
+
+    /// Mean over rows: returns a length-`cols` vector.
+    pub fn mean_rows(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            for (o, &v) in out.iter_mut().zip(self.row(i)) {
+                *o += v;
+            }
+        }
+        let inv = 1.0 / self.rows as f32;
+        for o in &mut out {
+            *o *= inv;
+        }
+        out
+    }
+
+    /// Rank-one update: self += alpha * u vᵀ.
+    pub fn add_outer(&mut self, alpha: f32, u: &[f32], v: &[f32]) {
+        assert_eq!(u.len(), self.rows);
+        assert_eq!(v.len(), self.cols);
+        for i in 0..self.rows {
+            let ui = alpha * u[i];
+            let row = self.row_mut(i);
+            for (r, &vj) in row.iter_mut().zip(v) {
+                *r += ui * vj;
+            }
+        }
+    }
+
+    /// y = self · x for a vector x of length `cols`.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0f32; self.rows];
+        for i in 0..self.rows {
+            y[i] = dot(self.row(i), x);
+        }
+        y
+    }
+
+    /// y = selfᵀ · x for a vector x of length `rows`.
+    pub fn tmatvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows);
+        let mut y = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            for (o, &v) in y.iter_mut().zip(self.row(i)) {
+                *o += xi * v;
+            }
+        }
+        y
+    }
+
+    /// Add `gamma` to the diagonal in place (damping).
+    pub fn add_diag(&mut self, gamma: f32) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self.data[i * self.cols + i] += gamma;
+        }
+    }
+
+    /// Copy of the sub-matrix rows `r0..r1`, cols `c0..c1`.
+    pub fn submatrix(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Tensor {
+        assert!(r0 <= r1 && r1 <= self.rows && c0 <= c1 && c1 <= self.cols);
+        let mut out = Tensor::zeros(r1 - r0, c1 - c0);
+        for (oi, i) in (r0..r1).enumerate() {
+            out.row_mut(oi).copy_from_slice(&self.row(i)[c0..c1]);
+        }
+        out
+    }
+
+    /// Paste `block` into this matrix with its top-left at `(r0, c0)`.
+    pub fn paste(&mut self, r0: usize, c0: usize, block: &Tensor) {
+        assert!(r0 + block.rows() <= self.rows && c0 + block.cols() <= self.cols);
+        for i in 0..block.rows() {
+            self.row_mut(r0 + i)[c0..c0 + block.cols()].copy_from_slice(block.row(i));
+        }
+    }
+
+    /// Maximum absolute difference against another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// True if all entries are finite.
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+}
+
+/// Dense dot product over f32 slices, 4-way unrolled; the compiler
+/// vectorizes each lane.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+    for k in 0..chunks {
+        let i = 4 * k;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in 4 * chunks..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// axpy over raw slices: y += alpha * x.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Euclidean norm of a slice.
+pub fn norm(x: &[f32]) -> f32 {
+    dot(x, x).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(t.shape(), (2, 2));
+        assert_eq!(t.at(1, 0), 3.0);
+        assert_eq!(t.row(0), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let t = Tensor::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        let tt = t.transpose();
+        assert_eq!(tt.shape(), (3, 2));
+        assert_eq!(tt.at(2, 1), 6.0);
+        assert_eq!(tt.transpose(), t);
+    }
+
+    #[test]
+    fn mean_cols_matches_manual() {
+        // (d, n) = (2, 3): rows are feature dims, columns are samples.
+        let a = Tensor::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        assert_eq!(a.mean_cols(), vec![2.0, 5.0]);
+        assert_eq!(a.mean_rows(), vec![2.5, 3.5, 4.5]);
+    }
+
+    #[test]
+    fn outer_and_matvec() {
+        let mut t = Tensor::zeros(2, 3);
+        t.add_outer(2.0, &[1.0, 2.0], &[1.0, 0.0, 1.0]);
+        assert_eq!(t.row(1), &[4.0, 0.0, 4.0]);
+        assert_eq!(t.matvec(&[1.0, 1.0, 1.0]), vec![4.0, 8.0]);
+        assert_eq!(t.tmatvec(&[1.0, 0.0]), vec![2.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn blend_running_average() {
+        let mut a = Tensor::full(1, 2, 1.0);
+        let b = Tensor::full(1, 2, 3.0);
+        a.blend(0.5, 0.5, &b);
+        assert_eq!(a.data(), &[2.0, 2.0]);
+    }
+
+    #[test]
+    fn add_diag_damps() {
+        let mut t = Tensor::zeros(3, 3);
+        t.add_diag(0.25);
+        assert_eq!(t.at(1, 1), 0.25);
+        assert_eq!(t.at(0, 1), 0.0);
+    }
+
+    #[test]
+    fn dot_unrolled_matches_naive() {
+        let a: Vec<f32> = (0..37).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..37).map(|i| (i as f32).sin()).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-3);
+    }
+}

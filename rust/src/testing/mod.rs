@@ -1,0 +1,123 @@
+//! quickcheck-lite: property-based testing harness (substrate).
+//!
+//! No proptest/quickcheck offline, so the repo ships a minimal
+//! generator + runner. Properties are closures over a [`Gen`]; the
+//! runner executes N seeded cases and reports the failing seed so a
+//! failure is reproducible by construction (no shrinking — the seed is
+//! the witness).
+
+use crate::rng::Pcg64;
+use crate::tensor::Tensor;
+
+/// Random-input generator handed to properties.
+pub struct Gen {
+    rng: Pcg64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Pcg64::seeded(seed) }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Standard-normal vector of length n.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        let mut v = vec![0.0; n];
+        self.rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    /// Standard-normal matrix.
+    pub fn normal_tensor(&mut self, rows: usize, cols: usize) -> Tensor {
+        let mut t = Tensor::zeros(rows, cols);
+        self.rng.fill_normal(t.data_mut(), 1.0);
+        t
+    }
+
+    /// Random SPD matrix with condition control: `XXᵀ/cols + eps·I`.
+    pub fn spd_tensor(&mut self, n: usize, eps: f32) -> Tensor {
+        let x = self.normal_tensor(n, n + 4);
+        let mut m = crate::tensor::matmul_a_bt(&x, &x);
+        m.scale(1.0 / (n + 4) as f32);
+        m.add_diag(eps);
+        m
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics (failing the enclosing
+/// `#[test]`) with the case seed on the first counterexample.
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    for case in 0..cases {
+        let seed = 0x5eed_0000 + case;
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!("property '{name}' failed (case {case}, seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Helper assertion for approximate scalar equality inside properties.
+pub fn close(a: f32, b: f32, tol: f32, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+/// Helper assertion for approximate tensor equality inside properties.
+pub fn tensors_close(a: &Tensor, b: &Tensor, tol: f32, what: &str) -> Result<(), String> {
+    if a.shape() != b.shape() {
+        return Err(format!("{what}: shape {:?} vs {:?}", a.shape(), b.shape()));
+    }
+    let d = a.max_abs_diff(b);
+    if d <= tol {
+        Ok(())
+    } else {
+        Err(format!("{what}: max abs diff {d} > {tol}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("add commutes", 50, |g| {
+            let a = g.f32_in(-10.0, 10.0);
+            let b = g.f32_in(-10.0, 10.0);
+            close(a + b, b + a, 1e-6, "commutativity")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn check_reports_failures() {
+        check("always fails", 3, |_g| Err("nope".into()));
+    }
+
+    #[test]
+    fn spd_tensor_is_pd() {
+        check("spd gen is PD", 10, |g| {
+            let n = g.usize_in(2, 12);
+            let m = g.spd_tensor(n, 0.01);
+            crate::linalg::cholesky(&m).map(|_| ()).map_err(|e| e)
+        });
+    }
+}

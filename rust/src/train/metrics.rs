@@ -1,0 +1,118 @@
+//! Step timing + CSV metric sinks.
+
+use std::time::Duration;
+
+/// Collects per-step wall times and reports summary statistics.
+#[derive(Clone, Debug, Default)]
+pub struct StepTimer {
+    samples_us: Vec<u64>,
+}
+
+impl StepTimer {
+    pub fn new() -> Self {
+        StepTimer { samples_us: Vec::new() }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64 / 1000.0
+    }
+
+    /// p-th percentile in milliseconds (p in [0, 100]).
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples_us.clone();
+        s.sort_unstable();
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)] as f64 / 1000.0
+    }
+
+    /// Mean excluding the first `k` warmup samples (JIT/caches).
+    pub fn steady_mean_ms(&self, k: usize) -> f64 {
+        if self.samples_us.len() <= k {
+            return self.mean_ms();
+        }
+        let s = &self.samples_us[k..];
+        s.iter().sum::<u64>() as f64 / s.len() as f64 / 1000.0
+    }
+}
+
+/// Minimal CSV writer for experiment outputs (plotted offline).
+pub struct Metrics {
+    path: std::path::PathBuf,
+    rows: Vec<String>,
+    header: String,
+}
+
+impl Metrics {
+    pub fn new(path: impl Into<std::path::PathBuf>, header: &str) -> Self {
+        Metrics { path: path.into(), rows: Vec::new(), header: header.to_string() }
+    }
+
+    pub fn row(&mut self, values: &[String]) {
+        self.rows.push(values.join(","));
+    }
+
+    pub fn rowf(&mut self, values: &[f64]) {
+        self.rows
+            .push(values.iter().map(|v| format!("{v}")).collect::<Vec<_>>().join(","));
+    }
+
+    /// Write the CSV to disk (creates parent dirs).
+    pub fn flush(&self) -> std::io::Result<()> {
+        if let Some(parent) = self.path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = String::with_capacity(self.rows.len() * 32);
+        out.push_str(&self.header);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(r);
+            out.push('\n');
+        }
+        std::fs::write(&self.path, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_stats() {
+        let mut t = StepTimer::new();
+        for ms in [1u64, 2, 3, 4, 100] {
+            t.record(Duration::from_millis(ms));
+        }
+        assert_eq!(t.count(), 5);
+        assert!((t.mean_ms() - 22.0).abs() < 0.5);
+        assert!(t.percentile_ms(50.0) <= 4.0);
+        // Excluding the 1ms warmup sample.
+        assert!(t.steady_mean_ms(1) > t.percentile_ms(50.0));
+    }
+
+    #[test]
+    fn csv_writes() {
+        let dir = std::env::temp_dir().join("eva-test-metrics");
+        let path = dir.join("m.csv");
+        let mut m = Metrics::new(&path, "a,b");
+        m.rowf(&[1.0, 2.0]);
+        m.row(&["x".into(), "y".into()]);
+        m.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\nx,y\n");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,377 @@
+//! The training driver: ties datasets, models, optimizers and engines
+//! together, with metrics and CSV logging.
+//!
+//! [`Trainer`] is the single-process path used by every experiment in
+//! `exp/` (native engine) and by the quickstart (either engine).
+//! Multi-worker data parallelism lives in `coordinator`.
+
+mod metrics;
+
+pub use metrics::{Metrics, StepTimer};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{Engine, TrainConfig};
+use crate::data::{by_name, Batcher, Dataset, Task};
+use crate::nn::{Mlp, StatsMode};
+use crate::optim::{by_name as optim_by_name, Optimizer, StepCtx};
+use crate::runtime::{HostArray, Runtime, StepDriver, StepHp, StepKind};
+use crate::tensor::Tensor;
+
+/// Per-epoch record.
+#[derive(Clone, Debug)]
+pub struct EpochMetrics {
+    pub epoch: usize,
+    pub train_loss: f32,
+    pub val_metric: f32, // accuracy for classification, loss for AE
+    pub wall_time_s: f64,
+    pub mean_step_ms: f64,
+}
+
+/// Final run report.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub config_name: String,
+    pub optimizer: String,
+    pub final_loss: f32,
+    /// Best validation accuracy (classification) — 0 for AE runs.
+    pub best_val_acc: f32,
+    /// Best (lowest) validation loss (AE) — f32::MAX for classification.
+    pub best_val_loss: f32,
+    pub history: Vec<EpochMetrics>,
+    pub total_time_s: f64,
+    pub mean_step_ms: f64,
+    pub optimizer_state_bytes: usize,
+    pub steps: u64,
+}
+
+impl Report {
+    /// First epoch at which validation accuracy reached `target`
+    /// (classification), with the cumulative wall-clock time.
+    pub fn time_to_accuracy(&self, target: f32) -> Option<(usize, f64)> {
+        let mut t = 0.0;
+        for e in &self.history {
+            t += e.wall_time_s;
+            if e.val_metric >= target {
+                return Some((e.epoch, t));
+            }
+        }
+        None
+    }
+}
+
+/// Single-process trainer.
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub dataset: Dataset,
+    engine: EngineState,
+}
+
+enum EngineState {
+    Native { model: Mlp, optimizer: Box<dyn Optimizer> },
+    Pjrt { driver: StepDriver },
+}
+
+impl Trainer {
+    pub fn from_config(cfg: &TrainConfig) -> Result<Self> {
+        let dataset = by_name(&cfg.dataset, cfg.seed).map_err(|e| anyhow!(e))?;
+        let engine = match &cfg.engine {
+            Engine::Native => {
+                let spec = cfg.arch.to_spec(dataset.input_dim(), dataset.num_classes);
+                let model = Mlp::init(spec, cfg.seed.wrapping_add(1));
+                let optimizer =
+                    optim_by_name(&cfg.optim.algorithm, &cfg.optim.hp).map_err(|e| anyhow!(e))?;
+                EngineState::Native { model, optimizer }
+            }
+            Engine::Pjrt { model } => {
+                let mut rt = Runtime::open_default()?;
+                let kind = match cfg.optim.algorithm.as_str() {
+                    "eva" => StepKind::Eva,
+                    "sgd" => StepKind::Sgd,
+                    other => {
+                        return Err(anyhow!("pjrt engine supports eva|sgd, not '{other}'"))
+                    }
+                };
+                let hp = StepHp {
+                    lr: cfg.base_lr,
+                    gamma: cfg.optim.hp.damping,
+                    xi: cfg.optim.hp.running_avg,
+                    kappa: cfg.optim.hp.kl_clip,
+                    momentum: cfg.optim.hp.momentum,
+                    weight_decay: cfg.optim.hp.weight_decay,
+                };
+                let driver = StepDriver::new(&mut rt, model, kind, hp, cfg.seed)?;
+                // The runtime must outlive the driver's executables; the
+                // executables are Rc-shared, and the client lives inside
+                // them via PJRT refcounting, so dropping `rt` is fine.
+                EngineState::Pjrt { driver }
+            }
+        };
+        Ok(Trainer { cfg: cfg.clone(), dataset, engine })
+    }
+
+    /// The model (native engine only).
+    pub fn model(&self) -> Option<&Mlp> {
+        match &self.engine {
+            EngineState::Native { model, .. } => Some(model),
+            _ => None,
+        }
+    }
+
+    /// Replace the optimizer (ablation studies swap configured variants).
+    pub fn set_optimizer(&mut self, opt: Box<dyn Optimizer>) {
+        if let EngineState::Native { optimizer, .. } = &mut self.engine {
+            *optimizer = opt;
+        }
+    }
+
+    /// Replace the native model (finetuning warm starts). No-op on the
+    /// PJRT engine.
+    pub fn set_model(&mut self, m: Mlp) {
+        if let EngineState::Native { model, .. } = &mut self.engine {
+            *model = m;
+        }
+    }
+
+    /// Total optimizer steps this config will take.
+    pub fn total_steps(&self) -> u64 {
+        let per_epoch = self.dataset.train.len().div_ceil(self.cfg.batch_size) as u64;
+        let by_epochs = per_epoch * self.cfg.epochs as u64;
+        self.cfg.max_steps.map_or(by_epochs, |m| m.min(by_epochs).max(1))
+    }
+
+    /// Run the full training loop.
+    pub fn run(&mut self) -> Result<Report> {
+        let total_steps = self.total_steps();
+        let per_epoch = self.dataset.train.len().div_ceil(self.cfg.batch_size);
+        let mut batcher =
+            Batcher::new(self.dataset.train.len(), self.cfg.batch_size, self.cfg.seed ^ 0xbeef);
+        let mut history = Vec::new();
+        let mut step: u64 = 0;
+        let mut final_loss = f32::NAN;
+        let (mut best_acc, mut best_loss) = (0.0f32, f32::MAX);
+        let run_start = std::time::Instant::now();
+        for epoch in 0..self.cfg.epochs {
+            let epoch_start = std::time::Instant::now();
+            let mut loss_sum = 0.0f64;
+            let mut nsteps = 0usize;
+            let mut step_timer = StepTimer::new();
+            let budget_hit = loop {
+                if nsteps >= per_epoch {
+                    break false;
+                }
+                if step >= total_steps {
+                    break true;
+                }
+                let lr = self.cfg.lr_schedule.lr_at(
+                    self.cfg.base_lr,
+                    step,
+                    total_steps,
+                    self.cfg.warmup_steps,
+                );
+                let idx = batcher.next_indices().to_vec();
+                let t0 = std::time::Instant::now();
+                let loss = self.train_step(&idx, lr, step)?;
+                step_timer.record(t0.elapsed());
+                loss_sum += loss as f64;
+                nsteps += 1;
+                step += 1;
+                final_loss = loss;
+            };
+            // Record the epoch (including a partial epoch cut short by
+            // max_steps) so reports always carry at least one entry.
+            if nsteps > 0 || !budget_hit {
+                let val_metric = self.evaluate()?;
+                match self.dataset.task {
+                    Task::Classification => best_acc = best_acc.max(val_metric),
+                    Task::Autoencoding => best_loss = best_loss.min(val_metric),
+                }
+                history.push(EpochMetrics {
+                    epoch,
+                    train_loss: (loss_sum / nsteps.max(1) as f64) as f32,
+                    val_metric,
+                    wall_time_s: epoch_start.elapsed().as_secs_f64(),
+                    mean_step_ms: step_timer.mean_ms(),
+                });
+            }
+            if budget_hit {
+                break;
+            }
+        }
+        let mean_step_ms = if history.is_empty() {
+            0.0
+        } else {
+            history.iter().map(|h| h.mean_step_ms).sum::<f64>() / history.len() as f64
+        };
+        Ok(Report {
+            config_name: self.cfg.name.clone(),
+            optimizer: self.cfg.optim.algorithm.clone(),
+            final_loss,
+            best_val_acc: best_acc,
+            best_val_loss: best_loss,
+            history,
+            total_time_s: run_start.elapsed().as_secs_f64(),
+            mean_step_ms,
+            optimizer_state_bytes: self.optimizer_state_bytes(),
+            steps: step,
+        })
+    }
+
+    /// One optimizer step over the given sample indices.
+    fn train_step(&mut self, idx: &[usize], lr: f32, step: u64) -> Result<f32> {
+        let (x, labels) = self.dataset.train.gather(idx);
+        match &mut self.engine {
+            EngineState::Native { model, optimizer } => {
+                let mode = optimizer.stats_mode_at(step);
+                let res = model.forward_backward(&x, &labels, mode);
+                let ctx = StepCtx {
+                    params: &model.weights,
+                    grads: &res.grads,
+                    bias_grads: &res.bias_grads,
+                    stats: &res.stats,
+                    lr,
+                    step,
+                };
+                let update = optimizer.step(&ctx);
+                model.apply_update(&update.deltas, &update.bias_deltas);
+                Ok(res.loss)
+            }
+            EngineState::Pjrt { driver } => {
+                // Fused artifacts bake the batch size; pad the tail batch
+                // by repeating samples (same expectation).
+                let b = driver.meta.batch;
+                let (xb, yb) = pjrt_batch(&x, &labels, b, driver.meta.dims[driver.meta.dims.len() - 1]);
+                driver.hp.lr = lr;
+                driver.step(&xb, &yb)
+            }
+        }
+    }
+
+    /// Validation metric: accuracy (classification) or loss (AE).
+    pub fn evaluate(&mut self) -> Result<f32> {
+        match (&mut self.engine, self.dataset.task) {
+            (EngineState::Native { model, .. }, Task::Classification) => {
+                Ok(model.accuracy(&self.dataset.val.inputs, &self.dataset.val.labels, 256))
+            }
+            (EngineState::Native { model, .. }, Task::Autoencoding) => {
+                Ok(model.reconstruction_loss(&self.dataset.val.inputs, 256))
+            }
+            (EngineState::Pjrt { driver }, Task::Classification) => {
+                driver.accuracy(&self.dataset.val.inputs, &self.dataset.val.labels)
+            }
+            (EngineState::Pjrt { .. }, Task::Autoencoding) => {
+                Err(anyhow!("pjrt AE evaluation not wired; use native engine"))
+            }
+        }
+    }
+
+    pub fn optimizer_state_bytes(&self) -> usize {
+        match &self.engine {
+            EngineState::Native { optimizer, .. } => optimizer.state_bytes(),
+            EngineState::Pjrt { driver } => driver.optimizer_state_bytes(),
+        }
+    }
+}
+
+/// Pack a (possibly short) batch into the fixed PJRT batch size with
+/// one-hot labels.
+fn pjrt_batch(x: &Tensor, labels: &[usize], batch: usize, classes: usize) -> (HostArray, HostArray) {
+    let d = x.cols();
+    let mut xb = vec![0.0f32; batch * d];
+    let mut yb = vec![0.0f32; batch * classes];
+    for r in 0..batch {
+        let src = r % x.rows();
+        xb[r * d..(r + 1) * d].copy_from_slice(x.row(src));
+        let c = labels[src].min(classes - 1);
+        yb[r * classes + c] = 1.0;
+    }
+    (HostArray::new(vec![batch, d], xb), HostArray::new(vec![batch, classes], yb))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{LrSchedule, ModelArch};
+
+    fn tiny_cfg(optimizer: &str) -> TrainConfig {
+        TrainConfig {
+            name: format!("test-{optimizer}"),
+            dataset: "c10-small".into(),
+            seed: 7,
+            arch: ModelArch::Classifier { hidden: vec![32] },
+            optim: crate::config::OptimConfig {
+                algorithm: optimizer.into(),
+                hp: crate::optim::HyperParams {
+                    weight_decay: 0.0,
+                    ..Default::default()
+                },
+            },
+            engine: Engine::Native,
+            epochs: 2,
+            batch_size: 64,
+            base_lr: if optimizer == "sgd" { 0.1 } else { 0.05 },
+            lr_schedule: LrSchedule::Cosine,
+            warmup_steps: 0,
+            max_steps: Some(40),
+            eval_every: 1,
+        }
+    }
+
+    #[test]
+    fn native_training_learns_all_optimizers() {
+        // Every optimizer must beat chance (10%) within 40 steps on the
+        // easy synthetic task — integration over data+nn+optim+train.
+        for opt in ["sgd", "eva", "eva-f", "eva-s", "kfac", "foof", "shampoo", "adam"] {
+            let mut t = Trainer::from_config(&tiny_cfg(opt)).unwrap();
+            let report = t.run().unwrap();
+            assert!(
+                report.best_val_acc > 0.3,
+                "{opt}: acc {} loss {}",
+                report.best_val_acc,
+                report.final_loss
+            );
+            assert!(report.steps == 40);
+            assert!(report.optimizer_state_bytes > 0 || opt == "sgd");
+        }
+    }
+
+    #[test]
+    fn autoencoder_loss_decreases() {
+        let mut cfg = tiny_cfg("eva");
+        cfg.dataset = "curves".into();
+        cfg.arch = ModelArch::AutoencoderSmall;
+        cfg.max_steps = Some(30);
+        cfg.base_lr = 0.03;
+        let mut t = Trainer::from_config(&cfg).unwrap();
+        let r = t.run().unwrap();
+        assert!(r.history.len() >= 1);
+        assert!(r.best_val_loss < f32::MAX);
+        assert!(r.final_loss.is_finite());
+    }
+
+    #[test]
+    fn time_to_accuracy_reports_cumulative() {
+        let h = |e, acc, t| EpochMetrics {
+            epoch: e,
+            train_loss: 1.0,
+            val_metric: acc,
+            wall_time_s: t,
+            mean_step_ms: 1.0,
+        };
+        let r = Report {
+            config_name: "x".into(),
+            optimizer: "sgd".into(),
+            final_loss: 0.5,
+            best_val_acc: 0.8,
+            best_val_loss: f32::MAX,
+            history: vec![h(0, 0.5, 1.0), h(1, 0.7, 1.0), h(2, 0.9, 1.0)],
+            total_time_s: 3.0,
+            mean_step_ms: 1.0,
+            optimizer_state_bytes: 0,
+            steps: 3,
+        };
+        assert_eq!(r.time_to_accuracy(0.7).unwrap().0, 1);
+        assert!((r.time_to_accuracy(0.9).unwrap().1 - 3.0).abs() < 1e-9);
+        assert!(r.time_to_accuracy(0.99).is_none());
+    }
+}

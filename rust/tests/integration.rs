@@ -1,0 +1,141 @@
+//! Integration tests across layers: PJRT runtime ↔ native numerics,
+//! full training loops through the public API, CLI surface.
+//!
+//! PJRT-dependent tests require `make artifacts`; they are skipped
+//! (with a notice) when the artifact directory is missing so `cargo
+//! test` stays green on a fresh checkout.
+
+use eva::config::{Engine, LrSchedule, ModelArch, OptimConfig, TrainConfig};
+use eva::optim::HyperParams;
+use eva::runtime::Runtime;
+use eva::train::Trainer;
+
+fn artifacts_present() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_present() {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            return;
+        }
+    };
+}
+
+#[test]
+fn manifest_covers_all_expected_artifacts() {
+    require_artifacts!();
+    let rt = Runtime::open_default().unwrap();
+    for model in ["quickstart", "ae-small", "e2e"] {
+        for graph in ["eva_step", "sgd_step", "fwdbwd_kv", "predict"] {
+            assert!(
+                rt.manifest().artifacts.contains_key(&format!("{model}.{graph}")),
+                "{model}.{graph} missing"
+            );
+        }
+    }
+    for probe in ["kernel.eva_precond", "kernel.eva_f_precond", "kernel.eva_s_precond"] {
+        assert!(rt.manifest().artifacts.contains_key(probe), "{probe} missing");
+    }
+}
+
+#[test]
+fn pallas_kernel_probes_match_native() {
+    require_artifacts!();
+    let mut rt = Runtime::open_default().unwrap();
+    eva::exp::validate::kernel_probes(&mut rt).unwrap();
+}
+
+#[test]
+fn pjrt_fwdbwd_matches_native_model() {
+    require_artifacts!();
+    let mut rt = Runtime::open_default().unwrap();
+    eva::exp::validate::fwdbwd_cross_check(&mut rt).unwrap();
+}
+
+#[test]
+fn fused_eva_step_reduces_loss() {
+    require_artifacts!();
+    let mut rt = Runtime::open_default().unwrap();
+    eva::exp::validate::fused_step_trains(&mut rt).unwrap();
+}
+
+#[test]
+fn pjrt_trainer_end_to_end() {
+    require_artifacts!();
+    let cfg = TrainConfig {
+        name: "it-pjrt".into(),
+        dataset: "c10-small".into(),
+        seed: 5,
+        arch: ModelArch::Classifier { hidden: vec![128, 64] }, // unused by pjrt
+        optim: OptimConfig { algorithm: "eva".into(), hp: HyperParams::default() },
+        engine: Engine::Pjrt { model: "quickstart".into() },
+        epochs: 2,
+        batch_size: 64,
+        base_lr: 0.05,
+        lr_schedule: LrSchedule::Cosine,
+        warmup_steps: 0,
+        max_steps: Some(50),
+        eval_every: 1,
+    };
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    let r = t.run().unwrap();
+    assert!(r.best_val_acc > 0.3, "pjrt eva acc {}", r.best_val_acc);
+    assert!(r.final_loss.is_finite());
+}
+
+#[test]
+fn native_and_pjrt_agree_on_learnability() {
+    require_artifacts!();
+    // Same task, same optimizer family: both engines must clear the
+    // same quality bar (they share dataset + loss semantics).
+    let mk = |engine: Engine| TrainConfig {
+        name: "it-agree".into(),
+        dataset: "c10-small".into(),
+        seed: 9,
+        arch: ModelArch::Classifier { hidden: vec![128, 64] },
+        optim: OptimConfig { algorithm: "eva".into(), hp: HyperParams::default() },
+        engine,
+        epochs: 2,
+        batch_size: 64,
+        base_lr: 0.05,
+        lr_schedule: LrSchedule::Cosine,
+        warmup_steps: 0,
+        max_steps: Some(60),
+        eval_every: 1,
+    };
+    let mut native = Trainer::from_config(&mk(Engine::Native)).unwrap();
+    let rn = native.run().unwrap();
+    let mut pjrt =
+        Trainer::from_config(&mk(Engine::Pjrt { model: "quickstart".into() })).unwrap();
+    let rp = pjrt.run().unwrap();
+    assert!(rn.best_val_acc > 0.4, "native {}", rn.best_val_acc);
+    assert!(rp.best_val_acc > 0.4, "pjrt {}", rp.best_val_acc);
+}
+
+#[test]
+fn config_file_roundtrip_drives_training() {
+    let dir = std::env::temp_dir().join("eva-it-config");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.json");
+    std::fs::write(
+        &path,
+        r#"{"name": "from-file", "dataset": "c10-small", "optimizer": "eva-f",
+            "hidden": [32], "epochs": 1, "base_lr": 0.05, "max_steps": 12}"#,
+    )
+    .unwrap();
+    let cfg = TrainConfig::from_file(path.to_str().unwrap()).unwrap();
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    let r = t.run().unwrap();
+    assert_eq!(r.steps, 12);
+    assert_eq!(r.optimizer, "eva-f");
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn experiment_registry_lists_every_paper_item() {
+    for id in ["table1", "table4", "table5", "table8", "fig4", "fig7", "table10"] {
+        assert!(eva::exp::ALL.contains(&id), "{id} not registered");
+    }
+}
