@@ -40,6 +40,7 @@ fn main() -> anyhow::Result<()> {
                 warmup_steps: 0,
                 max_steps: None,
                 eval_every: 1,
+                backend: None,
             };
             let mut t = Trainer::from_config(&cfg)?;
             let r = t.run()?;

@@ -1,0 +1,175 @@
+//! Bench: backend scaling — Sequential vs Threaded(N) on the kernels
+//! the training stack actually spends its time in.
+//!
+//! Headline case (acceptance): 512×512×512 `matmul` must reach ≥ 2×
+//! speedup at Threaded(N≥4) on hardware with ≥ 4 cores; parity is
+//! checked inline against the sequential result (the backends are
+//! bit-identical by construction).
+//!
+//! Run: `cargo bench --bench backend_scaling`
+
+use std::time::Instant;
+
+use eva::backend::{self, Backend, BackendChoice, Sequential};
+use eva::linalg;
+use eva::rng::Pcg64;
+use eva::tensor::{matmul_a_bt_with, matmul_at_b_with, matmul_with, Tensor};
+
+fn random(rng: &mut Pcg64, r: usize, c: usize) -> Tensor {
+    let mut t = Tensor::zeros(r, c);
+    rng.fill_normal(t.data_mut(), 1.0);
+    t
+}
+
+/// Median-of-reps seconds for `f` (first call is warmup).
+fn time(reps: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    let mut samples: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+fn main() {
+    let hw = backend::default_threads();
+    let mut lanes: Vec<usize> = vec![2, 4, hw];
+    lanes.sort_unstable();
+    lanes.dedup();
+    let lanes: Vec<usize> = lanes.into_iter().filter(|&n| n >= 2).collect();
+    println!("bench backend_scaling — hardware threads: {hw}");
+    println!("(numerics are bit-identical across backends; parity asserted inline)\n");
+
+    let mut rng = Pcg64::seeded(42);
+
+    // --- headline: 512³ matmul ---------------------------------------
+    let n = 512usize;
+    let a = random(&mut rng, n, n);
+    let b = random(&mut rng, n, n);
+    let flops = 2.0 * (n as f64).powi(3);
+    let reference = matmul_with(&Sequential, &a, &b);
+    let t_seq = time(3, || {
+        std::hint::black_box(matmul_with(&Sequential, &a, &b));
+    });
+    println!(
+        "matmul {n}x{n}x{n}   {:<10} {:>9.1} ms  {:>6.2} GFLOP/s  (baseline)",
+        "seq",
+        t_seq * 1e3,
+        flops / t_seq / 1e9
+    );
+    let mut headline = (1usize, 1.0f64);
+    for &nl in &lanes {
+        let thr = BackendChoice::Threaded(nl).build();
+        let got = matmul_with(&*thr, &a, &b);
+        assert!(
+            got.max_abs_diff(&reference) == 0.0,
+            "threads:{nl} diverged from sequential on the 512^3 matmul"
+        );
+        let t = time(3, || {
+            std::hint::black_box(matmul_with(&*thr, &a, &b));
+        });
+        let speedup = t_seq / t;
+        println!(
+            "matmul {n}x{n}x{n}   {:<10} {:>9.1} ms  {:>6.2} GFLOP/s  speedup x{speedup:.2}",
+            thr.label(),
+            t * 1e3,
+            flops / t / 1e9
+        );
+        if speedup > headline.1 {
+            headline = (nl, speedup);
+        }
+    }
+    println!(
+        "headline: threads:{} reaches x{:.2} vs sequential on matmul 512^3\n",
+        headline.0, headline.1
+    );
+
+    // --- transpose-free variants at 384 -------------------------------
+    let n = 384usize;
+    let a = random(&mut rng, n, n);
+    let b = random(&mut rng, n, n);
+    let flops = 2.0 * (n as f64).powi(3);
+    for (label, f) in [
+        ("matmul_at_b", matmul_at_b_with as fn(&dyn Backend, &Tensor, &Tensor) -> Tensor),
+        ("matmul_a_bt", matmul_a_bt_with as fn(&dyn Backend, &Tensor, &Tensor) -> Tensor),
+    ] {
+        let t_seq = time(3, || {
+            std::hint::black_box(f(&Sequential, &a, &b));
+        });
+        for &nl in &lanes {
+            let thr = BackendChoice::Threaded(nl).build();
+            let t = time(3, || {
+                std::hint::black_box(f(&*thr, &a, &b));
+            });
+            println!(
+                "{label} {n}        {:<10} {:>9.1} ms  {:>6.2} GFLOP/s  speedup x{:.2}",
+                thr.label(),
+                t * 1e3,
+                flops / t / 1e9,
+                t_seq / t
+            );
+        }
+    }
+    println!();
+
+    // --- spd_inverse (independent column solves) ----------------------
+    let n = 256usize;
+    let x = random(&mut rng, n, 2 * n);
+    let mut spd = matmul_a_bt_with(&Sequential, &x, &x);
+    spd.scale(1.0 / (2 * n) as f32);
+    spd.add_diag(0.05);
+    let t_seq = time(3, || {
+        std::hint::black_box(linalg::spd_inverse_with(&Sequential, &spd).unwrap());
+    });
+    println!("spd_inverse {n}      {:<10} {:>9.1} ms  (baseline)", "seq", t_seq * 1e3);
+    for &nl in &lanes {
+        let thr = BackendChoice::Threaded(nl).build();
+        let t = time(3, || {
+            std::hint::black_box(linalg::spd_inverse_with(&*thr, &spd).unwrap());
+        });
+        println!(
+            "spd_inverse {n}      {:<10} {:>9.1} ms  speedup x{:.2}",
+            thr.label(),
+            t * 1e3,
+            t_seq / t
+        );
+    }
+    println!();
+
+    // --- elementwise + reduction stream (4M elements) ------------------
+    let len = 1 << 22;
+    let big_a = {
+        let mut t = Tensor::zeros(2048, 2048);
+        rng.fill_normal(t.data_mut(), 1.0);
+        t
+    };
+    let mut big_b = Tensor::zeros(2048, 2048);
+    let run_stream = || {
+        big_b.axpy(0.001, &big_a);
+        std::hint::black_box(big_b.dot(&big_a));
+    };
+    // Elementwise ops read the *global* backend: install per config.
+    backend::install(&BackendChoice::Sequential);
+    let mut f = run_stream;
+    let t_seq = time(5, &mut f);
+    println!(
+        "axpy+dot {len}   {:<10} {:>9.2} ms  (baseline)",
+        "seq",
+        t_seq * 1e3
+    );
+    for &nl in &lanes {
+        backend::install(&BackendChoice::Threaded(nl));
+        let t = time(5, &mut f);
+        println!(
+            "axpy+dot {len}   {:<10} {:>9.2} ms  speedup x{:.2}",
+            backend::global().label(),
+            t * 1e3,
+            t_seq / t
+        );
+    }
+    backend::install(&BackendChoice::Sequential);
+}

@@ -29,6 +29,7 @@ fn mean_step_ms(optimizer: &str, interval: usize, engine: Engine) -> anyhow::Res
         warmup_steps: 0,
         max_steps: Some(15),
         eval_every: 1,
+        backend: None,
     };
     let mut t = Trainer::from_config(&cfg)?;
     let _warm = t.run()?; // includes compile/alloc warmup inside

@@ -1,0 +1,331 @@
+//! Pluggable parallel compute backend for the tensor/linalg hot paths.
+//!
+//! Every expensive kernel in the stack — the three matmul variants,
+//! big elementwise ops, `spd_inverse` column solves, and the per-layer
+//! factorization loops in K-FAC/FOOF/Shampoo — dispatches through a
+//! [`Backend`]: either [`Sequential`] (the original single-threaded
+//! code path) or [`Threaded`] (a persistent worker pool, see
+//! [`pool::WorkerPool`]). Selection is per-process via the global
+//! dispatcher ([`install`]/[`global`]), driven by `TrainConfig.backend`
+//! or the CLI flag `--backend seq|threads[:N]`.
+//!
+//! **Determinism contract:** kernels split work so that per-element
+//! arithmetic order is independent of the backend and of the thread
+//! count, and reductions use *size-derived* fixed chunking
+//! ([`par_reduce_sum`]). `Sequential` and `Threaded(N)` therefore
+//! produce bit-identical results for every routed operation — parity
+//! is structural, not approximate (see `tests/backend_parity.rs`).
+//!
+//! Std-only by design: the offline build has no rayon/crossbeam, and a
+//! ~300-line pool is enough for row-partitioned kernels.
+
+mod pool;
+
+pub use pool::{in_pool, WorkerPool};
+
+use std::ops::Range;
+use std::sync::{Arc, OnceLock, RwLock};
+
+/// A parallel-for execution strategy.
+///
+/// `par_for` runs `body(i)` for `i in 0..chunks`; implementations may
+/// run chunks concurrently but must complete all of them before
+/// returning. Bodies must therefore only write to chunk-disjoint data.
+pub trait Backend: Send + Sync {
+    /// Human-readable name, e.g. `seq` or `threads:8`.
+    fn label(&self) -> String;
+
+    /// Number of execution lanes this backend can use.
+    fn threads(&self) -> usize;
+
+    /// Execute all chunk indices, returning after the last finishes.
+    fn par_for(&self, chunks: usize, body: &(dyn Fn(usize) + Sync));
+}
+
+/// The original single-threaded execution path.
+pub struct Sequential;
+
+impl Backend for Sequential {
+    fn label(&self) -> String {
+        "seq".into()
+    }
+
+    fn threads(&self) -> usize {
+        1
+    }
+
+    fn par_for(&self, chunks: usize, body: &(dyn Fn(usize) + Sync)) {
+        for i in 0..chunks {
+            body(i);
+        }
+    }
+}
+
+/// Worker-pool backend with `N` total execution lanes.
+pub struct Threaded {
+    pool: WorkerPool,
+}
+
+impl Threaded {
+    pub fn new(threads: usize) -> Self {
+        Threaded { pool: WorkerPool::new(threads.max(1)) }
+    }
+}
+
+impl Backend for Threaded {
+    fn label(&self) -> String {
+        format!("threads:{}", self.pool.threads())
+    }
+
+    fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    fn par_for(&self, chunks: usize, body: &(dyn Fn(usize) + Sync)) {
+        self.pool.run(chunks, body);
+    }
+}
+
+/// Parsed backend selection (config/CLI layer).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BackendChoice {
+    Sequential,
+    /// Total lanes (≥ 1); `threads` / `auto` resolve to the hardware
+    /// parallelism at parse time.
+    Threaded(usize),
+}
+
+impl BackendChoice {
+    /// Parse `seq | sequential | threads | threads:N | auto`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "seq" | "sequential" => Ok(BackendChoice::Sequential),
+            "threads" | "threaded" | "auto" => Ok(BackendChoice::Threaded(default_threads())),
+            _ => match s.strip_prefix("threads:") {
+                Some(n) => match n.parse::<usize>() {
+                    Ok(n) if n >= 1 => Ok(BackendChoice::Threaded(n)),
+                    _ => Err(format!("--backend threads:N needs an integer ≥ 1, got '{n}'")),
+                },
+                None => Err(format!(
+                    "unknown backend '{s}' (use seq | threads | threads:N)"
+                )),
+            },
+        }
+    }
+
+    /// Instantiate the backend.
+    pub fn build(&self) -> Arc<dyn Backend> {
+        match *self {
+            BackendChoice::Sequential => Arc::new(Sequential),
+            BackendChoice::Threaded(n) => Arc::new(Threaded::new(n)),
+        }
+    }
+}
+
+/// Hardware parallelism (1 if undetectable).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+fn registry() -> &'static RwLock<Arc<dyn Backend>> {
+    static REGISTRY: OnceLock<RwLock<Arc<dyn Backend>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| RwLock::new(Arc::new(Sequential) as Arc<dyn Backend>))
+}
+
+/// The process-wide backend used by kernels without an explicit handle.
+/// Defaults to [`Sequential`] until [`install`]/[`set_global`] runs.
+pub fn global() -> Arc<dyn Backend> {
+    registry().read().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+/// Replace the global backend.
+pub fn set_global(backend: Arc<dyn Backend>) {
+    *registry().write().unwrap_or_else(|e| e.into_inner()) = backend;
+}
+
+/// Build `choice` and make it the global backend; returns the handle.
+pub fn install(choice: &BackendChoice) -> Arc<dyn Backend> {
+    let b = choice.build();
+    set_global(Arc::clone(&b));
+    b
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch helpers shared by tensor / linalg / optim
+// ---------------------------------------------------------------------------
+
+/// Oversubscription factor for range partitioning: more chunks than
+/// lanes smooths imbalanced rows without meaningful dispatch overhead.
+const CHUNKS_PER_THREAD: usize = 4;
+
+/// Raw pointer wrapper for provably chunk-disjoint parallel writes.
+///
+/// Safety contract for users: distinct chunk indices must touch
+/// distinct elements. The wrapper only exists to move the pointer
+/// across threads; all dereferences remain `unsafe` at the call site.
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr<T>(pub *mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Run `body` over balanced sub-ranges of `0..n`, at most one range
+/// per chunk. `min_grain` bounds how small a range may get (amortizes
+/// dispatch); with one lane (or tiny `n`) the whole range runs inline.
+pub fn par_ranges(
+    backend: &dyn Backend,
+    n: usize,
+    min_grain: usize,
+    body: &(dyn Fn(Range<usize>) + Sync),
+) {
+    if n == 0 {
+        return;
+    }
+    let max_parts = backend.threads().max(1) * CHUNKS_PER_THREAD;
+    let parts = (n / min_grain.max(1)).clamp(1, max_parts).min(n);
+    if parts <= 1 {
+        body(0..n);
+        return;
+    }
+    let base = n / parts;
+    let rem = n % parts;
+    backend.par_for(parts, &|p| {
+        let lo = p * base + p.min(rem);
+        let hi = lo + base + usize::from(p < rem);
+        body(lo..hi);
+    });
+}
+
+/// Parallel map `0..n → Vec<T>` preserving index order. Independent
+/// items (layer factorizations, tile roots) are embarrassingly
+/// parallel; results land in pre-allocated slots.
+pub fn par_map<T, F>(backend: &dyn Backend, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let slots = SendPtr(out.as_mut_ptr());
+    backend.par_for(n, &|i| {
+        let v = f(i);
+        // Disjoint slot per chunk index; overwrites the pre-filled None.
+        unsafe { *slots.0.add(i) = Some(v) };
+    });
+    out.into_iter()
+        .map(|s| s.expect("par_map: a parallel chunk failed to produce its result"))
+        .collect()
+}
+
+/// Deterministic chunked sum: `Σ_p partial(lo..hi)` where the chunk
+/// grid depends only on `n` and `chunk` — never on the backend or its
+/// thread count — and partials are combined in fixed index order. This
+/// is what keeps `Sequential` and `Threaded` bit-identical on
+/// reductions (dot products, norms).
+pub fn par_reduce_sum(
+    backend: &dyn Backend,
+    n: usize,
+    chunk: usize,
+    partial: &(dyn Fn(Range<usize>) -> f32 + Sync),
+) -> f32 {
+    if n == 0 {
+        return 0.0;
+    }
+    let chunk = chunk.max(1);
+    let parts = n.div_ceil(chunk);
+    if parts == 1 {
+        return partial(0..n);
+    }
+    let mut partials = vec![0.0f32; parts];
+    let slots = SendPtr(partials.as_mut_ptr());
+    backend.par_for(parts, &|p| {
+        let lo = p * chunk;
+        let hi = (lo + chunk).min(n);
+        unsafe { *slots.0.add(p) = partial(lo..hi) };
+    });
+    partials.iter().sum()
+}
+
+/// Serializes unit tests (across modules of this crate) that swap the
+/// process-global backend, so install/restore windows never
+/// interleave. Integration tests keep their own lock.
+#[cfg(test)]
+pub(crate) static TEST_GLOBAL_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn choice_parses_and_labels() {
+        assert_eq!(BackendChoice::parse("seq").unwrap(), BackendChoice::Sequential);
+        assert_eq!(
+            BackendChoice::parse("threads:3").unwrap(),
+            BackendChoice::Threaded(3)
+        );
+        assert!(matches!(
+            BackendChoice::parse("threads").unwrap(),
+            BackendChoice::Threaded(n) if n >= 1
+        ));
+        assert!(BackendChoice::parse("gpu").is_err());
+        assert!(BackendChoice::parse("threads:0").is_err());
+        assert!(BackendChoice::parse("threads:x").is_err());
+        assert_eq!(BackendChoice::Sequential.build().label(), "seq");
+        assert_eq!(BackendChoice::Threaded(2).build().label(), "threads:2");
+    }
+
+    #[test]
+    fn par_ranges_covers_exactly_once() {
+        for backend in [&Sequential as &dyn Backend, &Threaded::new(4)] {
+            for (n, grain) in [(0usize, 8usize), (5, 8), (64, 1), (257, 16), (1000, 7)] {
+                let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                par_ranges(backend, n, grain, &|r| {
+                    for i in r {
+                        hits[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+                assert!(
+                    hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                    "n={n} grain={grain}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let thr = Threaded::new(4);
+        let v = par_map(&thr, 100, |i| i * i);
+        assert_eq!(v.len(), 100);
+        assert!(v.iter().enumerate().all(|(i, &x)| x == i * i));
+        let empty: Vec<usize> = par_map(&thr, 0, |i| i);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn reduce_sum_is_backend_invariant() {
+        let xs: Vec<f32> = (0..10_000).map(|i| ((i * 37) % 101) as f32 * 0.123).collect();
+        let body = |r: Range<usize>| xs[r].iter().sum::<f32>();
+        let seq = par_reduce_sum(&Sequential, xs.len(), 256, &body);
+        for n in [2usize, 3, 8] {
+            let thr = Threaded::new(n);
+            let got = par_reduce_sum(&thr, xs.len(), 256, &body);
+            // Identical chunk grid + fixed combine order ⇒ bit-equal.
+            assert_eq!(seq.to_bits(), got.to_bits(), "threads={n}");
+        }
+    }
+
+    #[test]
+    fn global_registry_swaps() {
+        let _serial = TEST_GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = global();
+        let b = install(&BackendChoice::Threaded(2));
+        assert_eq!(b.label(), "threads:2");
+        assert_eq!(global().label(), "threads:2");
+        set_global(prev);
+    }
+}

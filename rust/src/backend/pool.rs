@@ -1,0 +1,404 @@
+//! Persistent worker pool (substrate; no rayon offline).
+//!
+//! One pool = N−1 parked worker threads plus the injecting thread,
+//! cooperating on a single chunked job at a time. Jobs are borrowed
+//! closures (`&dyn Fn(usize) + Sync`): the injector publishes the
+//! closure with its lifetime erased, workers pull chunk indices from a
+//! shared counter, and the injector does not return until every chunk
+//! has finished — which is exactly what makes the lifetime erasure
+//! sound (the borrow strictly outlives all uses).
+//!
+//! Design notes:
+//! * **One job at a time.** A second injector blocks on `inject` until
+//!   the current job drains. Dispatch epochs guard against stale
+//!   workers claiming chunks of a newer job.
+//! * **Nesting runs inline.** A chunk body that itself calls
+//!   [`WorkerPool::run`] (e.g. a parallel layer loop whose per-layer
+//!   work calls a parallel matmul) executes sequentially via the
+//!   [`in_pool`] thread-local — no deadlock, no oversubscription.
+//! * **Panic-tolerant accounting.** Chunk completion is decremented by
+//!   a drop guard, so a panicking chunk body cannot strand the
+//!   injector; workers catch the unwind and keep serving.
+
+use std::cell::Cell;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+thread_local! {
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True while the current thread is executing inside a pool job
+/// (worker thread, or injector during its participation phase).
+pub fn in_pool() -> bool {
+    IN_POOL.with(|c| c.get())
+}
+
+/// Lock helper that shrugs off poisoning (a panicking chunk body must
+/// not wedge every later dispatch).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The published job: lifetime-erased chunk body + chunk count.
+#[derive(Clone, Copy)]
+struct Job {
+    body: &'static (dyn Fn(usize) + Sync),
+    chunks: usize,
+}
+
+/// Shared dispatch state.
+struct Slot {
+    job: Option<Job>,
+    /// Next unclaimed chunk index of the current job.
+    next: usize,
+    /// Chunks not yet finished (claimed-and-running included).
+    remaining: usize,
+    /// Bumped once per injected job; stale workers compare-and-skip.
+    epoch: u64,
+    /// Set when a chunk body panicked on a worker; the injector
+    /// re-raises after the job drains so a partial result can never
+    /// be mistaken for a complete one.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    /// Signals workers: new job or shutdown.
+    work_cv: Condvar,
+    /// Signals the injector: all chunks finished.
+    done_cv: Condvar,
+}
+
+/// Decrements `remaining` even if the chunk body panics.
+struct FinishGuard<'a> {
+    shared: &'a Shared,
+}
+
+impl Drop for FinishGuard<'_> {
+    fn drop(&mut self) {
+        let mut g = lock(&self.shared.slot);
+        // Flag panics under the same lock acquisition as the final
+        // decrement, so the injector can never observe `remaining ==
+        // 0` without also observing the flag.
+        if std::thread::panicking() {
+            g.panicked = true;
+        }
+        g.remaining -= 1;
+        if g.remaining == 0 {
+            self.shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// Blocks until the current job fully drains, then retires it. Runs on
+/// drop so an unwinding injector cannot leave workers holding the
+/// lifetime-erased closure past its borrow.
+struct JobGuard<'a> {
+    shared: &'a Shared,
+}
+
+impl Drop for JobGuard<'_> {
+    fn drop(&mut self) {
+        let mut g = lock(&self.shared.slot);
+        while g.remaining > 0 {
+            g = self.shared.done_cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+        g.job = None;
+        // If we are unwinding from the injector's own chunk, a stale
+        // worker-panic flag must not leak into the next job.
+        g.panicked = false;
+    }
+}
+
+/// Restores the thread's `IN_POOL` flag on scope exit (panic included).
+struct PoolFlagGuard {
+    was: bool,
+}
+
+impl PoolFlagGuard {
+    fn enter() -> Self {
+        PoolFlagGuard { was: IN_POOL.with(|c| c.replace(true)) }
+    }
+}
+
+impl Drop for PoolFlagGuard {
+    fn drop(&mut self) {
+        let was = self.was;
+        IN_POOL.with(|c| c.set(was));
+    }
+}
+
+/// Claim and execute chunks of job `epoch` until none are left.
+///
+/// The body reference is re-read from the slot *under the lock* at
+/// every claim: a successful claim proves an unclaimed chunk existed,
+/// hence `remaining > 0`, hence the injector is still blocked in
+/// [`WorkerPool::run`] and the erased borrow is live for the whole
+/// `body(idx)` call (our own chunk keeps `remaining > 0` until the
+/// guard drops).
+fn run_chunks(shared: &Shared, epoch: u64) {
+    loop {
+        let (idx, body) = {
+            let mut g = lock(&shared.slot);
+            match g.job {
+                Some(j) if g.epoch == epoch && g.next < j.chunks => {
+                    let i = g.next;
+                    g.next += 1;
+                    (i, j.body)
+                }
+                _ => break,
+            }
+        };
+        let _finish = FinishGuard { shared };
+        body(idx);
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let epoch = {
+            let mut g = lock(&shared.slot);
+            loop {
+                if g.shutdown {
+                    return;
+                }
+                match g.job {
+                    Some(j) if g.next < j.chunks => break g.epoch,
+                    _ => g = shared.work_cv.wait(g).unwrap_or_else(|e| e.into_inner()),
+                }
+            }
+        };
+        // Contain panics from chunk bodies so the pool keeps its
+        // workers. FinishGuard has already balanced the books *and*
+        // set the panic flag (under the decrement's lock), which the
+        // injector re-raises on its own thread; the worker's default
+        // panic hook has already printed the message + location.
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_chunks(shared, epoch);
+        }));
+    }
+}
+
+/// A persistent pool of worker threads executing chunked jobs.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    /// Serializes injectors; held for the whole duration of a job.
+    inject: Mutex<()>,
+    threads: usize,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Pool with `threads` total execution lanes (the injecting thread
+    /// counts as one, so `threads - 1` OS threads are spawned).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot {
+                job: None,
+                next: 0,
+                remaining: 0,
+                epoch: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..threads - 1)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("eva-backend-{i}"))
+                    .spawn(move || {
+                        IN_POOL.with(|c| c.set(true));
+                        worker_loop(&sh);
+                    })
+                    .expect("spawn backend worker")
+            })
+            .collect();
+        WorkerPool { shared, inject: Mutex::new(()), threads, handles }
+    }
+
+    /// Total execution lanes (workers + injector).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `body(i)` for every `i in 0..chunks`, cooperatively across
+    /// the pool. Returns only after every chunk finished. Nested calls
+    /// (from inside a chunk body) run inline on the calling thread.
+    pub fn run(&self, chunks: usize, body: &(dyn Fn(usize) + Sync)) {
+        if chunks == 0 {
+            return;
+        }
+        if chunks == 1 || self.threads == 1 || in_pool() {
+            for i in 0..chunks {
+                body(i);
+            }
+            return;
+        }
+        // Erase the borrow lifetime: sound because this frame blocks
+        // until `remaining == 0`, i.e. until no thread can still hold
+        // or claim a reference to `body`.
+        let body_static: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(body) };
+        let _inject = lock(&self.inject);
+        let epoch = {
+            let mut g = lock(&self.shared.slot);
+            g.epoch += 1;
+            g.job = Some(Job { body: body_static, chunks });
+            g.next = 0;
+            g.remaining = chunks;
+            g.epoch
+        };
+        // Dropped last (declared first): waits for `remaining == 0`
+        // and retires the job even if a chunk body panics below.
+        let _drain = JobGuard { shared: &self.shared };
+        self.shared.work_cv.notify_all();
+        // The injector works too (and is flagged so nested dispatch
+        // from its own chunks runs inline).
+        {
+            let _flag = PoolFlagGuard::enter();
+            run_chunks(&self.shared, epoch);
+        }
+        // Drain on the happy path (JobGuard's drop then finds the job
+        // already retired) and surface any worker panic here rather
+        // than returning a partially-written result.
+        let panicked = {
+            let mut g = lock(&self.shared.slot);
+            while g.remaining > 0 {
+                g = self.shared.done_cv.wait(g).unwrap_or_else(|e| e.into_inner());
+            }
+            g.job = None;
+            std::mem::take(&mut g.panicked)
+        };
+        if panicked {
+            panic!("eva-backend: a parallel chunk panicked on a worker thread (see stderr above)");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut g = lock(&self.shared.slot);
+            g.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_chunk_exactly_once() {
+        let pool = WorkerPool::new(4);
+        for chunks in [1usize, 2, 7, 64, 300] {
+            let hits: Vec<AtomicUsize> = (0..chunks).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(chunks, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "chunks={chunks}");
+        }
+    }
+
+    #[test]
+    fn sequential_pool_still_completes() {
+        let pool = WorkerPool::new(1);
+        let total = AtomicUsize::new(0);
+        pool.run(10, &|i| {
+            total.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn nested_dispatch_runs_inline_without_deadlock() {
+        let pool = WorkerPool::new(4);
+        let total = AtomicUsize::new(0);
+        pool.run(8, &|_| {
+            // Nested job: must run inline on this thread.
+            pool.run(8, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn reusable_across_many_jobs() {
+        let pool = WorkerPool::new(3);
+        let total = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(16, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 800);
+    }
+
+    #[test]
+    fn concurrent_injectors_serialize() {
+        let pool = Arc::new(WorkerPool::new(4));
+        let total = Arc::new(AtomicUsize::new(0));
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            let (p, t) = (Arc::clone(&pool), Arc::clone(&total));
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..20 {
+                    p.run(8, &|_| {
+                        t.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 20 * 8);
+    }
+
+    #[test]
+    fn chunk_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(4);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(64, &|i| {
+                if i == 13 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "panic must reach the injector");
+        // The pool stays serviceable afterwards.
+        let total = AtomicUsize::new(0);
+        pool.run(8, &|_| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn borrowed_state_is_visible_and_writable() {
+        let pool = WorkerPool::new(4);
+        let mut out = vec![0usize; 123];
+        let base = 7usize;
+        {
+            let ptr = out.as_mut_ptr() as usize;
+            let n = out.len();
+            pool.run(n, &move |i| {
+                // Disjoint element writes via the raw pointer.
+                unsafe { *(ptr as *mut usize).add(i) = base + i };
+            });
+        }
+        assert!(out.iter().enumerate().all(|(i, &v)| v == 7 + i));
+    }
+}

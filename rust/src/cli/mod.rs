@@ -73,17 +73,24 @@ eva — vectorized second-order optimization (paper reproduction)
 USAGE:
   eva train [--config FILE | --preset NAME] [--optimizer ALG] [--dataset D]
             [--epochs N] [--lr F] [--batch N] [--seed N] [--engine native|pjrt:MODEL]
-            [--interval N] [--damping F] [--max-steps N]
+            [--interval N] [--damping F] [--max-steps N] [--backend seq|threads[:N]]
   eva experiment <id|all>     regenerate a paper table/figure (see DESIGN.md §5)
   eva validate                cross-check PJRT artifacts vs native numerics
   eva list                    list datasets, optimizers, experiments, artifacts
   eva info                    runtime + manifest summary
 
+OPTIONS:
+  --backend seq|threads[:N]   compute backend for tensor/linalg hot paths
+                              (seq = single-threaded; threads = one lane per
+                              hardware thread; threads:N = N lanes). Applies
+                              to every command; numerics are identical.
+
 EXAMPLES:
   eva train --preset quickstart --optimizer eva
   eva train --dataset c100-small --optimizer kfac --interval 10 --epochs 8
   eva train --engine pjrt:quickstart --optimizer eva --epochs 4
-  eva experiment table5
+  eva train --preset c100-bench --optimizer shampoo --backend threads:8
+  eva experiment table5 --backend threads
 ";
 
 #[cfg(test)]

@@ -129,6 +129,11 @@ pub struct TrainConfig {
     pub max_steps: Option<u64>,
     /// Evaluate on the validation split every N epochs (0 = only at end).
     pub eval_every: usize,
+    /// Compute backend selection (`seq` | `threads` | `threads:N`).
+    /// `None` inherits whatever backend is already installed
+    /// process-wide (CLI `--backend`, a previous config, or the
+    /// sequential default) — see [`crate::backend`].
+    pub backend: Option<String>,
 }
 
 impl Default for TrainConfig {
@@ -147,6 +152,7 @@ impl Default for TrainConfig {
             warmup_steps: 0,
             max_steps: None,
             eval_every: 1,
+            backend: None,
         }
     }
 }
@@ -221,6 +227,12 @@ impl TrainConfig {
                         .collect();
                     c.arch = ModelArch::Classifier { hidden: dims };
                 }
+                "backend" => {
+                    let s = val.as_str().ok_or("backend: string")?;
+                    // Validate eagerly so config typos fail at load time.
+                    crate::backend::BackendChoice::parse(s)?;
+                    c.backend = Some(s.to_string());
+                }
                 "optimizer" => c.optim.algorithm = val.as_str().ok_or("optimizer")?.to_string(),
                 "momentum" => c.optim.hp.momentum = val.as_f64().ok_or("momentum")? as f32,
                 "weight_decay" => c.optim.hp.weight_decay = val.as_f64().ok_or("wd")? as f32,
@@ -275,6 +287,13 @@ mod tests {
     #[test]
     fn json_rejects_unknown_keys() {
         assert!(TrainConfig::from_json(r#"{"learning_rate": 0.1}"#).is_err());
+    }
+
+    #[test]
+    fn backend_key_parses_and_validates() {
+        let c = TrainConfig::from_json(r#"{"backend": "threads:2"}"#).unwrap();
+        assert_eq!(c.backend.as_deref(), Some("threads:2"));
+        assert!(TrainConfig::from_json(r#"{"backend": "gpu"}"#).is_err());
     }
 
     #[test]

@@ -116,6 +116,7 @@ pub fn cfg(
         warmup_steps: 0,
         max_steps: None,
         eval_every: 1,
+        backend: None,
     }
 }
 

@@ -31,6 +31,7 @@
 //! See `examples/` for runnable scenarios and `eva experiment <id>` for
 //! the paper's tables/figures.
 
+pub mod backend;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

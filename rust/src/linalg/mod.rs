@@ -15,7 +15,14 @@
 //! Sherman–Morrison identity eliminates — Table 1 / Table 5 benches call
 //! them directly.
 
+use std::ops::Range;
+
+use crate::backend::{self, Backend, SendPtr};
 use crate::tensor::{matmul, Tensor};
+
+/// `spd_inverse` dispatches its independent column solves through the
+/// backend from this dimension up.
+const SPD_INV_PAR_MIN: usize = 64;
 
 /// Cholesky factorization `M = L Lᵀ` of a symmetric positive-definite
 /// matrix. Returns the lower-triangular factor; fails if a pivot is not
@@ -46,39 +53,60 @@ pub fn cholesky(m: &Tensor) -> Result<Tensor, String> {
 pub fn cholesky_solve(l: &Tensor, b: &[f32]) -> Vec<f32> {
     let n = l.rows();
     assert_eq!(b.len(), n);
-    // Forward: L y = b
+    // Forward: L y = b — row prefixes are contiguous.
     let mut y = vec![0.0f32; n];
     for i in 0..n {
         let s = crate::tensor::dot(&l.row(i)[..i], &y[..i]);
         y[i] = (b[i] - s) / l.at(i, i);
     }
-    // Backward: Lᵀ x = y
-    let mut x = vec![0.0f32; n];
+    // Backward: Lᵀ x = y as a column sweep over the *rows* of L.
+    // (Lᵀ)[k,i] = L[i,k], so once x[i] is fixed its contribution to
+    // every remaining unknown is x[0..i] -= x[i]·L[i,0..i] — a single
+    // contiguous row prefix, instead of walking column i of L with
+    // stride n per unknown (the old cache-hostile inner loop).
+    let mut x = y;
     for i in (0..n).rev() {
-        let mut s = 0.0;
-        for k in i + 1..n {
-            s += l.at(k, i) * x[k];
-        }
-        x[i] = (y[i] - s) / l.at(i, i);
+        x[i] /= l.at(i, i);
+        let xi = x[i];
+        let (head, _) = x.split_at_mut(i);
+        crate::tensor::axpy(-xi, &l.row(i)[..i], head);
     }
     x
 }
 
 /// Dense inverse of an SPD matrix via Cholesky (column-by-column solve).
 pub fn spd_inverse(m: &Tensor) -> Result<Tensor, String> {
+    spd_inverse_with(&*backend::global(), m)
+}
+
+/// [`spd_inverse`] with an explicit backend. The n column solves
+/// `L Lᵀ x = e_j` are independent: each lane solves a block of columns
+/// into *rows* of a scratch matrix (contiguous writes), transposed
+/// once at the end. Per-column arithmetic is identical for every
+/// backend, so results are bit-equal across backends.
+pub fn spd_inverse_with(bk: &dyn Backend, m: &Tensor) -> Result<Tensor, String> {
     let n = m.rows();
     let l = cholesky(m)?;
-    let mut inv = Tensor::zeros(n, n);
-    let mut e = vec![0.0f32; n];
-    for j in 0..n {
-        e[j] = 1.0;
-        let col = cholesky_solve(&l, &e);
-        e[j] = 0.0;
-        for i in 0..n {
-            *inv.at_mut(i, j) = col[i];
+    let mut t = Tensor::zeros(n, n);
+    let tp = SendPtr(t.data_mut().as_mut_ptr());
+    let lref = &l;
+    let body = |r: Range<usize>| {
+        let mut e = vec![0.0f32; n];
+        for j in r {
+            e[j] = 1.0;
+            let col = cholesky_solve(lref, &e);
+            e[j] = 0.0;
+            // SAFETY: row j is written by exactly one chunk.
+            let row = unsafe { std::slice::from_raw_parts_mut(tp.0.add(j * n), n) };
+            row.copy_from_slice(&col);
         }
+    };
+    if n >= SPD_INV_PAR_MIN {
+        backend::par_ranges(bk, n, 4, &body);
+    } else {
+        body(0..n);
     }
-    Ok(inv)
+    Ok(t.transpose())
 }
 
 /// Inverse of `M + γI` for symmetric PSD `M` (the damped preconditioner
@@ -92,6 +120,14 @@ pub fn damped_inverse(m: &Tensor, gamma: f32) -> Result<Tensor, String> {
 /// Symmetric eigendecomposition `M = V diag(λ) Vᵀ` by the cyclic Jacobi
 /// method. Returns `(eigenvalues, V)` with eigenvectors in the *columns*
 /// of `V`, eigenvalues unordered.
+///
+/// Rotation application stays sequential on purpose: each rotation is
+/// only O(n) work, far below the pool's dispatch cost, and rotations
+/// are serially dependent. Parallel Jacobi needs round-robin pair
+/// scheduling (independent rotation sets per phase) — tracked as a
+/// ROADMAP backend follow-on. The O(n³) eigensolve *consumers* do go
+/// through the backend (Shampoo fans `spd_power` per tile via
+/// `par_map`).
 pub fn eigh_jacobi(m: &Tensor, max_sweeps: usize) -> (Vec<f32>, Tensor) {
     let n = m.rows();
     assert_eq!(n, m.cols());
@@ -284,6 +320,37 @@ mod tests {
         let (lambda, _) = eigh_jacobi(&m, 30);
         let top = lambda.iter().cloned().fold(f32::MIN, f32::max);
         assert!((lmax - top).abs() / top < 1e-2, "{lmax} vs {top}");
+    }
+
+    /// The new row-streaming backward substitution solves a known
+    /// triangular system exactly.
+    #[test]
+    fn backward_substitution_matches_known_solution() {
+        let l = Tensor::from_rows(&[&[2.0, 0.0, 0.0], &[1.0, 3.0, 0.0], &[0.5, -1.0, 1.5]]);
+        let m = crate::tensor::matmul_a_bt(&l, &l); // M = L Lᵀ
+        let x_true = [0.7f32, -1.2, 2.5];
+        let b = m.matvec(&x_true);
+        let x = cholesky_solve(&l, &b);
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-4, "{x:?} vs {x_true:?}");
+        }
+    }
+
+    /// The eigensolver is backend-independent (serial rotations) —
+    /// identical results under a threaded global backend.
+    #[test]
+    fn eigh_is_backend_invariant() {
+        let _serial = crate::backend::TEST_GLOBAL_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let m = random_spd(24, 9);
+        let (ls, vs) = eigh_jacobi(&m, 30);
+        let prev = crate::backend::global();
+        crate::backend::set_global(std::sync::Arc::new(crate::backend::Threaded::new(4)));
+        let (lp, vp) = eigh_jacobi(&m, 30);
+        crate::backend::set_global(prev);
+        assert_eq!(ls, lp);
+        assert_eq!(vs, vp);
     }
 
     /// The identity behind Eva: Sherman–Morrison inverse of a damped

@@ -19,6 +19,13 @@ fn main() {
 
 fn run(args: &[String]) -> Result<()> {
     let cli = Cli::parse(args).map_err(|e| anyhow!(e))?;
+    // Backend selection applies to every command (train, experiments,
+    // validate) — install it before dispatch.
+    if let Some(spec) = cli.opt("backend") {
+        let choice = eva::backend::BackendChoice::parse(spec).map_err(|e| anyhow!(e))?;
+        let b = eva::backend::install(&choice);
+        println!("compute backend: {}", b.label());
+    }
     match cli.command.as_str() {
         "" | "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -89,6 +96,12 @@ fn train(cli: &Cli) -> Result<()> {
             other => return Err(anyhow!("unknown engine '{other}'")),
         };
     }
+    if cli.opt("backend").is_some() {
+        // The CLI flag wins over the config file. run() already
+        // installed it globally, so clear the config's choice rather
+        // than letting Trainer::from_config rebuild a pool.
+        cfg.backend = None;
+    }
     println!(
         "train: dataset={} optimizer={} epochs={} batch={} lr={} engine={:?}",
         cfg.dataset, cfg.optim.algorithm, cfg.epochs, cfg.batch_size, cfg.base_lr, cfg.engine
@@ -117,6 +130,11 @@ fn train(cli: &Cli) -> Result<()> {
 fn list() -> Result<()> {
     println!("datasets:    c10-like c100-like c10-small c100-small mnist-like fmnist-like faces-like curves");
     println!("optimizers:  sgd adagrad adam adamw eva eva-f eva-s kfac foof foof-rank1 shampoo mfac");
+    println!(
+        "backends:    seq threads threads:N   (current: {}, hardware: {})",
+        eva::backend::global().label(),
+        eva::backend::default_threads()
+    );
     println!("experiments: {}", eva::exp::ALL.join(" "));
     match eva::runtime::Runtime::open_default() {
         Ok(rt) => {

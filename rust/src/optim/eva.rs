@@ -124,17 +124,19 @@ impl Optimizer for Eva {
     fn step(&mut self, ctx: &StepCtx) -> Update {
         let gamma = self.hp.damping;
         let grads = decayed_grads(ctx, self.hp.weight_decay);
+        // Layers are independent; fan the rank-one preconditioning
+        // across the compute backend (identical per-layer arithmetic).
+        let bk = crate::backend::global();
         let pre: Vec<Tensor> = if self.use_kvs {
             self.update_kvs(ctx);
-            grads
-                .iter()
-                .enumerate()
-                .map(|(l, g)| {
-                    Self::precondition_layer(g, &self.a_bar[l], &self.b_bar[l], gamma)
-                })
-                .collect()
+            let (a_bar, b_bar) = (&self.a_bar, &self.b_bar);
+            crate::backend::par_map(&*bk, grads.len(), |l| {
+                Self::precondition_layer(&grads[l], &a_bar[l], &b_bar[l], gamma)
+            })
         } else {
-            grads.iter().map(|g| Self::precondition_layer_gradonly(g, gamma)).collect()
+            crate::backend::par_map(&*bk, grads.len(), |l| {
+                Self::precondition_layer_gradonly(&grads[l], gamma)
+            })
         };
         // KL clipping over weight tensors (Eq. 16).
         let mut pre = pre;

@@ -61,17 +61,17 @@ impl Foof {
             }
         }
         let gamma = self.hp.damping;
+        // Per-layer factorizations are independent — fan them across
+        // the compute backend (same arithmetic per layer either way).
+        let bk = crate::backend::global();
+        let r = &self.r;
         if self.rank1 {
-            self.eig = self
-                .r
-                .iter()
-                .map(|r| power_iteration(r, 50, 0x0f00))
-                .collect();
+            self.eig =
+                crate::backend::par_map(&*bk, r.len(), |l| power_iteration(&r[l], 50, 0x0f00));
         } else {
-            self.r_inv.clear();
-            for r in &self.r {
-                self.r_inv.push(damped_inverse(r, gamma).expect("R+γI must be PD"));
-            }
+            self.r_inv = crate::backend::par_map(&*bk, r.len(), |l| {
+                damped_inverse(&r[l], gamma).expect("R+γI must be PD")
+            });
         }
     }
 }

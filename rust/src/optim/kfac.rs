@@ -65,18 +65,26 @@ impl Kfac {
             }
         }
         let gamma = self.hp.damping;
-        self.q_inv.clear();
-        self.r_inv.clear();
-        for (q, r) in self.q.iter().zip(&self.r) {
+        // Per-layer factorizations are independent — fan the damped
+        // Cholesky inverses (the O(d³) cost Eva eliminates) across the
+        // compute backend; each layer's arithmetic is unchanged.
+        let bk = crate::backend::global();
+        let (q, r) = (&self.q, &self.r);
+        let inverses = crate::backend::par_map(&*bk, q.len(), |l| {
+            let (q, r) = (&q[l], &r[l]);
             let tq = (trace(q) / q.rows() as f32).max(1e-8);
             let tr = (trace(r) / r.rows() as f32).max(1e-8);
             let pi = (tr / tq).sqrt();
             let gamma_l = (gamma.sqrt() / pi).max(1e-8);
             let gamma_r = (pi * gamma.sqrt()).max(1e-8);
-            // Damped Cholesky inverses — the O(d³) cost Eva eliminates.
-            self.q_inv.push(damped_inverse(q, gamma_l).expect("Q+γI must be PD"));
-            self.r_inv.push(damped_inverse(r, gamma_r).expect("R+γI must be PD"));
-        }
+            (
+                damped_inverse(q, gamma_l).expect("Q+γI must be PD"),
+                damped_inverse(r, gamma_r).expect("R+γI must be PD"),
+            )
+        });
+        let (q_inv, r_inv): (Vec<Tensor>, Vec<Tensor>) = inverses.into_iter().unzip();
+        self.q_inv = q_inv;
+        self.r_inv = r_inv;
     }
 }
 
@@ -101,11 +109,11 @@ impl Optimizer for Kfac {
         }
         assert!(self.initialized, "first K-FAC step must be a refresh step");
         let grads = decayed_grads(ctx, self.hp.weight_decay);
-        let mut pre: Vec<Tensor> = grads
-            .iter()
-            .enumerate()
-            .map(|(l, g)| matmul(&matmul(&self.q_inv[l], g), &self.r_inv[l]))
-            .collect();
+        let bk = crate::backend::global();
+        let (q_inv, r_inv) = (&self.q_inv, &self.r_inv);
+        let mut pre: Vec<Tensor> = crate::backend::par_map(&*bk, grads.len(), |l| {
+            matmul(&matmul(&q_inv[l], &grads[l]), &r_inv[l])
+        });
         let pg = super::pg_inner(&pre, &grads);
         let nu = kl_clip_factor(self.hp.kl_clip, ctx.lr, pg);
         if nu < 1.0 {

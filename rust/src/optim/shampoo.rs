@@ -107,11 +107,24 @@ impl Shampoo {
 
     fn refresh_roots(&mut self) {
         let gamma = self.hp.damping;
-        for layer in self.tiles.iter_mut() {
-            for t in layer.iter_mut() {
-                t.l_root = spd_power(&t.m1, gamma, -0.25);
-                t.r_root = spd_power(&t.m2, gamma, -0.25);
-            }
+        // Every tile's inverse fourth roots are independent — flatten
+        // (layer, tile) coordinates and fan the Jacobi eigensolves
+        // across the compute backend, then write results back.
+        let coords: Vec<(usize, usize)> = self
+            .tiles
+            .iter()
+            .enumerate()
+            .flat_map(|(li, layer)| (0..layer.len()).map(move |ti| (li, ti)))
+            .collect();
+        let bk = crate::backend::global();
+        let tiles = &self.tiles;
+        let roots = crate::backend::par_map(&*bk, coords.len(), |i| {
+            let t = &tiles[coords[i].0][coords[i].1];
+            (spd_power(&t.m1, gamma, -0.25), spd_power(&t.m2, gamma, -0.25))
+        });
+        for ((li, ti), (l_root, r_root)) in coords.into_iter().zip(roots) {
+            self.tiles[li][ti].l_root = l_root;
+            self.tiles[li][ti].r_root = r_root;
         }
         self.roots_ready = true;
     }

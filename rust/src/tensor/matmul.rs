@@ -1,4 +1,5 @@
-//! Blocked matrix-multiply kernels.
+//! Blocked matrix-multiply kernels, dispatched through the compute
+//! backend.
 //!
 //! Three variants cover every product the training stack needs without
 //! materializing transposes:
@@ -10,68 +11,134 @@
 //!
 //! All kernels walk the output row-contiguously and accumulate with an
 //! i-k-j loop order so the inner loop is a pure FMA stream the compiler
-//! vectorizes. Measured ~2-6 GFLOP/s single-thread on this CPU (see
-//! `rust/benches/linalg_micro.rs`), flat with size, which is enough to
-//! keep L3 off the critical path (the PJRT artifact does model math).
+//! vectorizes. Large products are **row-partitioned** across the
+//! backend ([`crate::backend`]): each lane owns a disjoint block of
+//! output rows, and per-element accumulation order (k ascending) is
+//! identical in the sequential and partitioned paths, so every backend
+//! produces bit-identical results. The `*_with` variants take an
+//! explicit backend (benches, parity tests); the plain names use the
+//! process-global one.
+
+use std::ops::Range;
 
 use super::Tensor;
+use crate::backend::{self, Backend, SendPtr};
+
+/// Below this many fused multiply-adds a product runs inline — pool
+/// dispatch would cost more than it buys (64³ sits at the boundary).
+const PAR_FLOP_MIN: usize = 1 << 18;
+
+/// Minimum output rows per parallel chunk.
+const ROW_GRAIN: usize = 8;
+
+#[inline]
+fn par_worthwhile(bk: &dyn Backend, macs: usize) -> bool {
+    macs >= PAR_FLOP_MIN && bk.threads() > 1
+}
 
 /// C = A(m,k) · B(k,n).
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    matmul_with(&*backend::global(), a, b)
+}
+
+/// [`matmul`] with an explicit backend.
+pub fn matmul_with(bk: &dyn Backend, a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(a.cols(), b.rows(), "matmul inner-dim mismatch");
     let mut c = Tensor::zeros(a.rows(), b.cols());
-    matmul_into(a, b, &mut c);
+    matmul_into_with(bk, a, b, &mut c);
     c
 }
 
 /// C = A · B written into an existing output buffer (hot path: avoids
 /// reallocating per step).
 pub fn matmul_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
+    matmul_into_with(&*backend::global(), a, b, c);
+}
+
+/// [`matmul_into`] with an explicit backend.
+pub fn matmul_into_with(bk: &dyn Backend, a: &Tensor, b: &Tensor, c: &mut Tensor) {
     let (m, kk) = a.shape();
     let (kb, n) = b.shape();
     assert_eq!(kk, kb, "matmul inner-dim mismatch");
     assert_eq!(c.shape(), (m, n), "matmul output shape mismatch");
     c.data_mut().fill(0.0);
     let (ad, bd) = (a.data(), b.data());
-    let cd = c.data_mut();
+    let cd = SendPtr(c.data_mut().as_mut_ptr());
     // i-k-j: C[i,:] += A[i,k] * B[k,:]; inner loop is contiguous in both
     // B and C.
-    for i in 0..m {
-        let crow = &mut cd[i * n..(i + 1) * n];
-        for k in 0..kk {
-            let aik = ad[i * kk + k];
-            if aik == 0.0 {
-                continue;
-            }
-            let brow = &bd[k * n..(k + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += aik * bv;
+    let rows = |r: Range<usize>| {
+        for i in r {
+            // SAFETY: row blocks from disjoint ranges never overlap.
+            let crow = unsafe { std::slice::from_raw_parts_mut(cd.0.add(i * n), n) };
+            for k in 0..kk {
+                let aik = ad[i * kk + k];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &bd[k * n..(k + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += aik * bv;
+                }
             }
         }
+    };
+    if par_worthwhile(bk, m.saturating_mul(n).saturating_mul(kk)) {
+        backend::par_ranges(bk, m, ROW_GRAIN, &rows);
+    } else {
+        rows(0..m);
     }
 }
 
 /// C = Aᵀ(k,m)ᵀ is (m,k): computes C(m,n) = Aᵀ · B where A is (k,m),
 /// B is (k,n).
 pub fn matmul_at_b(a: &Tensor, b: &Tensor) -> Tensor {
+    matmul_at_b_with(&*backend::global(), a, b)
+}
+
+/// [`matmul_at_b`] with an explicit backend.
+pub fn matmul_at_b_with(bk: &dyn Backend, a: &Tensor, b: &Tensor) -> Tensor {
     let (k, m) = a.shape();
     let (kb, n) = b.shape();
     assert_eq!(k, kb, "matmul_at_b inner-dim mismatch");
     let mut c = Tensor::zeros(m, n);
     let (ad, bd) = (a.data(), b.data());
-    let cd = c.data_mut();
-    // k-i-j order: stream over A and B rows; C row update contiguous.
-    for kk in 0..k {
-        let arow = &ad[kk * m..(kk + 1) * m];
-        let brow = &bd[kk * n..(kk + 1) * n];
-        for i in 0..m {
-            let aik = arow[i];
-            if aik == 0.0 {
-                continue;
+    if par_worthwhile(bk, m.saturating_mul(n).saturating_mul(k)) {
+        // Row-partitioned: lane-local C rows; A is read with stride m,
+        // amortized over the contiguous length-n row update. Per
+        // element the accumulation is k-ascending — identical to the
+        // streaming path below, hence bit-equal results.
+        let cd = SendPtr(c.data_mut().as_mut_ptr());
+        backend::par_ranges(bk, m, ROW_GRAIN, &|r: Range<usize>| {
+            for i in r {
+                // SAFETY: row blocks from disjoint ranges never overlap.
+                let crow = unsafe { std::slice::from_raw_parts_mut(cd.0.add(i * n), n) };
+                for kk in 0..k {
+                    let aik = ad[kk * m + i];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &bd[kk * n..(kk + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += aik * bv;
+                    }
+                }
             }
-            let crow = &mut cd[i * n..(i + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += aik * bv;
+        });
+    } else {
+        // k-i-j order: stream over A and B rows; C row update contiguous.
+        let cd = c.data_mut();
+        for kk in 0..k {
+            let arow = &ad[kk * m..(kk + 1) * m];
+            let brow = &bd[kk * n..(kk + 1) * n];
+            for i in 0..m {
+                let aik = arow[i];
+                if aik == 0.0 {
+                    continue;
+                }
+                let crow = &mut cd[i * n..(i + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += aik * bv;
+                }
             }
         }
     }
@@ -80,21 +147,36 @@ pub fn matmul_at_b(a: &Tensor, b: &Tensor) -> Tensor {
 
 /// C(m,n) = A(m,k) · Bᵀ where B is (n,k).
 pub fn matmul_a_bt(a: &Tensor, b: &Tensor) -> Tensor {
+    matmul_a_bt_with(&*backend::global(), a, b)
+}
+
+/// [`matmul_a_bt`] with an explicit backend.
+pub fn matmul_a_bt_with(bk: &dyn Backend, a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = a.shape();
     let (n, kb) = b.shape();
     assert_eq!(k, kb, "matmul_a_bt inner-dim mismatch");
     let mut c = Tensor::zeros(m, n);
     let (ad, bd) = (a.data(), b.data());
-    let cd = c.data_mut();
-    // Rows of A against rows of B: each output element is one dot of two
-    // contiguous slices.
-    for i in 0..m {
-        let arow = &ad[i * k..(i + 1) * k];
-        let crow = &mut cd[i * n..(i + 1) * n];
-        for (j, cv) in crow.iter_mut().enumerate() {
-            let brow = &bd[j * k..(j + 1) * k];
-            *cv = super::dot(arow, brow);
+    let cd = SendPtr(c.data_mut().as_mut_ptr());
+    // Rows of A against rows of B: each output element is one dot of
+    // two contiguous slices. Uses the straight-line kernel directly so
+    // the explicit `bk` is the only backend this function touches
+    // (`super::dot` would route huge inner dims via the global).
+    let rows = |r: Range<usize>| {
+        for i in r {
+            let arow = &ad[i * k..(i + 1) * k];
+            // SAFETY: row blocks from disjoint ranges never overlap.
+            let crow = unsafe { std::slice::from_raw_parts_mut(cd.0.add(i * n), n) };
+            for (j, cv) in crow.iter_mut().enumerate() {
+                let brow = &bd[j * k..(j + 1) * k];
+                *cv = super::dot_seq(arow, brow);
+            }
         }
+    };
+    if par_worthwhile(bk, m.saturating_mul(n).saturating_mul(k)) {
+        backend::par_ranges(bk, m, ROW_GRAIN, &rows);
+    } else {
+        rows(0..m);
     }
     c
 }
@@ -102,6 +184,7 @@ pub fn matmul_a_bt(a: &Tensor, b: &Tensor) -> Tensor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::{Sequential, Threaded};
     use crate::rng::Pcg64;
 
     fn naive(a: &Tensor, b: &Tensor) -> Tensor {
@@ -164,5 +247,28 @@ mod tests {
         let i = Tensor::eye(8);
         assert!(matmul(&a, &i).max_abs_diff(&a) < 1e-6);
         assert!(matmul(&i, &a).max_abs_diff(&a) < 1e-6);
+    }
+
+    /// Threaded results are bit-identical to sequential for all three
+    /// kernels — sizes chosen above the parallel dispatch threshold
+    /// with uneven row counts.
+    #[test]
+    fn threaded_is_bit_identical_to_sequential() {
+        let mut rng = Pcg64::seeded(15);
+        let thr = Threaded::new(4);
+        let (m, k, n) = (67, 129, 61);
+        let a = random(&mut rng, m, k);
+        let b = random(&mut rng, k, n);
+        assert_eq!(matmul_with(&Sequential, &a, &b), matmul_with(&thr, &a, &b));
+        let at = random(&mut rng, k, m); // (k, m)
+        assert_eq!(
+            matmul_at_b_with(&Sequential, &at, &b),
+            matmul_at_b_with(&thr, &at, &b)
+        );
+        let bt = random(&mut rng, n, k); // (n, k)
+        assert_eq!(
+            matmul_a_bt_with(&Sequential, &a, &bt),
+            matmul_a_bt_with(&thr, &a, &bt)
+        );
     }
 }

@@ -6,9 +6,70 @@
 //! as blocked kernels over contiguous rows so the hot loops
 //! auto-vectorize; see `rust/benches/linalg_micro.rs` and
 //! EXPERIMENTS.md §Perf for measured throughput.
+//!
+//! Large operations dispatch through [`crate::backend`]: matmuls and
+//! row-wise ops are row-partitioned, elementwise ops are
+//! range-partitioned, and reductions ([`dot`], [`Tensor::norm_sq`])
+//! use a *size-derived* fixed chunk grid so the result is bit-identical
+//! under every backend and thread count. Small operands always run
+//! inline — dispatch overhead is gated by size thresholds, not flags.
 
 mod matmul;
-pub use matmul::{matmul, matmul_at_b, matmul_a_bt, matmul_into};
+pub use matmul::{
+    matmul, matmul_a_bt, matmul_a_bt_with, matmul_at_b, matmul_at_b_with, matmul_into,
+    matmul_into_with, matmul_with,
+};
+
+use std::ops::Range;
+
+use crate::backend::SendPtr;
+
+/// Elementwise ops below this many elements run inline.
+const PAR_ELEM_MIN: usize = 1 << 16;
+
+/// Minimum elements per parallel elementwise chunk.
+const ELEM_GRAIN: usize = 4096;
+
+/// Fixed reduction chunk: reductions over `n` elements always use
+/// `ceil(n / REDUCE_CHUNK)` partials combined in index order,
+/// regardless of backend — the determinism contract.
+const REDUCE_CHUNK: usize = 8192;
+
+/// Reductions below this length skip the chunked path entirely.
+const PAR_REDUCE_MIN: usize = 1 << 16;
+
+/// Apply `f` to matching chunk-disjoint sub-slices of `y` and `x`.
+fn par_binary(y: &mut [f32], x: &[f32], f: impl Fn(&mut [f32], &[f32]) + Sync) {
+    debug_assert_eq!(y.len(), x.len());
+    let n = y.len();
+    if n < PAR_ELEM_MIN {
+        f(y, x);
+        return;
+    }
+    let bk = crate::backend::global();
+    let yp = SendPtr(y.as_mut_ptr());
+    crate::backend::par_ranges(&*bk, n, ELEM_GRAIN, &|r: Range<usize>| {
+        // SAFETY: ranges from par_ranges are disjoint.
+        let ys = unsafe { std::slice::from_raw_parts_mut(yp.0.add(r.start), r.len()) };
+        f(ys, &x[r]);
+    });
+}
+
+/// Apply `f` to chunk-disjoint sub-slices of `y`.
+fn par_unary(y: &mut [f32], f: impl Fn(&mut [f32]) + Sync) {
+    let n = y.len();
+    if n < PAR_ELEM_MIN {
+        f(y);
+        return;
+    }
+    let bk = crate::backend::global();
+    let yp = SendPtr(y.as_mut_ptr());
+    crate::backend::par_ranges(&*bk, n, ELEM_GRAIN, &|r: Range<usize>| {
+        // SAFETY: ranges from par_ranges are disjoint.
+        let ys = unsafe { std::slice::from_raw_parts_mut(yp.0.add(r.start), r.len()) };
+        f(ys);
+    });
+}
 
 /// A dense, row-major matrix of `f32`.
 ///
@@ -148,33 +209,41 @@ impl Tensor {
     }
 
     /// Elementwise in-place map.
-    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
-        for v in &mut self.data {
-            *v = f(*v);
-        }
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32 + Sync) {
+        par_unary(&mut self.data, |ys| {
+            for v in ys {
+                *v = f(*v);
+            }
+        });
     }
 
     /// self += alpha * other (same shape).
     pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
         assert_eq!(self.shape(), other.shape());
-        for (a, &b) in self.data.iter_mut().zip(other.data.iter()) {
-            *a += alpha * b;
-        }
+        par_binary(&mut self.data, &other.data, |ys, xs| {
+            for (a, &b) in ys.iter_mut().zip(xs) {
+                *a += alpha * b;
+            }
+        });
     }
 
     /// self = beta*self + alpha*other (running averages).
     pub fn blend(&mut self, beta: f32, alpha: f32, other: &Tensor) {
         assert_eq!(self.shape(), other.shape());
-        for (a, &b) in self.data.iter_mut().zip(other.data.iter()) {
-            *a = beta * *a + alpha * b;
-        }
+        par_binary(&mut self.data, &other.data, |ys, xs| {
+            for (a, &b) in ys.iter_mut().zip(xs) {
+                *a = beta * *a + alpha * b;
+            }
+        });
     }
 
     /// Scale all elements in place.
     pub fn scale(&mut self, s: f32) {
-        for v in &mut self.data {
-            *v *= s;
-        }
+        par_unary(&mut self.data, |ys| {
+            for v in ys {
+                *v *= s;
+            }
+        });
     }
 
     /// Frobenius inner product <self, other>.
@@ -198,9 +267,19 @@ impl Tensor {
     /// `(d, n)`).
     pub fn mean_cols(&self) -> Vec<f32> {
         let mut out = vec![0.0f32; self.rows];
-        for i in 0..self.rows {
-            let r = self.row(i);
-            out[i] = r.iter().sum::<f32>() / self.cols as f32;
+        let op = SendPtr(out.as_mut_ptr());
+        let body = |range: Range<usize>| {
+            for i in range {
+                let r = self.row(i);
+                // SAFETY: one writer per row index.
+                unsafe { *op.0.add(i) = r.iter().sum::<f32>() / self.cols as f32 };
+            }
+        };
+        if self.data.len() >= PAR_ELEM_MIN {
+            let bk = crate::backend::global();
+            crate::backend::par_ranges(&*bk, self.rows, 16, &body);
+        } else {
+            body(0..self.rows);
         }
         out
     }
@@ -224,12 +303,23 @@ impl Tensor {
     pub fn add_outer(&mut self, alpha: f32, u: &[f32], v: &[f32]) {
         assert_eq!(u.len(), self.rows);
         assert_eq!(v.len(), self.cols);
-        for i in 0..self.rows {
-            let ui = alpha * u[i];
-            let row = self.row_mut(i);
-            for (r, &vj) in row.iter_mut().zip(v) {
-                *r += ui * vj;
+        let (rows, cols) = (self.rows, self.cols);
+        let dp = SendPtr(self.data.as_mut_ptr());
+        let body = |range: Range<usize>| {
+            for i in range {
+                let ui = alpha * u[i];
+                // SAFETY: row blocks from disjoint ranges never overlap.
+                let row = unsafe { std::slice::from_raw_parts_mut(dp.0.add(i * cols), cols) };
+                for (r, &vj) in row.iter_mut().zip(v) {
+                    *r += ui * vj;
+                }
             }
+        };
+        if rows * cols >= PAR_ELEM_MIN {
+            let bk = crate::backend::global();
+            crate::backend::par_ranges(&*bk, rows, 16, &body);
+        } else {
+            body(0..rows);
         }
     }
 
@@ -237,8 +327,18 @@ impl Tensor {
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(x.len(), self.cols);
         let mut y = vec![0.0f32; self.rows];
-        for i in 0..self.rows {
-            y[i] = dot(self.row(i), x);
+        let yp = SendPtr(y.as_mut_ptr());
+        let body = |range: Range<usize>| {
+            for i in range {
+                // SAFETY: one writer per row index.
+                unsafe { *yp.0.add(i) = dot(self.row(i), x) };
+            }
+        };
+        if self.data.len() >= PAR_ELEM_MIN {
+            let bk = crate::backend::global();
+            crate::backend::par_ranges(&*bk, self.rows, 16, &body);
+        } else {
+            body(0..self.rows);
         }
         y
     }
@@ -298,11 +398,30 @@ impl Tensor {
     }
 }
 
-/// Dense dot product over f32 slices, 4-way unrolled; the compiler
-/// vectorizes each lane.
+/// Dense dot product over f32 slices. Long inputs reduce over the
+/// fixed [`REDUCE_CHUNK`] grid through the *process-global* backend
+/// (bit-identical for every backend — the grid depends only on the
+/// length); short inputs use the unrolled scalar kernel directly.
+/// Kernels that take an explicit backend handle must not call this in
+/// their inner loops — use [`dot_seq`].
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
+    if a.len() >= PAR_REDUCE_MIN {
+        let bk = crate::backend::global();
+        return crate::backend::par_reduce_sum(&*bk, a.len(), REDUCE_CHUNK, &|r: Range<usize>| {
+            dot_seq(&a[r.clone()], &b[r])
+        });
+    }
+    dot_seq(a, b)
+}
+
+/// The straight-line unrolled dot kernel, 4-way unrolled; the compiler
+/// vectorizes each lane. Kernels taking an explicit backend use this
+/// directly so their only dispatch surface is the handle they were
+/// given.
+#[inline]
+pub(crate) fn dot_seq(a: &[f32], b: &[f32]) -> f32 {
     let n = a.len();
     let chunks = n / 4;
     let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);

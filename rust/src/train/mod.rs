@@ -74,6 +74,11 @@ enum EngineState {
 
 impl Trainer {
     pub fn from_config(cfg: &TrainConfig) -> Result<Self> {
+        if let Some(spec) = &cfg.backend {
+            let choice =
+                crate::backend::BackendChoice::parse(spec).map_err(|e| anyhow!(e))?;
+            crate::backend::install(&choice);
+        }
         let dataset = by_name(&cfg.dataset, cfg.seed).map_err(|e| anyhow!(e))?;
         let engine = match &cfg.engine {
             Engine::Native => {
@@ -314,6 +319,7 @@ mod tests {
             warmup_steps: 0,
             max_steps: Some(40),
             eval_every: 1,
+            backend: None,
         }
     }
 

@@ -1,0 +1,256 @@
+//! Backend parity: `Threaded` must reproduce `Sequential` numerics on
+//! every routed hot path.
+//!
+//! The backend contract is stronger than a tolerance — kernels keep
+//! per-element arithmetic order backend-invariant and reductions use a
+//! size-derived chunk grid, so results are bit-identical. These tests
+//! assert the satellite requirement (≤ 1e-6) on top of exercising the
+//! parallel code paths with sizes above the dispatch thresholds.
+
+use std::sync::Mutex;
+
+use eva::backend::{self, Backend, BackendChoice, Sequential, Threaded};
+use eva::linalg;
+use eva::nn::LayerStats;
+use eva::optim::{Eva, HyperParams, Kfac, Optimizer, StepCtx};
+use eva::tensor::{self, Tensor};
+use eva::testing::Gen;
+
+/// Tests that swap the process-global backend serialize here so their
+/// install/restore windows don't interleave. (Numerics are
+/// backend-invariant, so this is hygiene, not correctness.)
+static GLOBAL_BACKEND: Mutex<()> = Mutex::new(());
+
+const TOL: f32 = 1e-6;
+
+fn threaded() -> Threaded {
+    Threaded::new(4)
+}
+
+// ---------------------------------------------------------------------------
+// Kernel parity (explicit backend handles; no global state touched)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn matmul_variants_parity() {
+    let mut g = Gen::new(101);
+    let thr = threaded();
+    // Odd sizes above the parallel threshold (≥ 2^18 MACs) so row
+    // partitioning actually engages, plus a small below-threshold case.
+    for &(m, k, n) in &[(130usize, 70usize, 90usize), (9, 11, 7)] {
+        let a = g.normal_tensor(m, k);
+        let b = g.normal_tensor(k, n);
+        let seq = tensor::matmul_with(&Sequential, &a, &b);
+        let par = tensor::matmul_with(&thr, &a, &b);
+        assert!(seq.max_abs_diff(&par) <= TOL, "matmul {m}x{k}x{n}");
+
+        let at = g.normal_tensor(k, m); // (k, m) for Aᵀ·B
+        let seq = tensor::matmul_at_b_with(&Sequential, &at, &b);
+        let par = tensor::matmul_at_b_with(&thr, &at, &b);
+        assert!(seq.max_abs_diff(&par) <= TOL, "matmul_at_b {m}x{k}x{n}");
+
+        let bt = g.normal_tensor(n, k); // (n, k) for A·Bᵀ
+        let seq = tensor::matmul_a_bt_with(&Sequential, &a, &bt);
+        let par = tensor::matmul_a_bt_with(&thr, &a, &bt);
+        assert!(seq.max_abs_diff(&par) <= TOL, "matmul_a_bt {m}x{k}x{n}");
+    }
+}
+
+#[test]
+fn matmul_against_naive_reference_under_threads() {
+    // Not just self-consistency: the threaded result is the right
+    // product.
+    let mut g = Gen::new(7);
+    let (m, k, n) = (80usize, 65usize, 75usize);
+    let a = g.normal_tensor(m, k);
+    let b = g.normal_tensor(k, n);
+    let par = tensor::matmul_with(&threaded(), &a, &b);
+    for i in [0usize, m / 2, m - 1] {
+        for j in [0usize, n / 2, n - 1] {
+            let expect: f32 = (0..k).map(|kk| a.at(i, kk) * b.at(kk, j)).sum();
+            assert!((par.at(i, j) - expect).abs() < 1e-3, "({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn spd_inverse_parity_and_correctness() {
+    let mut g = Gen::new(33);
+    let thr = threaded();
+    for n in [8usize, 96] {
+        // 96 crosses the column-solve dispatch gate; 8 stays inline.
+        let m = g.spd_tensor(n, 0.05);
+        let seq = linalg::spd_inverse_with(&Sequential, &m).unwrap();
+        let par = linalg::spd_inverse_with(&thr, &m).unwrap();
+        assert!(seq.max_abs_diff(&par) <= TOL, "spd_inverse n={n}");
+        let prod = tensor::matmul_with(&thr, &m, &par);
+        assert!(prod.max_abs_diff(&Tensor::eye(n)) < 1e-2, "M·M⁻¹ ≉ I at n={n}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Linalg edge cases
+// ---------------------------------------------------------------------------
+
+#[test]
+fn one_by_one_edge_cases() {
+    let thr = threaded();
+    let a = Tensor::from_rows(&[&[3.0]]);
+    let b = Tensor::from_rows(&[&[4.0]]);
+    assert_eq!(tensor::matmul_with(&thr, &a, &b).at(0, 0), 12.0);
+    let inv = linalg::spd_inverse_with(&thr, &b).unwrap();
+    assert!((inv.at(0, 0) - 0.25).abs() < 1e-6);
+    let l = linalg::cholesky(&b).unwrap();
+    let x = linalg::cholesky_solve(&l, &[8.0]);
+    assert!((x[0] - 2.0).abs() < 1e-6);
+}
+
+#[test]
+fn empty_product_does_not_panic() {
+    let a = Tensor::zeros(0, 0);
+    let c = tensor::matmul_with(&threaded(), &a, &a);
+    assert_eq!(c.shape(), (0, 0));
+}
+
+#[test]
+fn non_pd_error_path_is_backend_invariant() {
+    // eig(−1, 3): not positive definite.
+    let m = Tensor::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]);
+    let seq = linalg::spd_inverse_with(&Sequential, &m);
+    let par = linalg::spd_inverse_with(&threaded(), &m);
+    assert!(seq.is_err() && par.is_err());
+    assert_eq!(seq.unwrap_err(), par.unwrap_err());
+    assert!(linalg::cholesky(&m).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Full optimizer steps through the global dispatcher
+// ---------------------------------------------------------------------------
+
+fn with_global<T>(choice: BackendChoice, f: impl FnOnce() -> T) -> T {
+    let prev = backend::global();
+    backend::install(&choice);
+    let out = f();
+    backend::set_global(prev);
+    out
+}
+
+/// One Eva step on a layer big enough (256×512) to cross the
+/// elementwise/reduction dispatch thresholds.
+fn eva_step_deltas() -> (Tensor, Vec<f32>) {
+    let mut g = Gen::new(1234);
+    let (d_out, d_in) = (256usize, 512usize);
+    let params = vec![Tensor::zeros(d_out, d_in)];
+    let grads = vec![g.normal_tensor(d_out, d_in)];
+    let bias = vec![vec![0.01; d_out]];
+    let stats = vec![LayerStats {
+        a_mean: g.normal_vec(d_in),
+        b_mean: g.normal_vec(d_out),
+        aat: None,
+        bbt: None,
+    }];
+    let ctx = StepCtx {
+        params: &params,
+        grads: &grads,
+        bias_grads: &bias,
+        stats: &stats,
+        lr: 0.1,
+        step: 0,
+    };
+    let mut opt = Eva::new(HyperParams::default());
+    let u = opt.step(&ctx);
+    (u.deltas[0].clone(), u.bias_deltas[0].clone())
+}
+
+#[test]
+fn full_eva_step_parity() {
+    let _serial = GLOBAL_BACKEND.lock().unwrap_or_else(|e| e.into_inner());
+    let (dw_seq, db_seq) = with_global(BackendChoice::Sequential, eva_step_deltas);
+    let (dw_par, db_par) = with_global(BackendChoice::Threaded(4), eva_step_deltas);
+    assert!(dw_seq.max_abs_diff(&dw_par) <= TOL, "eva weight deltas diverge");
+    for (a, b) in db_seq.iter().zip(&db_par) {
+        assert!((a - b).abs() <= TOL, "eva bias deltas diverge");
+    }
+    assert!(dw_seq.all_finite());
+}
+
+/// One K-FAC step with full Kronecker factors (two layers so the
+/// per-layer par_map fan-out has more than one unit of work).
+fn kfac_step_deltas() -> Vec<Tensor> {
+    let mut g = Gen::new(987);
+    let dims = [(96usize, 160usize), (48, 96)];
+    let params: Vec<Tensor> = dims.iter().map(|&(o, i)| Tensor::zeros(o, i)).collect();
+    let grads: Vec<Tensor> = dims.iter().map(|&(o, i)| g.normal_tensor(o, i)).collect();
+    let bias: Vec<Vec<f32>> = dims.iter().map(|&(o, _)| vec![0.0; o]).collect();
+    let stats: Vec<LayerStats> = dims
+        .iter()
+        .map(|&(o, i)| LayerStats {
+            a_mean: g.normal_vec(i),
+            b_mean: g.normal_vec(o),
+            aat: Some(g.spd_tensor(i, 0.01)),
+            bbt: Some(g.spd_tensor(o, 0.01)),
+        })
+        .collect();
+    let ctx = StepCtx {
+        params: &params,
+        grads: &grads,
+        bias_grads: &bias,
+        stats: &stats,
+        lr: 0.05,
+        step: 0,
+    };
+    let mut opt = Kfac::new(HyperParams::default());
+    opt.step(&ctx).deltas
+}
+
+#[test]
+fn full_kfac_step_parity() {
+    let _serial = GLOBAL_BACKEND.lock().unwrap_or_else(|e| e.into_inner());
+    let seq = with_global(BackendChoice::Sequential, kfac_step_deltas);
+    let par = with_global(BackendChoice::Threaded(4), kfac_step_deltas);
+    assert_eq!(seq.len(), par.len());
+    for (l, (a, b)) in seq.iter().zip(&par).enumerate() {
+        assert!(a.max_abs_diff(b) <= TOL, "kfac layer {l} deltas diverge");
+        assert!(a.all_finite(), "kfac layer {l} non-finite");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Elementwise / reduction parity through the global dispatcher
+// ---------------------------------------------------------------------------
+
+#[test]
+fn elementwise_and_reduction_parity() {
+    let _serial = GLOBAL_BACKEND.lock().unwrap_or_else(|e| e.into_inner());
+    let run = || {
+        let mut g = Gen::new(555);
+        // 300×300 = 90k elements: above the elementwise + reduction gates.
+        let mut x = g.normal_tensor(300, 300);
+        let y = g.normal_tensor(300, 300);
+        x.axpy(0.5, &y);
+        x.blend(0.9, 0.1, &y);
+        x.scale(1.25);
+        x.map_inplace(|v| v.tanh());
+        let d = x.dot(&y);
+        let n = x.norm();
+        let mv = x.matvec(&vec![0.5f32; 300]);
+        (x, d, n, mv)
+    };
+    let (xs, ds, ns, mvs) = with_global(BackendChoice::Sequential, run);
+    let (xp, dp, np, mvp) = with_global(BackendChoice::Threaded(4), run);
+    assert!(xs.max_abs_diff(&xp) <= TOL);
+    assert!((ds - dp).abs() <= TOL * ds.abs().max(1.0));
+    assert!((ns - np).abs() <= TOL * ns.abs().max(1.0));
+    for (a, b) in mvs.iter().zip(&mvp) {
+        assert!((a - b).abs() <= TOL * a.abs().max(1.0));
+    }
+}
+
+#[test]
+fn backend_labels_and_threads() {
+    assert_eq!(Sequential.label(), "seq");
+    assert_eq!(Sequential.threads(), 1);
+    let t = Threaded::new(3);
+    assert_eq!(t.label(), "threads:3");
+    assert_eq!(t.threads(), 3);
+}

@@ -78,6 +78,7 @@ fn pjrt_trainer_end_to_end() {
         warmup_steps: 0,
         max_steps: Some(50),
         eval_every: 1,
+        backend: None,
     };
     let mut t = Trainer::from_config(&cfg).unwrap();
     let r = t.run().unwrap();
@@ -104,6 +105,7 @@ fn native_and_pjrt_agree_on_learnability() {
         warmup_steps: 0,
         max_steps: Some(60),
         eval_every: 1,
+        backend: None,
     };
     let mut native = Trainer::from_config(&mk(Engine::Native)).unwrap();
     let rn = native.run().unwrap();

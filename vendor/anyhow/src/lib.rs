@@ -1,0 +1,229 @@
+//! Offline stand-in for the `anyhow` crate (std-only, no deps).
+//!
+//! This repository builds in an air-gapped environment, so the small
+//! slice of `anyhow` the codebase uses is vendored here with the same
+//! semantics: an opaque [`Error`] holding a message plus a context
+//! chain, the [`anyhow!`]/[`bail!`]/[`ensure!`] macros, the
+//! [`Context`] extension trait, and a [`Result`] alias. Swapping back
+//! to the real crate is a one-line Cargo change; no call sites need to
+//! move.
+//!
+//! Deliberately *not* implemented: downcasting, backtraces, and
+//! `std::error::Error` for [`Error`] (the last mirrors real `anyhow`,
+//! and is what keeps the blanket `From`/`Context` impls coherent).
+
+use std::fmt;
+
+/// An error message with a chain of higher-level context strings.
+pub struct Error {
+    /// Root cause message (innermost).
+    msg: String,
+    /// Context frames, outermost last (pushed by [`Context`]).
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from anything displayable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), context: Vec::new() }
+    }
+
+    /// Attach another layer of context (outermost).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.context.push(context.to_string());
+        self
+    }
+
+    /// The root-cause message.
+    pub fn root_cause(&self) -> &str {
+        &self.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the whole chain, outermost first.
+            for c in self.context.iter().rev() {
+                write!(f, "{c}: ")?;
+            }
+            write!(f, "{}", self.msg)
+        } else {
+            // `{}` — outermost message only, like real anyhow.
+            match self.context.last() {
+                Some(c) => write!(f, "{c}"),
+                None => write!(f, "{}", self.msg),
+            }
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.context.last() {
+            Some(c) => write!(f, "{c}")?,
+            None => write!(f, "{}", self.msg)?,
+        }
+        if !self.context.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in self.context.iter().rev().skip(1) {
+                write!(f, "\n    {c}")?;
+            }
+            write!(f, "\n    {}", self.msg)?;
+        }
+        Ok(())
+    }
+}
+
+/// Any std error converts into [`Error`], capturing its source chain.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error::msg(msg)
+    }
+}
+
+/// `anyhow::Result<T>` (second parameter defaulted like the real crate).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Early-return with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn display_shows_outermost_and_alternate_shows_chain() {
+        let e = Error::msg("root").context("mid").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: mid: root");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let x = 3;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(format!("{e}"), "bad value 3");
+        let e = anyhow!("pair {} {}", 1, 2);
+        assert_eq!(format!("{e}"), "pair 1 2");
+        let e = anyhow!(String::from("owned"));
+        assert_eq!(format!("{e}"), "owned");
+    }
+
+    #[test]
+    fn bail_and_ensure_return_errors() {
+        fn f(fail: bool) -> Result<u32> {
+            ensure!(!fail, "ensured {fail}");
+            if fail {
+                bail!("unreachable");
+            }
+            Ok(7)
+        }
+        assert_eq!(f(false).unwrap(), 7);
+        assert_eq!(format!("{}", f(true).unwrap_err()), "ensured true");
+    }
+
+    #[test]
+    fn context_on_std_and_anyhow_results() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening file").unwrap_err();
+        assert_eq!(format!("{e:#}"), "opening file: missing");
+
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.with_context(|| "outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner");
+
+        let o: Option<u8> = None;
+        assert!(o.context("absent").is_err());
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "missing");
+    }
+}
