@@ -41,6 +41,7 @@ fn main() -> anyhow::Result<()> {
                 max_steps: None,
                 eval_every: 1,
                 backend: None,
+                worker_threads: None,
             };
             let mut t = Trainer::from_config(&cfg)?;
             let r = t.run()?;

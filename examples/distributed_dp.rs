@@ -5,20 +5,35 @@
 //! gradients + O(d) KVs every step; K-FAC moves O(d²) factors on
 //! refresh steps.
 //!
-//! Run: `cargo run --release --example distributed_dp [workers]`
+//! Run: `cargo run --release --example distributed_dp [workers] [worker_threads]`
+//!
+//! `worker_threads` gives every simulated worker its own k-lane
+//! sub-pool; without it the workers split the installed backend's lane
+//! budget evenly (see `eva::backend::split`).
 
 use eva::config::ModelArch;
 use eva::coordinator::{DataParallelCfg, DataParallelTrainer, SimNetwork};
 
 fn main() -> anyhow::Result<()> {
     let workers: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4);
-    println!("== data-parallel training, {workers} workers, simulated 100 Gb/s ring ==\n");
+    let worker_threads: Option<usize> = std::env::args().nth(2).and_then(|s| s.parse().ok());
+    // Workers compute through the dispatch layer now (no raw thread
+    // spawns), so install a threaded backend for real parallel compute
+    // — one lane per hardware thread, carved across the workers.
+    let b = eva::backend::install(&eva::backend::BackendChoice::Threaded(
+        eva::backend::default_threads(),
+    ));
+    println!("== data-parallel training, {workers} workers, simulated 100 Gb/s ring ==");
+    println!("   (dispatch backend: {})\n", b.label());
     for (optimizer, interval) in [("sgd", 1usize), ("eva", 1), ("kfac", 5)] {
         let mut cfg = DataParallelCfg::new(workers, optimizer);
         cfg.arch = ModelArch::Classifier { hidden: vec![256, 128] };
         cfg.steps = 10;
         cfg.hp.update_interval = interval;
         cfg.network = SimNetwork::datacenter(workers);
+        if worker_threads.is_some() {
+            cfg.worker_threads = worker_threads;
+        }
         let mut trainer = DataParallelTrainer::new(cfg).map_err(anyhow::Error::msg)?;
         let (grad_b, kv_b, kf_b) = trainer.traffic_summary();
         let report = trainer.run().map_err(anyhow::Error::msg)?;

@@ -140,6 +140,39 @@ fn main() {
     }
     println!();
 
+    // --- eigh_jacobi (round-robin pair scheduling) ---------------------
+    let n = 192usize;
+    let x = random(&mut rng, n, 2 * n);
+    let mut spd = matmul_a_bt_with(&Sequential, &x, &x);
+    spd.scale(1.0 / (2 * n) as f32);
+    spd.add_diag(0.05);
+    // Fixed sweep budget: the bench measures rotation throughput, not
+    // convergence (parity is asserted inline — bit-identical phases).
+    let sweeps = 6usize;
+    let reference = linalg::eigh_jacobi_with(&Sequential, &spd, sweeps);
+    let t_seq = time(3, || {
+        std::hint::black_box(linalg::eigh_jacobi_with(&Sequential, &spd, sweeps));
+    });
+    println!("eigh_jacobi {n}      {:<10} {:>9.1} ms  (baseline)", "seq", t_seq * 1e3);
+    for &nl in &lanes {
+        let thr = BackendChoice::Threaded(nl).build();
+        let got = linalg::eigh_jacobi_with(&*thr, &spd, sweeps);
+        assert!(
+            got.0 == reference.0 && got.1 == reference.1,
+            "threads:{nl} diverged from sequential on eigh_jacobi {n}"
+        );
+        let t = time(3, || {
+            std::hint::black_box(linalg::eigh_jacobi_with(&*thr, &spd, sweeps));
+        });
+        println!(
+            "eigh_jacobi {n}      {:<10} {:>9.1} ms  speedup x{:.2}",
+            thr.label(),
+            t * 1e3,
+            t_seq / t
+        );
+    }
+    println!();
+
     // --- elementwise + reduction stream (4M elements) ------------------
     let len = 1 << 22;
     let big_a = {

@@ -5,7 +5,7 @@
 //! factorization loops in K-FAC/FOOF/Shampoo — dispatches through a
 //! [`Backend`]: either [`Sequential`] (the original single-threaded
 //! code path) or [`Threaded`] (a persistent worker pool, see
-//! [`pool::WorkerPool`]). Selection is per-process via the global
+//! [`WorkerPool`]). Selection is per-process via the global
 //! dispatcher ([`install`]/[`global`]), driven by `TrainConfig.backend`
 //! or the CLI flag `--backend seq|threads[:N]`.
 //!
@@ -16,13 +16,31 @@
 //! produce bit-identical results for every routed operation — parity
 //! is structural, not approximate (see `tests/backend_parity.rs`).
 //!
+//! **One dispatch layer for kernel- and data-parallelism.** Kernels
+//! resolve their backend with [`current`]: a scoped per-thread handle
+//! installed by [`with_backend`] if one is active, otherwise the
+//! process-wide [`global`]. The data-parallel coordinator uses the
+//! same layer twice — its worker loop is one `par_for` over the global
+//! backend, and each simulated worker's compute runs under
+//! `with_backend` on a *sub-pool handle* carved from the global lane
+//! budget by [`split`]. A handle whose budget is exhausted (one lane)
+//! degrades to [`Sequential`], i.e. nested dispatch inlines; threads
+//! already inside a pool job default to inline dispatch too, so the
+//! layers compose without oversubscription or cross-pool deadlock —
+//! the dispatch tree this module builds stays tree-shaped, which is
+//! what [`WorkerPool`]'s nesting rules require (see its notes for the
+//! cyclic-injection caveat that applies to direct pool users).
+//!
 //! Std-only by design: the offline build has no rayon/crossbeam, and a
 //! ~300-line pool is enough for row-partitioned kernels.
+
+#![warn(missing_docs)]
 
 mod pool;
 
 pub use pool::{in_pool, WorkerPool};
 
+use std::cell::RefCell;
 use std::ops::Range;
 use std::sync::{Arc, OnceLock, RwLock};
 
@@ -67,6 +85,7 @@ pub struct Threaded {
 }
 
 impl Threaded {
+    /// Backend backed by a fresh persistent pool with `threads` lanes.
     pub fn new(threads: usize) -> Self {
         Threaded { pool: WorkerPool::new(threads.max(1)) }
     }
@@ -89,6 +108,7 @@ impl Backend for Threaded {
 /// Parsed backend selection (config/CLI layer).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum BackendChoice {
+    /// The single-threaded [`Sequential`] path.
     Sequential,
     /// Total lanes (≥ 1); `threads` / `auto` resolve to the hardware
     /// parallelism at parse time.
@@ -132,14 +152,29 @@ fn registry() -> &'static RwLock<Arc<dyn Backend>> {
     REGISTRY.get_or_init(|| RwLock::new(Arc::new(Sequential) as Arc<dyn Backend>))
 }
 
+/// Flipped (permanently) by the first [`set_global`]/[`install`].
+static GLOBAL_EXPLICIT: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+/// True while the process is still on the boot-time [`Sequential`]
+/// default — i.e. no CLI flag, config key, or [`install`] call has
+/// chosen a backend yet. Consumers that used OS threads before the
+/// dispatch layer existed (the data-parallel coordinator) use this to
+/// keep their real parallelism under the untouched default while
+/// still honoring an *explicit* `seq` choice.
+pub fn global_is_default() -> bool {
+    !GLOBAL_EXPLICIT.load(std::sync::atomic::Ordering::Relaxed)
+}
+
 /// The process-wide backend used by kernels without an explicit handle.
 /// Defaults to [`Sequential`] until [`install`]/[`set_global`] runs.
 pub fn global() -> Arc<dyn Backend> {
     registry().read().unwrap_or_else(|e| e.into_inner()).clone()
 }
 
-/// Replace the global backend.
+/// Replace the global backend (marks the choice as explicit — see
+/// [`global_is_default`]).
 pub fn set_global(backend: Arc<dyn Backend>) {
+    GLOBAL_EXPLICIT.store(true, std::sync::atomic::Ordering::Relaxed);
     *registry().write().unwrap_or_else(|e| e.into_inner()) = backend;
 }
 
@@ -148,6 +183,99 @@ pub fn install(choice: &BackendChoice) -> Arc<dyn Backend> {
     let b = choice.build();
     set_global(Arc::clone(&b));
     b
+}
+
+// ---------------------------------------------------------------------------
+// Scoped handles and sub-pool carving
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    /// Per-thread stack of scoped backend overrides ([`with_backend`]),
+    /// innermost last.
+    static SCOPED: RefCell<Vec<Arc<dyn Backend>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// True while a [`with_backend`] scope is active on this thread — the
+/// caller chose a backend explicitly, so defaults must not override it.
+pub(crate) fn scoped_override_active() -> bool {
+    SCOPED.with(|s| !s.borrow().is_empty())
+}
+
+/// Shared [`Sequential`] handle (inline execution).
+fn sequential_handle() -> Arc<dyn Backend> {
+    static SEQ: OnceLock<Arc<dyn Backend>> = OnceLock::new();
+    Arc::clone(SEQ.get_or_init(|| Arc::new(Sequential)))
+}
+
+/// The backend kernels on this thread should dispatch through.
+///
+/// Resolution order:
+/// 1. the innermost [`with_backend`] scope, if any (how the
+///    data-parallel coordinator hands each simulated worker its own
+///    sub-pool handle);
+/// 2. [`Sequential`] when the thread is already executing inside a
+///    pool job ([`in_pool`]) — implicit nested dispatch inlines rather
+///    than injecting into some *other* busy pool, which could deadlock
+///    and would oversubscribe;
+/// 3. the process-wide [`global`] backend.
+pub fn current() -> Arc<dyn Backend> {
+    if let Some(b) = SCOPED.with(|s| s.borrow().last().cloned()) {
+        return b;
+    }
+    if in_pool() {
+        return sequential_handle();
+    }
+    global()
+}
+
+/// Run `f` with `backend` as this thread's [`current`] backend.
+///
+/// The override is scoped and panic-safe; it applies to the calling
+/// thread only (worker threads of a pool that `f` dispatches into
+/// resolve their own defaults). Scopes nest: the innermost wins.
+pub fn with_backend<T>(backend: Arc<dyn Backend>, f: impl FnOnce() -> T) -> T {
+    SCOPED.with(|s| s.borrow_mut().push(backend));
+    struct PopGuard;
+    impl Drop for PopGuard {
+        fn drop(&mut self) {
+            SCOPED.with(|s| {
+                s.borrow_mut().pop();
+            });
+        }
+    }
+    let _pop = PopGuard;
+    f()
+}
+
+/// A backend handle with exactly `lanes` execution lanes: a dedicated
+/// [`Threaded`] sub-pool for `lanes >= 2`, the shared [`Sequential`]
+/// handle otherwise (an exhausted budget means nested dispatch
+/// inlines).
+pub fn handle_with_lanes(lanes: usize) -> Arc<dyn Backend> {
+    if lanes >= 2 {
+        Arc::new(Threaded::new(lanes))
+    } else {
+        sequential_handle()
+    }
+}
+
+/// Carve `parts` per-worker handles out of `backend`'s lane budget.
+///
+/// The parent's `threads()` are partitioned as evenly as possible
+/// (earlier handles get the remainder); each share with ≥ 2 lanes
+/// becomes its own persistent [`Threaded`] sub-pool, and a share of
+/// 1 lane — the budget-exhausted case, e.g. more workers than hardware
+/// threads or a [`Sequential`] parent — becomes the inline
+/// [`Sequential`] handle. Sub-pools are independent pools (injecting
+/// into one never contends with its siblings or the parent), so a
+/// coordinator can fan out over the parent via [`par_map`] while every
+/// chunk body computes through its own handle under [`with_backend`] —
+/// one dispatch layer for data- *and* kernel-parallelism.
+pub fn split(backend: &dyn Backend, parts: usize) -> Vec<Arc<dyn Backend>> {
+    let total = backend.threads().max(1);
+    (0..parts)
+        .map(|p| handle_with_lanes(total / parts + usize::from(p < total % parts)))
+        .collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -320,12 +448,81 @@ mod tests {
     }
 
     #[test]
+    fn split_partitions_the_lane_budget() {
+        // 8 lanes over 3 workers → 3 + 3 + 2.
+        let parent = Threaded::new(8);
+        let handles = split(&parent, 3);
+        let lanes: Vec<usize> = handles.iter().map(|h| h.threads()).collect();
+        assert_eq!(lanes, vec![3, 3, 2]);
+        assert_eq!(lanes.iter().sum::<usize>(), 8);
+        // Exhausted budget (more parts than lanes) degrades to seq.
+        for h in split(&parent, 16) {
+            assert_eq!(h.label(), "seq");
+        }
+        for h in split(&Sequential, 4) {
+            assert_eq!(h.label(), "seq");
+        }
+        assert!(split(&parent, 0).is_empty());
+    }
+
+    #[test]
+    fn scoped_backend_overrides_and_restores() {
+        let _serial = TEST_GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = global();
+        set_global(Arc::new(Sequential));
+        let handle: Arc<dyn Backend> = Arc::new(Threaded::new(2));
+        let (inside, nested) = with_backend(Arc::clone(&handle), || {
+            let inside = current().label();
+            let nested = with_backend(sequential_handle(), || current().label());
+            (inside, nested)
+        });
+        assert_eq!(inside, "threads:2");
+        assert_eq!(nested, "seq");
+        // Scope exited: back to the global default.
+        assert_eq!(current().label(), "seq");
+        set_global(prev);
+    }
+
+    #[test]
+    fn current_defaults_to_inline_inside_pool_jobs() {
+        use std::sync::atomic::AtomicBool;
+        let pool = Threaded::new(4);
+        let all_inline = AtomicBool::new(true);
+        pool.par_for(8, &|_| {
+            if current().label() != "seq" {
+                all_inline.store(false, Ordering::Relaxed);
+            }
+        });
+        assert!(all_inline.load(Ordering::Relaxed));
+    }
+
+    #[test]
+    fn scoped_handle_fans_out_from_inside_another_pool() {
+        // The dp shape: a chunk body of pool A computes under a scoped
+        // sub-pool handle B — current() must resolve to B there.
+        let outer = Threaded::new(2);
+        let inner: Arc<dyn Backend> = Arc::new(Threaded::new(2));
+        let hits = AtomicUsize::new(0);
+        outer.par_for(2, &|_| {
+            with_backend(Arc::clone(&inner), || {
+                current().par_for(4, &|_| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                });
+            });
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
     fn global_registry_swaps() {
         let _serial = TEST_GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
         let prev = global();
         let b = install(&BackendChoice::Threaded(2));
         assert_eq!(b.label(), "threads:2");
         assert_eq!(global().label(), "threads:2");
+        // Once any explicit choice is made the boot-default flag stays
+        // cleared (one-way latch; order-independent assertion).
+        assert!(!global_is_default());
         set_global(prev);
     }
 }

@@ -9,29 +9,63 @@
 //! sound (the borrow strictly outlives all uses).
 //!
 //! Design notes:
-//! * **One job at a time.** A second injector blocks on `inject` until
-//!   the current job drains. Dispatch epochs guard against stale
-//!   workers claiming chunks of a newer job.
-//! * **Nesting runs inline.** A chunk body that itself calls
-//!   [`WorkerPool::run`] (e.g. a parallel layer loop whose per-layer
-//!   work calls a parallel matmul) executes sequentially via the
-//!   [`in_pool`] thread-local — no deadlock, no oversubscription.
+//! * **One job at a time (per pool).** A second injector blocks on
+//!   `inject` until the current job drains. Dispatch epochs guard
+//!   against stale workers claiming chunks of a newer job.
+//! * **Ancestor nesting runs inline; sibling nesting fans out.** Every
+//!   pool has a unique id, and every job carries the chain of pool ids
+//!   it is (transitively) running under — its injector's chain plus
+//!   the publishing pool — which chunk executors push for the duration
+//!   of each chunk (`serving`). A chunk body that calls
+//!   [`WorkerPool::run`] on any pool in its chain (same-pool nesting,
+//!   e.g. a parallel layer loop whose per-layer work calls a parallel
+//!   matmul, or a sub-pool chunk reaching back to the coordinator's
+//!   pool) executes sequentially: that pool's job is blocked on this
+//!   chunk, so injecting would deadlock. Dispatch into an *unrelated*
+//!   pool (the data-parallel coordinator's per-worker sub-pools, see
+//!   [`crate::backend::split`]) injects normally and runs in parallel
+//!   there. Caveat: cross-pool injection must stay **tree-shaped** —
+//!   two pools whose concurrent jobs inject into *each other* (an
+//!   ABBA cycle between unrelated pools) would block on each other's
+//!   inject locks forever. The chain rule only detects ancestors; it
+//!   cannot see a cycle formed by two independent injectors. The
+//!   `current()` resolution in [`crate::backend`] never builds such a
+//!   shape (implicit nested dispatch inlines; scoped handles are
+//!   per-worker trees), so this only concerns direct `WorkerPool`
+//!   users.
 //! * **Panic-tolerant accounting.** Chunk completion is decremented by
 //!   a drop guard, so a panicking chunk body cannot strand the
 //!   injector; workers catch the unwind and keep serving.
 
-use std::cell::Cell;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
+/// Monotonic pool-id source; id 0 is never used, so a zeroed slot can
+/// never alias a live pool.
+static NEXT_POOL_ID: AtomicU64 = AtomicU64::new(1);
+
 thread_local! {
-    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+    /// Ids of the pools whose jobs the code on this thread is
+    /// (transitively) running under, innermost last. Pushed around
+    /// every chunk execution from the job's serving context — which
+    /// includes the pools the *injector* was serving when it published
+    /// the job — so a chunk can tell that a pool is an ancestor even
+    /// when the ancestor's chunk lives on a different thread.
+    static SERVING: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
 }
 
-/// True while the current thread is executing inside a pool job
+/// True while the current thread is executing inside any pool job
 /// (worker thread, or injector during its participation phase).
 pub fn in_pool() -> bool {
-    IN_POOL.with(|c| c.get())
+    SERVING.with(|s| !s.borrow().is_empty())
+}
+
+/// True while the current thread is executing a chunk of *this* pool's
+/// job — the condition under which [`WorkerPool::run`] must inline.
+fn serving(id: u64) -> bool {
+    SERVING.with(|s| s.borrow().contains(&id))
 }
 
 /// Lock helper that shrugs off poisoning (a panicking chunk body must
@@ -40,10 +74,18 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
-/// The published job: lifetime-erased chunk body + chunk count.
+/// The published job: lifetime-erased chunk body + serving context +
+/// chunk count.
 #[derive(Clone, Copy)]
 struct Job {
     body: &'static (dyn Fn(usize) + Sync),
+    /// Pool ids this job is (transitively) running under, ending with
+    /// the publishing pool's own id. Pushed onto each executing
+    /// thread's `SERVING` stack for the duration of a chunk, so
+    /// dispatch back into *any* ancestor pool inlines — the ancestor's
+    /// job is blocked on this chunk, and injecting into it would
+    /// deadlock. Same lifetime-erasure argument as `body`.
+    ctx: &'static [u64],
     chunks: usize,
 }
 
@@ -112,21 +154,26 @@ impl Drop for JobGuard<'_> {
     }
 }
 
-/// Restores the thread's `IN_POOL` flag on scope exit (panic included).
-struct PoolFlagGuard {
-    was: bool,
+/// Marks the current thread as serving a job's pool chain for a scope;
+/// pops the marks on exit (panic included).
+struct ServeGuard {
+    count: usize,
 }
 
-impl PoolFlagGuard {
-    fn enter() -> Self {
-        PoolFlagGuard { was: IN_POOL.with(|c| c.replace(true)) }
+impl ServeGuard {
+    fn enter(ids: &[u64]) -> Self {
+        SERVING.with(|s| s.borrow_mut().extend_from_slice(ids));
+        ServeGuard { count: ids.len() }
     }
 }
 
-impl Drop for PoolFlagGuard {
+impl Drop for ServeGuard {
     fn drop(&mut self) {
-        let was = self.was;
-        IN_POOL.with(|c| c.set(was));
+        SERVING.with(|s| {
+            let mut s = s.borrow_mut();
+            let keep = s.len() - self.count;
+            s.truncate(keep);
+        });
     }
 }
 
@@ -140,19 +187,23 @@ impl Drop for PoolFlagGuard {
 /// guard drops).
 fn run_chunks(shared: &Shared, epoch: u64) {
     loop {
-        let (idx, body) = {
+        let (idx, job) = {
             let mut g = lock(&shared.slot);
             match g.job {
                 Some(j) if g.epoch == epoch && g.next < j.chunks => {
                     let i = g.next;
                     g.next += 1;
-                    (i, j.body)
+                    (i, j)
                 }
                 _ => break,
             }
         };
+        // Serve the job's whole pool chain while the body runs (the
+        // guard drops after FinishGuard, which never touches the
+        // erased `ctx` borrow).
+        let _serve = ServeGuard::enter(job.ctx);
         let _finish = FinishGuard { shared };
-        body(idx);
+        (job.body)(idx);
     }
 }
 
@@ -187,6 +238,10 @@ pub struct WorkerPool {
     /// Serializes injectors; held for the whole duration of a job.
     inject: Mutex<()>,
     threads: usize,
+    /// Unique pool identity — what lets nested dispatch distinguish
+    /// "inject into my own pool" (inline) from "inject into a sibling
+    /// pool" (fan out).
+    id: u64,
     handles: Vec<JoinHandle<()>>,
 }
 
@@ -195,6 +250,7 @@ impl WorkerPool {
     /// counts as one, so `threads - 1` OS threads are spawned).
     pub fn new(threads: usize) -> Self {
         let threads = threads.max(1);
+        let id = NEXT_POOL_ID.fetch_add(1, Ordering::Relaxed);
         let shared = Arc::new(Shared {
             slot: Mutex::new(Slot {
                 job: None,
@@ -211,15 +267,14 @@ impl WorkerPool {
             .map(|i| {
                 let sh = Arc::clone(&shared);
                 std::thread::Builder::new()
-                    .name(format!("eva-backend-{i}"))
-                    .spawn(move || {
-                        IN_POOL.with(|c| c.set(true));
-                        worker_loop(&sh);
-                    })
+                    .name(format!("eva-backend-{id}-{i}"))
+                    // Serving marks are pushed per chunk from the
+                    // job's context (run_chunks), not per thread.
+                    .spawn(move || worker_loop(&sh))
                     .expect("spawn backend worker")
             })
             .collect();
-        WorkerPool { shared, inject: Mutex::new(()), threads, handles }
+        WorkerPool { shared, inject: Mutex::new(()), threads, id, handles }
     }
 
     /// Total execution lanes (workers + injector).
@@ -227,29 +282,50 @@ impl WorkerPool {
         self.threads
     }
 
+    /// This pool's unique identity (diagnostics; also what same-pool
+    /// nesting detection keys on).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
     /// Run `body(i)` for every `i in 0..chunks`, cooperatively across
     /// the pool. Returns only after every chunk finished. Nested calls
-    /// (from inside a chunk body) run inline on the calling thread.
+    /// into this pool from code already running under one of its jobs
+    /// (directly or through a chain of sub-pool jobs) run inline on
+    /// the calling thread; dispatch into an unrelated pool injects
+    /// normally — see the module notes on nesting.
     pub fn run(&self, chunks: usize, body: &(dyn Fn(usize) + Sync)) {
         if chunks == 0 {
             return;
         }
-        if chunks == 1 || self.threads == 1 || in_pool() {
+        if chunks == 1 || self.threads == 1 || serving(self.id) {
             for i in 0..chunks {
                 body(i);
             }
             return;
         }
-        // Erase the borrow lifetime: sound because this frame blocks
+        // Serving context published with the job: every pool this
+        // thread is already running under, plus this pool. Chunk
+        // executors (workers *and* this injector) push it for each
+        // chunk, so nested dispatch into any pool along the chain —
+        // whose job is necessarily blocked on this one — inlines
+        // instead of deadlocking.
+        let ctx: Vec<u64> = SERVING.with(|s| {
+            let mut v = s.borrow().clone();
+            v.push(self.id);
+            v
+        });
+        // Erase the borrow lifetimes: sound because this frame blocks
         // until `remaining == 0`, i.e. until no thread can still hold
-        // or claim a reference to `body`.
+        // or claim a reference to `body` or `ctx`.
         let body_static: &'static (dyn Fn(usize) + Sync) =
             unsafe { std::mem::transmute(body) };
+        let ctx_static: &'static [u64] = unsafe { std::mem::transmute(ctx.as_slice()) };
         let _inject = lock(&self.inject);
         let epoch = {
             let mut g = lock(&self.shared.slot);
             g.epoch += 1;
-            g.job = Some(Job { body: body_static, chunks });
+            g.job = Some(Job { body: body_static, ctx: ctx_static, chunks });
             g.next = 0;
             g.remaining = chunks;
             g.epoch
@@ -258,12 +334,9 @@ impl WorkerPool {
         // and retires the job even if a chunk body panics below.
         let _drain = JobGuard { shared: &self.shared };
         self.shared.work_cv.notify_all();
-        // The injector works too (and is flagged so nested dispatch
-        // from its own chunks runs inline).
-        {
-            let _flag = PoolFlagGuard::enter();
-            run_chunks(&self.shared, epoch);
-        }
+        // The injector works too; its chunks get the same serving
+        // context as the workers'.
+        run_chunks(&self.shared, epoch);
         // Drain on the happy path (JobGuard's drop then finds the job
         // already retired) and surface any worker panic here rather
         // than returning a partially-written result.
@@ -326,12 +399,55 @@ mod tests {
         let pool = WorkerPool::new(4);
         let total = AtomicUsize::new(0);
         pool.run(8, &|_| {
-            // Nested job: must run inline on this thread.
+            // Nested same-pool job: must run inline on this thread.
             pool.run(8, &|_| {
                 total.fetch_add(1, Ordering::Relaxed);
             });
         });
         assert_eq!(total.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn cross_pool_nested_dispatch_fans_out() {
+        // A chunk body of one pool may inject into a *different* pool
+        // — the per-worker sub-pool pattern the data-parallel
+        // coordinator relies on. Each outer chunk owns its own inner
+        // pool, so injections never contend.
+        let outer = WorkerPool::new(3);
+        let inners: Vec<WorkerPool> = (0..4).map(|_| WorkerPool::new(2)).collect();
+        let total = AtomicUsize::new(0);
+        outer.run(4, &|w| {
+            inners[w].run(16, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 64);
+        // All serve marks popped: a fresh same-pool run still works.
+        outer.run(2, &|_| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 66);
+    }
+
+    #[test]
+    fn dispatch_into_busy_ancestor_pool_inlines() {
+        // A sub-pool chunk that dispatches back into the ancestor pool
+        // whose job is blocked on it must inline, not inject — the
+        // serving context travels with the job across threads, so this
+        // completes even though the ancestor's chunk lives on another
+        // thread. (Injection would deadlock: the ancestor cannot serve
+        // a new job until this chunk finishes.)
+        let outer = WorkerPool::new(2);
+        let inner = WorkerPool::new(2);
+        let total = AtomicUsize::new(0);
+        outer.run(2, &|_| {
+            inner.run(4, &|_| {
+                outer.run(4, &|_| {
+                    total.fetch_add(1, Ordering::Relaxed);
+                });
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 2 * 4 * 4);
     }
 
     #[test]

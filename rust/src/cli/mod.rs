@@ -74,6 +74,7 @@ USAGE:
   eva train [--config FILE | --preset NAME] [--optimizer ALG] [--dataset D]
             [--epochs N] [--lr F] [--batch N] [--seed N] [--engine native|pjrt:MODEL]
             [--interval N] [--damping F] [--max-steps N] [--backend seq|threads[:N]]
+            [--worker-threads N]
   eva experiment <id|all>     regenerate a paper table/figure (see DESIGN.md §5)
   eva validate                cross-check PJRT artifacts vs native numerics
   eva list                    list datasets, optimizers, experiments, artifacts
@@ -84,6 +85,10 @@ OPTIONS:
                               (seq = single-threaded; threads = one lane per
                               hardware thread; threads:N = N lanes). Applies
                               to every command; numerics are identical.
+  --worker-threads N          data-parallel runs only: give every simulated
+                              worker its own N-lane sub-pool instead of
+                              carving the --backend lane budget evenly
+                              across workers. Numerics are identical.
 
 EXAMPLES:
   eva train --preset quickstart --optimizer eva
@@ -91,6 +96,7 @@ EXAMPLES:
   eva train --engine pjrt:quickstart --optimizer eva --epochs 4
   eva train --preset c100-bench --optimizer shampoo --backend threads:8
   eva experiment table5 --backend threads
+  eva experiment table8 --backend threads:8 --worker-threads 2
 ";
 
 #[cfg(test)]

@@ -134,6 +134,14 @@ pub struct TrainConfig {
     /// process-wide (CLI `--backend`, a previous config, or the
     /// sequential default) — see [`crate::backend`].
     pub backend: Option<String>,
+    /// Per-worker lane budget for data-parallel coordinator runs
+    /// (`Some(k)` = every simulated worker computes on its own k-lane
+    /// sub-pool, installed as the process-wide dp default). `None`
+    /// inherits whatever default is already set (CLI
+    /// `--worker-threads`, a previous config, or the
+    /// carve-evenly-from-the-backend fallback) — see
+    /// [`crate::coordinator::dp`].
+    pub worker_threads: Option<usize>,
 }
 
 impl Default for TrainConfig {
@@ -153,6 +161,7 @@ impl Default for TrainConfig {
             max_steps: None,
             eval_every: 1,
             backend: None,
+            worker_threads: None,
         }
     }
 }
@@ -233,6 +242,13 @@ impl TrainConfig {
                     crate::backend::BackendChoice::parse(s)?;
                     c.backend = Some(s.to_string());
                 }
+                "worker_threads" => {
+                    let n = val.as_usize().ok_or("worker_threads: number")?;
+                    if n == 0 {
+                        return Err("worker_threads must be ≥ 1".into());
+                    }
+                    c.worker_threads = Some(n);
+                }
                 "optimizer" => c.optim.algorithm = val.as_str().ok_or("optimizer")?.to_string(),
                 "momentum" => c.optim.hp.momentum = val.as_f64().ok_or("momentum")? as f32,
                 "weight_decay" => c.optim.hp.weight_decay = val.as_f64().ok_or("wd")? as f32,
@@ -294,6 +310,13 @@ mod tests {
         let c = TrainConfig::from_json(r#"{"backend": "threads:2"}"#).unwrap();
         assert_eq!(c.backend.as_deref(), Some("threads:2"));
         assert!(TrainConfig::from_json(r#"{"backend": "gpu"}"#).is_err());
+    }
+
+    #[test]
+    fn worker_threads_key_parses_and_validates() {
+        let c = TrainConfig::from_json(r#"{"worker_threads": 2}"#).unwrap();
+        assert_eq!(c.worker_threads, Some(2));
+        assert!(TrainConfig::from_json(r#"{"worker_threads": 0}"#).is_err());
     }
 
     #[test]

@@ -1,16 +1,33 @@
-//! Data-parallel training: worker threads + ring all-reduce + the
-//! simulated interconnect — the paper's §3.3 / Table 8 setup.
+//! Data-parallel training: per-worker backend handles + ring
+//! all-reduce + the simulated interconnect — the paper's §3.3 /
+//! Table 8 setup.
 //!
 //! Replicas stay bit-identical (same init, same averaged update), so a
-//! single canonical model is stored; worker threads compute gradients
-//! and curvature statistics on *disjoint shards* in parallel (real
-//! compute, real threads), statistics are combined with the real ring
+//! single canonical model is stored; simulated workers compute
+//! gradients and curvature statistics on *disjoint shards* in parallel
+//! (real compute), statistics are combined with the real ring
 //! all-reduce, and the step's wall-clock is *accounted* under the
 //! simulated network: `max(worker compute) + comm(fused payload) +
 //! leader preconditioning`.
+//!
+//! Worker compute goes through **one dispatch layer**: the worker loop
+//! is a single [`crate::backend::par_map`] over the coordinator's
+//! dispatch backend (no raw `std::thread` spawns), and each worker's
+//! kernels run under [`crate::backend::with_backend`] on its own
+//! sub-pool handle carved from the dispatch backend's lane budget by
+//! [`crate::backend::split`]. When a worker's handle is exhausted
+//! (one lane), its nested dispatch inlines — the degenerate case is
+//! exactly the sequential path, so results are bit-identical for every
+//! backend and worker-lane assignment. On the untouched boot default
+//! (no backend chosen anywhere) the coordinator falls back to one lane
+//! per hardware thread, preserving the real parallelism the seed's
+//! raw-thread workers had; an *explicit* `seq` choice is honored.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
+use crate::backend::Backend;
 use crate::config::ModelArch;
 use crate::coordinator::fusion::FusionPlan;
 use crate::coordinator::network::SimNetwork;
@@ -20,24 +37,61 @@ use crate::nn::{BackwardResult, Mlp, StatsMode};
 use crate::optim::{by_name as optim_by_name, HyperParams, Optimizer, StepCtx};
 use crate::tensor::Tensor;
 
+/// Process-wide default for [`DataParallelCfg::worker_threads`]
+/// (0 encodes "unset"). Set from the CLI (`--worker-threads`) or a
+/// train config; read by [`DataParallelCfg::new`].
+static DEFAULT_WORKER_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the process-wide default per-worker lane budget picked up by
+/// every subsequently built [`DataParallelCfg`] (`None` restores the
+/// carve-from-global default).
+pub fn set_default_worker_threads(n: Option<usize>) {
+    DEFAULT_WORKER_THREADS.store(n.unwrap_or(0), Ordering::Relaxed);
+}
+
+/// The process-wide default per-worker lane budget, if one was set.
+pub fn default_worker_threads() -> Option<usize> {
+    match DEFAULT_WORKER_THREADS.load(Ordering::Relaxed) {
+        0 => None,
+        n => Some(n),
+    }
+}
+
 /// Configuration for a data-parallel run.
 #[derive(Clone, Debug)]
 pub struct DataParallelCfg {
+    /// Number of simulated workers (ring participants).
     pub workers: usize,
+    /// Dataset name, resolved via [`crate::data::by_name`].
     pub dataset: String,
+    /// Model architecture trained by every replica.
     pub arch: ModelArch,
+    /// Optimizer algorithm name ([`crate::optim::by_name`]).
     pub optimizer: String,
+    /// Optimizer hyper-parameters.
     pub hp: HyperParams,
+    /// Samples per worker per step (global batch = workers × this).
     pub per_worker_batch: usize,
+    /// Number of optimizer steps to run.
     pub steps: u64,
+    /// Base learning rate.
     pub base_lr: f32,
+    /// Seed for data generation, sharding and model init.
     pub seed: u64,
+    /// Simulated interconnect used for communication accounting.
     pub network: SimNetwork,
     /// Horovod-style fusion buffer budget.
     pub fusion_budget_bytes: usize,
+    /// Per-worker compute-lane budget. `None` carves the dispatch
+    /// backend's lanes evenly across workers
+    /// ([`crate::backend::split`]); `Some(k)` gives every worker
+    /// exactly `k` lanes (`k ≤ 1` means inline/sequential compute).
+    /// Defaults to [`default_worker_threads`].
+    pub worker_threads: Option<usize>,
 }
 
 impl DataParallelCfg {
+    /// Defaults for `workers` ring participants running `optimizer`.
     pub fn new(workers: usize, optimizer: &str) -> Self {
         DataParallelCfg {
             workers,
@@ -51,9 +105,11 @@ impl DataParallelCfg {
             seed: 17,
             network: SimNetwork::datacenter(workers),
             fusion_budget_bytes: 64 << 20,
+            worker_threads: default_worker_threads(),
         }
     }
 
+    /// Total samples consumed per step across all workers.
     pub fn global_batch(&self) -> usize {
         self.workers * self.per_worker_batch
     }
@@ -62,14 +118,19 @@ impl DataParallelCfg {
 /// Per-step and aggregate accounting.
 #[derive(Clone, Debug)]
 pub struct DpReport {
+    /// Mean training loss of the last step.
     pub final_loss: f32,
+    /// Steps actually run.
     pub steps: u64,
     /// Real wall-clock of the whole run.
     pub wall_time_s: f64,
     /// Simulated per-step time: compute + comm + precondition.
     pub sim_step_time_s: f64,
+    /// Simulated per-step compute time (max over workers).
     pub sim_compute_s: f64,
+    /// Simulated per-step all-reduce time under the network model.
     pub sim_comm_s: f64,
+    /// Simulated per-step leader preconditioning time.
     pub sim_precond_s: f64,
     /// Global samples/second under the simulated clock (Table 8).
     pub throughput: f64,
@@ -86,9 +147,19 @@ pub struct DataParallelTrainer {
     model: Mlp,
     optimizer: Box<dyn Optimizer>,
     batchers: Vec<Batcher>,
+    /// Fan-out backend: the per-step worker loop runs as one
+    /// parallel-for here, and the leader optimizer step runs under it
+    /// as a scoped handle ([`crate::backend::with_backend`]).
+    dispatch: Arc<dyn Backend>,
+    /// Per-worker compute handles — sub-pools carved from `dispatch`'s
+    /// lane budget (or fixed-size pools under
+    /// [`DataParallelCfg::worker_threads`]).
+    worker_handles: Vec<Arc<dyn Backend>>,
 }
 
 impl DataParallelTrainer {
+    /// Build the coordinator: dataset, canonical model, per-worker
+    /// shards and per-worker backend handles.
     pub fn new(cfg: DataParallelCfg) -> Result<Self, String> {
         let dataset = by_name(&cfg.dataset, cfg.seed)?;
         let spec = cfg.arch.to_spec(dataset.input_dim(), dataset.num_classes);
@@ -101,7 +172,51 @@ impl DataParallelTrainer {
         let batchers = (0..cfg.workers)
             .map(|w| Batcher::new(shard.max(1), cfg.per_worker_batch, cfg.seed ^ (w as u64)))
             .collect();
-        Ok(DataParallelTrainer { cfg, dataset, model, optimizer, batchers })
+        // Dispatch backend for the worker fan-out. An explicitly
+        // chosen backend — global (CLI/config/install) or scoped
+        // (`with_backend`) — is honored as-is, including `seq` for
+        // single-threaded debugging. Only on the untouched boot
+        // default does the coordinator fall back to one lane per
+        // hardware thread, so the simulated workers really compute in
+        // parallel like the seed's raw-thread workers; numerics are
+        // identical either way (bit-identical backend contract).
+        let dispatch = {
+            let cur = crate::backend::current();
+            let untouched_default = cur.threads() == 1
+                && crate::backend::global_is_default()
+                && !crate::backend::scoped_override_active()
+                && !crate::backend::in_pool();
+            if untouched_default {
+                crate::backend::handle_with_lanes(crate::backend::default_threads())
+            } else {
+                cur
+            }
+        };
+        let worker_handles = match cfg.worker_threads {
+            Some(lanes) => {
+                (0..cfg.workers).map(|_| crate::backend::handle_with_lanes(lanes)).collect()
+            }
+            None => crate::backend::split(&*dispatch, cfg.workers),
+        };
+        Ok(DataParallelTrainer {
+            cfg,
+            dataset,
+            model,
+            optimizer,
+            batchers,
+            dispatch,
+            worker_handles,
+        })
+    }
+
+    /// The canonical replica (all replicas are bit-identical).
+    pub fn model(&self) -> &Mlp {
+        &self.model
+    }
+
+    /// Labels of the per-worker backend handles (diagnostics/tests).
+    pub fn worker_handle_labels(&self) -> Vec<String> {
+        self.worker_handles.iter().map(|h| h.label()).collect()
     }
 
     /// Worker w's global index for local index i (stride sharding).
@@ -116,11 +231,9 @@ impl DataParallelTrainer {
         let mut final_loss = 0.0f32;
         let (mut sim_compute, mut sim_comm, mut sim_precond) = (0.0f64, 0.0f64, 0.0f64);
         let (mut bytes_acc, mut msgs_acc) = (0usize, 0usize);
-        let layer_sizes: Vec<(usize, usize)> =
-            self.model.weights.iter().map(|t| t.shape()).collect();
         for step in 0..self.cfg.steps {
             let mode = self.optimizer.stats_mode_at(step);
-            // ---- parallel worker compute (real threads) -------------------
+            // ---- parallel worker compute (one dispatch layer) -------------
             let batches: Vec<(Tensor, Vec<usize>)> = (0..w)
                 .map(|wi| {
                     let idx: Vec<usize> = self.batchers[wi]
@@ -133,19 +246,20 @@ impl DataParallelTrainer {
                 })
                 .collect();
             let model = &self.model;
-            let results: Vec<(BackwardResult, f64)> = std::thread::scope(|scope| {
-                let handles: Vec<_> = batches
-                    .iter()
-                    .map(|(x, y)| {
-                        scope.spawn(move || {
-                            let t0 = Instant::now();
-                            let r = model.forward_backward(x, y, mode);
-                            (r, t0.elapsed().as_secs_f64())
-                        })
-                    })
-                    .collect();
-                handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
-            });
+            let handles = &self.worker_handles;
+            // One parallel-for over workers on the dispatch backend;
+            // each worker's kernels dispatch through its own sub-pool
+            // handle. Results land in worker order (par_map), so the
+            // combine below is schedule-independent.
+            let results: Vec<(BackwardResult, f64)> =
+                crate::backend::par_map(&*self.dispatch, w, |wi| {
+                    let (x, y) = &batches[wi];
+                    let t0 = Instant::now();
+                    let r = crate::backend::with_backend(Arc::clone(&handles[wi]), || {
+                        model.forward_backward(x, y, mode)
+                    });
+                    (r, t0.elapsed().as_secs_f64())
+                });
             let compute_time =
                 results.iter().map(|(_, t)| *t).fold(0.0f64, f64::max);
             final_loss =
@@ -171,7 +285,13 @@ impl DataParallelTrainer {
                 lr: self.cfg.base_lr,
                 step,
             };
-            let update = self.optimizer.step(&ctx);
+            // Leader preconditioning runs under the same dispatch
+            // backend as the workers (K-FAC's O(d³) inverses et al.
+            // would otherwise fall back to the global default, which
+            // in the boot-default case is still sequential).
+            let update = crate::backend::with_backend(Arc::clone(&self.dispatch), || {
+                self.optimizer.step(&ctx)
+            });
             let mut precond_time = t0.elapsed().as_secs_f64();
             if self.cfg.optimizer == "kfac" && mode == StatsMode::Full {
                 // Distributed K-FAC assigns layer inversions across
@@ -187,7 +307,6 @@ impl DataParallelTrainer {
         }
         let steps = self.cfg.steps.max(1) as f64;
         let sim_step = (sim_compute + sim_comm + sim_precond) / steps;
-        let _ = layer_sizes;
         Ok(DpReport {
             final_loss,
             steps: self.cfg.steps,
@@ -367,6 +486,43 @@ mod tests {
                 "layer {l} mismatch"
             );
         }
+    }
+
+    #[test]
+    fn worker_threads_knob_controls_handles() {
+        let mut cfg = quick_cfg(3, "sgd", 1);
+        cfg.worker_threads = Some(1);
+        let t = DataParallelTrainer::new(cfg).unwrap();
+        assert_eq!(t.worker_handle_labels(), vec!["seq"; 3]);
+        let mut cfg = quick_cfg(2, "sgd", 1);
+        cfg.worker_threads = Some(2);
+        let t = DataParallelTrainer::new(cfg).unwrap();
+        assert_eq!(t.worker_handle_labels(), vec!["threads:2"; 2]);
+    }
+
+    #[test]
+    fn default_worker_threads_flows_into_new_cfgs() {
+        // Some(1) keeps any concurrently-built test cfg on the inline
+        // path if the window overlaps — behavior, not numerics, so the
+        // transient is harmless.
+        set_default_worker_threads(Some(1));
+        assert_eq!(default_worker_threads(), Some(1));
+        assert_eq!(DataParallelCfg::new(2, "sgd").worker_threads, Some(1));
+        set_default_worker_threads(None);
+        assert_eq!(default_worker_threads(), None);
+        assert_eq!(DataParallelCfg::new(2, "sgd").worker_threads, None);
+    }
+
+    #[test]
+    fn handles_split_from_dispatch_backend_when_unset() {
+        // Under a 4-lane scoped dispatch backend, 2 workers get 2
+        // lanes each; the knob is None so the carve applies.
+        let four: std::sync::Arc<dyn Backend> =
+            std::sync::Arc::new(crate::backend::Threaded::new(4));
+        let mut cfg = quick_cfg(2, "sgd", 1);
+        cfg.worker_threads = None;
+        let t = crate::backend::with_backend(four, || DataParallelTrainer::new(cfg).unwrap());
+        assert_eq!(t.worker_handle_labels(), vec!["threads:2"; 2]);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 pub struct FusionPlan {
     /// For each fused message: (input index, offset within message).
     pub messages: Vec<Vec<(usize, usize)>>,
+    /// Payload size of each fused message, in bytes.
     pub message_bytes: Vec<usize>,
 }
 
@@ -37,10 +38,12 @@ impl FusionPlan {
         FusionPlan { messages, message_bytes }
     }
 
+    /// Number of fused messages the plan produces.
     pub fn num_messages(&self) -> usize {
         self.messages.len()
     }
 
+    /// Total payload across all fused messages, in bytes.
     pub fn total_bytes(&self) -> usize {
         self.message_bytes.iter().sum()
     }

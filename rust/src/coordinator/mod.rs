@@ -3,9 +3,14 @@
 //!
 //! Reproduces the paper's §3.3 distributed design points:
 //!
-//! * Workers compute gradients + curvature statistics on their shard in
-//!   parallel (real std threads here; the native fwd/bwd is the
-//!   compute).
+//! * Workers compute gradients + curvature statistics on their shard
+//!   in parallel. Worker compute routes through the same dispatch
+//!   layer as the kernels ([`crate::backend`]): the worker loop is one
+//!   parallel-for over the coordinator's dispatch backend, and each
+//!   simulated worker's kernels run on a per-worker *sub-pool handle*
+//!   carved from that backend's lane budget
+//!   ([`crate::backend::split`] + [`crate::backend::with_backend`];
+//!   see [`dp`]).
 //! * Gradients and statistics are combined with a **ring all-reduce**
 //!   ([`allreduce`]) over a **simulated network** ([`network`]) whose
 //!   bandwidth/latency model provides the paper's communication-time
@@ -14,10 +19,13 @@
 //!   ([`fusion`]) — the Horovod trick the paper leans on; the same
 //!   fusion applied to K-FAC's d² factors is what makes KF traffic
 //!   dominate.
-//! * Distributed K-FAC assigns layer inversions round-robin across
-//!   workers ([`dp::InverseAssignment`]), the Osawa/Pauloski scheme the
-//!   paper contrasts with Eva's "every worker preconditions everything
-//!   cheaply".
+//! * Distributed K-FAC spreads layer inversions across workers (the
+//!   Osawa/Pauloski scheme): [`dp`]'s simulated clock divides the
+//!   leader-side inverse cost by the worker count on K-FAC refresh
+//!   steps — the setup the paper contrasts with Eva's "every worker
+//!   preconditions everything cheaply".
+
+#![warn(missing_docs)]
 
 pub mod allreduce;
 pub mod dp;

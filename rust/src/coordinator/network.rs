@@ -13,6 +13,7 @@ pub struct SimNetwork {
     pub latency_s: f64,
     /// Bandwidth β in bytes/second.
     pub bandwidth_bps: f64,
+    /// Number of ring participants.
     pub workers: usize,
 }
 

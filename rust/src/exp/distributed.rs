@@ -27,6 +27,15 @@ fn dp_cfg(opt: &str, workers: usize, batch: usize, interval: usize) -> DataParal
 
 pub fn table8() -> Result<()> {
     println!("Table 8 — simulated data-parallel throughput (8 workers; paper uses 32 GPUs)");
+    println!(
+        "(dispatch backend: {}{} — simulated-time accounting is backend-independent)",
+        crate::backend::current().label(),
+        if crate::backend::global_is_default() {
+            " [boot default: dp worker compute auto-uses all hardware threads]"
+        } else {
+            ""
+        }
+    );
     let tp = TablePrinter::new(
         &["algorithm", "batch", "throughput", "comm KB/step", "msgs", "step breakdown (comp/comm/prec ms)"],
         &[11, 6, 11, 13, 5, 36],

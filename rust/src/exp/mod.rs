@@ -117,6 +117,7 @@ pub fn cfg(
         max_steps: None,
         eval_every: 1,
         backend: None,
+        worker_threads: None,
     }
 }
 

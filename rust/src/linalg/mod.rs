@@ -6,8 +6,10 @@
 //!
 //! * [`cholesky`] / [`cholesky_solve`] / [`spd_inverse`] — `O(d³/3)`
 //!   factor + triangular solves for `(M + γI)⁻¹`.
-//! * [`eigh_jacobi`] — cyclic Jacobi symmetric eigendecomposition,
-//!   quadratically convergent; used for matrix functions.
+//! * [`eigh_jacobi`] — Jacobi symmetric eigendecomposition with
+//!   round-robin pair scheduling (⌊n/2⌋ independent rotations per
+//!   phase through the backend), quadratically convergent; used for
+//!   matrix functions.
 //! * [`spd_power`] — `M^p` (any real `p`, e.g. `-1/(2k)` for Shampoo)
 //!   via the eigendecomposition.
 //!
@@ -76,7 +78,7 @@ pub fn cholesky_solve(l: &Tensor, b: &[f32]) -> Vec<f32> {
 
 /// Dense inverse of an SPD matrix via Cholesky (column-by-column solve).
 pub fn spd_inverse(m: &Tensor) -> Result<Tensor, String> {
-    spd_inverse_with(&*backend::global(), m)
+    spd_inverse_with(&*backend::current(), m)
 }
 
 /// [`spd_inverse`] with an explicit backend. The n column solves
@@ -117,27 +119,104 @@ pub fn damped_inverse(m: &Tensor, gamma: f32) -> Result<Tensor, String> {
     spd_inverse(&d)
 }
 
-/// Symmetric eigendecomposition `M = V diag(λ) Vᵀ` by the cyclic Jacobi
-/// method. Returns `(eigenvalues, V)` with eigenvectors in the *columns*
-/// of `V`, eigenvalues unordered.
+/// Parallel Jacobi engages from this matrix dimension up: below it a
+/// phase carries too little arithmetic (each rotation is O(n)) to pay
+/// for pool dispatch, so the round phases run inline — same code, same
+/// arithmetic, gate derived from `n` only.
+const JACOBI_PAR_MIN: usize = 64;
+
+/// Minimum rotation pairs per parallel chunk in a Jacobi phase.
+const JACOBI_PAIR_GRAIN: usize = 8;
+
+/// Tournament (round-robin) schedule over `0..n`: `n-1` rounds for
+/// even `n` (`n` rounds with a bye for odd `n`), each round pairing
+/// every index with a distinct partner, covering all `n(n-1)/2` pairs
+/// exactly once. Pairs are emitted as `(p, q)` with `p < q`.
+fn round_robin_rounds(n: usize) -> Vec<Vec<(usize, usize)>> {
+    let m = n + n % 2; // pad odd n with a bye slot
+    if m < 2 {
+        return Vec::new();
+    }
+    (0..m - 1)
+        .map(|r| {
+            let mut pairs = Vec::with_capacity(m / 2);
+            // The circle method: player m-1 is fixed and meets r; the
+            // rest pair off symmetrically around the rotating circle.
+            if m - 1 < n && r < n {
+                pairs.push((r.min(m - 1), r.max(m - 1)));
+            }
+            for i in 1..m / 2 {
+                let x = (r + i) % (m - 1);
+                let y = (r + m - 1 - i) % (m - 1);
+                if x < n && y < n {
+                    pairs.push((x.min(y), x.max(y)));
+                }
+            }
+            pairs
+        })
+        .collect()
+}
+
+/// Symmetric eigendecomposition `M = V diag(λ) Vᵀ` by the Jacobi
+/// method with round-robin pair scheduling, dispatched through the
+/// thread's current backend. Returns `(eigenvalues, V)` with
+/// eigenvectors in the *columns* of `V`, eigenvalues unordered.
 ///
-/// Rotation application stays sequential on purpose: each rotation is
-/// only O(n) work, far below the pool's dispatch cost, and rotations
-/// are serially dependent. Parallel Jacobi needs round-robin pair
-/// scheduling (independent rotation sets per phase) — tracked as a
-/// ROADMAP backend follow-on. The O(n³) eigensolve *consumers* do go
-/// through the backend (Shampoo fans `spd_power` per tile via
-/// `par_map`).
+/// # Examples
+///
+/// ```
+/// use eva::linalg::eigh_jacobi;
+/// use eva::tensor::Tensor;
+///
+/// let m = Tensor::from_rows(&[&[2.0, 1.0], &[1.0, 2.0]]);
+/// let (lambda, v) = eigh_jacobi(&m, 20);
+/// // Each eigenpair satisfies M v_j = λ_j v_j.
+/// for j in 0..2 {
+///     let col: Vec<f32> = (0..2).map(|i| v.at(i, j)).collect();
+///     let mv = m.matvec(&col);
+///     for i in 0..2 {
+///         assert!((mv[i] - lambda[j] * col[i]).abs() < 1e-4);
+///     }
+/// }
+/// ```
 pub fn eigh_jacobi(m: &Tensor, max_sweeps: usize) -> (Vec<f32>, Tensor) {
+    eigh_jacobi_with(&*backend::current(), m, max_sweeps)
+}
+
+/// [`eigh_jacobi`] with an explicit backend.
+///
+/// One sweep = the `round_robin_rounds` tournament: every round holds
+/// `⌊n/2⌋` rotations on disjoint index planes, which commute, so the
+/// round equals applying them in any order. A round runs as two
+/// barrier-separated phases, each one parallel-for over the pairs
+/// (from `JACOBI_PAR_MIN` up; inline below):
+///
+/// 1. **column phase** — each pair reads its own entries
+///    `(p,p), (q,q), (p,q)`, derives the rotation, and updates columns
+///    `p`,`q` of `A`;
+/// 2. **row phase** — each pair replays the stored rotation onto rows
+///    `p`,`q` of `A` and columns `p`,`q` of `V`.
+///
+/// Every write is pair-owned and every read comes from entries no
+/// other pair touches in that phase, so the arithmetic per element is
+/// fixed by the schedule alone — `seq` and `threads:N` are
+/// **bit-identical**. The cyclic-sweep convergence test is preserved:
+/// sweeps stop once off-diagonal mass drops below a relative
+/// tolerance.
+pub fn eigh_jacobi_with(bk: &dyn Backend, m: &Tensor, max_sweeps: usize) -> (Vec<f32>, Tensor) {
     let n = m.rows();
     assert_eq!(n, m.cols());
     let mut a = m.clone();
     let mut v = Tensor::eye(n);
+    if n < 2 {
+        return ((0..n).map(|i| a.at(i, i)).collect(), v);
+    }
     // Relative convergence: off-diagonal mass vs total mass (an
     // absolute 1e-18 made well-scaled matrices sweep to no effect —
     // see EXPERIMENTS.md §Perf L3).
     let total: f64 = a.data().iter().map(|&x| (x as f64) * (x as f64)).sum();
     let tol = (total.max(1e-30)) * 1e-14;
+    let rounds = round_robin_rounds(n);
     for _sweep in 0..max_sweeps {
         // Off-diagonal Frobenius mass.
         let mut off = 0.0f64;
@@ -149,39 +228,76 @@ pub fn eigh_jacobi(m: &Tensor, max_sweeps: usize) -> (Vec<f32>, Tensor) {
         if off < tol {
             break;
         }
-        for p in 0..n {
-            for q in p + 1..n {
-                let apq = a.at(p, q);
-                if apq.abs() < 1e-12 {
-                    continue;
+        for pairs in &rounds {
+            let np = pairs.len();
+            if np == 0 {
+                continue;
+            }
+            // (c, s, active) per pair: written by the column phase,
+            // replayed by the row phase after the barrier.
+            let mut rot: Vec<(f32, f32, bool)> = vec![(1.0, 0.0, false); np];
+            let rp = SendPtr(rot.as_mut_ptr());
+            let ap = SendPtr(a.data_mut().as_mut_ptr());
+            let vp = SendPtr(v.data_mut().as_mut_ptr());
+            let col_phase = |r: Range<usize>| {
+                for idx in r {
+                    let (p, q) = pairs[idx];
+                    // SAFETY: this phase touches only columns p and q
+                    // of A (and slot idx of rot), owned by this pair.
+                    unsafe {
+                        let apq = *ap.0.add(p * n + q);
+                        if apq.abs() < 1e-12 {
+                            continue;
+                        }
+                        let app = *ap.0.add(p * n + p);
+                        let aqq = *ap.0.add(q * n + q);
+                        let theta = (aqq - app) as f64 / (2.0 * apq as f64);
+                        let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                        let c = 1.0 / (t * t + 1.0).sqrt();
+                        let s = t * c;
+                        let (c, s) = (c as f32, s as f32);
+                        *rp.0.add(idx) = (c, s, true);
+                        for k in 0..n {
+                            let akp = *ap.0.add(k * n + p);
+                            let akq = *ap.0.add(k * n + q);
+                            *ap.0.add(k * n + p) = c * akp - s * akq;
+                            *ap.0.add(k * n + q) = s * akp + c * akq;
+                        }
+                    }
                 }
-                let app = a.at(p, p);
-                let aqq = a.at(q, q);
-                let theta = (aqq - app) as f64 / (2.0 * apq as f64);
-                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
-                let c = 1.0 / (t * t + 1.0).sqrt();
-                let s = t * c;
-                let (c, s) = (c as f32, s as f32);
-                // Rotate rows/cols p and q of A.
-                for k in 0..n {
-                    let akp = a.at(k, p);
-                    let akq = a.at(k, q);
-                    *a.at_mut(k, p) = c * akp - s * akq;
-                    *a.at_mut(k, q) = s * akp + c * akq;
+            };
+            let row_phase = |r: Range<usize>| {
+                for idx in r {
+                    let (p, q) = pairs[idx];
+                    // SAFETY: this phase touches only rows p and q of A
+                    // and columns p and q of V, owned by this pair.
+                    unsafe {
+                        let (c, s, active) = *rp.0.add(idx);
+                        if !active {
+                            continue;
+                        }
+                        for k in 0..n {
+                            let apk = *ap.0.add(p * n + k);
+                            let aqk = *ap.0.add(q * n + k);
+                            *ap.0.add(p * n + k) = c * apk - s * aqk;
+                            *ap.0.add(q * n + k) = s * apk + c * aqk;
+                        }
+                        // Accumulate eigenvectors.
+                        for k in 0..n {
+                            let vkp = *vp.0.add(k * n + p);
+                            let vkq = *vp.0.add(k * n + q);
+                            *vp.0.add(k * n + p) = c * vkp - s * vkq;
+                            *vp.0.add(k * n + q) = s * vkp + c * vkq;
+                        }
+                    }
                 }
-                for k in 0..n {
-                    let apk = a.at(p, k);
-                    let aqk = a.at(q, k);
-                    *a.at_mut(p, k) = c * apk - s * aqk;
-                    *a.at_mut(q, k) = s * apk + c * aqk;
-                }
-                // Accumulate eigenvectors.
-                for k in 0..n {
-                    let vkp = v.at(k, p);
-                    let vkq = v.at(k, q);
-                    *v.at_mut(k, p) = c * vkp - s * vkq;
-                    *v.at_mut(k, q) = s * vkp + c * vkq;
-                }
+            };
+            if n >= JACOBI_PAR_MIN {
+                backend::par_ranges(bk, np, JACOBI_PAIR_GRAIN, &col_phase);
+                backend::par_ranges(bk, np, JACOBI_PAIR_GRAIN, &row_phase);
+            } else {
+                col_phase(0..np);
+                row_phase(0..np);
             }
         }
     }
@@ -336,7 +452,26 @@ mod tests {
         }
     }
 
-    /// The eigensolver is backend-independent (serial rotations) —
+    /// Round-robin rounds cover every unordered pair exactly once and
+    /// never reuse an index within a round.
+    #[test]
+    fn round_robin_schedule_is_a_tournament() {
+        for n in [0usize, 1, 2, 5, 8, 9, 24] {
+            let rounds = round_robin_rounds(n);
+            let mut seen = std::collections::BTreeSet::new();
+            for pairs in &rounds {
+                let mut in_round = std::collections::BTreeSet::new();
+                for &(p, q) in pairs {
+                    assert!(p < q && q < n, "n={n} pair ({p},{q})");
+                    assert!(in_round.insert(p) && in_round.insert(q), "index reuse in round");
+                    assert!(seen.insert((p, q)), "duplicate pair ({p},{q})");
+                }
+            }
+            assert_eq!(seen.len(), n * (n.max(1) - 1) / 2, "n={n} coverage");
+        }
+    }
+
+    /// The eigensolver's phase structure is backend-independent —
     /// identical results under a threaded global backend.
     #[test]
     fn eigh_is_backend_invariant() {

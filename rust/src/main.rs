@@ -26,6 +26,15 @@ fn run(args: &[String]) -> Result<()> {
         let b = eva::backend::install(&choice);
         println!("compute backend: {}", b.label());
     }
+    // Per-worker lane budget for data-parallel runs (table8, the dp
+    // example paths). Like --backend, it applies to every command.
+    if let Some(n) = cli.opt_usize("worker-threads").map_err(|e| anyhow!(e))? {
+        if n == 0 {
+            return Err(anyhow!("--worker-threads must be ≥ 1"));
+        }
+        eva::coordinator::dp::set_default_worker_threads(Some(n));
+        println!("dp worker lanes: {n} per worker");
+    }
     match cli.command.as_str() {
         "" | "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -101,6 +110,11 @@ fn train(cli: &Cli) -> Result<()> {
         // installed it globally, so clear the config's choice rather
         // than letting Trainer::from_config rebuild a pool.
         cfg.backend = None;
+    }
+    if cli.opt("worker-threads").is_some() {
+        // Same precedence for the dp per-worker lane budget: run()
+        // already set the process-wide default from the CLI.
+        cfg.worker_threads = None;
     }
     println!(
         "train: dataset={} optimizer={} epochs={} batch={} lr={} engine={:?}",

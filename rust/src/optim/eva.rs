@@ -126,7 +126,7 @@ impl Optimizer for Eva {
         let grads = decayed_grads(ctx, self.hp.weight_decay);
         // Layers are independent; fan the rank-one preconditioning
         // across the compute backend (identical per-layer arithmetic).
-        let bk = crate::backend::global();
+        let bk = crate::backend::current();
         let pre: Vec<Tensor> = if self.use_kvs {
             self.update_kvs(ctx);
             let (a_bar, b_bar) = (&self.a_bar, &self.b_bar);

@@ -63,7 +63,7 @@ impl Foof {
         let gamma = self.hp.damping;
         // Per-layer factorizations are independent — fan them across
         // the compute backend (same arithmetic per layer either way).
-        let bk = crate::backend::global();
+        let bk = crate::backend::current();
         let r = &self.r;
         if self.rank1 {
             self.eig =

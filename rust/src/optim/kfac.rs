@@ -67,8 +67,10 @@ impl Kfac {
         let gamma = self.hp.damping;
         // Per-layer factorizations are independent — fan the damped
         // Cholesky inverses (the O(d³) cost Eva eliminates) across the
-        // compute backend; each layer's arithmetic is unchanged.
-        let bk = crate::backend::global();
+        // compute backend; each layer's arithmetic is unchanged. On a
+        // single-layer model the fan-out is a no-op and the column
+        // solves inside spd_inverse parallelize instead.
+        let bk = crate::backend::current();
         let (q, r) = (&self.q, &self.r);
         let inverses = crate::backend::par_map(&*bk, q.len(), |l| {
             let (q, r) = (&q[l], &r[l]);
@@ -109,7 +111,7 @@ impl Optimizer for Kfac {
         }
         assert!(self.initialized, "first K-FAC step must be a refresh step");
         let grads = decayed_grads(ctx, self.hp.weight_decay);
-        let bk = crate::backend::global();
+        let bk = crate::backend::current();
         let (q_inv, r_inv) = (&self.q_inv, &self.r_inv);
         let mut pre: Vec<Tensor> = crate::backend::par_map(&*bk, grads.len(), |l| {
             matmul(&matmul(&q_inv[l], &grads[l]), &r_inv[l])

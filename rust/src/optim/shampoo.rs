@@ -109,14 +109,18 @@ impl Shampoo {
         let gamma = self.hp.damping;
         // Every tile's inverse fourth roots are independent — flatten
         // (layer, tile) coordinates and fan the Jacobi eigensolves
-        // across the compute backend, then write results back.
+        // across the compute backend, then write results back. With
+        // many tiles the fan-out wins and each eigensolve runs inline
+        // on its pool lane; with a single big tile the fan-out is a
+        // no-op and the round-robin parallel Jacobi inside spd_power
+        // picks up the lanes instead (backend::current resolution).
         let coords: Vec<(usize, usize)> = self
             .tiles
             .iter()
             .enumerate()
             .flat_map(|(li, layer)| (0..layer.len()).map(move |ti| (li, ti)))
             .collect();
-        let bk = crate::backend::global();
+        let bk = crate::backend::current();
         let tiles = &self.tiles;
         let roots = crate::backend::par_map(&*bk, coords.len(), |i| {
             let t = &tiles[coords[i].0][coords[i].1];

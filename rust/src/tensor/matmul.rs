@@ -16,8 +16,8 @@
 //! output rows, and per-element accumulation order (k ascending) is
 //! identical in the sequential and partitioned paths, so every backend
 //! produces bit-identical results. The `*_with` variants take an
-//! explicit backend (benches, parity tests); the plain names use the
-//! process-global one.
+//! explicit backend (benches, parity tests); the plain names resolve
+//! the thread's scoped-or-global backend via [`crate::backend::current`].
 
 use std::ops::Range;
 
@@ -38,7 +38,7 @@ fn par_worthwhile(bk: &dyn Backend, macs: usize) -> bool {
 
 /// C = A(m,k) · B(k,n).
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
-    matmul_with(&*backend::global(), a, b)
+    matmul_with(&*backend::current(), a, b)
 }
 
 /// [`matmul`] with an explicit backend.
@@ -52,7 +52,7 @@ pub fn matmul_with(bk: &dyn Backend, a: &Tensor, b: &Tensor) -> Tensor {
 /// C = A · B written into an existing output buffer (hot path: avoids
 /// reallocating per step).
 pub fn matmul_into(a: &Tensor, b: &Tensor, c: &mut Tensor) {
-    matmul_into_with(&*backend::global(), a, b, c);
+    matmul_into_with(&*backend::current(), a, b, c);
 }
 
 /// [`matmul_into`] with an explicit backend.
@@ -92,7 +92,7 @@ pub fn matmul_into_with(bk: &dyn Backend, a: &Tensor, b: &Tensor, c: &mut Tensor
 /// C = Aᵀ(k,m)ᵀ is (m,k): computes C(m,n) = Aᵀ · B where A is (k,m),
 /// B is (k,n).
 pub fn matmul_at_b(a: &Tensor, b: &Tensor) -> Tensor {
-    matmul_at_b_with(&*backend::global(), a, b)
+    matmul_at_b_with(&*backend::current(), a, b)
 }
 
 /// [`matmul_at_b`] with an explicit backend.
@@ -147,7 +147,7 @@ pub fn matmul_at_b_with(bk: &dyn Backend, a: &Tensor, b: &Tensor) -> Tensor {
 
 /// C(m,n) = A(m,k) · Bᵀ where B is (n,k).
 pub fn matmul_a_bt(a: &Tensor, b: &Tensor) -> Tensor {
-    matmul_a_bt_with(&*backend::global(), a, b)
+    matmul_a_bt_with(&*backend::current(), a, b)
 }
 
 /// [`matmul_a_bt`] with an explicit backend.

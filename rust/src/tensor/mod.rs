@@ -7,12 +7,14 @@
 //! auto-vectorize; see `rust/benches/linalg_micro.rs` and
 //! EXPERIMENTS.md §Perf for measured throughput.
 //!
-//! Large operations dispatch through [`crate::backend`]: matmuls and
-//! row-wise ops are row-partitioned, elementwise ops are
-//! range-partitioned, and reductions ([`dot`], [`Tensor::norm_sq`])
-//! use a *size-derived* fixed chunk grid so the result is bit-identical
-//! under every backend and thread count. Small operands always run
-//! inline — dispatch overhead is gated by size thresholds, not flags.
+//! Large operations dispatch through [`crate::backend`] (resolved per
+//! thread via [`crate::backend::current`]): matmuls and row-wise ops
+//! are row-partitioned, elementwise ops are range-partitioned, and
+//! reductions ([`dot`], [`Tensor::norm_sq`], [`Tensor::tmatvec`],
+//! [`Tensor::mean_rows`]) use a *size-derived* fixed chunk grid so the
+//! result is bit-identical under every backend and thread count. Small
+//! operands always run inline — dispatch overhead is gated by size
+//! thresholds, not flags.
 
 mod matmul;
 pub use matmul::{
@@ -22,7 +24,7 @@ pub use matmul::{
 
 use std::ops::Range;
 
-use crate::backend::SendPtr;
+use crate::backend::{Backend, SendPtr};
 
 /// Elementwise ops below this many elements run inline.
 const PAR_ELEM_MIN: usize = 1 << 16;
@@ -38,6 +40,12 @@ const REDUCE_CHUNK: usize = 8192;
 /// Reductions below this length skip the chunked path entirely.
 const PAR_REDUCE_MIN: usize = 1 << 16;
 
+/// Upper bound on partials in the column-reduction grid
+/// (`weighted_col_sum_with`): bounds the temporary buffer to
+/// `MAX_COL_PARTS · cols` for wide matrices while keeping the grid a
+/// pure function of the shape (never of the backend).
+const MAX_COL_PARTS: usize = 64;
+
 /// Apply `f` to matching chunk-disjoint sub-slices of `y` and `x`.
 fn par_binary(y: &mut [f32], x: &[f32], f: impl Fn(&mut [f32], &[f32]) + Sync) {
     debug_assert_eq!(y.len(), x.len());
@@ -46,7 +54,7 @@ fn par_binary(y: &mut [f32], x: &[f32], f: impl Fn(&mut [f32], &[f32]) + Sync) {
         f(y, x);
         return;
     }
-    let bk = crate::backend::global();
+    let bk = crate::backend::current();
     let yp = SendPtr(y.as_mut_ptr());
     crate::backend::par_ranges(&*bk, n, ELEM_GRAIN, &|r: Range<usize>| {
         // SAFETY: ranges from par_ranges are disjoint.
@@ -62,7 +70,7 @@ fn par_unary(y: &mut [f32], f: impl Fn(&mut [f32]) + Sync) {
         f(y);
         return;
     }
-    let bk = crate::backend::global();
+    let bk = crate::backend::current();
     let yp = SendPtr(y.as_mut_ptr());
     crate::backend::par_ranges(&*bk, n, ELEM_GRAIN, &|r: Range<usize>| {
         // SAFETY: ranges from par_ranges are disjoint.
@@ -276,7 +284,7 @@ impl Tensor {
             }
         };
         if self.data.len() >= PAR_ELEM_MIN {
-            let bk = crate::backend::global();
+            let bk = crate::backend::current();
             crate::backend::par_ranges(&*bk, self.rows, 16, &body);
         } else {
             body(0..self.rows);
@@ -285,13 +293,26 @@ impl Tensor {
     }
 
     /// Mean over rows: returns a length-`cols` vector.
+    ///
+    /// Long inputs reduce over the same size-derived row-chunk grid as
+    /// [`tmatvec`](Tensor::tmatvec), dispatched through the thread's
+    /// current backend — results are bit-identical across backends.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use eva::tensor::Tensor;
+    ///
+    /// let t = Tensor::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+    /// assert_eq!(t.mean_rows(), vec![2.5, 3.5, 4.5]);
+    /// ```
     pub fn mean_rows(&self) -> Vec<f32> {
-        let mut out = vec![0.0f32; self.cols];
-        for i in 0..self.rows {
-            for (o, &v) in out.iter_mut().zip(self.row(i)) {
-                *o += v;
-            }
-        }
+        self.mean_rows_with(&*crate::backend::current())
+    }
+
+    /// [`mean_rows`](Tensor::mean_rows) with an explicit backend.
+    pub fn mean_rows_with(&self, bk: &dyn Backend) -> Vec<f32> {
+        let mut out = weighted_col_sum_with(bk, self, None);
         let inv = 1.0 / self.rows as f32;
         for o in &mut out {
             *o *= inv;
@@ -316,7 +337,7 @@ impl Tensor {
             }
         };
         if rows * cols >= PAR_ELEM_MIN {
-            let bk = crate::backend::global();
+            let bk = crate::backend::current();
             crate::backend::par_ranges(&*bk, rows, 16, &body);
         } else {
             body(0..rows);
@@ -335,7 +356,7 @@ impl Tensor {
             }
         };
         if self.data.len() >= PAR_ELEM_MIN {
-            let bk = crate::backend::global();
+            let bk = crate::backend::current();
             crate::backend::par_ranges(&*bk, self.rows, 16, &body);
         } else {
             body(0..self.rows);
@@ -344,16 +365,29 @@ impl Tensor {
     }
 
     /// y = selfᵀ · x for a vector x of length `rows`.
+    ///
+    /// The column accumulation is a reduction over rows; long inputs
+    /// split the rows into a *size-derived* fixed chunk grid (the same
+    /// contract as [`dot`]) whose partials combine in index order, so
+    /// `seq` and `threads:N` produce bit-identical results.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use eva::tensor::Tensor;
+    ///
+    /// let t = Tensor::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+    /// // [1, 1] · T gives the column sums.
+    /// assert_eq!(t.tmatvec(&[1.0, 1.0]), vec![4.0, 6.0]);
+    /// ```
     pub fn tmatvec(&self, x: &[f32]) -> Vec<f32> {
+        self.tmatvec_with(&*crate::backend::current(), x)
+    }
+
+    /// [`tmatvec`](Tensor::tmatvec) with an explicit backend.
+    pub fn tmatvec_with(&self, bk: &dyn Backend, x: &[f32]) -> Vec<f32> {
         assert_eq!(x.len(), self.rows);
-        let mut y = vec![0.0f32; self.cols];
-        for i in 0..self.rows {
-            let xi = x[i];
-            for (o, &v) in y.iter_mut().zip(self.row(i)) {
-                *o += xi * v;
-            }
-        }
-        y
+        weighted_col_sum_with(bk, self, Some(x))
     }
 
     /// Add `gamma` to the diagonal in place (damping).
@@ -398,17 +432,68 @@ impl Tensor {
     }
 }
 
+/// Shared column-reduction kernel behind [`Tensor::tmatvec`] and
+/// [`Tensor::mean_rows`]: `out[j] = Σ_i w_i · t[i, j]` (`w_i = 1`
+/// when `weights` is `None`).
+///
+/// Determinism contract (same as [`dot`]): rows group into chunks of
+/// `~REDUCE_CHUNK / cols` rows (at least 1, and large enough that the
+/// chunk count never exceeds `MAX_COL_PARTS`) — a grid derived only
+/// from the matrix shape, never from the backend — each chunk
+/// accumulates its partial row-by-row, and partials combine in
+/// ascending chunk order. The arithmetic structure is identical under
+/// every backend, so results are bit-identical; only the chunk
+/// *scheduling* differs.
+fn weighted_col_sum_with(bk: &dyn Backend, t: &Tensor, weights: Option<&[f32]>) -> Vec<f32> {
+    let (rows, cols) = t.shape();
+    let mut out = vec![0.0f32; cols];
+    if rows == 0 || cols == 0 {
+        return out;
+    }
+    let acc_rows = |acc: &mut [f32], r: Range<usize>| {
+        for i in r {
+            let wi = weights.map_or(1.0, |w| w[i]);
+            for (o, &v) in acc.iter_mut().zip(t.row(i)) {
+                *o += wi * v;
+            }
+        }
+    };
+    let rows_per = (REDUCE_CHUNK / cols).max(rows.div_ceil(MAX_COL_PARTS)).max(1);
+    let parts = rows.div_ceil(rows_per);
+    if parts == 1 || t.len() < PAR_REDUCE_MIN {
+        // Size-derived gate: every backend takes this branch (or none
+        // does), and one chunk is exactly the plain accumulation.
+        acc_rows(&mut out, 0..rows);
+        return out;
+    }
+    let mut partials = vec![0.0f32; parts * cols];
+    let pp = SendPtr(partials.as_mut_ptr());
+    bk.par_for(parts, &|p| {
+        let lo = p * rows_per;
+        let hi = (lo + rows_per).min(rows);
+        // SAFETY: each chunk index owns its disjoint partial slice.
+        let acc = unsafe { std::slice::from_raw_parts_mut(pp.0.add(p * cols), cols) };
+        acc_rows(acc, lo..hi);
+    });
+    for chunk in partials.chunks_exact(cols) {
+        for (o, &v) in out.iter_mut().zip(chunk) {
+            *o += v;
+        }
+    }
+    out
+}
+
 /// Dense dot product over f32 slices. Long inputs reduce over the
-/// fixed [`REDUCE_CHUNK`] grid through the *process-global* backend
+/// fixed `REDUCE_CHUNK` grid through the thread's *current* backend
 /// (bit-identical for every backend — the grid depends only on the
 /// length); short inputs use the unrolled scalar kernel directly.
 /// Kernels that take an explicit backend handle must not call this in
-/// their inner loops — use [`dot_seq`].
+/// their inner loops — use the crate-private `dot_seq`.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     if a.len() >= PAR_REDUCE_MIN {
-        let bk = crate::backend::global();
+        let bk = crate::backend::current();
         return crate::backend::par_reduce_sum(&*bk, a.len(), REDUCE_CHUNK, &|r: Range<usize>| {
             dot_seq(&a[r.clone()], &b[r])
         });

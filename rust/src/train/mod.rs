@@ -79,6 +79,11 @@ impl Trainer {
                 crate::backend::BackendChoice::parse(spec).map_err(|e| anyhow!(e))?;
             crate::backend::install(&choice);
         }
+        if cfg.worker_threads.is_some() {
+            // Flows into every DataParallelCfg built afterwards (the
+            // coordinator runs in-process; see coordinator::dp).
+            crate::coordinator::dp::set_default_worker_threads(cfg.worker_threads);
+        }
         let dataset = by_name(&cfg.dataset, cfg.seed).map_err(|e| anyhow!(e))?;
         let engine = match &cfg.engine {
             Engine::Native => {
@@ -320,6 +325,7 @@ mod tests {
             max_steps: Some(40),
             eval_every: 1,
             backend: None,
+            worker_threads: None,
         }
     }
 

@@ -88,6 +88,53 @@ fn spd_inverse_parity_and_correctness() {
     }
 }
 
+#[test]
+fn eigh_jacobi_bit_identical_across_backends() {
+    // n = 96 is above the Jacobi dispatch gate, so the threaded runs
+    // really fan the round-robin phases out; the two-phase schedule
+    // fixes per-element arithmetic, so results are *bit*-equal.
+    let mut g = Gen::new(71);
+    let m = g.spd_tensor(96, 0.05);
+    let (l_seq, v_seq) = linalg::eigh_jacobi_with(&Sequential, &m, 20);
+    for lanes in [2usize, 4, 7] {
+        let thr = Threaded::new(lanes);
+        let (l_par, v_par) = linalg::eigh_jacobi_with(&thr, &m, 20);
+        assert_eq!(l_seq, l_par, "eigenvalues diverge at threads:{lanes}");
+        assert_eq!(v_seq, v_par, "eigenvectors diverge at threads:{lanes}");
+    }
+    // And the decomposition is correct: M V ≈ V diag(λ).
+    for j in [0usize, 47, 95] {
+        let col: Vec<f32> = (0..96).map(|i| v_seq.at(i, j)).collect();
+        let mv = m.matvec(&col);
+        for i in 0..96 {
+            assert!((mv[i] - l_seq[j] * col[i]).abs() < 5e-2, "({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn tmatvec_and_mean_rows_bit_identical_across_backends() {
+    // 300×300 = 90k elements — above the reduction gate, so the
+    // fixed row-chunk grid engages under every backend.
+    let mut g = Gen::new(72);
+    let t = g.normal_tensor(300, 300);
+    let x = g.normal_vec(300);
+    let y_seq = t.tmatvec_with(&Sequential, &x);
+    let m_seq = t.mean_rows_with(&Sequential);
+    for lanes in [2usize, 4] {
+        let thr = Threaded::new(lanes);
+        assert_eq!(y_seq, t.tmatvec_with(&thr, &x), "tmatvec threads:{lanes}");
+        assert_eq!(m_seq, t.mean_rows_with(&thr), "mean_rows threads:{lanes}");
+    }
+    // Against the naive reference — not just self-consistency.
+    for j in [0usize, 150, 299] {
+        let expect: f32 = (0..300).map(|i| x[i] * t.at(i, j)).sum();
+        assert!((y_seq[j] - expect).abs() < 1e-2, "tmatvec[{j}]");
+        let expect: f32 = (0..300).map(|i| t.at(i, j)).sum::<f32>() / 300.0;
+        assert!((m_seq[j] - expect).abs() < 1e-3, "mean_rows[{j}]");
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Linalg edge cases
 // ---------------------------------------------------------------------------
@@ -244,6 +291,59 @@ fn elementwise_and_reduction_parity() {
     for (a, b) in mvs.iter().zip(&mvp) {
         assert!((a - b).abs() <= TOL * a.abs().max(1.0));
     }
+}
+
+// ---------------------------------------------------------------------------
+// Data-parallel coordinator through per-worker backend handles
+// ---------------------------------------------------------------------------
+
+/// A short data-parallel run; returns the per-layer weight bits of the
+/// canonical replica plus the final loss bits.
+fn dp_run_digest(workers: usize, steps: u64) -> (Vec<Vec<u32>>, u32) {
+    use eva::config::ModelArch;
+    use eva::coordinator::{DataParallelCfg, DataParallelTrainer};
+    let mut cfg = DataParallelCfg::new(workers, "eva");
+    cfg.steps = steps;
+    cfg.arch = ModelArch::Classifier { hidden: vec![48] };
+    cfg.hp.weight_decay = 0.0;
+    cfg.worker_threads = None; // carve from the installed global backend
+    let mut t = DataParallelTrainer::new(cfg).unwrap();
+    let r = t.run().unwrap();
+    let weights = t
+        .model()
+        .weights
+        .iter()
+        .map(|w| w.data().iter().map(|v| v.to_bits()).collect())
+        .collect();
+    (weights, r.final_loss.to_bits())
+}
+
+#[test]
+fn full_data_parallel_step_parity() {
+    // The whole §3.3 path — sharded batches, per-worker handle compute,
+    // fused ring all-reduce, leader precondition — must be
+    // bit-identical whether the dispatch layer is sequential or a
+    // threaded pool carved into per-worker sub-pools. 8 lanes over 4
+    // workers carve to threads:2 handles, so the nested sub-pool
+    // kernel path really runs threaded (4 lanes would degrade every
+    // handle to seq and only test the fan-out).
+    let _serial = GLOBAL_BACKEND.lock().unwrap_or_else(|e| e.into_inner());
+    let (w_seq, loss_seq) = with_global(BackendChoice::Sequential, || dp_run_digest(4, 3));
+    let (w_par, loss_par) = with_global(BackendChoice::Threaded(8), || dp_run_digest(4, 3));
+    assert_eq!(loss_seq, loss_par, "dp final loss diverges across backends");
+    assert_eq!(w_seq, w_par, "dp replica weights diverge across backends");
+}
+
+#[test]
+fn dp_worker_handles_are_carved_from_the_dispatch_backend() {
+    use eva::coordinator::{DataParallelCfg, DataParallelTrainer};
+    let _serial = GLOBAL_BACKEND.lock().unwrap_or_else(|e| e.into_inner());
+    let labels = with_global(BackendChoice::Threaded(8), || {
+        let mut cfg = DataParallelCfg::new(4, "sgd");
+        cfg.worker_threads = None;
+        DataParallelTrainer::new(cfg).unwrap().worker_handle_labels()
+    });
+    assert_eq!(labels, vec!["threads:2"; 4]);
 }
 
 #[test]

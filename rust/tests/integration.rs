@@ -79,6 +79,7 @@ fn pjrt_trainer_end_to_end() {
         max_steps: Some(50),
         eval_every: 1,
         backend: None,
+        worker_threads: None,
     };
     let mut t = Trainer::from_config(&cfg).unwrap();
     let r = t.run().unwrap();
@@ -106,6 +107,7 @@ fn native_and_pjrt_agree_on_learnability() {
         max_steps: Some(60),
         eval_every: 1,
         backend: None,
+        worker_threads: None,
     };
     let mut native = Trainer::from_config(&mk(Engine::Native)).unwrap();
     let rn = native.run().unwrap();
