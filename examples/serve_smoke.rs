@@ -1,0 +1,113 @@
+//! Serve smoke: the full multi-tenant loop on a loopback port.
+//!
+//! Starts the training-session service plus its TCP control plane on
+//! an ephemeral loopback port, then drives two concurrent Eva
+//! sessions — one over the socket, one through the in-process client
+//! (both speak the same newline-delimited JSON) — checkpoints and
+//! cancels the first mid-run, restores it from the snapshot file, and
+//! asserts both tenants reach their step target. CI runs this as the
+//! serve smoke job.
+//!
+//! ```text
+//! cargo run --release --example serve_smoke
+//! ```
+
+use std::time::Duration;
+
+use eva::backend::{self, BackendChoice};
+use eva::config::{ModelArch, TrainConfig};
+use eva::serve::client::{LocalClient, ServeClient, TcpClient};
+use eva::serve::{ServeConfig, Server, Service};
+
+fn tenant(seed: u64, steps: u64) -> TrainConfig {
+    let mut c = TrainConfig {
+        name: format!("smoke-{seed}"),
+        dataset: "c10-small".into(),
+        seed,
+        arch: ModelArch::Classifier { hidden: vec![32] },
+        epochs: 2,
+        batch_size: 64,
+        base_lr: 0.05,
+        max_steps: Some(steps),
+        ..TrainConfig::default()
+    };
+    c.optim.algorithm = "eva".into();
+    c
+}
+
+fn main() {
+    // A small threaded pool so the scheduler actually carves lanes.
+    backend::install(&BackendChoice::Threaded(4));
+
+    let ckdir = std::env::temp_dir().join("eva-serve-smoke");
+    let svc = Service::start(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_sessions: 4,
+        quantum_steps: 4,
+        checkpoint_dir: ckdir.to_string_lossy().into_owned(),
+        ..ServeConfig::default()
+    });
+    let server = Server::start(svc.clone(), "127.0.0.1:0").expect("bind loopback");
+    println!("serve_smoke: control plane on {}", server.addr());
+
+    let target = 40u64;
+
+    // Tenant A over the real socket.
+    let mut tcp = TcpClient::connect(server.addr()).expect("connect");
+    let a = tcp.submit(&tenant(1, target), "tenant-a", 2).expect("submit A");
+
+    // Tenant B through the in-process client (same wire format).
+    let mut local = LocalClient::new(&svc);
+    let b = local.submit(&tenant(2, target), "tenant-b", 1).expect("submit B");
+    println!("serve_smoke: submitted sessions {a} (tcp) and {b} (in-process)");
+
+    // Let tenant A make progress, then checkpoint + cancel it mid-run.
+    let deadline = std::time::Instant::now() + Duration::from_secs(120);
+    loop {
+        let st = tcp.status(a).expect("status A");
+        let step = st.get_f64("step").unwrap_or(0.0) as u64;
+        if step >= 8 || st.get_str("status") == Some("done") {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "tenant A made no progress");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    tcp.pause(a).expect("pause A");
+    let path = tcp.checkpoint(a).expect("checkpoint A");
+    tcp.cancel(a).expect("cancel A");
+    println!("serve_smoke: checkpointed tenant A → {path}");
+
+    // Restore the snapshot as a new session and let everything finish.
+    let a2 = tcp.submit_checkpoint(&path, "tenant-a-resumed", 2).expect("restore A");
+    let fa = tcp.wait_done(a2, Duration::from_secs(600)).expect("A' did not finish");
+    let fb = local.wait_done(b, Duration::from_secs(600)).expect("B did not finish");
+
+    // Both tenants must reach the step target.
+    for (label, st) in [("A'", &fa), ("B", &fb)] {
+        let step = st.get_f64("step").unwrap_or(0.0) as u64;
+        let total = st.get_f64("total_steps").unwrap_or(0.0) as u64;
+        assert_eq!(step, target, "tenant {label} stopped at {step}/{total}");
+        println!(
+            "serve_smoke: tenant {label} done — {step}/{total} steps, p50 {:.2} ms, p95 {:.2} ms",
+            st.get_f64("p50_step_ms").unwrap_or(0.0),
+            st.get_f64("p95_step_ms").unwrap_or(0.0),
+        );
+    }
+
+    // Service-level stats over the protocol.
+    let stats = local.stats().expect("stats");
+    println!(
+        "serve_smoke: backend {} ({} lanes), {} scheduler rounds, {} steps served, queue depth {}",
+        stats.get_str("backend").unwrap_or("?"),
+        stats.get_f64("total_lanes").unwrap_or(0.0),
+        stats.get_f64("rounds").unwrap_or(0.0),
+        stats.get_f64("scheduler_steps").unwrap_or(0.0),
+        stats.get_f64("queue_depth").unwrap_or(-1.0),
+    );
+
+    // Shut down over the wire; the server drains and exits.
+    tcp.shutdown().expect("shutdown");
+    server.join();
+    let _ = std::fs::remove_dir_all(ckdir);
+    println!("serve_smoke: OK");
+}

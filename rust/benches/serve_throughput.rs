@@ -1,0 +1,78 @@
+//! Serve scheduler throughput + fairness.
+//!
+//! Fixed total lane budget, growing tenant count: measures aggregate
+//! optimizer steps/sec across 1, 2 and 4 concurrent Eva sessions and
+//! the fairness of the carve (max/min per-session step share — 1.0 is
+//! perfectly fair; equal priorities should stay close to it).
+//!
+//! ```text
+//! cargo bench --bench serve_throughput
+//! ```
+
+use std::time::{Duration, Instant};
+
+use eva::backend::{self, BackendChoice};
+use eva::config::{ModelArch, TrainConfig};
+use eva::serve::{ServeConfig, Service};
+
+const TOTAL_LANES: usize = 4;
+const MEASURE: Duration = Duration::from_millis(1500);
+
+fn tenant(seed: u64) -> TrainConfig {
+    let mut c = TrainConfig {
+        name: format!("bench-{seed}"),
+        dataset: "c10-small".into(),
+        seed,
+        arch: ModelArch::Classifier { hidden: vec![32] },
+        epochs: 1000, // never finishes inside the window
+        batch_size: 64,
+        base_lr: 0.05,
+        ..TrainConfig::default()
+    };
+    c.optim.algorithm = "eva".into();
+    c
+}
+
+/// Run `n` equal-priority tenants for the measurement window; returns
+/// (aggregate steps/sec, fairness max/min).
+fn run(n: usize) -> (f64, f64) {
+    let svc = Service::start(ServeConfig {
+        max_sessions: n,
+        quantum_steps: 4,
+        ..ServeConfig::default()
+    });
+    // Dataset generation happens inside submit, before t0; the first
+    // quanta of earlier tenants bleed into later tenants' submit time,
+    // which is noise the window length amortizes.
+    let ids: Vec<u64> =
+        (0..n).map(|i| svc.submit(&tenant(i as u64), "t", 1).expect("submit")).collect();
+    let t0 = Instant::now();
+    std::thread::sleep(MEASURE);
+    let stats = svc.stats();
+    let elapsed = t0.elapsed().as_secs_f64();
+    svc.shutdown();
+    let steps: Vec<u64> =
+        ids.iter().map(|id| stats.sessions.iter().find(|s| s.id == *id).unwrap().step).collect();
+    let total: u64 = steps.iter().sum();
+    let fairness = match (steps.iter().max(), steps.iter().min()) {
+        (Some(&mx), Some(&mn)) if mn > 0 => mx as f64 / mn as f64,
+        _ => f64::INFINITY,
+    };
+    (total as f64 / elapsed, fairness)
+}
+
+fn main() {
+    backend::install(&BackendChoice::Threaded(TOTAL_LANES));
+    println!("serve throughput — {TOTAL_LANES} total lanes, quantum 4, eva tenants");
+    println!("{:>9} {:>14} {:>16}", "sessions", "agg steps/s", "fairness max/min");
+    for n in [1usize, 2, 4] {
+        let (sps, fair) = run(n);
+        println!("{n:>9} {sps:>14.1} {fair:>16.2}");
+        assert!(sps > 0.0, "no steps executed at n={n}");
+        // Loose sanity: fairness should not be pathological for equal
+        // priorities (each tenant gets quanta every round).
+        if fair.is_finite() {
+            assert!(fair < 4.0, "fairness ratio {fair} at n={n}");
+        }
+    }
+}

@@ -272,10 +272,53 @@ pub fn handle_with_lanes(lanes: usize) -> Arc<dyn Backend> {
 /// chunk body computes through its own handle under [`with_backend`] —
 /// one dispatch layer for data- *and* kernel-parallelism.
 pub fn split(backend: &dyn Backend, parts: usize) -> Vec<Arc<dyn Backend>> {
+    if parts == 0 {
+        return Vec::new();
+    }
+    split_weighted(backend, &vec![1; parts])
+}
+
+/// [`split`] with per-part weights: carve `backend`'s lane budget into
+/// one handle per weight, apportioning lanes proportionally to the
+/// weights (largest-remainder method, ties broken toward earlier
+/// parts — equal weights reproduce [`split`]'s even partition
+/// exactly). A part whose share rounds to ≤ 1 lane gets the inline
+/// [`Sequential`] handle, so over-subscription degrades the same way
+/// `split` does. Zero-weight parts always get [`Sequential`]. This is
+/// how the `serve` scheduler turns session priorities into fair lane
+/// budgets, re-carving on every join/leave.
+pub fn split_weighted(backend: &dyn Backend, weights: &[usize]) -> Vec<Arc<dyn Backend>> {
     let total = backend.threads().max(1);
-    (0..parts)
-        .map(|p| handle_with_lanes(total / parts + usize::from(p < total % parts)))
-        .collect()
+    let wsum: usize = weights.iter().sum();
+    if wsum == 0 {
+        return weights.iter().map(|_| sequential_handle()).collect();
+    }
+    // Integer largest-remainder apportionment of `total` lanes, done in
+    // u128 so weight*total cannot overflow: floor shares first, then
+    // the leftover lanes go to the largest fractional remainders
+    // (earlier index wins ties).
+    let mut lanes: Vec<usize> = Vec::with_capacity(weights.len());
+    let mut rems: Vec<(usize, u128)> = Vec::with_capacity(weights.len());
+    let mut assigned = 0usize;
+    for (i, &w) in weights.iter().enumerate() {
+        let num = w as u128 * total as u128;
+        let share = (num / wsum as u128) as usize;
+        lanes.push(share);
+        assigned += share;
+        rems.push((i, num % wsum as u128));
+    }
+    let mut leftover = total.saturating_sub(assigned);
+    rems.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    for &(i, _) in rems.iter() {
+        if leftover == 0 {
+            break;
+        }
+        if weights[i] > 0 {
+            lanes[i] += 1;
+            leftover -= 1;
+        }
+    }
+    lanes.into_iter().map(handle_with_lanes).collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -463,6 +506,37 @@ mod tests {
             assert_eq!(h.label(), "seq");
         }
         assert!(split(&parent, 0).is_empty());
+    }
+
+    #[test]
+    fn split_weighted_apportions_by_priority() {
+        let parent = Threaded::new(8);
+        // 2:1:1 over 8 lanes → 4 + 2 + 2.
+        let lanes: Vec<usize> =
+            split_weighted(&parent, &[2, 1, 1]).iter().map(|h| h.threads()).collect();
+        assert_eq!(lanes, vec![4, 2, 2]);
+        // Remainders favour the heavier (then earlier) parts and the
+        // total budget is never exceeded.
+        let lanes: Vec<usize> =
+            split_weighted(&parent, &[3, 2, 2]).iter().map(|h| h.threads()).collect();
+        assert_eq!(lanes.iter().sum::<usize>(), 8);
+        assert_eq!(lanes, vec![4, 2, 2]);
+        // Equal weights reproduce split() exactly.
+        let even: Vec<usize> = split(&parent, 3).iter().map(|h| h.threads()).collect();
+        let weighted: Vec<usize> =
+            split_weighted(&parent, &[1, 1, 1]).iter().map(|h| h.threads()).collect();
+        assert_eq!(even, weighted);
+        // Zero-weight parts and exhausted budgets degrade to seq.
+        let handles = split_weighted(&parent, &[0, 1]);
+        assert_eq!(handles[0].label(), "seq");
+        assert_eq!(handles[1].label(), "threads:8");
+        for h in split_weighted(&Sequential, &[5, 1]) {
+            assert_eq!(h.label(), "seq");
+        }
+        assert!(split_weighted(&parent, &[]).is_empty());
+        for h in split_weighted(&parent, &[0, 0]) {
+            assert_eq!(h.label(), "seq");
+        }
     }
 
     #[test]

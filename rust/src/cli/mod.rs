@@ -65,6 +65,90 @@ impl Cli {
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
+
+    /// Reject options/flags the command doesn't recognize (typos used
+    /// to be silently ignored — `--epcohs 3` would happily train with
+    /// the default). Commands not in [`known_options`] are passed
+    /// through; the command dispatcher reports those itself.
+    pub fn reject_unknown(&self) -> Result<(), String> {
+        let Some(spec) = known_options(&self.command) else {
+            return Ok(());
+        };
+        let accepts = |k: &str| spec.options.contains(&k) || GLOBAL_OPTIONS.contains(&k);
+        for k in self.options.keys() {
+            if !accepts(k.as_str()) {
+                return Err(format!(
+                    "unknown option '--{k}' for '{}' (see `eva help`)",
+                    self.command
+                ));
+            }
+        }
+        for f in &self.flags {
+            if accepts(f.as_str()) {
+                // A value-taking option given last with no value parses
+                // as a flag; make the mistake explicit.
+                return Err(format!("option '--{f}' needs a value"));
+            }
+            if !spec.flags.contains(&f.as_str()) {
+                return Err(format!(
+                    "unknown flag '--{f}' for '{}' (see `eva help`)",
+                    self.command
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Options every command accepts (process-wide knobs).
+pub const GLOBAL_OPTIONS: &[&str] = &["backend", "worker-threads"];
+
+/// Per-command accepted options and flags.
+pub struct CommandSpec {
+    /// Options that take a value (`--name value` / `--name=value`).
+    pub options: &'static [&'static str],
+    /// Boolean flags.
+    pub flags: &'static [&'static str],
+}
+
+/// The option/flag vocabulary of each built-in command, used by
+/// [`Cli::reject_unknown`]. Returns `None` for commands this registry
+/// doesn't know (the dispatcher errors on those separately).
+pub fn known_options(command: &str) -> Option<CommandSpec> {
+    fn spec(
+        options: &'static [&'static str],
+        flags: &'static [&'static str],
+    ) -> Option<CommandSpec> {
+        Some(CommandSpec { options, flags })
+    }
+    match command {
+        "train" => spec(
+            &[
+                "config",
+                "preset",
+                "optimizer",
+                "dataset",
+                "epochs",
+                "lr",
+                "batch",
+                "seed",
+                "interval",
+                "damping",
+                "max-steps",
+                "schedule",
+                "hidden",
+                "engine",
+            ],
+            &[],
+        ),
+        "serve" => spec(
+            &["config", "addr", "max-sessions", "checkpoint-dir", "quantum"],
+            &[],
+        ),
+        "experiment" | "validate" | "list" | "info" => spec(&[], &[]),
+        "" | "help" | "--help" | "-h" => spec(&[], &[]),
+        _ => None,
+    }
 }
 
 pub const USAGE: &str = "\
@@ -75,10 +159,14 @@ USAGE:
             [--epochs N] [--lr F] [--batch N] [--seed N] [--engine native|pjrt:MODEL]
             [--interval N] [--damping F] [--max-steps N] [--backend seq|threads[:N]]
             [--worker-threads N]
+  eva serve [--config FILE] [--addr HOST:PORT] [--max-sessions N]
+            [--checkpoint-dir DIR] [--quantum N]
   eva experiment <id|all>     regenerate a paper table/figure (see DESIGN.md §5)
   eva validate                cross-check PJRT artifacts vs native numerics
   eva list                    list datasets, optimizers, experiments, artifacts
   eva info                    runtime + manifest summary
+
+Unknown --options are rejected (typos used to be silently ignored).
 
 OPTIONS:
   --backend seq|threads[:N]   compute backend for tensor/linalg hot paths
@@ -90,11 +178,23 @@ OPTIONS:
                               carving the --backend lane budget evenly
                               across workers. Numerics are identical.
 
+SERVE OPTIONS (multi-tenant training-session service):
+  --addr HOST:PORT            control-plane listen address (newline-delimited
+                              JSON; default 127.0.0.1:7931, port 0 = ephemeral)
+  --max-sessions N            admission cap on live sessions (default 8)
+  --checkpoint-dir DIR        where `checkpoint` snapshots are written
+                              (default ./checkpoints)
+  --quantum N                 steps per scheduler time-slice (default 8)
+  --config FILE               JSON file with serve_addr / max_sessions /
+                              checkpoint_dir / quantum_steps keys
+                              (flags override the file)
+
 EXAMPLES:
   eva train --preset quickstart --optimizer eva
   eva train --dataset c100-small --optimizer kfac --interval 10 --epochs 8
   eva train --engine pjrt:quickstart --optimizer eva --epochs 4
   eva train --preset c100-bench --optimizer shampoo --backend threads:8
+  eva serve --backend threads:8 --max-sessions 4 --checkpoint-dir /tmp/ck
   eva experiment table5 --backend threads
   eva experiment table8 --backend threads:8 --worker-threads 2
 ";
@@ -136,5 +236,40 @@ mod tests {
     fn empty_args() {
         let c = Cli::parse(&[]).unwrap();
         assert_eq!(c.command, "");
+    }
+
+    #[test]
+    fn unknown_options_are_rejected() {
+        // Typo'd option: error instead of silent ignore.
+        let c = Cli::parse(&argv("train --epcohs 3")).unwrap();
+        let e = c.reject_unknown().unwrap_err();
+        assert!(e.contains("--epcohs"), "{e}");
+        // Unknown flag too.
+        let c = Cli::parse(&argv("train --preset quickstart --verbose")).unwrap();
+        assert!(c.reject_unknown().is_err());
+        // Valid invocations pass, including global options everywhere.
+        for ok in [
+            "train --preset quickstart --optimizer eva --backend threads:2",
+            "serve --addr 127.0.0.1:0 --max-sessions 2 --checkpoint-dir /tmp/x",
+            "experiment table5 --backend threads",
+            "list",
+        ] {
+            let c = Cli::parse(&argv(ok)).unwrap();
+            c.reject_unknown().unwrap_or_else(|e| panic!("{ok}: {e}"));
+        }
+        // A value option left dangling reads as a flag → explicit error.
+        let c = Cli::parse(&argv("serve --max-sessions")).unwrap();
+        let e = c.reject_unknown().unwrap_err();
+        assert!(e.contains("needs a value"), "{e}");
+        // Unknown commands pass through (dispatcher reports them).
+        let c = Cli::parse(&argv("frobnicate --whatever x")).unwrap();
+        assert!(c.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn usage_covers_serve() {
+        assert!(USAGE.contains("eva serve"));
+        assert!(USAGE.contains("--checkpoint-dir"));
+        assert!(USAGE.contains("--max-sessions"));
     }
 }

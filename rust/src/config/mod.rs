@@ -65,6 +65,17 @@ pub enum LrSchedule {
 }
 
 impl LrSchedule {
+    /// Canonical config-string for this schedule (inverse of
+    /// [`LrSchedule::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            LrSchedule::Constant => "constant",
+            LrSchedule::Cosine => "cosine",
+            LrSchedule::Linear => "linear",
+            LrSchedule::Step => "step",
+        }
+    }
+
     pub fn parse(s: &str) -> Result<Self, String> {
         match s {
             "constant" | "const" => Ok(LrSchedule::Constant),
@@ -166,6 +177,28 @@ impl Default for TrainConfig {
     }
 }
 
+/// JSON encoding for u64 config fields (seed, step counters): f64
+/// holds integers exactly only up to 2^53, so larger values are
+/// emitted as decimal strings — otherwise a checkpointed config would
+/// silently round its seed and resume on different data.
+fn u64_to_json(v: u64) -> Json {
+    if v <= (1u64 << 53) {
+        Json::Num(v as f64)
+    } else {
+        Json::Str(v.to_string())
+    }
+}
+
+/// Accept a u64 config field as either a JSON number or a decimal
+/// string (inverse of [`u64_to_json`]).
+fn json_to_u64(v: &Json) -> Option<u64> {
+    match v {
+        Json::Num(n) if *n >= 0.0 => Some(*n as u64),
+        Json::Str(s) => s.parse().ok(),
+        _ => None,
+    }
+}
+
 impl TrainConfig {
     /// Named presets used by examples and docs.
     pub fn preset(name: &str) -> Self {
@@ -202,12 +235,12 @@ impl TrainConfig {
             match k.as_str() {
                 "name" => c.name = val.as_str().ok_or("name: string")?.to_string(),
                 "dataset" => c.dataset = val.as_str().ok_or("dataset: string")?.to_string(),
-                "seed" => c.seed = val.as_f64().ok_or("seed: number")? as u64,
+                "seed" => c.seed = json_to_u64(val).ok_or("seed: number")?,
                 "epochs" => c.epochs = val.as_usize().ok_or("epochs: number")?,
                 "batch_size" => c.batch_size = val.as_usize().ok_or("batch_size: number")?,
                 "base_lr" => c.base_lr = val.as_f64().ok_or("base_lr: number")? as f32,
-                "warmup_steps" => c.warmup_steps = val.as_f64().ok_or("warmup")? as u64,
-                "max_steps" => c.max_steps = Some(val.as_f64().ok_or("max_steps")? as u64),
+                "warmup_steps" => c.warmup_steps = json_to_u64(val).ok_or("warmup")?,
+                "max_steps" => c.max_steps = Some(json_to_u64(val).ok_or("max_steps")?),
                 "eval_every" => c.eval_every = val.as_usize().ok_or("eval_every")?,
                 "lr_schedule" => {
                     c.lr_schedule = LrSchedule::parse(val.as_str().ok_or("lr_schedule")?)?
@@ -259,6 +292,12 @@ impl TrainConfig {
                     c.optim.hp.update_interval = val.as_usize().ok_or("interval")?
                 }
                 "mfac_history" => c.optim.hp.mfac_history = val.as_usize().ok_or("mfac")?,
+                "shampoo_block" => {
+                    c.optim.hp.shampoo_block = val.as_usize().ok_or("shampoo_block")?
+                }
+                "beta1" => c.optim.hp.beta1 = val.as_f64().ok_or("beta1")? as f32,
+                "beta2" => c.optim.hp.beta2 = val.as_f64().ok_or("beta2")? as f32,
+                "eps" => c.optim.hp.eps = val.as_f64().ok_or("eps")? as f32,
                 other => return Err(format!("unknown config key '{other}'")),
             }
         }
@@ -269,6 +308,61 @@ impl TrainConfig {
     pub fn from_file(path: &str) -> Result<Self, String> {
         let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
         Self::from_json(&text)
+    }
+
+    /// Serialize to the JSON object [`TrainConfig::from_json`] accepts
+    /// (used by checkpoints so a snapshot is self-describing). Every
+    /// emitted key round-trips; `decoupled_wd` is implied by the
+    /// `adamw` optimizer name, mirroring the parser.
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("seed", u64_to_json(self.seed)),
+            ("epochs", Json::Num(self.epochs as f64)),
+            ("batch_size", Json::Num(self.batch_size as f64)),
+            ("base_lr", Json::Num(self.base_lr as f64)),
+            ("warmup_steps", u64_to_json(self.warmup_steps)),
+            ("eval_every", Json::Num(self.eval_every as f64)),
+            ("lr_schedule", Json::Str(self.lr_schedule.name().into())),
+            ("optimizer", Json::Str(self.optim.algorithm.clone())),
+            ("momentum", Json::Num(self.optim.hp.momentum as f64)),
+            ("weight_decay", Json::Num(self.optim.hp.weight_decay as f64)),
+            ("damping", Json::Num(self.optim.hp.damping as f64)),
+            ("running_avg", Json::Num(self.optim.hp.running_avg as f64)),
+            ("kl_clip", Json::Num(self.optim.hp.kl_clip as f64)),
+            ("update_interval", Json::Num(self.optim.hp.update_interval as f64)),
+            ("mfac_history", Json::Num(self.optim.hp.mfac_history as f64)),
+            ("shampoo_block", Json::Num(self.optim.hp.shampoo_block as f64)),
+            ("beta1", Json::Num(self.optim.hp.beta1 as f64)),
+            ("beta2", Json::Num(self.optim.hp.beta2 as f64)),
+            ("eps", Json::Num(self.optim.hp.eps as f64)),
+        ];
+        match &self.engine {
+            Engine::Native => pairs.push(("engine", Json::Str("native".into()))),
+            Engine::Pjrt { model } => {
+                pairs.push(("engine", Json::Str(format!("pjrt:{model}"))))
+            }
+        }
+        match &self.arch {
+            ModelArch::Classifier { hidden } => {
+                pairs.push(("hidden", Json::arr_usize(hidden)))
+            }
+            ModelArch::Autoencoder => pairs.push(("arch", Json::Str("autoencoder".into()))),
+            ModelArch::AutoencoderSmall => {
+                pairs.push(("arch", Json::Str("autoencoder-small".into())))
+            }
+        }
+        if let Some(m) = self.max_steps {
+            pairs.push(("max_steps", u64_to_json(m)));
+        }
+        if let Some(b) = &self.backend {
+            pairs.push(("backend", Json::Str(b.clone())));
+        }
+        if let Some(w) = self.worker_threads {
+            pairs.push(("worker_threads", Json::Num(w as f64)));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -298,6 +392,55 @@ mod tests {
         assert_eq!(c.lr_schedule, LrSchedule::Step);
         assert!(matches!(c.engine, Engine::Pjrt { ref model } if model == "quickstart"));
         assert!(matches!(c.arch, ModelArch::Classifier { ref hidden } if hidden == &[32, 16]));
+    }
+
+    #[test]
+    fn to_json_roundtrips_through_from_json() {
+        let mut c = TrainConfig::preset("c100-bench");
+        c.optim.algorithm = "kfac".into();
+        c.optim.hp.update_interval = 10;
+        c.max_steps = Some(123);
+        c.backend = Some("threads:2".into());
+        c.worker_threads = Some(3);
+        c.lr_schedule = LrSchedule::Step;
+        let back = TrainConfig::from_json(&c.to_json().dump()).unwrap();
+        assert_eq!(back.name, c.name);
+        assert_eq!(back.dataset, c.dataset);
+        assert_eq!(back.seed, c.seed);
+        assert_eq!(back.optim.algorithm, "kfac");
+        assert_eq!(back.optim.hp.update_interval, 10);
+        assert_eq!(back.optim.hp.damping.to_bits(), c.optim.hp.damping.to_bits());
+        assert_eq!(back.base_lr.to_bits(), c.base_lr.to_bits());
+        assert_eq!(back.max_steps, Some(123));
+        assert_eq!(back.backend.as_deref(), Some("threads:2"));
+        assert_eq!(back.worker_threads, Some(3));
+        assert_eq!(back.lr_schedule, LrSchedule::Step);
+        assert!(matches!(back.arch, ModelArch::Classifier { ref hidden } if hidden == &[256, 128, 64]));
+        // Autoencoder arch round-trips via the "arch" key.
+        c.arch = ModelArch::AutoencoderSmall;
+        let back = TrainConfig::from_json(&c.to_json().dump()).unwrap();
+        assert!(matches!(back.arch, ModelArch::AutoencoderSmall));
+    }
+
+    #[test]
+    fn u64_fields_above_2_pow_53_roundtrip_exactly() {
+        // f64 would round these; the string fallback must not (a
+        // checkpointed config resuming on a rounded seed would train
+        // on different data).
+        let mut c = TrainConfig::default();
+        c.seed = (1u64 << 60) | 1;
+        c.max_steps = Some(u64::MAX - 7);
+        let back = TrainConfig::from_json(&c.to_json().dump()).unwrap();
+        assert_eq!(back.seed, (1u64 << 60) | 1);
+        assert_eq!(back.max_steps, Some(u64::MAX - 7));
+        // Plain numbers still parse.
+        assert_eq!(TrainConfig::from_json(r#"{"seed": 42}"#).unwrap().seed, 42);
+        assert_eq!(
+            TrainConfig::from_json(r#"{"seed": "99"}"#).unwrap().seed,
+            99
+        );
+        assert!(TrainConfig::from_json(r#"{"seed": "nope"}"#).is_err());
+        assert!(TrainConfig::from_json(r#"{"seed": -3}"#).is_err());
     }
 
     #[test]

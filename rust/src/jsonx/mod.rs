@@ -113,7 +113,13 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity literals; `{n}` would
+                    // emit invalid documents (the serve protocol sends
+                    // step losses, which can be NaN before the first
+                    // step). Standard practice: serialize as null.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -399,5 +405,23 @@ mod tests {
     fn integers_emit_without_fraction() {
         assert_eq!(Json::Num(42.0).dump(), "42");
         assert_eq!(Json::Num(0.5).dump(), "0.5");
+    }
+
+    #[test]
+    fn non_finite_numbers_emit_null() {
+        // `write!("{n}")` would produce `NaN` / `inf` / `-inf`, none of
+        // which is JSON. They must serialize as null — and the result
+        // must parse back (round-trip through the serve protocol).
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let doc = Json::obj(vec![("loss", Json::Num(v)), ("step", Json::Num(3.0))]);
+            let text = doc.dump();
+            let back = Json::parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
+            assert_eq!(back.get("loss"), Some(&Json::Null), "{text}");
+            assert_eq!(back.get_f64("step"), Some(3.0));
+            let pretty = doc.pretty();
+            assert!(Json::parse(&pretty).is_ok(), "{pretty}");
+        }
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        assert_eq!(Json::Arr(vec![Json::Num(f64::INFINITY)]).dump(), "[null]");
     }
 }

@@ -43,6 +43,7 @@ pub mod nn;
 pub mod optim;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod testing;
 pub mod train;

@@ -19,8 +19,10 @@ fn main() {
 
 fn run(args: &[String]) -> Result<()> {
     let cli = Cli::parse(args).map_err(|e| anyhow!(e))?;
+    // Fail fast on typo'd options instead of silently ignoring them.
+    cli.reject_unknown().map_err(|e| anyhow!(e))?;
     // Backend selection applies to every command (train, experiments,
-    // validate) — install it before dispatch.
+    // validate, serve) — install it before dispatch.
     if let Some(spec) = cli.opt("backend") {
         let choice = eva::backend::BackendChoice::parse(spec).map_err(|e| anyhow!(e))?;
         let b = eva::backend::install(&choice);
@@ -41,6 +43,7 @@ fn run(args: &[String]) -> Result<()> {
             Ok(())
         }
         "train" => train(&cli),
+        "serve" => serve(&cli),
         "experiment" => {
             let id = cli
                 .positional
@@ -138,6 +141,50 @@ fn train(cli: &Cli) -> Result<()> {
         report.optimizer_state_bytes / 1024,
         report.total_time_s
     );
+    Ok(())
+}
+
+/// `eva serve` — the multi-tenant training-session service. Blocks
+/// until a client sends `shutdown`.
+fn serve(cli: &Cli) -> Result<()> {
+    use eva::serve::{ServeConfig, Server, Service};
+    let mut cfg = if let Some(path) = cli.opt("config") {
+        ServeConfig::from_file(path).map_err(|e| anyhow!(e))?
+    } else {
+        ServeConfig::default()
+    };
+    if let Some(a) = cli.opt("addr") {
+        cfg.addr = a.to_string();
+    }
+    if let Some(n) = cli.opt_usize("max-sessions").map_err(|e| anyhow!(e))? {
+        if n == 0 {
+            return Err(anyhow!("--max-sessions must be ≥ 1"));
+        }
+        cfg.max_sessions = n;
+    }
+    if let Some(d) = cli.opt("checkpoint-dir") {
+        cfg.checkpoint_dir = d.to_string();
+    }
+    if let Some(q) = cli.opt_usize("quantum").map_err(|e| anyhow!(e))? {
+        if q == 0 {
+            return Err(anyhow!("--quantum must be ≥ 1"));
+        }
+        cfg.quantum_steps = q;
+    }
+    let addr = cfg.addr.clone();
+    let svc = Service::start(cfg.clone());
+    let server = Server::start(svc.clone(), &addr)?;
+    println!(
+        "serve: listening on {} | backend {} | max {} sessions | quantum {} steps | checkpoints → {}",
+        server.addr(),
+        eva::backend::global().label(),
+        cfg.max_sessions,
+        cfg.quantum_steps,
+        cfg.checkpoint_dir,
+    );
+    println!("serve: newline-delimited JSON; try {{\"cmd\":\"stats\"}} or {{\"cmd\":\"shutdown\"}}");
+    server.join();
+    println!("serve: shut down");
     Ok(())
 }
 

@@ -2,7 +2,7 @@
 //! Fig. 4. Shampoo is its full-matrix generalization, which is the
 //! paper's framing for the Eva-s comparison.
 
-use super::{decayed_grads, HyperParams, Optimizer, StepCtx, Update};
+use super::{decayed_grads, HyperParams, OptState, Optimizer, StateBuf, StateReader, StepCtx, Update};
 use crate::nn::StatsMode;
 use crate::tensor::Tensor;
 
@@ -63,6 +63,34 @@ impl Optimizer for Adagrad {
         let w: usize = self.accum_w.iter().map(|t| t.len()).sum();
         let b: usize = self.accum_b.iter().map(|v| v.len()).sum();
         4 * (w + b)
+    }
+
+    fn export_state(&self) -> OptState {
+        let mut st = OptState::new(self.name());
+        st.scalars.push(self.initialized as u64);
+        st.scalars.push(self.accum_w.len() as u64);
+        st.scalars.push(self.accum_b.len() as u64);
+        for (i, t) in self.accum_w.iter().enumerate() {
+            st.bufs.push(StateBuf::tensor(format!("acc.w{i}"), t));
+        }
+        for (i, v) in self.accum_b.iter().enumerate() {
+            st.bufs.push(StateBuf::vecf(format!("acc.b{i}"), v));
+        }
+        st
+    }
+
+    fn import_state(&mut self, st: &OptState) -> Result<(), String> {
+        let mut r = StateReader::open(st, self.name())?;
+        self.initialized = r.flag()?;
+        let nw = r.scalar()? as usize;
+        let nb = r.scalar()? as usize;
+        self.accum_w = (0..nw)
+            .map(|i| r.tensor(&format!("acc.w{i}")))
+            .collect::<Result<_, _>>()?;
+        self.accum_b = (0..nb)
+            .map(|i| r.vecf(&format!("acc.b{i}")))
+            .collect::<Result<_, _>>()?;
+        r.finish()
     }
 }
 

@@ -1,6 +1,6 @@
 //! Adam / AdamW — adaptive first-order baselines (Table 7).
 
-use super::{HyperParams, Optimizer, StepCtx, Update};
+use super::{HyperParams, OptState, Optimizer, StateBuf, StateReader, StepCtx, Update};
 use crate::nn::StatsMode;
 use crate::tensor::Tensor;
 
@@ -102,6 +102,40 @@ impl Optimizer for Adam {
         let w: usize = self.m_w.iter().chain(&self.v_w).map(|t| t.len()).sum();
         let b: usize = self.m_b.iter().chain(&self.v_b).map(|v| v.len()).sum();
         4 * (w + b)
+    }
+
+    fn export_state(&self) -> OptState {
+        let mut st = OptState::new(self.name());
+        st.scalars.push(self.initialized as u64);
+        st.scalars.push(self.t);
+        st.scalars.push(self.m_w.len() as u64);
+        st.scalars.push(self.m_b.len() as u64);
+        for (i, t) in self.m_w.iter().enumerate() {
+            st.bufs.push(StateBuf::tensor(format!("m.w{i}"), t));
+        }
+        for (i, t) in self.v_w.iter().enumerate() {
+            st.bufs.push(StateBuf::tensor(format!("v.w{i}"), t));
+        }
+        for (i, v) in self.m_b.iter().enumerate() {
+            st.bufs.push(StateBuf::vecf(format!("m.b{i}"), v));
+        }
+        for (i, v) in self.v_b.iter().enumerate() {
+            st.bufs.push(StateBuf::vecf(format!("v.b{i}"), v));
+        }
+        st
+    }
+
+    fn import_state(&mut self, st: &OptState) -> Result<(), String> {
+        let mut r = StateReader::open(st, self.name())?;
+        self.initialized = r.flag()?;
+        self.t = r.scalar()?;
+        let nw = r.scalar()? as usize;
+        let nb = r.scalar()? as usize;
+        self.m_w = (0..nw).map(|i| r.tensor(&format!("m.w{i}"))).collect::<Result<_, _>>()?;
+        self.v_w = (0..nw).map(|i| r.tensor(&format!("v.w{i}"))).collect::<Result<_, _>>()?;
+        self.m_b = (0..nb).map(|i| r.vecf(&format!("m.b{i}"))).collect::<Result<_, _>>()?;
+        self.v_b = (0..nb).map(|i| r.vecf(&format!("v.b{i}"))).collect::<Result<_, _>>()?;
+        r.finish()
     }
 }
 

@@ -22,7 +22,8 @@
 //! shape, no activation information).
 
 use super::{
-    decayed_grads, kl_clip_factor, HyperParams, MomentumState, Optimizer, StepCtx, Update,
+    decayed_grads, kl_clip_factor, HyperParams, MomentumState, OptState, Optimizer, StateBuf,
+    StateReader, StepCtx, Update,
 };
 use crate::nn::StatsMode;
 use crate::tensor::{dot, Tensor};
@@ -157,6 +158,30 @@ impl Optimizer for Eva {
     fn state_bytes(&self) -> usize {
         let kv: usize = self.a_bar.iter().chain(&self.b_bar).map(|v| v.len()).sum();
         4 * kv + self.momentum.state_bytes()
+    }
+
+    fn export_state(&self) -> OptState {
+        let mut st = OptState::new(self.name());
+        st.scalars.push(self.initialized as u64);
+        st.scalars.push(self.a_bar.len() as u64);
+        for (i, v) in self.a_bar.iter().enumerate() {
+            st.bufs.push(StateBuf::vecf(format!("kv.a{i}"), v));
+        }
+        for (i, v) in self.b_bar.iter().enumerate() {
+            st.bufs.push(StateBuf::vecf(format!("kv.b{i}"), v));
+        }
+        self.momentum.export_into(&mut st);
+        st
+    }
+
+    fn import_state(&mut self, st: &OptState) -> Result<(), String> {
+        let mut r = StateReader::open(st, self.name())?;
+        self.initialized = r.flag()?;
+        let n = r.scalar()? as usize;
+        self.a_bar = (0..n).map(|i| r.vecf(&format!("kv.a{i}"))).collect::<Result<_, _>>()?;
+        self.b_bar = (0..n).map(|i| r.vecf(&format!("kv.b{i}"))).collect::<Result<_, _>>()?;
+        self.momentum = MomentumState::import_from(&mut r)?;
+        r.finish()
     }
 }
 

@@ -11,7 +11,10 @@
 //! preconditioned gradients are scaled by `1/√(Σ_l p_lᵀ g_l)`, removing
 //! the κ hyper-parameter entirely.
 
-use super::{decayed_grads, HyperParams, MomentumState, Optimizer, StepCtx, Update};
+use super::{
+    decayed_grads, HyperParams, MomentumState, OptState, Optimizer, StateBuf, StateReader,
+    StepCtx, Update,
+};
 use crate::nn::StatsMode;
 use crate::tensor::{dot, Tensor};
 
@@ -88,6 +91,26 @@ impl Optimizer for EvaF {
     fn state_bytes(&self) -> usize {
         let kv: usize = self.a_bar.iter().map(|v| v.len()).sum();
         4 * kv + self.momentum.state_bytes()
+    }
+
+    fn export_state(&self) -> OptState {
+        let mut st = OptState::new(self.name());
+        st.scalars.push(self.initialized as u64);
+        st.scalars.push(self.a_bar.len() as u64);
+        for (i, v) in self.a_bar.iter().enumerate() {
+            st.bufs.push(StateBuf::vecf(format!("kv.a{i}"), v));
+        }
+        self.momentum.export_into(&mut st);
+        st
+    }
+
+    fn import_state(&mut self, st: &OptState) -> Result<(), String> {
+        let mut r = StateReader::open(st, self.name())?;
+        self.initialized = r.flag()?;
+        let n = r.scalar()? as usize;
+        self.a_bar = (0..n).map(|i| r.vecf(&format!("kv.a{i}"))).collect::<Result<_, _>>()?;
+        self.momentum = MomentumState::import_from(&mut r)?;
+        r.finish()
     }
 }
 

@@ -13,7 +13,9 @@
 //! `p ← p·√(gᵀg/pᵀp)`, following Anil et al.'s grafting but without a
 //! second optimizer's state.
 
-use super::{decayed_grads, HyperParams, MomentumState, Optimizer, StepCtx, Update};
+use super::{
+    decayed_grads, HyperParams, MomentumState, OptState, Optimizer, StateReader, StepCtx, Update,
+};
 use crate::nn::StatsMode;
 use crate::tensor::{dot, Tensor};
 
@@ -75,6 +77,18 @@ impl Optimizer for EvaS {
 
     fn state_bytes(&self) -> usize {
         self.momentum.state_bytes()
+    }
+
+    fn export_state(&self) -> OptState {
+        let mut st = OptState::new(self.name());
+        self.momentum.export_into(&mut st);
+        st
+    }
+
+    fn import_state(&mut self, st: &OptState) -> Result<(), String> {
+        let mut r = StateReader::open(st, self.name())?;
+        self.momentum = MomentumState::import_from(&mut r)?;
+        r.finish()
     }
 }
 

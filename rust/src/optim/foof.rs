@@ -11,7 +11,10 @@
 //! convergence pairing is apples-to-apples (the FOOF paper's own
 //! step-size control is learning-rate based; see DESIGN.md).
 
-use super::{decayed_grads, HyperParams, MomentumState, Optimizer, StepCtx, Update};
+use super::{
+    decayed_grads, HyperParams, MomentumState, OptState, Optimizer, StateBuf, StateReader,
+    StepCtx, Update,
+};
 use crate::linalg::{damped_inverse, power_iteration};
 use crate::nn::StatsMode;
 use crate::tensor::{matmul, Tensor};
@@ -136,6 +139,51 @@ impl Optimizer for Foof {
         } else {
             StatsMode::None
         }
+    }
+
+    fn export_state(&self) -> OptState {
+        let mut st = OptState::new(self.name());
+        st.scalars.push(self.initialized as u64);
+        st.scalars.push(self.r.len() as u64);
+        st.scalars.push(self.r_inv.len() as u64);
+        st.scalars.push(self.eig.len() as u64);
+        for (i, t) in self.r.iter().enumerate() {
+            st.bufs.push(StateBuf::tensor(format!("kf.r{i}"), t));
+        }
+        for (i, t) in self.r_inv.iter().enumerate() {
+            st.bufs.push(StateBuf::tensor(format!("kf.rinv{i}"), t));
+        }
+        // (λ₁, u₁) packed as one vector [λ₁, u₁…] per layer.
+        for (i, (l1, u1)) in self.eig.iter().enumerate() {
+            let mut packed = Vec::with_capacity(u1.len() + 1);
+            packed.push(*l1);
+            packed.extend_from_slice(u1);
+            st.bufs.push(StateBuf::vecf(format!("eig{i}"), &packed));
+        }
+        self.momentum.export_into(&mut st);
+        st
+    }
+
+    fn import_state(&mut self, st: &OptState) -> Result<(), String> {
+        let mut r = StateReader::open(st, self.name())?;
+        self.initialized = r.flag()?;
+        let n = r.scalar()? as usize;
+        let ninv = r.scalar()? as usize;
+        let neig = r.scalar()? as usize;
+        self.r = (0..n).map(|i| r.tensor(&format!("kf.r{i}"))).collect::<Result<_, _>>()?;
+        self.r_inv =
+            (0..ninv).map(|i| r.tensor(&format!("kf.rinv{i}"))).collect::<Result<_, _>>()?;
+        self.eig = (0..neig)
+            .map(|i| {
+                let packed = r.vecf(&format!("eig{i}"))?;
+                if packed.is_empty() {
+                    return Err(format!("foof: eig{i} empty"));
+                }
+                Ok((packed[0], packed[1..].to_vec()))
+            })
+            .collect::<Result<_, _>>()?;
+        self.momentum = MomentumState::import_from(&mut r)?;
+        r.finish()
     }
 }
 

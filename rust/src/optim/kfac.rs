@@ -14,7 +14,8 @@
 //! statistics are needed.
 
 use super::{
-    decayed_grads, kl_clip_factor, HyperParams, MomentumState, Optimizer, StepCtx, Update,
+    decayed_grads, kl_clip_factor, HyperParams, MomentumState, OptState, Optimizer, StateBuf,
+    StateReader, StepCtx, Update,
 };
 use crate::linalg::damped_inverse;
 use crate::nn::StatsMode;
@@ -145,6 +146,42 @@ impl Optimizer for Kfac {
         } else {
             StatsMode::None
         }
+    }
+
+    fn export_state(&self) -> OptState {
+        let mut st = OptState::new(self.name());
+        st.scalars.push(self.initialized as u64);
+        st.scalars.push(self.q.len() as u64);
+        st.scalars.push(self.q_inv.len() as u64);
+        for (i, t) in self.q.iter().enumerate() {
+            st.bufs.push(StateBuf::tensor(format!("kf.q{i}"), t));
+        }
+        for (i, t) in self.r.iter().enumerate() {
+            st.bufs.push(StateBuf::tensor(format!("kf.r{i}"), t));
+        }
+        for (i, t) in self.q_inv.iter().enumerate() {
+            st.bufs.push(StateBuf::tensor(format!("kf.qinv{i}"), t));
+        }
+        for (i, t) in self.r_inv.iter().enumerate() {
+            st.bufs.push(StateBuf::tensor(format!("kf.rinv{i}"), t));
+        }
+        self.momentum.export_into(&mut st);
+        st
+    }
+
+    fn import_state(&mut self, st: &OptState) -> Result<(), String> {
+        let mut r = StateReader::open(st, self.name())?;
+        self.initialized = r.flag()?;
+        let n = r.scalar()? as usize;
+        let ninv = r.scalar()? as usize;
+        self.q = (0..n).map(|i| r.tensor(&format!("kf.q{i}"))).collect::<Result<_, _>>()?;
+        self.r = (0..n).map(|i| r.tensor(&format!("kf.r{i}"))).collect::<Result<_, _>>()?;
+        self.q_inv =
+            (0..ninv).map(|i| r.tensor(&format!("kf.qinv{i}"))).collect::<Result<_, _>>()?;
+        self.r_inv =
+            (0..ninv).map(|i| r.tensor(&format!("kf.rinv{i}"))).collect::<Result<_, _>>()?;
+        self.momentum = MomentumState::import_from(&mut r)?;
+        r.finish()
     }
 }
 

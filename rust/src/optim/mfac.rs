@@ -8,7 +8,10 @@
 //! point about M-FAC being memory-hungry (m = 1024 suggested; scaled to
 //! `hp.mfac_history` here, see DESIGN.md).
 
-use super::{decayed_grads, HyperParams, MomentumState, Optimizer, StepCtx, Update};
+use super::{
+    decayed_grads, HyperParams, MomentumState, OptState, Optimizer, StateBuf, StateReader,
+    StepCtx, Update,
+};
 use crate::nn::StatsMode;
 use crate::tensor::{axpy, dot, Tensor};
 
@@ -115,6 +118,39 @@ impl Optimizer for MFac {
     fn state_bytes(&self) -> usize {
         let h: usize = self.history.iter().map(|g| g.len()).sum();
         4 * h + self.momentum.state_bytes()
+    }
+
+    fn export_state(&self) -> OptState {
+        let mut st = OptState::new(self.name());
+        st.scalars.push(self.next_slot as u64);
+        st.scalars.push(self.shapes.len() as u64);
+        for &(rows, cols) in &self.shapes {
+            st.scalars.push(rows as u64);
+            st.scalars.push(cols as u64);
+        }
+        st.scalars.push(self.history.len() as u64);
+        for (i, g) in self.history.iter().enumerate() {
+            st.bufs.push(StateBuf::vecf(format!("hist{i}"), g));
+        }
+        self.momentum.export_into(&mut st);
+        st
+    }
+
+    fn import_state(&mut self, st: &OptState) -> Result<(), String> {
+        let mut r = StateReader::open(st, self.name())?;
+        self.next_slot = r.scalar()? as usize;
+        let nshapes = r.scalar()? as usize;
+        let mut shapes = Vec::with_capacity(nshapes);
+        for _ in 0..nshapes {
+            let rows = r.scalar()? as usize;
+            let cols = r.scalar()? as usize;
+            shapes.push((rows, cols));
+        }
+        self.shapes = shapes;
+        let nh = r.scalar()? as usize;
+        self.history = (0..nh).map(|i| r.vecf(&format!("hist{i}"))).collect::<Result<_, _>>()?;
+        self.momentum = MomentumState::import_from(&mut r)?;
+        r.finish()
     }
 }
 

@@ -141,6 +141,191 @@ pub trait Optimizer: Send {
     /// memory rows). Gradients themselves are not counted — every
     /// optimizer receives those.
     fn state_bytes(&self) -> usize;
+
+    /// Export every piece of persistent state into a serializable
+    /// [`OptState`]. The contract (checkpoint/restore, see
+    /// `serve::checkpoint`): building a fresh optimizer with the same
+    /// algorithm + hyper-parameters, calling
+    /// [`Optimizer::import_state`] with this snapshot, and continuing
+    /// to step must be **bit-identical** to never having snapshotted.
+    fn export_state(&self) -> OptState;
+
+    /// Restore state from an [`OptState`] produced by
+    /// [`Optimizer::export_state`] on the same algorithm. Errors on
+    /// algorithm/shape mismatches and leaves prior state unspecified
+    /// afterwards (callers discard the optimizer on error).
+    fn import_state(&mut self, st: &OptState) -> Result<(), String>;
+}
+
+// ---------------------------------------------------------------------------
+// Serializable optimizer state
+// ---------------------------------------------------------------------------
+
+/// One named flat f32 buffer of an [`OptState`]. Matrices keep their
+/// shape; plain vectors use `rows = 1`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StateBuf {
+    /// Stable per-algorithm slot name (e.g. `mom.w0`, `kv.a2`).
+    pub name: String,
+    /// Row count (1 for vectors, 0 for empty placeholders).
+    pub rows: usize,
+    /// Column count.
+    pub cols: usize,
+    /// Row-major payload, `rows * cols` long. Bits are preserved
+    /// end-to-end, which is what makes restore exact.
+    pub data: Vec<f32>,
+}
+
+impl StateBuf {
+    /// Snapshot a tensor.
+    pub fn tensor(name: impl Into<String>, t: &Tensor) -> Self {
+        StateBuf {
+            name: name.into(),
+            rows: t.rows(),
+            cols: t.cols(),
+            data: t.data().to_vec(),
+        }
+    }
+
+    /// Snapshot a plain vector (stored as a 1×n buffer).
+    pub fn vecf(name: impl Into<String>, v: &[f32]) -> Self {
+        StateBuf { name: name.into(), rows: 1, cols: v.len(), data: v.to_vec() }
+    }
+
+    /// Rebuild the tensor.
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor::from_vec(self.rows, self.cols, self.data.clone())
+    }
+}
+
+/// A versioned, algorithm-tagged snapshot of an optimizer's persistent
+/// state: ordered scalar counters plus ordered named f32 buffers.
+/// Produced by [`Optimizer::export_state`], consumed by
+/// [`Optimizer::import_state`], serialized by `serve::checkpoint`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OptState {
+    /// The exporting algorithm's [`Optimizer::name`] — guards against
+    /// restoring a snapshot into a different algorithm.
+    pub algo: String,
+    /// Layout version (bumped if an algorithm's slot order changes).
+    pub version: u32,
+    /// Ordered scalar state (flags, counters, shape descriptors).
+    pub scalars: Vec<u64>,
+    /// Ordered named buffers.
+    pub bufs: Vec<StateBuf>,
+}
+
+/// Current [`OptState::version`] written by every exporter.
+pub const OPT_STATE_VERSION: u32 = 1;
+
+impl OptState {
+    /// Empty state bag for `algo`.
+    pub fn new(algo: &str) -> Self {
+        OptState {
+            algo: algo.into(),
+            version: OPT_STATE_VERSION,
+            scalars: Vec::new(),
+            bufs: Vec::new(),
+        }
+    }
+}
+
+/// Sequential cursor over an [`OptState`] used by importers: scalars
+/// and buffers are consumed in the exact order the exporter pushed
+/// them, with name/shape checks turning corrupted or mismatched
+/// snapshots into errors instead of silent state corruption.
+pub struct StateReader<'a> {
+    st: &'a OptState,
+    scalar_i: usize,
+    buf_i: usize,
+}
+
+impl<'a> StateReader<'a> {
+    /// Open a reader, verifying the algorithm tag and layout version.
+    pub fn open(st: &'a OptState, algo: &str) -> Result<Self, String> {
+        if st.algo != algo {
+            return Err(format!("optimizer state is for '{}', not '{algo}'", st.algo));
+        }
+        if st.version != OPT_STATE_VERSION {
+            return Err(format!(
+                "optimizer state version {} unsupported (expected {OPT_STATE_VERSION})",
+                st.version
+            ));
+        }
+        Ok(StateReader { st, scalar_i: 0, buf_i: 0 })
+    }
+
+    /// Pop the next scalar.
+    pub fn scalar(&mut self) -> Result<u64, String> {
+        let v = self
+            .st
+            .scalars
+            .get(self.scalar_i)
+            .copied()
+            .ok_or_else(|| format!("{}: scalar slot {} missing", self.st.algo, self.scalar_i))?;
+        self.scalar_i += 1;
+        Ok(v)
+    }
+
+    /// Pop the next scalar as a bool (strict 0/1).
+    pub fn flag(&mut self) -> Result<bool, String> {
+        match self.scalar()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(format!("{}: flag slot holds {v}", self.st.algo)),
+        }
+    }
+
+    /// Pop the next buffer, checking its slot name.
+    pub fn buf(&mut self, name: &str) -> Result<&'a StateBuf, String> {
+        let b = self
+            .st
+            .bufs
+            .get(self.buf_i)
+            .ok_or_else(|| format!("{}: buffer '{name}' missing", self.st.algo))?;
+        if b.name != name {
+            return Err(format!(
+                "{}: expected buffer '{name}', found '{}'",
+                self.st.algo, b.name
+            ));
+        }
+        if b.data.len() != b.rows * b.cols {
+            return Err(format!(
+                "{}: buffer '{name}' length {} ≠ {}×{}",
+                self.st.algo,
+                b.data.len(),
+                b.rows,
+                b.cols
+            ));
+        }
+        self.buf_i += 1;
+        Ok(b)
+    }
+
+    /// Pop the next buffer as a tensor.
+    pub fn tensor(&mut self, name: &str) -> Result<Tensor, String> {
+        Ok(self.buf(name)?.to_tensor())
+    }
+
+    /// Pop the next buffer as a plain vector (shape is ignored).
+    pub fn vecf(&mut self, name: &str) -> Result<Vec<f32>, String> {
+        Ok(self.buf(name)?.data.clone())
+    }
+
+    /// Assert every slot was consumed (catches truncated layouts).
+    pub fn finish(self) -> Result<(), String> {
+        if self.scalar_i != self.st.scalars.len() || self.buf_i != self.st.bufs.len() {
+            return Err(format!(
+                "{}: trailing state ({} of {} scalars, {} of {} buffers consumed)",
+                self.st.algo,
+                self.scalar_i,
+                self.st.scalars.len(),
+                self.buf_i,
+                self.st.bufs.len()
+            ));
+        }
+        Ok(())
+    }
 }
 
 /// Build an optimizer by config name.
@@ -238,6 +423,37 @@ impl MomentumState {
         let b: usize = self.biases.iter().map(|v| v.len()).sum();
         4 * (w + b)
     }
+
+    /// Append this momentum state to an [`OptState`] under the shared
+    /// `mom.*` slot names (every optimizer's exporter calls this last).
+    pub fn export_into(&self, st: &mut OptState) {
+        st.scalars.push(self.initialized as u64);
+        st.scalars.push(self.weights.len() as u64);
+        st.scalars.push(self.biases.len() as u64);
+        for (i, w) in self.weights.iter().enumerate() {
+            st.bufs.push(StateBuf::tensor(format!("mom.w{i}"), w));
+        }
+        for (i, b) in self.biases.iter().enumerate() {
+            st.bufs.push(StateBuf::vecf(format!("mom.b{i}"), b));
+        }
+    }
+
+    /// Rebuild momentum state from the reader's next `mom.*` slots
+    /// (inverse of [`MomentumState::export_into`]).
+    pub fn import_from(r: &mut StateReader) -> Result<Self, String> {
+        let initialized = r.flag()?;
+        let nw = r.scalar()? as usize;
+        let nb = r.scalar()? as usize;
+        let mut weights = Vec::with_capacity(nw);
+        for i in 0..nw {
+            weights.push(r.tensor(&format!("mom.w{i}"))?);
+        }
+        let mut biases = Vec::with_capacity(nb);
+        for i in 0..nb {
+            biases.push(r.vecf(&format!("mom.b{i}"))?);
+        }
+        Ok(MomentumState { weights, biases, initialized })
+    }
 }
 
 impl Default for MomentumState {
@@ -285,6 +501,66 @@ mod tests {
             assert!(!opt.name().is_empty());
         }
         assert!(by_name("newton", &hp).is_err());
+    }
+
+    #[test]
+    fn momentum_state_roundtrips_exactly() {
+        let mut m = MomentumState::new();
+        let g = vec![Tensor::full(2, 3, 0.37)];
+        let _ = m.apply(0.9, 0.1, g.clone(), vec![vec![1.0, -2.0]]);
+        let mut st = OptState::new("x");
+        m.export_into(&mut st);
+        let mut r = StateReader::open(&st, "x").unwrap();
+        let m2 = MomentumState::import_from(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(m.weights[0].data(), m2.weights[0].data());
+        assert_eq!(m.biases, m2.biases);
+        // Continuing produces identical buffers.
+        let mut a = m;
+        let mut b = m2;
+        let ua = a.apply(0.9, 0.1, g.clone(), vec![vec![1.0, -2.0]]);
+        let ub = b.apply(0.9, 0.1, g, vec![vec![1.0, -2.0]]);
+        assert_eq!(ua.deltas[0].data(), ub.deltas[0].data());
+        assert_eq!(ua.bias_deltas, ub.bias_deltas);
+    }
+
+    #[test]
+    fn state_reader_rejects_mismatches() {
+        let mut st = OptState::new("sgd");
+        st.scalars.push(1);
+        st.bufs.push(StateBuf::vecf("a", &[1.0]));
+        assert!(StateReader::open(&st, "adam").is_err());
+        let mut r = StateReader::open(&st, "sgd").unwrap();
+        assert!(r.buf("b").is_err()); // wrong slot name
+        let mut st2 = st.clone();
+        st2.version = 99;
+        assert!(StateReader::open(&st2, "sgd").is_err());
+        // Unconsumed slots are an error.
+        let r2 = StateReader::open(&st, "sgd").unwrap();
+        assert!(r2.finish().is_err());
+    }
+
+    #[test]
+    fn export_import_all_optimizers_positionally() {
+        // Smoke the trait surface for the whole zoo: export on a fresh
+        // optimizer, import into another fresh one, re-export — the
+        // snapshots must match (deep round-trip tests with real steps
+        // live in tests/serve_checkpoint.rs).
+        let hp = HyperParams::default();
+        for n in [
+            "sgd", "adagrad", "adam", "adamw", "eva", "eva-f", "eva-s", "kfac", "foof",
+            "foof-rank1", "shampoo", "mfac",
+        ] {
+            let opt = by_name(n, &hp).unwrap();
+            let st = opt.export_state();
+            assert_eq!(st.algo, opt.name(), "{n}");
+            let mut fresh = by_name(n, &hp).unwrap();
+            fresh.import_state(&st).unwrap_or_else(|e| panic!("{n}: {e}"));
+            assert_eq!(fresh.export_state(), st, "{n}: re-export diverged");
+            // Cross-algorithm restore is rejected.
+            let mut other = by_name(if n == "sgd" { "adam" } else { "sgd" }, &hp).unwrap();
+            assert!(other.import_state(&st).is_err(), "{n}");
+        }
     }
 
     #[test]

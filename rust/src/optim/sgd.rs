@@ -1,7 +1,9 @@
 //! SGD with momentum and L2 weight decay (paper Eq. 2; the first-order
 //! baseline every table normalizes against).
 
-use super::{decayed_grads, HyperParams, MomentumState, Optimizer, StepCtx, Update};
+use super::{
+    decayed_grads, HyperParams, MomentumState, OptState, Optimizer, StateReader, StepCtx, Update,
+};
 use crate::nn::StatsMode;
 
 pub struct Sgd {
@@ -31,6 +33,18 @@ impl Optimizer for Sgd {
 
     fn state_bytes(&self) -> usize {
         self.momentum.state_bytes()
+    }
+
+    fn export_state(&self) -> OptState {
+        let mut st = OptState::new(self.name());
+        self.momentum.export_into(&mut st);
+        st
+    }
+
+    fn import_state(&mut self, st: &OptState) -> Result<(), String> {
+        let mut r = StateReader::open(st, self.name())?;
+        self.momentum = MomentumState::import_from(&mut r)?;
+        r.finish()
     }
 }
 

@@ -16,7 +16,10 @@
 //! scaled here via `HyperParams::shampoo_block`). Uses SGD-magnitude
 //! grafting per layer, like Eva-s.
 
-use super::{decayed_grads, HyperParams, MomentumState, Optimizer, StepCtx, Update};
+use super::{
+    decayed_grads, HyperParams, MomentumState, OptState, Optimizer, StateBuf, StateReader,
+    StepCtx, Update,
+};
 use crate::linalg::spd_power;
 use crate::nn::StatsMode;
 use crate::tensor::{matmul, matmul_a_bt, matmul_at_b, Tensor};
@@ -186,6 +189,72 @@ impl Optimizer for Shampoo {
             .map(|t| t.m1.len() + t.m2.len() + t.l_root.len() + t.r_root.len())
             .sum();
         4 * f + self.momentum.state_bytes()
+    }
+
+    fn export_state(&self) -> OptState {
+        let mut st = OptState::new(self.name());
+        st.scalars.push(self.initialized as u64);
+        st.scalars.push(self.roots_ready as u64);
+        st.scalars.push(self.tiles.len() as u64);
+        for layer in &self.tiles {
+            st.scalars.push(layer.len() as u64);
+            for t in layer {
+                st.scalars.push(t.r0 as u64);
+                st.scalars.push(t.r1 as u64);
+                st.scalars.push(t.c0 as u64);
+                st.scalars.push(t.c1 as u64);
+            }
+        }
+        for (li, layer) in self.tiles.iter().enumerate() {
+            for (ti, t) in layer.iter().enumerate() {
+                st.bufs.push(StateBuf::tensor(format!("t{li}.{ti}.m1"), &t.m1));
+                st.bufs.push(StateBuf::tensor(format!("t{li}.{ti}.m2"), &t.m2));
+                st.bufs.push(StateBuf::tensor(format!("t{li}.{ti}.lr"), &t.l_root));
+                st.bufs.push(StateBuf::tensor(format!("t{li}.{ti}.rr"), &t.r_root));
+            }
+        }
+        self.momentum.export_into(&mut st);
+        st
+    }
+
+    fn import_state(&mut self, st: &OptState) -> Result<(), String> {
+        let mut r = StateReader::open(st, self.name())?;
+        self.initialized = r.flag()?;
+        self.roots_ready = r.flag()?;
+        let nlayers = r.scalar()? as usize;
+        let mut coords: Vec<Vec<(usize, usize, usize, usize)>> = Vec::with_capacity(nlayers);
+        for _ in 0..nlayers {
+            let ntiles = r.scalar()? as usize;
+            let mut layer = Vec::with_capacity(ntiles);
+            for _ in 0..ntiles {
+                let r0 = r.scalar()? as usize;
+                let r1 = r.scalar()? as usize;
+                let c0 = r.scalar()? as usize;
+                let c1 = r.scalar()? as usize;
+                layer.push((r0, r1, c0, c1));
+            }
+            coords.push(layer);
+        }
+        let mut tiles = Vec::with_capacity(nlayers);
+        for (li, layer) in coords.into_iter().enumerate() {
+            let mut out = Vec::with_capacity(layer.len());
+            for (ti, (r0, r1, c0, c1)) in layer.into_iter().enumerate() {
+                out.push(TileState {
+                    r0,
+                    r1,
+                    c0,
+                    c1,
+                    m1: r.tensor(&format!("t{li}.{ti}.m1"))?,
+                    m2: r.tensor(&format!("t{li}.{ti}.m2"))?,
+                    l_root: r.tensor(&format!("t{li}.{ti}.lr"))?,
+                    r_root: r.tensor(&format!("t{li}.{ti}.rr"))?,
+                });
+            }
+            tiles.push(out);
+        }
+        self.tiles = tiles;
+        self.momentum = MomentumState::import_from(&mut r)?;
+        r.finish()
     }
 }
 

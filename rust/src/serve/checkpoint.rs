@@ -1,0 +1,455 @@
+//! Versioned binary training-session snapshots.
+//!
+//! A [`Checkpoint`] captures *everything* that determines a run's
+//! future: the full [`TrainConfig`] (as its JSON form, so snapshots
+//! are self-describing), the model's exact weight/bias bits, the
+//! optimizer's exported state ([`crate::optim::OptState`]), and the
+//! loop state ([`LoopSnapshot`] — step counters, epoch bookkeeping,
+//! batcher cursor and shuffle-RNG state). Floats are stored as raw
+//! little-endian bits, so **save → restore → continue is bit-identical
+//! to an uninterrupted run** — the property `tests/serve_checkpoint.rs`
+//! enforces for every optimizer in the zoo.
+//!
+//! Format: magic `EVACKPT` + a `u32` version, then a fixed field
+//! order per version (see [`Checkpoint::to_bytes`]). Unknown versions
+//! and truncated/oversized payloads are rejected on load.
+
+use crate::config::TrainConfig;
+use crate::data::BatcherSnapshot;
+use crate::optim::{OptState, StateBuf};
+use crate::rng::PcgSnapshot;
+use crate::tensor::Tensor;
+use crate::train::{EpochMetrics, LoopSnapshot, Trainer};
+
+/// Magic prefix of every checkpoint file.
+pub const MAGIC: &[u8; 7] = b"EVACKPT";
+/// Current checkpoint format version.
+pub const VERSION: u32 = 1;
+
+/// A complete, self-describing session snapshot.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// The run's full configuration (restored sessions rebuild their
+    /// dataset and trainer from this).
+    pub config: TrainConfig,
+    /// Loop counters, batcher cursor and RNG.
+    pub loop_snap: LoopSnapshot,
+    /// Per-layer weight matrices (exact bits).
+    pub weights: Vec<Tensor>,
+    /// Per-layer bias vectors (exact bits).
+    pub biases: Vec<Vec<f32>>,
+    /// Exported optimizer state.
+    pub opt_state: OptState,
+}
+
+impl Checkpoint {
+    /// Capture a trainer + loop state (native engine only).
+    pub fn capture(trainer: &Trainer, lp: &crate::train::LoopState) -> Result<Self, String> {
+        let model = trainer.model().ok_or("checkpoint requires the native engine")?;
+        let opt = trainer.optimizer().ok_or("checkpoint requires the native engine")?;
+        Ok(Checkpoint {
+            config: trainer.cfg.clone(),
+            loop_snap: lp.snapshot(),
+            weights: model.weights.clone(),
+            biases: model.biases.clone(),
+            opt_state: opt.export_state(),
+        })
+    }
+
+    /// Overwrite `trainer`'s model parameters and optimizer state with
+    /// this snapshot's (the trainer must have been built from
+    /// [`Checkpoint::config`], so shapes line up).
+    pub fn apply(&self, trainer: &mut Trainer) -> Result<(), String> {
+        {
+            let model = trainer.model().ok_or("checkpoint requires the native engine")?;
+            if model.weights.len() != self.weights.len() {
+                return Err(format!(
+                    "checkpoint has {} layers, model has {}",
+                    self.weights.len(),
+                    model.weights.len()
+                ));
+            }
+            for (l, (w, cw)) in model.weights.iter().zip(&self.weights).enumerate() {
+                if w.shape() != cw.shape() {
+                    return Err(format!(
+                        "layer {l}: checkpoint shape {:?} ≠ model shape {:?}",
+                        cw.shape(),
+                        w.shape()
+                    ));
+                }
+            }
+            let mut restored = model.clone();
+            restored.weights = self.weights.clone();
+            restored.biases = self.biases.clone();
+            trainer.set_model(restored);
+        }
+        trainer
+            .optimizer_mut()
+            .ok_or("checkpoint requires the native engine")?
+            .import_state(&self.opt_state)
+    }
+
+    /// Serialize (see module docs for the format).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.bytes(MAGIC);
+        w.u32(VERSION);
+        w.str(&self.config.to_json().dump());
+        // Loop state.
+        let s = &self.loop_snap;
+        w.u64(s.step);
+        w.u64(s.epoch);
+        w.u64(s.nsteps_in_epoch);
+        w.f64(s.loss_sum);
+        w.f32(s.final_loss);
+        w.f32(s.best_acc);
+        w.f32(s.best_loss);
+        w.f64(s.epoch_wall_s);
+        w.f64(s.total_wall_s);
+        w.u64(s.history.len() as u64);
+        for h in &s.history {
+            w.u64(h.epoch as u64);
+            w.f32(h.train_loss);
+            w.f32(h.val_metric);
+            w.f64(h.wall_time_s);
+            w.f64(h.mean_step_ms);
+        }
+        // Batcher.
+        let b = &s.batcher;
+        w.u64(b.order.len() as u64);
+        for &i in &b.order {
+            w.u64(i as u64);
+        }
+        w.u64(b.pos as u64);
+        w.u64(b.batch as u64);
+        w.u128(b.rng.state);
+        w.u128(b.rng.inc);
+        match b.rng.spare_normal {
+            Some(bits) => {
+                w.u8(1);
+                w.u64(bits);
+            }
+            None => w.u8(0),
+        }
+        // Model.
+        w.u64(self.weights.len() as u64);
+        for (t, bias) in self.weights.iter().zip(&self.biases) {
+            w.u64(t.rows() as u64);
+            w.u64(t.cols() as u64);
+            w.f32s(t.data());
+            w.u64(bias.len() as u64);
+            w.f32s(bias);
+        }
+        // Optimizer state.
+        w.str(&self.opt_state.algo);
+        w.u32(self.opt_state.version);
+        w.u64(self.opt_state.scalars.len() as u64);
+        for &v in &self.opt_state.scalars {
+            w.u64(v);
+        }
+        w.u64(self.opt_state.bufs.len() as u64);
+        for b in &self.opt_state.bufs {
+            w.str(&b.name);
+            w.u64(b.rows as u64);
+            w.u64(b.cols as u64);
+            w.f32s(&b.data);
+        }
+        w.buf
+    }
+
+    /// Parse bytes produced by [`Checkpoint::to_bytes`].
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, String> {
+        let mut r = Reader::new(bytes);
+        let magic = r.bytes(MAGIC.len())?;
+        if magic != MAGIC {
+            return Err("not an eva checkpoint (bad magic)".into());
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            return Err(format!("checkpoint version {version} unsupported (expected {VERSION})"));
+        }
+        let config = TrainConfig::from_json(&r.str()?)?;
+        let step = r.u64()?;
+        let epoch = r.u64()?;
+        let nsteps_in_epoch = r.u64()?;
+        let loss_sum = r.f64()?;
+        let final_loss = r.f32()?;
+        let best_acc = r.f32()?;
+        let best_loss = r.f32()?;
+        let epoch_wall_s = r.f64()?;
+        let total_wall_s = r.f64()?;
+        let nhist = r.len()?;
+        let mut history = Vec::with_capacity(nhist);
+        for _ in 0..nhist {
+            history.push(EpochMetrics {
+                epoch: r.u64()? as usize,
+                train_loss: r.f32()?,
+                val_metric: r.f32()?,
+                wall_time_s: r.f64()?,
+                mean_step_ms: r.f64()?,
+            });
+        }
+        let norder = r.len()?;
+        let mut order = Vec::with_capacity(norder);
+        for _ in 0..norder {
+            order.push(r.u64()? as usize);
+        }
+        let pos = r.u64()? as usize;
+        let batch = r.u64()? as usize;
+        let state = r.u128()?;
+        let inc = r.u128()?;
+        let spare_normal = match r.u8()? {
+            0 => None,
+            1 => Some(r.u64()?),
+            v => return Err(format!("bad spare-normal flag {v}")),
+        };
+        let batcher = BatcherSnapshot {
+            order,
+            pos,
+            batch,
+            rng: PcgSnapshot { state, inc, spare_normal },
+        };
+        let loop_snap = LoopSnapshot {
+            batcher,
+            step,
+            epoch,
+            nsteps_in_epoch,
+            loss_sum,
+            final_loss,
+            best_acc,
+            best_loss,
+            epoch_wall_s,
+            total_wall_s,
+            history,
+        };
+        let nlayers = r.len()?;
+        let mut weights = Vec::with_capacity(nlayers);
+        let mut biases = Vec::with_capacity(nlayers);
+        for _ in 0..nlayers {
+            let rows = r.u64()? as usize;
+            let cols = r.u64()? as usize;
+            let data = r.f32s(rows.checked_mul(cols).ok_or("layer shape overflow")?)?;
+            weights.push(Tensor::from_vec(rows, cols, data));
+            let blen = r.len()?;
+            biases.push(r.f32s(blen)?);
+        }
+        let algo = r.str()?;
+        let opt_version = r.u32()?;
+        let nscalars = r.len()?;
+        let mut scalars = Vec::with_capacity(nscalars);
+        for _ in 0..nscalars {
+            scalars.push(r.u64()?);
+        }
+        let nbufs = r.len()?;
+        let mut bufs = Vec::with_capacity(nbufs);
+        for _ in 0..nbufs {
+            let name = r.str()?;
+            let rows = r.u64()? as usize;
+            let cols = r.u64()? as usize;
+            let data = r.f32s(rows.checked_mul(cols).ok_or("state buf overflow")?)?;
+            bufs.push(StateBuf { name, rows, cols, data });
+        }
+        r.finish()?;
+        Ok(Checkpoint {
+            config,
+            loop_snap,
+            weights,
+            biases,
+            opt_state: OptState { algo, version: opt_version, scalars, bufs },
+        })
+    }
+
+    /// Write to a file (parent directories are created).
+    pub fn save(&self, path: &str) -> Result<(), String> {
+        let p = std::path::Path::new(path);
+        if let Some(parent) = p.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).map_err(|e| format!("{path}: {e}"))?;
+            }
+        }
+        std::fs::write(p, self.to_bytes()).map_err(|e| format!("{path}: {e}"))
+    }
+
+    /// Load from a file.
+    pub fn load(path: &str) -> Result<Self, String> {
+        let bytes = std::fs::read(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::from_bytes(&bytes)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Little-endian byte codec
+// ---------------------------------------------------------------------------
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new() -> Self {
+        Writer { buf: Vec::with_capacity(4096) }
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u128(&mut self, v: u128) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn f32s(&mut self, vs: &[f32]) {
+        self.buf.reserve(vs.len() * 4);
+        for &v in vs {
+            self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+    }
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes());
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Reader { b, i: 0 }
+    }
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self.i.checked_add(n).ok_or("checkpoint truncated")?;
+        let s = self.b.get(self.i..end).ok_or("checkpoint truncated")?;
+        self.i = end;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.bytes(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+    fn u128(&mut self) -> Result<u128, String> {
+        Ok(u128::from_le_bytes(self.bytes(16)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32, String> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, String> {
+        let raw = self.bytes(n.checked_mul(4).ok_or("length overflow")?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+    /// A u64 length, sanity-capped against the remaining payload so a
+    /// corrupt header cannot trigger an absurd pre-allocation.
+    fn len(&mut self) -> Result<usize, String> {
+        let n = self.u64()? as usize;
+        if n > self.b.len() {
+            return Err(format!("checkpoint length field {n} exceeds payload"));
+        }
+        Ok(n)
+    }
+    fn str(&mut self) -> Result<String, String> {
+        let n = self.len()?;
+        String::from_utf8(self.bytes(n)?.to_vec()).map_err(|_| "bad utf-8 string".into())
+    }
+    fn finish(self) -> Result<(), String> {
+        if self.i != self.b.len() {
+            return Err(format!("{} trailing bytes after checkpoint", self.b.len() - self.i));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelArch;
+    use crate::serve::session::Session;
+    use crate::serve::SessionStatus;
+
+    fn cfg() -> TrainConfig {
+        TrainConfig {
+            name: "ck".into(),
+            dataset: "c10-small".into(),
+            seed: 3,
+            arch: ModelArch::Classifier { hidden: vec![12] },
+            max_steps: Some(9),
+            epochs: 2,
+            batch_size: 32,
+            base_lr: 0.05,
+            ..TrainConfig::default()
+        }
+    }
+
+    #[test]
+    fn bytes_roundtrip_exactly() {
+        let mut s = Session::new(1, "a", 1, &cfg()).unwrap();
+        s.set_status(SessionStatus::Running);
+        s.run_quantum(5);
+        let ck = s.checkpoint().unwrap();
+        let bytes = ck.to_bytes();
+        let back = Checkpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(back.to_bytes(), bytes, "byte-level re-serialization diverged");
+        assert_eq!(back.loop_snap.step, 5);
+        assert_eq!(back.weights.len(), ck.weights.len());
+        for (a, b) in ck.weights.iter().zip(&back.weights) {
+            assert_eq!(a.data(), b.data());
+        }
+        assert_eq!(back.opt_state, ck.opt_state);
+    }
+
+    #[test]
+    fn corrupt_payloads_are_rejected() {
+        let mut s = Session::new(1, "a", 1, &cfg()).unwrap();
+        s.set_status(SessionStatus::Running);
+        s.run_quantum(2);
+        let bytes = s.checkpoint().unwrap().to_bytes();
+        assert!(Checkpoint::from_bytes(&bytes[..bytes.len() - 3]).is_err(), "truncated");
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(Checkpoint::from_bytes(&extra).is_err(), "trailing bytes");
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(Checkpoint::from_bytes(&bad).is_err(), "bad magic");
+        let mut badver = bytes;
+        badver[7] = 0xff;
+        assert!(Checkpoint::from_bytes(&badver).is_err(), "bad version");
+    }
+
+    #[test]
+    fn save_load_via_file() {
+        let dir = std::env::temp_dir().join("eva-serve-ck-test");
+        let path = dir.join("s.ckpt").to_string_lossy().into_owned();
+        let mut s = Session::new(1, "a", 2, &cfg()).unwrap();
+        s.set_status(SessionStatus::Running);
+        s.run_quantum(3);
+        let ck = s.checkpoint().unwrap();
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.to_bytes(), ck.to_bytes());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

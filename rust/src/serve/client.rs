@@ -1,0 +1,203 @@
+//! Clients for the serve control plane.
+//!
+//! [`TcpClient`] speaks the wire protocol over a socket;
+//! [`LocalClient`] drives an in-process [`Service`] through the *same*
+//! request/response JSON (it literally serializes and re-parses each
+//! request), so tests exercising the protocol don't need a socket.
+//! Both implement [`ServeClient`], which carries typed helpers for
+//! every command.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use crate::config::TrainConfig;
+use crate::jsonx::Json;
+use crate::serve::protocol::dispatch;
+use crate::serve::service::Service;
+
+/// Typed helpers over the raw request/response protocol. Implemented
+/// by [`TcpClient`] and [`LocalClient`].
+pub trait ServeClient {
+    /// Send one request object, returning the response object.
+    fn request(&mut self, req: Json) -> Result<Json, String>;
+
+    /// Send, then surface protocol-level failures (`ok: false`) as
+    /// `Err`.
+    fn request_ok(&mut self, req: Json) -> Result<Json, String> {
+        let resp = self.request(req)?;
+        match resp.get("ok") {
+            Some(Json::Bool(true)) => Ok(resp),
+            _ => Err(resp.get_str("error").unwrap_or("request failed").to_string()),
+        }
+    }
+
+    /// Submit a config; returns the session id.
+    fn submit(&mut self, cfg: &TrainConfig, name: &str, priority: usize) -> Result<u64, String> {
+        let resp = self.request_ok(Json::obj(vec![
+            ("cmd", Json::Str("submit".into())),
+            ("config", cfg.to_json()),
+            ("name", Json::Str(name.into())),
+            ("priority", Json::Num(priority as f64)),
+        ]))?;
+        resp.get_f64("session").map(|v| v as u64).ok_or("no session id in response".into())
+    }
+
+    /// Submit a checkpoint file for restoration; returns the new
+    /// session id.
+    fn submit_checkpoint(
+        &mut self,
+        path: &str,
+        name: &str,
+        priority: usize,
+    ) -> Result<u64, String> {
+        let resp = self.request_ok(Json::obj(vec![
+            ("cmd", Json::Str("submit".into())),
+            ("checkpoint", Json::Str(path.into())),
+            ("name", Json::Str(name.into())),
+            ("priority", Json::Num(priority as f64)),
+        ]))?;
+        resp.get_f64("session").map(|v| v as u64).ok_or("no session id in response".into())
+    }
+
+    /// One session's state object.
+    fn status(&mut self, id: u64) -> Result<Json, String> {
+        let resp = self.request_ok(Json::obj(vec![
+            ("cmd", Json::Str("status".into())),
+            ("session", Json::Num(id as f64)),
+        ]))?;
+        resp.get("session").cloned().ok_or("no session state in response".into())
+    }
+
+    /// Pause a session (takes effect at the next quantum boundary).
+    fn pause(&mut self, id: u64) -> Result<Json, String> {
+        self.request_ok(Json::obj(vec![
+            ("cmd", Json::Str("pause".into())),
+            ("session", Json::Num(id as f64)),
+        ]))
+    }
+
+    /// Re-queue a paused session.
+    fn resume(&mut self, id: u64) -> Result<Json, String> {
+        self.request_ok(Json::obj(vec![
+            ("cmd", Json::Str("resume".into())),
+            ("session", Json::Num(id as f64)),
+        ]))
+    }
+
+    /// Cancel a session.
+    fn cancel(&mut self, id: u64) -> Result<Json, String> {
+        self.request_ok(Json::obj(vec![
+            ("cmd", Json::Str("cancel".into())),
+            ("session", Json::Num(id as f64)),
+        ]))
+    }
+
+    /// Snapshot a session; returns the checkpoint file path.
+    fn checkpoint(&mut self, id: u64) -> Result<String, String> {
+        let resp = self.request_ok(Json::obj(vec![
+            ("cmd", Json::Str("checkpoint".into())),
+            ("session", Json::Num(id as f64)),
+        ]))?;
+        resp.get_str("path").map(String::from).ok_or("no path in response".into())
+    }
+
+    /// Service-wide stats object.
+    fn stats(&mut self) -> Result<Json, String> {
+        self.request_ok(Json::obj(vec![("cmd", Json::Str("stats".into()))]))
+    }
+
+    /// Ask the service to stop.
+    fn shutdown(&mut self) -> Result<(), String> {
+        self.request_ok(Json::obj(vec![("cmd", Json::Str("shutdown".into()))]))?;
+        Ok(())
+    }
+
+    /// Poll `status` until the session completes; errors if it fails,
+    /// is cancelled, or `timeout` elapses. Returns the final state.
+    fn wait_done(&mut self, id: u64, timeout: Duration) -> Result<Json, String> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let st = self.status(id)?;
+            match st.get_str("status") {
+                Some("done") => return Ok(st),
+                Some("failed") => {
+                    return Err(format!(
+                        "session {id} failed: {}",
+                        st.get_str("error").unwrap_or("unknown")
+                    ))
+                }
+                Some("cancelled") => return Err(format!("session {id} was cancelled")),
+                _ => {}
+            }
+            if Instant::now() >= deadline {
+                return Err(format!(
+                    "session {id} did not finish in {timeout:?} (at step {})",
+                    st.get_f64("step").unwrap_or(-1.0)
+                ));
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+}
+
+/// Wire client over a `TcpStream`.
+pub struct TcpClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl TcpClient {
+    /// Connect to a serve control plane.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> std::io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(TcpClient { reader: BufReader::new(stream), writer })
+    }
+}
+
+impl ServeClient for TcpClient {
+    fn request(&mut self, req: Json) -> Result<Json, String> {
+        let mut line = req.dump();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes()).map_err(|e| format!("send: {e}"))?;
+        self.writer.flush().map_err(|e| format!("send: {e}"))?;
+        let mut resp = String::new();
+        loop {
+            match self.reader.read_line(&mut resp) {
+                Ok(0) => return Err("server closed the connection".into()),
+                Ok(_) if resp.ends_with('\n') => break,
+                Ok(_) => {} // partial line, keep reading
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) => {}
+                Err(e) => return Err(format!("recv: {e}")),
+            }
+        }
+        Json::parse(resp.trim()).map_err(|e| format!("bad response: {e}"))
+    }
+}
+
+/// In-process client: same request/response JSON, no socket. Holds a
+/// [`Service`] clone.
+pub struct LocalClient {
+    svc: Service,
+}
+
+impl LocalClient {
+    /// Client over an in-process service.
+    pub fn new(svc: &Service) -> Self {
+        LocalClient { svc: svc.clone() }
+    }
+}
+
+impl ServeClient for LocalClient {
+    fn request(&mut self, req: Json) -> Result<Json, String> {
+        // Round-trip through the wire text so the in-process path
+        // exercises exactly what the socket path does.
+        let req = Json::parse(&req.dump())?;
+        Ok(dispatch(&self.svc, &req))
+    }
+}

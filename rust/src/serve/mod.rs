@@ -1,0 +1,153 @@
+//! Multi-tenant training-session service.
+//!
+//! Eva's core economics — second-order preconditioning collapsed to
+//! per-layer vectors, so optimizer state per job is O(d) instead of
+//! O(d²) — make it feasible to host *many concurrent training jobs*
+//! in one process. This module is that host:
+//!
+//! * [`session`] — a resumable [`Session`]: one tenant's
+//!   [`crate::train::Trainer`] plus the steppable
+//!   [`crate::train::LoopState`], advanced one quantum at a time so
+//!   jobs can be time-sliced, paused and resumed mid-epoch.
+//! * [`checkpoint`] — versioned binary snapshots (weights, optimizer
+//!   state via [`crate::optim::Optimizer::export_state`], batcher
+//!   cursor + RNG, step counters). Save → restore → continue is
+//!   **bit-identical** to an uninterrupted run.
+//! * [`scheduler`] — runs every runnable session concurrently over the
+//!   shared compute pool, carving fair per-session lane budgets from
+//!   the global backend with [`crate::backend::split_weighted`]
+//!   (weighted by priority, re-carved on join/leave, degrading to
+//!   sequential at one lane).
+//! * [`protocol`] / [`server`] / [`client`] — a newline-delimited-JSON
+//!   control plane (`submit` / `status` / `pause` / `resume` /
+//!   `checkpoint` / `cancel` / `stats` / `shutdown`) over
+//!   `std::net::TcpListener`, plus an in-process client that speaks
+//!   the same wire format for tests and embedding.
+//!
+//! Run it with `eva serve [--addr A] [--max-sessions N]
+//! [--checkpoint-dir D]`, or embed it:
+//!
+//! ```no_run
+//! use eva::config::TrainConfig;
+//! use eva::serve::client::{LocalClient, ServeClient};
+//! use eva::serve::{ServeConfig, Service};
+//!
+//! let svc = Service::start(ServeConfig::default());
+//! let mut client = LocalClient::new(&svc);
+//! let mut cfg = TrainConfig::preset("quickstart");
+//! cfg.max_steps = Some(50);
+//! let id = client.submit(&cfg, "demo", 1).unwrap();
+//! client.wait_done(id, std::time::Duration::from_secs(300)).unwrap();
+//! svc.shutdown();
+//! ```
+
+#![warn(missing_docs)]
+
+pub mod checkpoint;
+pub mod client;
+pub mod protocol;
+pub mod scheduler;
+pub mod server;
+pub mod session;
+mod service;
+
+pub use checkpoint::Checkpoint;
+pub use client::{LocalClient, ServeClient, TcpClient};
+pub use server::Server;
+pub use service::{Service, ServiceStats};
+pub use session::{model_digest, Session, SessionState, SessionStatus};
+
+use crate::jsonx::Json;
+
+/// Service-level configuration, loadable from a JSON object with the
+/// keys `serve_addr`, `max_sessions`, `checkpoint_dir`,
+/// `quantum_steps` (all optional; unknown keys are rejected to catch
+/// typos, mirroring [`crate::config::TrainConfig::from_json`]).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// TCP listen address for the control plane (`serve_addr`).
+    /// Port 0 binds an ephemeral port (tests/CI).
+    pub addr: String,
+    /// Maximum live (queued + running + paused) sessions; submits
+    /// beyond this are rejected (`max_sessions`).
+    pub max_sessions: usize,
+    /// Directory checkpoint snapshots are written to
+    /// (`checkpoint_dir`).
+    pub checkpoint_dir: String,
+    /// Steps a session runs per scheduler round — the time-slice
+    /// granularity for pause/checkpoint/cancel (`quantum_steps`).
+    pub quantum_steps: usize,
+    /// Scheduler idle sleep between rounds with no runnable session.
+    pub idle_sleep_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7931".into(),
+            max_sessions: 8,
+            checkpoint_dir: "checkpoints".into(),
+            quantum_steps: 8,
+            idle_sleep_ms: 5,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Parse from a JSON object (see type docs for the keys).
+    pub fn from_json(text: &str) -> Result<Self, String> {
+        let v = Json::parse(text)?;
+        let obj = v.as_obj().ok_or("serve config must be an object")?;
+        let mut c = ServeConfig::default();
+        for (k, val) in obj {
+            match k.as_str() {
+                "serve_addr" => c.addr = val.as_str().ok_or("serve_addr: string")?.to_string(),
+                "max_sessions" => {
+                    let n = val.as_usize().ok_or("max_sessions: number")?;
+                    if n == 0 {
+                        return Err("max_sessions must be ≥ 1".into());
+                    }
+                    c.max_sessions = n;
+                }
+                "checkpoint_dir" => {
+                    c.checkpoint_dir = val.as_str().ok_or("checkpoint_dir: string")?.to_string()
+                }
+                "quantum_steps" => {
+                    let n = val.as_usize().ok_or("quantum_steps: number")?;
+                    if n == 0 {
+                        return Err("quantum_steps must be ≥ 1".into());
+                    }
+                    c.quantum_steps = n;
+                }
+                other => return Err(format!("unknown serve config key '{other}'")),
+            }
+        }
+        Ok(c)
+    }
+
+    /// Load from a JSON file.
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::from_json(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_config_parses_and_validates() {
+        let c = ServeConfig::from_json(
+            r#"{"serve_addr": "0.0.0.0:9000", "max_sessions": 3,
+                "checkpoint_dir": "/tmp/ck", "quantum_steps": 4}"#,
+        )
+        .unwrap();
+        assert_eq!(c.addr, "0.0.0.0:9000");
+        assert_eq!(c.max_sessions, 3);
+        assert_eq!(c.checkpoint_dir, "/tmp/ck");
+        assert_eq!(c.quantum_steps, 4);
+        assert!(ServeConfig::from_json(r#"{"max_sessions": 0}"#).is_err());
+        assert!(ServeConfig::from_json(r#"{"port": 1}"#).is_err());
+    }
+}

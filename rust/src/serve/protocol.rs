@@ -1,0 +1,219 @@
+//! The control-plane wire protocol: newline-delimited JSON.
+//!
+//! One request object per line, one response object per line. Both the
+//! TCP server and the in-process client funnel through [`dispatch`],
+//! so the two paths cannot drift.
+//!
+//! | `cmd` | request fields | response fields |
+//! |---|---|---|
+//! | `submit` | `config` *(object)* **or** `checkpoint` *(path)*, `name`?, `priority`? | `session` |
+//! | `status` | `session` | session state |
+//! | `pause` | `session` | session state |
+//! | `resume` | `session` | session state |
+//! | `checkpoint` | `session` | `path`, `step` |
+//! | `cancel` | `session` | session state |
+//! | `stats` | — | service stats + per-session states |
+//! | `shutdown` | — | `stopping: true` |
+//!
+//! Every response carries `ok` (bool) and, on failure, `error`
+//! (string). A request's `id` field, if present, is echoed back so
+//! clients can pipeline.
+
+use crate::config::TrainConfig;
+use crate::jsonx::Json;
+use crate::serve::service::{Service, ServiceStats};
+use crate::serve::session::SessionState;
+
+/// Handle one parsed request against the service, producing the
+/// response object (never panics; all failures become `ok: false`).
+pub fn dispatch(svc: &Service, req: &Json) -> Json {
+    let mut pairs: Vec<(&str, Json)> = Vec::new();
+    match handle(svc, req) {
+        Ok(fields) => {
+            pairs.push(("ok", Json::Bool(true)));
+            pairs.extend(fields);
+        }
+        Err(e) => {
+            pairs.push(("ok", Json::Bool(false)));
+            pairs.push(("error", Json::Str(e)));
+        }
+    }
+    if let Some(id) = req.get("id") {
+        pairs.push(("id", id.clone()));
+    }
+    Json::obj(pairs)
+}
+
+fn session_arg(req: &Json) -> Result<u64, String> {
+    req.get_f64("session")
+        .map(|v| v as u64)
+        .ok_or_else(|| "missing 'session' id".into())
+}
+
+fn handle(svc: &Service, req: &Json) -> Result<Vec<(&'static str, Json)>, String> {
+    let cmd = req.get_str("cmd").ok_or("missing 'cmd'")?;
+    match cmd {
+        "submit" => {
+            let name = req.get_str("name").unwrap_or("job").to_string();
+            let priority = req.get_usize("priority").unwrap_or(1);
+            let id = if let Some(path) = req.get_str("checkpoint") {
+                svc.submit_checkpoint(path, &name, priority)?
+            } else {
+                let cfg_json = req
+                    .get("config")
+                    .ok_or("submit needs 'config' (object) or 'checkpoint' (path)")?;
+                let cfg = TrainConfig::from_json(&cfg_json.dump())?;
+                svc.submit(&cfg, &name, priority)?
+            };
+            Ok(vec![("session", Json::Num(id as f64))])
+        }
+        "status" => Ok(state_fields(&svc.status(session_arg(req)?)?)),
+        "pause" => Ok(state_fields(&svc.pause(session_arg(req)?)?)),
+        "resume" => Ok(state_fields(&svc.resume(session_arg(req)?)?)),
+        "cancel" => Ok(state_fields(&svc.cancel(session_arg(req)?)?)),
+        "checkpoint" => {
+            let (path, step) = svc.checkpoint(session_arg(req)?)?;
+            Ok(vec![("path", Json::Str(path)), ("step", Json::Num(step as f64))])
+        }
+        "stats" => Ok(stats_fields(&svc.stats())),
+        "shutdown" => {
+            svc.shutdown();
+            Ok(vec![("stopping", Json::Bool(true))])
+        }
+        other => Err(format!("unknown command '{other}'")),
+    }
+}
+
+/// A session state as protocol response fields.
+fn state_fields(st: &SessionState) -> Vec<(&'static str, Json)> {
+    vec![("session", session_state_json(st))]
+}
+
+/// A session state as one JSON object (shared by `status` and
+/// `stats`).
+pub fn session_state_json(st: &SessionState) -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("id", Json::Num(st.id as f64)),
+        ("name", Json::Str(st.name.clone())),
+        ("priority", Json::Num(st.priority as f64)),
+        ("status", Json::Str(st.status.as_str().to_string())),
+        ("step", Json::Num(st.step as f64)),
+        ("total_steps", Json::Num(st.total_steps as f64)),
+        ("epoch", Json::Num(st.epoch as f64)),
+        ("last_loss", Json::Num(st.last_loss as f64)),
+        ("p50_step_ms", Json::Num(st.p50_step_ms)),
+        ("p95_step_ms", Json::Num(st.p95_step_ms)),
+        ("lane_share", Json::Num(st.lane_share as f64)),
+    ];
+    if let Some(v) = st.last_val_metric {
+        pairs.push(("last_val_metric", Json::Num(v as f64)));
+    }
+    if let Some(e) = &st.error {
+        pairs.push(("error", Json::Str(e.clone())));
+    }
+    Json::obj(pairs)
+}
+
+/// Service stats as one JSON object.
+pub fn stats_fields(st: &ServiceStats) -> Vec<(&'static str, Json)> {
+    vec![
+        ("queue_depth", Json::Num(st.queue_depth as f64)),
+        ("running", Json::Num(st.running as f64)),
+        ("paused", Json::Num(st.paused as f64)),
+        ("live", Json::Num(st.live as f64)),
+        ("max_sessions", Json::Num(st.max_sessions as f64)),
+        ("total_lanes", Json::Num(st.total_lanes as f64)),
+        ("backend", Json::Str(st.backend.clone())),
+        ("rounds", Json::Num(st.rounds as f64)),
+        ("scheduler_steps", Json::Num(st.scheduler_steps as f64)),
+        ("p50_step_ms", Json::Num(st.p50_step_ms)),
+        ("p95_step_ms", Json::Num(st.p95_step_ms)),
+        (
+            "sessions",
+            Json::Arr(st.sessions.iter().map(session_state_json).collect()),
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelArch;
+    use crate::serve::ServeConfig;
+
+    fn svc() -> Service {
+        Service::start(ServeConfig {
+            checkpoint_dir: std::env::temp_dir()
+                .join("eva-serve-proto-test")
+                .to_string_lossy()
+                .into_owned(),
+            ..ServeConfig::default()
+        })
+    }
+
+    fn tiny_cfg_json() -> Json {
+        let cfg = TrainConfig {
+            name: "proto".into(),
+            dataset: "c10-small".into(),
+            arch: ModelArch::Classifier { hidden: vec![8] },
+            max_steps: Some(6),
+            epochs: 1,
+            ..TrainConfig::default()
+        };
+        cfg.to_json()
+    }
+
+    #[test]
+    fn submit_status_cancel_over_protocol() {
+        let svc = svc();
+        let req = Json::obj(vec![
+            ("cmd", Json::Str("submit".into())),
+            ("config", tiny_cfg_json()),
+            ("name", Json::Str("p1".into())),
+            ("priority", Json::Num(2.0)),
+            ("id", Json::Num(42.0)),
+        ]);
+        let resp = dispatch(&svc, &req);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        assert_eq!(resp.get("id"), Some(&Json::Num(42.0)), "request id echoed");
+        let sid = resp.get_f64("session").unwrap();
+        let resp = dispatch(
+            &svc,
+            &Json::obj(vec![
+                ("cmd", Json::Str("status".into())),
+                ("session", Json::Num(sid)),
+            ]),
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        let state = resp.get("session").unwrap();
+        assert_eq!(state.get_str("name"), Some("p1"));
+        assert_eq!(state.get_f64("priority"), Some(2.0));
+        let resp = dispatch(
+            &svc,
+            &Json::obj(vec![
+                ("cmd", Json::Str("cancel".into())),
+                ("session", Json::Num(sid)),
+            ]),
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        // Errors come back as ok:false.
+        let resp = dispatch(
+            &svc,
+            &Json::obj(vec![
+                ("cmd", Json::Str("status".into())),
+                ("session", Json::Num(9999.0)),
+            ]),
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert!(resp.get_str("error").unwrap().contains("9999"));
+        let resp = dispatch(&svc, &Json::obj(vec![("cmd", Json::Str("nope".into()))]));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        let resp = dispatch(&svc, &Json::obj(vec![]));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        // Stats round-trips as parseable JSON.
+        let resp = dispatch(&svc, &Json::obj(vec![("cmd", Json::Str("stats".into()))]));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert!(Json::parse(&resp.dump()).is_ok());
+        svc.shutdown();
+    }
+}

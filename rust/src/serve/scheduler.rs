@@ -1,0 +1,119 @@
+//! Fair time-slicing of sessions over the shared compute pool.
+//!
+//! Each **round**, the scheduler collects every runnable session
+//! (promoting `Queued` → `Running`), carves the global backend's lane
+//! budget into per-session handles with
+//! [`crate::backend::split_weighted`] — lanes proportional to session
+//! priority, re-carved only when the runnable set or weights change
+//! (join/leave/pause), since each carve builds real worker pools —
+//! and fans the quanta out with one [`crate::backend::par_map`] over
+//! the shared backend. Every session's compute then runs under
+//! [`crate::backend::with_backend`] on its own sub-pool handle: the
+//! same one-dispatch-layer shape the data-parallel coordinator uses,
+//! so numerics are bit-identical whatever the carve (a 1-lane share
+//! degrades to inline sequential execution).
+//!
+//! A panic inside one session's step is contained: the session is
+//! marked `Failed` and the neighbouring tenants keep running.
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+use crate::backend::{self, Backend};
+use crate::serve::service::Inner;
+use crate::serve::session::{Session, SessionStatus};
+
+/// Cached lane carve, invalidated when the runnable (id, priority) set
+/// or the shared backend changes.
+#[derive(Default)]
+pub(crate) struct CarveCache {
+    key: Vec<(u64, usize)>,
+    parent: String,
+    handles: Vec<Arc<dyn Backend>>,
+}
+
+/// Scheduler thread body: rounds until the service stops.
+pub(crate) fn run(inner: Arc<Inner>) {
+    let mut carve = CarveCache::default();
+    while !inner.stop.load(Ordering::Relaxed) {
+        let stepped = round(&inner, &mut carve);
+        inner.rounds.fetch_add(1, Ordering::Relaxed);
+        if stepped == 0 {
+            std::thread::sleep(std::time::Duration::from_millis(inner.cfg.idle_sleep_ms));
+        }
+    }
+}
+
+/// One scheduler round; returns the total steps executed.
+pub(crate) fn round(inner: &Inner, carve: &mut CarveCache) -> usize {
+    // Collect runnable sessions, promoting freshly queued ones. Status
+    // transitions only ever happen under the session mutex.
+    let runnable: Vec<(u64, Arc<Mutex<Session>>, usize)> = {
+        let map = inner.sessions.lock().unwrap_or_else(|e| e.into_inner());
+        map.iter()
+            .filter_map(|(id, s)| {
+                let mut sl = s.lock().unwrap_or_else(|e| e.into_inner());
+                let status = sl.status().clone();
+                match status {
+                    SessionStatus::Queued => sl.set_status(SessionStatus::Running),
+                    SessionStatus::Running => {}
+                    _ => return None,
+                }
+                let p = sl.priority;
+                Some((*id, Arc::clone(s), p))
+            })
+            .collect()
+    };
+    if runnable.is_empty() {
+        return 0;
+    }
+    // (Re-)carve per-session lane budgets on join/leave or a backend
+    // swap.
+    let parent = backend::global();
+    let key: Vec<(u64, usize)> = runnable.iter().map(|(id, _, p)| (*id, *p)).collect();
+    if carve.key != key || carve.parent != parent.label() {
+        let weights: Vec<usize> = key.iter().map(|(_, p)| *p).collect();
+        carve.handles = backend::split_weighted(&*parent, &weights);
+        carve.key = key;
+        carve.parent = parent.label();
+    }
+    let handles = &carve.handles;
+    let quantum = inner.cfg.quantum_steps;
+    // Fan the quanta out over the shared pool; each session computes
+    // under its own carved handle.
+    let steps = backend::par_map(&*parent, runnable.len(), |i| {
+        let (_, ref sess, _) = runnable[i];
+        let mut s = sess.lock().unwrap_or_else(|e| e.into_inner());
+        if *s.status() != SessionStatus::Running {
+            return 0; // paused/cancelled between collect and dispatch
+        }
+        s.lane_share = handles[i].threads();
+        let handle = Arc::clone(&handles[i]);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            backend::with_backend(handle, || s.run_quantum(quantum))
+        }));
+        match result {
+            Ok(n) => n,
+            Err(payload) => {
+                s.set_status(SessionStatus::Failed(format!(
+                    "panic during step: {}",
+                    panic_message(payload.as_ref())
+                )));
+                0
+            }
+        }
+    });
+    let total: usize = steps.iter().sum();
+    inner.sched_steps.fetch_add(total as u64, Ordering::Relaxed);
+    total
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".into()
+    }
+}

@@ -1,0 +1,144 @@
+//! TCP front door: newline-delimited JSON over `std::net`.
+//!
+//! One thread accepts connections (non-blocking poll so shutdown is
+//! prompt); each connection gets its own handler thread reading one
+//! request per line and writing one response per line (see
+//! [`crate::serve::protocol`]). A `shutdown` command — or
+//! [`crate::serve::Service::shutdown`] from the embedding process —
+//! stops the accept loop and drains the handlers.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+use crate::jsonx::Json;
+use crate::serve::protocol::dispatch;
+use crate::serve::service::Service;
+
+/// Hard cap on one request line. Submit configs are a few KiB; a
+/// client streaming bytes without a newline must not be able to grow
+/// server memory without bound.
+pub const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// A running control-plane listener.
+pub struct Server {
+    addr: SocketAddr,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:7931`; port 0 for ephemeral) and
+    /// start accepting. The server serves until the service stops.
+    pub fn start(svc: Service, addr: &str) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let handle = std::thread::Builder::new()
+            .name("eva-serve-accept".into())
+            .spawn(move || accept_loop(listener, svc))?;
+        Ok(Server { addr: local, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0 to the real ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until the accept loop exits (i.e. until the service is
+    /// shut down) and drain connection handlers.
+    pub fn join(mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, svc: Service) {
+    let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !svc.is_stopped() {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let svc = svc.clone();
+                if let Ok(h) = std::thread::Builder::new()
+                    .name("eva-serve-conn".into())
+                    .spawn(move || handle_conn(stream, svc))
+                {
+                    handlers.push(h);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => break,
+        }
+        handlers.retain(|h| !h.is_finished());
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+fn handle_conn(stream: TcpStream, svc: Service) {
+    // Short read timeouts keep the handler responsive to shutdown
+    // without dropping bytes: a timed-out read_line keeps its partial
+    // line in `line` and the next call appends to it.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let write = stream.try_clone();
+    let mut reader = BufReader::new(stream);
+    let Ok(mut write) = write else { return };
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // client closed
+            Ok(_) => {
+                if line.trim().is_empty() {
+                    line.clear();
+                    continue;
+                }
+                let resp = if line.len() > MAX_LINE_BYTES {
+                    Json::obj(vec![
+                        ("ok", Json::Bool(false)),
+                        (
+                            "error",
+                            Json::Str(format!(
+                                "request exceeds {MAX_LINE_BYTES} bytes"
+                            )),
+                        ),
+                    ])
+                } else {
+                    match Json::parse(line.trim()) {
+                        Ok(req) => dispatch(&svc, &req),
+                        Err(e) => Json::obj(vec![
+                            ("ok", Json::Bool(false)),
+                            ("error", Json::Str(format!("bad request: {e}"))),
+                        ]),
+                    }
+                };
+                let oversized = line.len() > MAX_LINE_BYTES;
+                line.clear();
+                let mut out = resp.dump();
+                out.push('\n');
+                if write.write_all(out.as_bytes()).is_err() || write.flush().is_err() {
+                    break;
+                }
+                if oversized {
+                    break; // framing is untrustworthy past the cap
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // Partial lines survive timeouts (see above), so the
+                // cap must be enforced here too or a newline-free
+                // stream grows `line` forever.
+                if svc.is_stopped() || line.len() > MAX_LINE_BYTES {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+}

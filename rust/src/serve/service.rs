@@ -1,0 +1,350 @@
+//! The multi-tenant service: session registry + scheduler lifecycle.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::TrainConfig;
+use crate::serve::checkpoint::Checkpoint;
+use crate::serve::scheduler;
+use crate::serve::session::{Session, SessionState, SessionStatus};
+use crate::serve::ServeConfig;
+use crate::train::StepTimer;
+
+/// Shared state between the service facade, the scheduler thread and
+/// the TCP server.
+pub(crate) struct Inner {
+    pub(crate) cfg: ServeConfig,
+    pub(crate) sessions: Mutex<BTreeMap<u64, Arc<Mutex<Session>>>>,
+    pub(crate) next_id: AtomicU64,
+    pub(crate) stop: AtomicBool,
+    pub(crate) rounds: AtomicU64,
+    pub(crate) sched_steps: AtomicU64,
+    sched_handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+/// Handle to a running training-session service. Cheap to clone (all
+/// clones share one registry + scheduler); stop it with
+/// [`Service::shutdown`].
+#[derive(Clone)]
+pub struct Service {
+    inner: Arc<Inner>,
+}
+
+/// Aggregate service statistics (the `stats` protocol command).
+#[derive(Clone, Debug)]
+pub struct ServiceStats {
+    /// Sessions admitted but not yet picked up by the scheduler.
+    pub queue_depth: usize,
+    /// Sessions currently being stepped.
+    pub running: usize,
+    /// Sessions held by `pause`.
+    pub paused: usize,
+    /// Live sessions (queued + running + paused) against
+    /// `max_sessions`.
+    pub live: usize,
+    /// Admission cap.
+    pub max_sessions: usize,
+    /// Lanes of the shared compute pool the scheduler carves.
+    pub total_lanes: usize,
+    /// Label of the shared backend (e.g. `threads:8`).
+    pub backend: String,
+    /// Scheduler rounds executed.
+    pub rounds: u64,
+    /// Optimizer steps executed by the scheduler, all sessions.
+    pub scheduler_steps: u64,
+    /// Median step latency (ms) across every session's lifetime.
+    pub p50_step_ms: f64,
+    /// 95th-percentile step latency (ms) across every session.
+    pub p95_step_ms: f64,
+    /// Per-session states.
+    pub sessions: Vec<SessionState>,
+}
+
+impl Service {
+    /// Start a service: the scheduler thread begins immediately;
+    /// sessions arrive via [`Service::submit`] (or the TCP server /
+    /// clients layered on top).
+    pub fn start(cfg: ServeConfig) -> Service {
+        let inner = Arc::new(Inner {
+            cfg,
+            sessions: Mutex::new(BTreeMap::new()),
+            next_id: AtomicU64::new(1),
+            stop: AtomicBool::new(false),
+            rounds: AtomicU64::new(0),
+            sched_steps: AtomicU64::new(0),
+            sched_handle: Mutex::new(None),
+        });
+        let for_thread = Arc::clone(&inner);
+        let handle = std::thread::Builder::new()
+            .name("eva-serve-sched".into())
+            .spawn(move || scheduler::run(for_thread))
+            .expect("spawn scheduler thread");
+        *inner.sched_handle.lock().unwrap_or_else(|e| e.into_inner()) = Some(handle);
+        Service { inner }
+    }
+
+    /// The service configuration.
+    pub fn config(&self) -> &ServeConfig {
+        &self.inner.cfg
+    }
+
+    /// True once [`Service::shutdown`] ran (the TCP accept loop polls
+    /// this).
+    pub fn is_stopped(&self) -> bool {
+        self.inner.stop.load(Ordering::Relaxed)
+    }
+
+    /// Stop the scheduler and wake nothing further. Idempotent; joins
+    /// the scheduler thread so in-flight quanta finish first.
+    pub fn shutdown(&self) {
+        self.inner.stop.store(true, Ordering::Relaxed);
+        let handle = self.inner.sched_handle.lock().unwrap_or_else(|e| e.into_inner()).take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+
+    fn admit(&self, session: Session) -> Result<u64, String> {
+        let mut map = self.inner.sessions.lock().unwrap_or_else(|e| e.into_inner());
+        let live = map
+            .values()
+            .filter(|s| s.lock().unwrap_or_else(|e| e.into_inner()).status().is_live())
+            .count();
+        if live >= self.inner.cfg.max_sessions {
+            return Err(format!(
+                "at capacity ({live}/{} live sessions)",
+                self.inner.cfg.max_sessions
+            ));
+        }
+        let id = session.id;
+        map.insert(id, Arc::new(Mutex::new(session)));
+        Ok(id)
+    }
+
+    /// Admit a new session for `cfg`; returns its id. Fails when the
+    /// service is at `max_sessions` live sessions.
+    pub fn submit(&self, cfg: &TrainConfig, name: &str, priority: usize) -> Result<u64, String> {
+        if self.is_stopped() {
+            return Err("service is shut down".into());
+        }
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        self.admit(Session::new(id, name, priority, cfg)?)
+    }
+
+    /// Admit a session restored from a checkpoint file.
+    pub fn submit_checkpoint(
+        &self,
+        path: &str,
+        name: &str,
+        priority: usize,
+    ) -> Result<u64, String> {
+        if self.is_stopped() {
+            return Err("service is shut down".into());
+        }
+        let ck = Checkpoint::load(path)?;
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        self.admit(Session::from_checkpoint(id, name, priority, &ck)?)
+    }
+
+    fn session(&self, id: u64) -> Result<Arc<Mutex<Session>>, String> {
+        self.inner
+            .sessions
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| format!("no session {id}"))
+    }
+
+    /// Point-in-time state of one session.
+    pub fn status(&self, id: u64) -> Result<SessionState, String> {
+        let s = self.session(id)?;
+        let s = s.lock().unwrap_or_else(|e| e.into_inner());
+        Ok(s.state())
+    }
+
+    /// Hold a session after its current quantum. No-op on terminal
+    /// sessions.
+    pub fn pause(&self, id: u64) -> Result<SessionState, String> {
+        let s = self.session(id)?;
+        let mut s = s.lock().unwrap_or_else(|e| e.into_inner());
+        s.set_status(SessionStatus::Paused);
+        Ok(s.state())
+    }
+
+    /// Re-queue a paused session.
+    pub fn resume(&self, id: u64) -> Result<SessionState, String> {
+        let s = self.session(id)?;
+        let mut s = s.lock().unwrap_or_else(|e| e.into_inner());
+        if *s.status() == SessionStatus::Paused {
+            s.set_status(SessionStatus::Queued);
+        }
+        Ok(s.state())
+    }
+
+    /// Cancel a session (terminal). No-op if already terminal.
+    pub fn cancel(&self, id: u64) -> Result<SessionState, String> {
+        let s = self.session(id)?;
+        let mut s = s.lock().unwrap_or_else(|e| e.into_inner());
+        s.set_status(SessionStatus::Cancelled);
+        Ok(s.state())
+    }
+
+    /// Snapshot a session to `checkpoint_dir`; returns the file path.
+    /// Waits for the session's current quantum (it takes the session
+    /// lock), so the snapshot is step-atomic.
+    pub fn checkpoint(&self, id: u64) -> Result<(String, u64), String> {
+        let s = self.session(id)?;
+        let s = s.lock().unwrap_or_else(|e| e.into_inner());
+        let ck = s.checkpoint()?;
+        let step = ck.loop_snap.step;
+        let safe_name: String = s
+            .name
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+            .collect();
+        let path = std::path::Path::new(&self.inner.cfg.checkpoint_dir)
+            .join(format!("{safe_name}-{id}-step{step}.ckpt"))
+            .to_string_lossy()
+            .into_owned();
+        ck.save(&path)?;
+        Ok((path, step))
+    }
+
+    /// FNV digest of a session's exact model bits (see
+    /// [`crate::serve::model_digest`]) — the equality witness the
+    /// lane-independence and checkpoint tests compare.
+    pub fn model_digest(&self, id: u64) -> Result<u64, String> {
+        let s = self.session(id)?;
+        let s = s.lock().unwrap_or_else(|e| e.into_inner());
+        Ok(s.digest())
+    }
+
+    /// Aggregate statistics + per-session states.
+    pub fn stats(&self) -> ServiceStats {
+        let sessions: Vec<Arc<Mutex<Session>>> = self
+            .inner
+            .sessions
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .values()
+            .cloned()
+            .collect();
+        let mut states = Vec::with_capacity(sessions.len());
+        let mut agg = StepTimer::new();
+        for s in &sessions {
+            let s = s.lock().unwrap_or_else(|e| e.into_inner());
+            agg.merge(s.timer());
+            states.push(s.state());
+        }
+        let count = |st: &SessionStatus| states.iter().filter(|x| &x.status == st).count();
+        let backend = crate::backend::global();
+        ServiceStats {
+            queue_depth: count(&SessionStatus::Queued),
+            running: count(&SessionStatus::Running),
+            paused: count(&SessionStatus::Paused),
+            live: states.iter().filter(|x| x.status.is_live()).count(),
+            max_sessions: self.inner.cfg.max_sessions,
+            total_lanes: backend.threads(),
+            backend: backend.label(),
+            rounds: self.inner.rounds.load(Ordering::Relaxed),
+            scheduler_steps: self.inner.sched_steps.load(Ordering::Relaxed),
+            p50_step_ms: agg.percentile_ms(50.0),
+            p95_step_ms: agg.percentile_ms(95.0),
+            sessions: states,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelArch;
+
+    fn tiny(steps: u64) -> TrainConfig {
+        TrainConfig {
+            name: "svc".into(),
+            dataset: "c10-small".into(),
+            arch: ModelArch::Classifier { hidden: vec![12] },
+            max_steps: Some(steps),
+            // Enough epochs that max_steps is always the binding
+            // budget, so "long-running" test sessions really are.
+            epochs: 10_000,
+            batch_size: 64,
+            ..TrainConfig::default()
+        }
+    }
+
+    fn test_cfg() -> ServeConfig {
+        ServeConfig {
+            max_sessions: 2,
+            checkpoint_dir: std::env::temp_dir()
+                .join("eva-serve-svc-test")
+                .to_string_lossy()
+                .into_owned(),
+            quantum_steps: 4,
+            ..ServeConfig::default()
+        }
+    }
+
+    #[test]
+    fn service_runs_sessions_to_completion_and_enforces_capacity() {
+        let svc = Service::start(test_cfg());
+        // Two long-running tenants pin both capacity slots
+        // deterministically (they cannot finish during the test).
+        let a = svc.submit(&tiny(1_000_000), "a", 1).unwrap();
+        let b = svc.submit(&tiny(1_000_000), "b", 2).unwrap();
+        assert!(svc.submit(&tiny(10), "c", 1).is_err(), "capacity must be enforced");
+        // Cancelling frees the slots.
+        svc.cancel(a).unwrap();
+        svc.cancel(b).unwrap();
+        let c = svc.submit(&tiny(10), "c", 1).unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(120);
+        loop {
+            let sc = svc.status(c).unwrap();
+            if sc.status == SessionStatus::Done {
+                assert_eq!(sc.step, 10);
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "session c did not finish");
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        let st = svc.stats();
+        assert_eq!(st.sessions.len(), 3);
+        assert_eq!(st.max_sessions, 2);
+        assert!(st.scheduler_steps >= 10);
+        assert!(svc.status(999).is_err());
+        svc.shutdown();
+        assert!(svc.submit(&tiny(1), "late", 1).is_err());
+        let _ = std::fs::remove_dir_all(std::env::temp_dir().join("eva-serve-svc-test"));
+    }
+
+    #[test]
+    fn pause_resume_cancel_lifecycle() {
+        let svc = Service::start(ServeConfig {
+            quantum_steps: 1,
+            ..test_cfg()
+        });
+        let id = svc.submit(&tiny(100_000), "p", 1).unwrap();
+        let st = svc.pause(id).unwrap();
+        assert!(matches!(st.status, SessionStatus::Paused | SessionStatus::Running));
+        // Wait until the pause takes effect at a quantum boundary.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+        while svc.status(id).unwrap().status != SessionStatus::Paused {
+            let _ = svc.pause(id);
+            assert!(std::time::Instant::now() < deadline);
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let frozen = svc.status(id).unwrap().step;
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(svc.status(id).unwrap().step, frozen, "paused session advanced");
+        let st = svc.resume(id).unwrap();
+        assert!(st.status.is_live());
+        let st = svc.cancel(id).unwrap();
+        assert_eq!(st.status, SessionStatus::Cancelled);
+        // Cancel sticks even through resume attempts.
+        assert_eq!(svc.resume(id).unwrap().status, SessionStatus::Cancelled);
+        svc.shutdown();
+    }
+}

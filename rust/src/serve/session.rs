@@ -1,0 +1,367 @@
+//! One tenant's resumable training session.
+//!
+//! A [`Session`] pairs a [`Trainer`] with the steppable
+//! [`LoopState`] and a lifecycle [`SessionStatus`]. The scheduler
+//! advances it one quantum ([`Session::run_quantum`]) at a time;
+//! control-plane commands flip the status between quanta, so pause /
+//! checkpoint / cancel take effect at quantum granularity without ever
+//! tearing a step in half.
+
+use anyhow::Result;
+
+use crate::config::{Engine, TrainConfig};
+use crate::nn::Mlp;
+use crate::serve::checkpoint::Checkpoint;
+use crate::train::{LoopState, StepOutcome, StepTimer, Trainer};
+
+/// Lifecycle of a session. Terminal states (`Done`, `Cancelled`,
+/// `Failed`) are never left.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SessionStatus {
+    /// Admitted, waiting for the scheduler to pick it up.
+    Queued,
+    /// Being stepped by the scheduler.
+    Running,
+    /// Held by a `pause` command; `resume` re-queues it.
+    Paused,
+    /// Reached its configured step target.
+    Done,
+    /// Stopped by a `cancel` command.
+    Cancelled,
+    /// A step raised an error or panicked; the message is kept.
+    Failed(String),
+}
+
+impl SessionStatus {
+    /// Protocol string for this status.
+    pub fn as_str(&self) -> &str {
+        match self {
+            SessionStatus::Queued => "queued",
+            SessionStatus::Running => "running",
+            SessionStatus::Paused => "paused",
+            SessionStatus::Done => "done",
+            SessionStatus::Cancelled => "cancelled",
+            SessionStatus::Failed(_) => "failed",
+        }
+    }
+
+    /// True for states that still hold a capacity slot.
+    pub fn is_live(&self) -> bool {
+        matches!(
+            self,
+            SessionStatus::Queued | SessionStatus::Running | SessionStatus::Paused
+        )
+    }
+}
+
+/// Point-in-time view of a session, as reported by `status` / `stats`.
+#[derive(Clone, Debug)]
+pub struct SessionState {
+    /// Session id.
+    pub id: u64,
+    /// Client-supplied display name.
+    pub name: String,
+    /// Scheduling weight (≥ 1).
+    pub priority: usize,
+    /// Lifecycle state.
+    pub status: SessionStatus,
+    /// Failure message, when `status` is `Failed`.
+    pub error: Option<String>,
+    /// Steps taken so far.
+    pub step: u64,
+    /// Configured step target.
+    pub total_steps: u64,
+    /// Current epoch index.
+    pub epoch: usize,
+    /// Most recent training loss.
+    pub last_loss: f32,
+    /// Most recent completed-epoch validation metric.
+    pub last_val_metric: Option<f32>,
+    /// Median step latency (ms) over the session's lifetime.
+    pub p50_step_ms: f64,
+    /// 95th-percentile step latency (ms).
+    pub p95_step_ms: f64,
+    /// Lanes the last scheduler carve granted this session.
+    pub lane_share: usize,
+}
+
+/// A resumable, time-sliceable training job.
+pub struct Session {
+    /// Service-assigned id.
+    pub id: u64,
+    /// Client-supplied display name.
+    pub name: String,
+    /// Scheduling weight (≥ 1); the scheduler carves lanes
+    /// proportionally to it.
+    pub priority: usize,
+    trainer: Trainer,
+    lp: LoopState,
+    status: SessionStatus,
+    timer: StepTimer,
+    last_loss: f32,
+    last_val: Option<f32>,
+    /// Lanes granted by the most recent scheduler carve.
+    pub lane_share: usize,
+}
+
+// SAFETY: sessions cross threads (scheduler fan-out, service
+// registry), but `Trainer` is not `Send` solely because its PJRT
+// engine variant holds `Rc<Executable>` handles. A `Session` is only
+// ever constructed over the native engine (`Session::new` rejects
+// `Engine::Pjrt`, and `Session::from_checkpoint` funnels through it),
+// nothing can swap the engine afterwards (`set_model` replaces only
+// the `Mlp`), and every native-engine field is `Send` (`Mlp`,
+// `Dataset`, `Box<dyn Optimizer>` where `Optimizer: Send`). So the
+// non-`Send` state is unreachable from any live `Session`.
+unsafe impl Send for Session {}
+
+impl Session {
+    /// Admit a new session for `cfg`. The config's process-global knobs
+    /// (`backend`, `worker_threads`) are stripped — one tenant must not
+    /// reconfigure the shared pool — and only the native engine is
+    /// accepted (PJRT state lives in device buffers and cannot be
+    /// checkpointed).
+    pub fn new(id: u64, name: &str, priority: usize, cfg: &TrainConfig) -> Result<Self, String> {
+        if !matches!(cfg.engine, Engine::Native) {
+            return Err("serve sessions require the native engine".into());
+        }
+        let mut cfg = cfg.clone();
+        cfg.backend = None;
+        cfg.worker_threads = None;
+        let trainer = Trainer::from_config(&cfg).map_err(|e| e.to_string())?;
+        let lp = LoopState::new(&trainer);
+        Ok(Session {
+            id,
+            name: name.to_string(),
+            priority: priority.clamp(1, 100),
+            status: if lp.is_done() { SessionStatus::Done } else { SessionStatus::Queued },
+            lp,
+            trainer,
+            timer: StepTimer::new(),
+            last_loss: f32::NAN,
+            last_val: None,
+            lane_share: 0,
+        })
+    }
+
+    /// Rebuild a session from a checkpoint (the restore half of
+    /// `serve::checkpoint`). Continuing the restored session is
+    /// bit-identical to never having snapshotted.
+    pub fn from_checkpoint(
+        id: u64,
+        name: &str,
+        priority: usize,
+        ck: &Checkpoint,
+    ) -> Result<Self, String> {
+        let mut s = Session::new(id, name, priority, &ck.config)?;
+        ck.apply(&mut s.trainer)?;
+        s.lp = LoopState::restore(&s.trainer, &ck.loop_snap)?;
+        s.last_loss = ck.loop_snap.final_loss;
+        if s.lp.is_done() {
+            s.status = SessionStatus::Done;
+        }
+        Ok(s)
+    }
+
+    /// Take exactly one optimizer step (latency recorded for the
+    /// p50/p95 stats).
+    pub fn step(&mut self) -> Result<StepOutcome> {
+        let t0 = std::time::Instant::now();
+        let out = self.lp.step_once(&mut self.trainer)?;
+        self.timer.record(t0.elapsed());
+        self.last_loss = out.loss;
+        if let Some(v) = out.val_metric {
+            self.last_val = Some(v);
+        }
+        Ok(out)
+    }
+
+    /// Run the validation metric on demand (does not advance the loop).
+    pub fn eval(&mut self) -> Result<f32> {
+        self.trainer.evaluate()
+    }
+
+    /// Advance up to `max_steps` steps, stopping early at completion.
+    /// Returns the number of steps taken; flips the status to `Done`
+    /// or `Failed` as appropriate. Called by the scheduler with the
+    /// configured quantum.
+    pub fn run_quantum(&mut self, max_steps: usize) -> usize {
+        let mut taken = 0;
+        for _ in 0..max_steps {
+            if self.lp.is_done() {
+                break;
+            }
+            match self.step() {
+                Ok(out) => {
+                    taken += 1;
+                    if out.done {
+                        self.status = SessionStatus::Done;
+                        break;
+                    }
+                }
+                Err(e) => {
+                    self.status = SessionStatus::Failed(format!("{e:#}"));
+                    break;
+                }
+            }
+        }
+        if self.lp.is_done() && self.status == SessionStatus::Running {
+            self.status = SessionStatus::Done;
+        }
+        taken
+    }
+
+    /// Current lifecycle state.
+    pub fn status(&self) -> &SessionStatus {
+        &self.status
+    }
+
+    /// Set the lifecycle state (scheduler/service use; sessions never
+    /// leave terminal states).
+    pub(crate) fn set_status(&mut self, s: SessionStatus) {
+        if !matches!(
+            self.status,
+            SessionStatus::Done | SessionStatus::Cancelled | SessionStatus::Failed(_)
+        ) {
+            self.status = s;
+        }
+    }
+
+    /// True once every configured step has run.
+    pub fn is_done(&self) -> bool {
+        self.lp.is_done()
+    }
+
+    /// Point-in-time state snapshot for status/stats reporting.
+    pub fn state(&self) -> SessionState {
+        SessionState {
+            id: self.id,
+            name: self.name.clone(),
+            priority: self.priority,
+            status: self.status.clone(),
+            error: match &self.status {
+                SessionStatus::Failed(e) => Some(e.clone()),
+                _ => None,
+            },
+            step: self.lp.step(),
+            total_steps: self.lp.total_steps(),
+            epoch: self.lp.epoch(),
+            last_loss: self.last_loss,
+            last_val_metric: self.last_val,
+            p50_step_ms: self.timer.percentile_ms(50.0),
+            p95_step_ms: self.timer.percentile_ms(95.0),
+            lane_share: self.lane_share,
+        }
+    }
+
+    /// Snapshot everything needed to resume this session elsewhere.
+    pub fn checkpoint(&self) -> Result<Checkpoint, String> {
+        Checkpoint::capture(&self.trainer, &self.lp)
+    }
+
+    /// Lifetime step-latency samples (for stats aggregation).
+    pub fn timer(&self) -> &StepTimer {
+        &self.timer
+    }
+
+    /// The underlying trainer (read access for tests/examples).
+    pub fn trainer(&self) -> &Trainer {
+        &self.trainer
+    }
+
+    /// FNV-1a digest over the model's exact weight + bias bits — the
+    /// equality witness used by the checkpoint and lane-independence
+    /// tests.
+    pub fn digest(&self) -> u64 {
+        model_digest(self.trainer.model().expect("native session has a model"))
+    }
+}
+
+/// FNV-1a 64-bit digest over a model's parameter bits. Two models
+/// digest equal iff every weight and bias is bit-identical.
+pub fn model_digest(m: &Mlp) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut upd = |bits: u32| {
+        for b in bits.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    for w in &m.weights {
+        for v in w.data() {
+            upd(v.to_bits());
+        }
+    }
+    for bias in &m.biases {
+        for v in bias {
+            upd(v.to_bits());
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{LrSchedule, ModelArch};
+
+    fn tiny_cfg(optimizer: &str, steps: u64) -> TrainConfig {
+        TrainConfig {
+            name: format!("serve-{optimizer}"),
+            dataset: "c10-small".into(),
+            seed: 11,
+            arch: ModelArch::Classifier { hidden: vec![16] },
+            optim: crate::config::OptimConfig {
+                algorithm: optimizer.into(),
+                hp: Default::default(),
+            },
+            engine: Engine::Native,
+            epochs: 2,
+            batch_size: 64,
+            base_lr: 0.05,
+            lr_schedule: LrSchedule::Cosine,
+            warmup_steps: 0,
+            max_steps: Some(steps),
+            eval_every: 1,
+            backend: None,
+            worker_threads: None,
+        }
+    }
+
+    #[test]
+    fn session_steps_to_completion() {
+        let mut s = Session::new(1, "t", 1, &tiny_cfg("eva", 12)).unwrap();
+        assert_eq!(s.status(), &SessionStatus::Queued);
+        s.set_status(SessionStatus::Running);
+        let mut total = 0;
+        while !s.is_done() {
+            total += s.run_quantum(5);
+        }
+        assert_eq!(total, 12);
+        assert_eq!(s.status(), &SessionStatus::Done);
+        assert_eq!(s.state().step, 12);
+        assert!(s.state().p50_step_ms >= 0.0);
+        // Terminal states stick.
+        s.set_status(SessionStatus::Running);
+        assert_eq!(s.status(), &SessionStatus::Done);
+        // eval works on demand.
+        assert!(s.eval().unwrap().is_finite());
+    }
+
+    #[test]
+    fn session_rejects_pjrt_and_strips_global_knobs() {
+        let mut cfg = tiny_cfg("eva", 4);
+        cfg.engine = Engine::Pjrt { model: "quickstart".into() };
+        assert!(Session::new(1, "x", 1, &cfg).is_err());
+        // A config carrying a backend choice must not reconfigure the
+        // process-global pool when admitted.
+        let _serial = crate::backend::TEST_GLOBAL_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let mut cfg = tiny_cfg("sgd", 4);
+        cfg.backend = Some("threads:2".into());
+        let before = crate::backend::global().label();
+        let _s = Session::new(2, "y", 1, &cfg).unwrap();
+        assert_eq!(crate::backend::global().label(), before);
+    }
+}

@@ -39,6 +39,12 @@ impl StepTimer {
         s[idx.min(s.len() - 1)] as f64 / 1000.0
     }
 
+    /// Fold another timer's samples into this one (the serve stats
+    /// endpoint aggregates per-session timers this way).
+    pub fn merge(&mut self, other: &StepTimer) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+    }
+
     /// Mean excluding the first `k` warmup samples (JIT/caches).
     pub fn steady_mean_ms(&self, k: usize) -> f64 {
         if self.samples_us.len() <= k {

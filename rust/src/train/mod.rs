@@ -12,7 +12,7 @@ pub use metrics::{Metrics, StepTimer};
 use anyhow::{anyhow, Result};
 
 use crate::config::{Engine, TrainConfig};
-use crate::data::{by_name, Batcher, Dataset, Task};
+use crate::data::{by_name, Batcher, BatcherSnapshot, Dataset, Task};
 use crate::nn::{Mlp, StatsMode};
 use crate::optim::{by_name as optim_by_name, Optimizer, StepCtx};
 use crate::runtime::{HostArray, Runtime, StepDriver, StepHp, StepKind};
@@ -135,6 +135,23 @@ impl Trainer {
         }
     }
 
+    /// The optimizer (native engine only).
+    pub fn optimizer(&self) -> Option<&dyn Optimizer> {
+        match &self.engine {
+            EngineState::Native { optimizer, .. } => Some(optimizer.as_ref()),
+            _ => None,
+        }
+    }
+
+    /// Mutable optimizer access (native engine only) — checkpoint
+    /// restore imports exported state through this.
+    pub fn optimizer_mut(&mut self) -> Option<&mut dyn Optimizer> {
+        match &mut self.engine {
+            EngineState::Native { optimizer, .. } => Some(optimizer.as_mut()),
+            _ => None,
+        }
+    }
+
     /// Replace the native model (finetuning warm starts). No-op on the
     /// PJRT engine.
     pub fn set_model(&mut self, m: Mlp) {
@@ -150,81 +167,15 @@ impl Trainer {
         self.cfg.max_steps.map_or(by_epochs, |m| m.min(by_epochs).max(1))
     }
 
-    /// Run the full training loop.
+    /// Run the full training loop (a thin driver over [`LoopState`] —
+    /// the resumable decomposition the `serve` session layer steps
+    /// one quantum at a time).
     pub fn run(&mut self) -> Result<Report> {
-        let total_steps = self.total_steps();
-        let per_epoch = self.dataset.train.len().div_ceil(self.cfg.batch_size);
-        let mut batcher =
-            Batcher::new(self.dataset.train.len(), self.cfg.batch_size, self.cfg.seed ^ 0xbeef);
-        let mut history = Vec::new();
-        let mut step: u64 = 0;
-        let mut final_loss = f32::NAN;
-        let (mut best_acc, mut best_loss) = (0.0f32, f32::MAX);
-        let run_start = std::time::Instant::now();
-        for epoch in 0..self.cfg.epochs {
-            let epoch_start = std::time::Instant::now();
-            let mut loss_sum = 0.0f64;
-            let mut nsteps = 0usize;
-            let mut step_timer = StepTimer::new();
-            let budget_hit = loop {
-                if nsteps >= per_epoch {
-                    break false;
-                }
-                if step >= total_steps {
-                    break true;
-                }
-                let lr = self.cfg.lr_schedule.lr_at(
-                    self.cfg.base_lr,
-                    step,
-                    total_steps,
-                    self.cfg.warmup_steps,
-                );
-                let idx = batcher.next_indices().to_vec();
-                let t0 = std::time::Instant::now();
-                let loss = self.train_step(&idx, lr, step)?;
-                step_timer.record(t0.elapsed());
-                loss_sum += loss as f64;
-                nsteps += 1;
-                step += 1;
-                final_loss = loss;
-            };
-            // Record the epoch (including a partial epoch cut short by
-            // max_steps) so reports always carry at least one entry.
-            if nsteps > 0 || !budget_hit {
-                let val_metric = self.evaluate()?;
-                match self.dataset.task {
-                    Task::Classification => best_acc = best_acc.max(val_metric),
-                    Task::Autoencoding => best_loss = best_loss.min(val_metric),
-                }
-                history.push(EpochMetrics {
-                    epoch,
-                    train_loss: (loss_sum / nsteps.max(1) as f64) as f32,
-                    val_metric,
-                    wall_time_s: epoch_start.elapsed().as_secs_f64(),
-                    mean_step_ms: step_timer.mean_ms(),
-                });
-            }
-            if budget_hit {
-                break;
-            }
+        let mut lp = LoopState::new(self);
+        while !lp.is_done() {
+            lp.step_once(self)?;
         }
-        let mean_step_ms = if history.is_empty() {
-            0.0
-        } else {
-            history.iter().map(|h| h.mean_step_ms).sum::<f64>() / history.len() as f64
-        };
-        Ok(Report {
-            config_name: self.cfg.name.clone(),
-            optimizer: self.cfg.optim.algorithm.clone(),
-            final_loss,
-            best_val_acc: best_acc,
-            best_val_loss: best_loss,
-            history,
-            total_time_s: run_start.elapsed().as_secs_f64(),
-            mean_step_ms,
-            optimizer_state_bytes: self.optimizer_state_bytes(),
-            steps: step,
-        })
+        Ok(lp.report(self))
     }
 
     /// One optimizer step over the given sample indices.
@@ -281,6 +232,283 @@ impl Trainer {
             EngineState::Pjrt { driver } => driver.optimizer_state_bytes(),
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Resumable loop state
+// ---------------------------------------------------------------------------
+
+/// What one [`LoopState::step_once`] call did.
+#[derive(Clone, Copy, Debug)]
+pub struct StepOutcome {
+    /// Global step count *after* this step.
+    pub step: u64,
+    /// Training loss of this step's batch.
+    pub loss: f32,
+    /// `Some(epoch)` when this step closed an epoch (validation ran
+    /// and a history entry was recorded).
+    pub epoch_closed: Option<usize>,
+    /// The epoch's validation metric, when `epoch_closed`.
+    pub val_metric: Option<f32>,
+    /// True when the run is complete after this step.
+    pub done: bool,
+}
+
+/// The resumable decomposition of the training loop.
+///
+/// [`Trainer::run`] used to own a monolithic epoch loop; the loop's
+/// entire mutable state now lives here so a run can be advanced one
+/// step at a time ([`LoopState::step_once`]), paused between steps,
+/// snapshotted ([`LoopState::snapshot`]) and restored
+/// ([`LoopState::restore`]) — the substrate of `serve`'s time-sliced
+/// sessions. Stepping to completion is **bit-identical** to the old
+/// all-at-once loop: batch order, learning rates and epoch boundaries
+/// are pure functions of this state.
+///
+/// `LoopState` deliberately does not own the [`Trainer`]; every method
+/// takes it explicitly, so a session can keep the two side by side and
+/// checkpoint them together.
+pub struct LoopState {
+    batcher: Batcher,
+    total_steps: u64,
+    per_epoch: usize,
+    epochs: usize,
+    step: u64,
+    epoch: usize,
+    nsteps_in_epoch: usize,
+    loss_sum: f64,
+    final_loss: f32,
+    best_acc: f32,
+    best_loss: f32,
+    history: Vec<EpochMetrics>,
+    epoch_timer: StepTimer,
+    /// Active wall-clock accumulated in the current epoch (pauses
+    /// between `step_once` calls are excluded by construction).
+    epoch_wall_s: f64,
+    total_wall_s: f64,
+    done: bool,
+}
+
+impl LoopState {
+    /// Fresh loop state for `trainer` (step 0, epoch 0).
+    pub fn new(trainer: &Trainer) -> Self {
+        let total_steps = trainer.total_steps();
+        let per_epoch = trainer.dataset.train.len().div_ceil(trainer.cfg.batch_size);
+        let batcher = Batcher::new(
+            trainer.dataset.train.len(),
+            trainer.cfg.batch_size,
+            trainer.cfg.seed ^ 0xbeef,
+        );
+        let epochs = trainer.cfg.epochs;
+        LoopState {
+            batcher,
+            total_steps,
+            per_epoch,
+            epochs,
+            step: 0,
+            epoch: 0,
+            nsteps_in_epoch: 0,
+            loss_sum: 0.0,
+            final_loss: f32::NAN,
+            best_acc: 0.0,
+            best_loss: f32::MAX,
+            history: Vec::new(),
+            epoch_timer: StepTimer::new(),
+            epoch_wall_s: 0.0,
+            total_wall_s: 0.0,
+            done: total_steps == 0 || epochs == 0,
+        }
+    }
+
+    /// True once every step has been taken (further `step_once` calls
+    /// error).
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Global step counter (steps taken so far).
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    /// Total steps this run will take.
+    pub fn total_steps(&self) -> u64 {
+        self.total_steps
+    }
+
+    /// Current epoch index (0-based; the epoch the *next* step belongs
+    /// to).
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// Completed-epoch records so far.
+    pub fn history(&self) -> &[EpochMetrics] {
+        &self.history
+    }
+
+    /// Take exactly one optimizer step, closing the epoch (validation +
+    /// history entry) when it is the epoch's last.
+    pub fn step_once(&mut self, trainer: &mut Trainer) -> Result<StepOutcome> {
+        if self.done {
+            return Err(anyhow!("training loop already finished"));
+        }
+        let wall0 = std::time::Instant::now();
+        let lr = trainer.cfg.lr_schedule.lr_at(
+            trainer.cfg.base_lr,
+            self.step,
+            self.total_steps,
+            trainer.cfg.warmup_steps,
+        );
+        let idx = self.batcher.next_indices().to_vec();
+        let t0 = std::time::Instant::now();
+        let loss = trainer.train_step(&idx, lr, self.step)?;
+        self.epoch_timer.record(t0.elapsed());
+        self.loss_sum += loss as f64;
+        self.nsteps_in_epoch += 1;
+        self.step += 1;
+        self.final_loss = loss;
+        let mut outcome = StepOutcome {
+            step: self.step,
+            loss,
+            epoch_closed: None,
+            val_metric: None,
+            done: false,
+        };
+        if self.nsteps_in_epoch >= self.per_epoch || self.step >= self.total_steps {
+            let val_metric = trainer.evaluate()?;
+            match trainer.dataset.task {
+                Task::Classification => self.best_acc = self.best_acc.max(val_metric),
+                Task::Autoencoding => self.best_loss = self.best_loss.min(val_metric),
+            }
+            let epoch_wall = self.epoch_wall_s + wall0.elapsed().as_secs_f64();
+            self.history.push(EpochMetrics {
+                epoch: self.epoch,
+                train_loss: (self.loss_sum / self.nsteps_in_epoch.max(1) as f64) as f32,
+                val_metric,
+                wall_time_s: epoch_wall,
+                mean_step_ms: self.epoch_timer.mean_ms(),
+            });
+            outcome.epoch_closed = Some(self.epoch);
+            outcome.val_metric = Some(val_metric);
+            self.epoch += 1;
+            self.nsteps_in_epoch = 0;
+            self.loss_sum = 0.0;
+            self.epoch_timer = StepTimer::new();
+            self.epoch_wall_s = 0.0;
+            if self.step >= self.total_steps || self.epoch >= self.epochs {
+                self.done = true;
+                outcome.done = true;
+            }
+        } else {
+            self.epoch_wall_s += wall0.elapsed().as_secs_f64();
+        }
+        self.total_wall_s += wall0.elapsed().as_secs_f64();
+        Ok(outcome)
+    }
+
+    /// Build the final [`Report`] (valid at any point; `steps` and
+    /// `history` reflect progress so far).
+    pub fn report(&self, trainer: &Trainer) -> Report {
+        let mean_step_ms = if self.history.is_empty() {
+            0.0
+        } else {
+            self.history.iter().map(|h| h.mean_step_ms).sum::<f64>() / self.history.len() as f64
+        };
+        Report {
+            config_name: trainer.cfg.name.clone(),
+            optimizer: trainer.cfg.optim.algorithm.clone(),
+            final_loss: self.final_loss,
+            best_val_acc: self.best_acc,
+            best_val_loss: self.best_loss,
+            history: self.history.clone(),
+            total_time_s: self.total_wall_s,
+            mean_step_ms,
+            optimizer_state_bytes: trainer.optimizer_state_bytes(),
+            steps: self.step,
+        }
+    }
+
+    /// Capture the loop's exact state for checkpointing. The restored
+    /// loop replays the identical batch/LR stream; only the in-flight
+    /// epoch's timing samples are dropped (timing is informational).
+    pub fn snapshot(&self) -> LoopSnapshot {
+        LoopSnapshot {
+            batcher: self.batcher.snapshot(),
+            step: self.step,
+            epoch: self.epoch as u64,
+            nsteps_in_epoch: self.nsteps_in_epoch as u64,
+            loss_sum: self.loss_sum,
+            final_loss: self.final_loss,
+            best_acc: self.best_acc,
+            best_loss: self.best_loss,
+            epoch_wall_s: self.epoch_wall_s,
+            total_wall_s: self.total_wall_s,
+            history: self.history.clone(),
+        }
+    }
+
+    /// Rebuild loop state from a snapshot taken against an equivalently
+    /// configured trainer (inverse of [`LoopState::snapshot`]).
+    pub fn restore(trainer: &Trainer, s: &LoopSnapshot) -> Result<Self, String> {
+        let fresh = LoopState::new(trainer);
+        if s.step > fresh.total_steps {
+            return Err(format!(
+                "loop snapshot at step {} exceeds configured total {}",
+                s.step, fresh.total_steps
+            ));
+        }
+        let epoch = s.epoch as usize;
+        if epoch > fresh.epochs {
+            return Err(format!("loop snapshot at epoch {epoch} exceeds {}", fresh.epochs));
+        }
+        let done = s.step >= fresh.total_steps || epoch >= fresh.epochs;
+        Ok(LoopState {
+            batcher: Batcher::restore(&s.batcher)?,
+            total_steps: fresh.total_steps,
+            per_epoch: fresh.per_epoch,
+            epochs: fresh.epochs,
+            step: s.step,
+            epoch,
+            nsteps_in_epoch: s.nsteps_in_epoch as usize,
+            loss_sum: s.loss_sum,
+            final_loss: s.final_loss,
+            best_acc: s.best_acc,
+            best_loss: s.best_loss,
+            history: s.history.clone(),
+            epoch_timer: StepTimer::new(),
+            epoch_wall_s: s.epoch_wall_s,
+            total_wall_s: s.total_wall_s,
+            done,
+        })
+    }
+}
+
+/// Serializable [`LoopState`] (see [`LoopState::snapshot`]).
+#[derive(Clone, Debug)]
+pub struct LoopSnapshot {
+    /// Mini-batch iterator state.
+    pub batcher: BatcherSnapshot,
+    /// Global step counter.
+    pub step: u64,
+    /// Current epoch index.
+    pub epoch: u64,
+    /// Steps taken inside the current epoch.
+    pub nsteps_in_epoch: u64,
+    /// Running loss sum of the current epoch.
+    pub loss_sum: f64,
+    /// Loss of the most recent step.
+    pub final_loss: f32,
+    /// Best validation accuracy so far (classification).
+    pub best_acc: f32,
+    /// Best (lowest) validation loss so far (autoencoding).
+    pub best_loss: f32,
+    /// Active wall-clock accumulated in the current epoch.
+    pub epoch_wall_s: f64,
+    /// Active wall-clock accumulated over the whole run.
+    pub total_wall_s: f64,
+    /// Completed-epoch records.
+    pub history: Vec<EpochMetrics>,
 }
 
 /// Pack a (possibly short) batch into the fixed PJRT batch size with
@@ -345,6 +573,56 @@ mod tests {
             assert!(report.steps == 40);
             assert!(report.optimizer_state_bytes > 0 || opt == "sgd");
         }
+    }
+
+    #[test]
+    fn step_once_matches_monolithic_run_exactly() {
+        // Driving the loop one step at a time must reproduce run()
+        // bit-for-bit: same weights, same history, same step count.
+        let cfg = tiny_cfg("eva");
+        let mut a = Trainer::from_config(&cfg).unwrap();
+        let ra = a.run().unwrap();
+        let mut b = Trainer::from_config(&cfg).unwrap();
+        let mut lp = LoopState::new(&b);
+        let mut outcomes = 0;
+        while !lp.is_done() {
+            let o = lp.step_once(&mut b).unwrap();
+            assert_eq!(o.step, lp.step());
+            outcomes += 1;
+        }
+        assert!(lp.step_once(&mut b).is_err(), "done loop must refuse to step");
+        let rb = lp.report(&b);
+        assert_eq!(outcomes as u64, ra.steps);
+        assert_eq!(rb.steps, ra.steps);
+        assert_eq!(rb.history.len(), ra.history.len());
+        for (ha, hb) in ra.history.iter().zip(&rb.history) {
+            assert_eq!(ha.epoch, hb.epoch);
+            assert_eq!(ha.train_loss.to_bits(), hb.train_loss.to_bits());
+            assert_eq!(ha.val_metric.to_bits(), hb.val_metric.to_bits());
+        }
+        let (wa, wb) = (a.model().unwrap(), b.model().unwrap());
+        for (ta, tb) in wa.weights.iter().zip(&wb.weights) {
+            assert_eq!(ta.data(), tb.data());
+        }
+    }
+
+    #[test]
+    fn loop_snapshot_restore_resumes_identically() {
+        let cfg = tiny_cfg("sgd");
+        let mut a = Trainer::from_config(&cfg).unwrap();
+        let mut lp = LoopState::new(&a);
+        for _ in 0..17 {
+            lp.step_once(&mut a).unwrap();
+        }
+        let snap = lp.snapshot();
+        let restored = LoopState::restore(&a, &snap).unwrap();
+        assert_eq!(restored.step(), 17);
+        assert_eq!(restored.epoch(), lp.epoch());
+        assert!(!restored.is_done());
+        // A snapshot past the configured budget is rejected.
+        let mut bad = snap.clone();
+        bad.step = 10_000;
+        assert!(LoopState::restore(&a, &bad).is_err());
     }
 
     #[test]

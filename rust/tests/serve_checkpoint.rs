@@ -1,0 +1,127 @@
+//! Checkpoint/restore bit-identity, per optimizer.
+//!
+//! The contract (ISSUE 3 acceptance): run K steps → snapshot →
+//! serialize → deserialize into a fresh session ("fresh process
+//! state": nothing survives but the bytes) → run K more steps, and
+//! the weights digest must equal a 2K-step uninterrupted run — for
+//! **every** optimizer in the zoo, including the interval-based ones
+//! snapshotted mid-interval with stale cached inverses.
+
+use eva::config::{ModelArch, TrainConfig};
+use eva::serve::{Checkpoint, Session};
+
+fn cfg(optimizer: &str, total_steps: u64, interval: usize) -> TrainConfig {
+    let mut c = TrainConfig {
+        name: format!("ckpt-{optimizer}"),
+        dataset: "c10-small".into(),
+        seed: 23,
+        arch: ModelArch::Classifier { hidden: vec![10] },
+        epochs: 1,
+        batch_size: 32,
+        base_lr: 0.05,
+        max_steps: Some(total_steps),
+        ..TrainConfig::default()
+    };
+    c.optim.algorithm = optimizer.into();
+    c.optim.hp.update_interval = interval;
+    c.optim.hp.mfac_history = 6;
+    c
+}
+
+fn run_to_completion(s: &mut Session) {
+    while !s.is_done() {
+        assert!(s.run_quantum(64) > 0, "session stalled");
+    }
+}
+
+/// Digest of an uninterrupted `total` -step run.
+fn digest_uninterrupted(c: &TrainConfig) -> u64 {
+    let mut s = Session::new(100, "uninterrupted", 1, c).unwrap();
+    run_to_completion(&mut s);
+    s.digest()
+}
+
+/// Digest of a run snapshotted at step `k`, round-tripped through the
+/// binary format, restored into a fresh session and finished.
+fn digest_resumed(c: &TrainConfig, k: usize) -> u64 {
+    let mut s = Session::new(200, "interrupted", 1, c).unwrap();
+    let mut left = k;
+    while left > 0 {
+        let took = s.run_quantum(left);
+        assert!(took > 0, "session stalled before snapshot point");
+        left -= took;
+    }
+    assert_eq!(s.state().step, k as u64);
+    let bytes = s.checkpoint().unwrap().to_bytes();
+    drop(s); // nothing of the original session survives but the bytes
+    let ck = Checkpoint::from_bytes(&bytes).unwrap();
+    let mut r = Session::from_checkpoint(201, "resumed", 1, &ck).unwrap();
+    assert_eq!(r.state().step, k as u64, "restored session lost its cursor");
+    run_to_completion(&mut r);
+    assert_eq!(r.state().step, c.max_steps.unwrap());
+    r.digest()
+}
+
+#[test]
+fn checkpoint_roundtrip_is_bit_identical_for_every_optimizer() {
+    for optimizer in [
+        "sgd", "adam", "adagrad", "kfac", "foof", "shampoo", "mfac", "eva", "eva-f", "eva-s",
+    ] {
+        let c = cfg(optimizer, 10, 1);
+        let full = digest_uninterrupted(&c);
+        // Snapshot both mid-run points: right after a step and right
+        // before the budget ends.
+        for k in [4usize, 7] {
+            let resumed = digest_resumed(&c, k);
+            assert_eq!(
+                resumed, full,
+                "{optimizer}: resume-at-{k} diverged from uninterrupted run"
+            );
+        }
+    }
+}
+
+#[test]
+fn checkpoint_mid_interval_preserves_stale_preconditioners() {
+    // Interval-based optimizers cache inverses/roots between refreshes;
+    // a snapshot taken mid-interval must carry the *stale* cache, not
+    // recompute it, or the resumed trajectory diverges.
+    for optimizer in ["kfac", "foof", "shampoo"] {
+        let c = cfg(optimizer, 9, 4); // refreshes at steps 0, 4, 8
+        let full = digest_uninterrupted(&c);
+        for k in [2usize, 5, 6] {
+            let resumed = digest_resumed(&c, k);
+            assert_eq!(
+                resumed, full,
+                "{optimizer}@4: resume-at-{k} diverged (stale cache lost?)"
+            );
+        }
+    }
+}
+
+#[test]
+fn checkpoint_across_epoch_boundary_preserves_batcher_stream() {
+    // Cross an epoch boundary (per-epoch = ceil(2000/32) = 63): the
+    // restored batcher must continue the *second* epoch's shuffled
+    // order from its RNG state, not restart.
+    let mut c = cfg("eva", 70, 1);
+    c.epochs = 2;
+    let full = digest_uninterrupted(&c);
+    for k in [62usize, 63, 65] {
+        let resumed = digest_resumed(&c, k);
+        assert_eq!(resumed, full, "epoch-boundary resume-at-{k} diverged");
+    }
+}
+
+#[test]
+fn restore_rejects_wrong_algorithm_and_corrupt_bytes() {
+    let c = cfg("eva", 6, 1);
+    let mut s = Session::new(1, "x", 1, &c).unwrap();
+    s.run_quantum(3);
+    let mut ck = s.checkpoint().unwrap();
+    // Rewrite the config to a different optimizer: the state bag's
+    // algorithm tag must catch the mismatch.
+    ck.config.optim.algorithm = "sgd".into();
+    let err = Session::from_checkpoint(2, "y", 1, &ck).unwrap_err();
+    assert!(err.contains("eva"), "{err}");
+}

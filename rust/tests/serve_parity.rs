@@ -1,0 +1,193 @@
+//! Scheduler lane-count independence (ISSUE 3 acceptance, the serve
+//! sibling of backend_parity.rs).
+//!
+//! Two guarantees, both *bit*-level:
+//!
+//! 1. A session run under the scheduler — concurrently with other
+//!    tenants, on whatever lane carve its priority earned — produces
+//!    exactly the weights it produces when stepped alone on the
+//!    sequential backend.
+//! 2. The carve itself doesn't matter: seq, threads:2 and threads:6
+//!    all yield identical digests (the backend determinism contract
+//!    composed through `split_weighted` + `with_backend`).
+
+use std::io::{BufRead, BufReader, Write};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use eva::backend::{self, BackendChoice};
+use eva::config::{ModelArch, TrainConfig};
+use eva::serve::client::{LocalClient, ServeClient, TcpClient};
+use eva::serve::{ServeConfig, Server, Service, Session};
+
+/// Serializes tests that swap the process-global backend.
+static GLOBAL_BACKEND: Mutex<()> = Mutex::new(());
+
+fn tenant_cfg(seed: u64, optimizer: &str) -> TrainConfig {
+    let mut c = TrainConfig {
+        name: format!("tenant-{seed}"),
+        dataset: "c10-small".into(),
+        seed,
+        arch: ModelArch::Classifier { hidden: vec![16] },
+        epochs: 1,
+        batch_size: 32,
+        base_lr: 0.05,
+        max_steps: Some(24),
+        ..TrainConfig::default()
+    };
+    c.optim.algorithm = optimizer.into();
+    c
+}
+
+/// Step a session to completion alone, no scheduler involved.
+fn solo_digest(cfg: &TrainConfig) -> u64 {
+    let mut s = Session::new(0, "solo", 1, cfg).unwrap();
+    while !s.is_done() {
+        assert!(s.run_quantum(16) > 0);
+    }
+    s.digest()
+}
+
+/// Run both tenants concurrently under a service and return their
+/// digests.
+fn scheduled_digests(cfgs: &[(TrainConfig, usize)], quantum: usize) -> Vec<u64> {
+    let svc = Service::start(ServeConfig {
+        max_sessions: cfgs.len().max(1),
+        quantum_steps: quantum,
+        ..ServeConfig::default()
+    });
+    let mut client = LocalClient::new(&svc);
+    let ids: Vec<u64> = cfgs
+        .iter()
+        .map(|(c, prio)| client.submit(c, &c.name, *prio).unwrap())
+        .collect();
+    for &id in &ids {
+        client.wait_done(id, Duration::from_secs(300)).unwrap();
+    }
+    let digests = ids.iter().map(|&id| svc.model_digest(id).unwrap()).collect();
+    svc.shutdown();
+    digests
+}
+
+#[test]
+fn concurrent_sessions_match_solo_runs_on_every_carve() {
+    let _serial = GLOBAL_BACKEND.lock().unwrap_or_else(|e| e.into_inner());
+    let a = tenant_cfg(31, "eva");
+    let b = tenant_cfg(77, "eva-s");
+    // Ground truth: each tenant alone on the sequential backend.
+    let prev = backend::global();
+    backend::install(&BackendChoice::Sequential);
+    let solo_a = solo_digest(&a);
+    let solo_b = solo_digest(&b);
+    // Same tenants under the scheduler, across lane budgets and
+    // priority mixes. threads:6 with weights 2:1 carves 4/2 lanes;
+    // threads:2 carves 1/1 (both degrade to inline sequential); seq
+    // time-slices one quantum at a time.
+    for (choice, label) in [
+        (BackendChoice::Sequential, "seq"),
+        (BackendChoice::Threaded(2), "threads:2"),
+        (BackendChoice::Threaded(6), "threads:6"),
+    ] {
+        backend::install(&choice);
+        let digests = scheduled_digests(&[(a.clone(), 2), (b.clone(), 1)], 5);
+        assert_eq!(digests[0], solo_a, "tenant A diverged under {label}");
+        assert_eq!(digests[1], solo_b, "tenant B diverged under {label}");
+    }
+    backend::set_global(prev);
+}
+
+#[test]
+fn tcp_server_speaks_the_protocol_end_to_end() {
+    // Socket-level coverage: submit over TCP, read state, survive a
+    // malformed line, shut the service down over the wire.
+    let svc = Service::start(ServeConfig {
+        max_sessions: 2,
+        quantum_steps: 4,
+        ..ServeConfig::default()
+    });
+    let server = Server::start(svc.clone(), "127.0.0.1:0").unwrap();
+    let mut client = TcpClient::connect(server.addr()).unwrap();
+    let id = client.submit(&tenant_cfg(9, "eva"), "tcp-tenant", 1).unwrap();
+    let done = client.wait_done(id, Duration::from_secs(300)).unwrap();
+    assert_eq!(done.get_f64("step"), Some(24.0));
+    assert_eq!(done.get_str("status"), Some("done"));
+    let stats = client.stats().unwrap();
+    assert!(stats.get_f64("scheduler_steps").unwrap_or(0.0) >= 24.0);
+    // A malformed request gets an ok:false response, not a hangup.
+    {
+        let mut raw = std::net::TcpStream::connect(server.addr()).unwrap();
+        raw.write_all(b"this is not json\n").unwrap();
+        let mut line = String::new();
+        BufReader::new(raw.try_clone().unwrap()).read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":false"), "{line}");
+    }
+    // An oversized request (no-newline flood) is bounded: the server
+    // answers with an error and/or closes — it never accumulates the
+    // stream indefinitely.
+    {
+        let mut raw = std::net::TcpStream::connect(server.addr()).unwrap();
+        let chunk = vec![b'x'; 64 * 1024];
+        for _ in 0..40 {
+            // > MAX_LINE_BYTES in total
+            if raw.write_all(&chunk).is_err() {
+                break; // server already dropped us — that's a pass
+            }
+        }
+        let _ = raw.write_all(b"\n");
+        let mut line = String::new();
+        let n = BufReader::new(raw.try_clone().unwrap()).read_line(&mut line).unwrap_or(0);
+        assert!(
+            n == 0 || line.contains("\"ok\":false"),
+            "oversized request not rejected: {line}"
+        );
+    }
+    client.shutdown().unwrap();
+    server.join();
+    assert!(svc.is_stopped());
+}
+
+#[test]
+fn checkpoint_resume_through_the_service_matches_uninterrupted() {
+    // The full service-level loop: run → pause → checkpoint → cancel →
+    // restore from the file into a *new* session → finish; digest must
+    // equal the uninterrupted solo run. Exercises the protocol
+    // (in-process client speaks the same wire format as TCP).
+    let _serial = GLOBAL_BACKEND.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = backend::global();
+    backend::install(&BackendChoice::Threaded(4));
+    let cfg = tenant_cfg(55, "eva");
+    let dir = std::env::temp_dir().join("eva-serve-parity-ck");
+    let svc = Service::start(ServeConfig {
+        max_sessions: 4,
+        quantum_steps: 3,
+        checkpoint_dir: dir.to_string_lossy().into_owned(),
+        ..ServeConfig::default()
+    });
+    let mut client = LocalClient::new(&svc);
+    let id = client.submit(&cfg, "ck-tenant", 1).unwrap();
+    // Let it make some progress, then freeze it.
+    let deadline = std::time::Instant::now() + Duration::from_secs(120);
+    loop {
+        let st = client.status(id).unwrap();
+        let step = st.get_f64("step").unwrap_or(0.0) as u64;
+        let done = st.get_str("status") == Some("done");
+        if step >= 6 || done {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "no progress");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    client.pause(id).unwrap();
+    let path = client.checkpoint(id).unwrap();
+    client.cancel(id).unwrap();
+    // Restore into a fresh session (protocol path) and finish it.
+    let id2 = client.submit_checkpoint(&path, "restored", 1).unwrap();
+    client.wait_done(id2, Duration::from_secs(300)).unwrap();
+    let resumed = svc.model_digest(id2).unwrap();
+    svc.shutdown();
+    backend::install(&BackendChoice::Sequential);
+    let solo = solo_digest(&cfg);
+    backend::set_global(prev);
+    assert_eq!(resumed, solo, "service checkpoint→restore diverged");
+    let _ = std::fs::remove_dir_all(dir);
+}
