@@ -42,6 +42,7 @@ fn main() -> anyhow::Result<()> {
                 eval_every: 1,
                 backend: None,
                 worker_threads: None,
+                simd: None,
             };
             let mut t = Trainer::from_config(&cfg)?;
             let r = t.run()?;

@@ -88,6 +88,43 @@ fn main() {
         headline.0, headline.1
     );
 
+    // --- per-ISA rows: the same 512³ matmul under each f32x8 path ------
+    // Every ISA path is bit-identical to the auto-path reference above
+    // (asserted), so these rows isolate pure instruction-encoding
+    // throughput: scalar emulates the 8-lane tree, sse2 runs it on
+    // 128-bit halves, avx2 on one 256-bit register.
+    let best_lanes = *lanes.last().unwrap_or(&2);
+    for isa in eva::simd::available_isas() {
+        eva::simd::install(&eva::simd::SimdChoice::Force(isa)).unwrap();
+        let got = matmul_with(&Sequential, &a, &b);
+        assert!(
+            got.max_abs_diff(&reference) == 0.0,
+            "simd path {} diverged from the reference matmul",
+            isa.name()
+        );
+        let t_isa_seq = time(3, || {
+            std::hint::black_box(matmul_with(&Sequential, &a, &b));
+        });
+        println!(
+            "matmul {n}x{n}x{n}   {:<10} {:>9.1} ms  {:>6.2} GFLOP/s  (seq lane)",
+            format!("simd:{}", isa.name()),
+            t_isa_seq * 1e3,
+            flops / t_isa_seq / 1e9
+        );
+        let thr = BackendChoice::Threaded(best_lanes).build();
+        let t_isa_thr = time(3, || {
+            std::hint::black_box(matmul_with(&*thr, &a, &b));
+        });
+        println!(
+            "matmul {n}x{n}x{n}   {:<10} {:>9.1} ms  {:>6.2} GFLOP/s  (threads:{best_lanes})",
+            format!("simd:{}", isa.name()),
+            t_isa_thr * 1e3,
+            flops / t_isa_thr / 1e9
+        );
+    }
+    eva::simd::install(&eva::simd::SimdChoice::Auto).unwrap();
+    println!();
+
     // --- transpose-free variants at 384 -------------------------------
     let n = 384usize;
     let a = random(&mut rng, n, n);

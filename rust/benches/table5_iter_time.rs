@@ -31,6 +31,7 @@ fn mean_step_ms(optimizer: &str, interval: usize, engine: Engine) -> anyhow::Res
         eval_every: 1,
         backend: None,
         worker_threads: None,
+        simd: None,
     };
     let mut t = Trainer::from_config(&cfg)?;
     let _warm = t.run()?; // includes compile/alloc warmup inside

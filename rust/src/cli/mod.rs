@@ -100,8 +100,18 @@ impl Cli {
     }
 }
 
-/// Options every command accepts (process-wide knobs).
-pub const GLOBAL_OPTIONS: &[&str] = &["backend", "worker-threads"];
+/// Options every command accepts (process-wide knobs). `--simd` rides
+/// with `--backend` everywhere: both select a compute path whose
+/// numerics are bit-identical, so they apply uniformly to every
+/// subcommand.
+pub const GLOBAL_OPTIONS: &[&str] = &["backend", "worker-threads", "simd"];
+
+/// Every command registered in [`known_options`] (canonical names
+/// only; the parser also accepts `""`/`--help`/`-h` as `help`). Tests
+/// iterate this to keep [`USAGE`] and [`Cli::reject_unknown`] in sync
+/// instead of hand-maintaining a second list.
+pub const KNOWN_COMMANDS: &[&str] =
+    &["train", "serve", "experiment", "validate", "list", "info", "help"];
 
 /// Per-command accepted options and flags.
 pub struct CommandSpec {
@@ -157,8 +167,9 @@ eva — vectorized second-order optimization (paper reproduction)
 USAGE:
   eva train [--config FILE | --preset NAME] [--optimizer ALG] [--dataset D]
             [--epochs N] [--lr F] [--batch N] [--seed N] [--engine native|pjrt:MODEL]
-            [--interval N] [--damping F] [--max-steps N] [--backend seq|threads[:N]]
-            [--worker-threads N]
+            [--interval N] [--damping F] [--max-steps N] [--schedule NAME]
+            [--hidden D1,D2,...] [--backend seq|threads[:N]]
+            [--worker-threads N] [--simd auto|avx2|sse2|scalar]
   eva serve [--config FILE] [--addr HOST:PORT] [--max-sessions N]
             [--checkpoint-dir DIR] [--quantum N]
   eva experiment <id|all>     regenerate a paper table/figure (see DESIGN.md §5)
@@ -177,6 +188,12 @@ OPTIONS:
                               worker its own N-lane sub-pool instead of
                               carving the --backend lane budget evenly
                               across workers. Numerics are identical.
+  --simd auto|avx2|sse2|scalar
+                              ISA path for the f32x8 micro-kernels (auto =
+                              best available; forcing an unavailable path is
+                              an error). Applies to every command; numerics
+                              are bit-identical across paths — see
+                              docs/KERNELS.md.
 
 SERVE OPTIONS (multi-tenant training-session service):
   --addr HOST:PORT            control-plane listen address (newline-delimited
@@ -194,6 +211,7 @@ EXAMPLES:
   eva train --dataset c100-small --optimizer kfac --interval 10 --epochs 8
   eva train --engine pjrt:quickstart --optimizer eva --epochs 4
   eva train --preset c100-bench --optimizer shampoo --backend threads:8
+  eva train --preset quickstart --optimizer eva --simd scalar   # same bits, slower
   eva serve --backend threads:8 --max-sessions 4 --checkpoint-dir /tmp/ck
   eva experiment table5 --backend threads
   eva experiment table8 --backend threads:8 --worker-threads 2
@@ -250,8 +268,10 @@ mod tests {
         // Valid invocations pass, including global options everywhere.
         for ok in [
             "train --preset quickstart --optimizer eva --backend threads:2",
+            "train --preset quickstart --simd scalar",
             "serve --addr 127.0.0.1:0 --max-sessions 2 --checkpoint-dir /tmp/x",
             "experiment table5 --backend threads",
+            "experiment table5 --simd avx2",
             "list",
         ] {
             let c = Cli::parse(&argv(ok)).unwrap();
@@ -271,5 +291,42 @@ mod tests {
         assert!(USAGE.contains("eva serve"));
         assert!(USAGE.contains("--checkpoint-dir"));
         assert!(USAGE.contains("--max-sessions"));
+    }
+
+    /// USAGE and `reject_unknown` stay in sync by construction: walk
+    /// the registry ([`KNOWN_COMMANDS`] × [`known_options`] +
+    /// [`GLOBAL_OPTIONS`]) instead of a hand-maintained list — every
+    /// registered option must appear in USAGE, and every one must be
+    /// accepted by `reject_unknown` on its command.
+    #[test]
+    fn usage_and_registry_stay_in_sync() {
+        for cmd in KNOWN_COMMANDS {
+            let spec = known_options(cmd).unwrap_or_else(|| {
+                panic!("'{cmd}' listed in KNOWN_COMMANDS but not in known_options")
+            });
+            for opt in spec.options.iter().chain(GLOBAL_OPTIONS) {
+                assert!(
+                    USAGE.contains(&format!("--{opt}")),
+                    "USAGE is missing --{opt} (accepted by '{cmd}')"
+                );
+                let c = Cli::parse(&[cmd.to_string(), format!("--{opt}"), "x".into()]).unwrap();
+                c.reject_unknown()
+                    .unwrap_or_else(|e| panic!("'{cmd} --{opt} x' rejected: {e}"));
+            }
+            for flag in spec.flags {
+                assert!(
+                    USAGE.contains(&format!("--{flag}")),
+                    "USAGE is missing --{flag} (accepted by '{cmd}')"
+                );
+                let c = Cli::parse(&[cmd.to_string(), format!("--{flag}")]).unwrap();
+                c.reject_unknown()
+                    .unwrap_or_else(|e| panic!("'{cmd} --{flag}' rejected: {e}"));
+            }
+        }
+        // And every command name itself shows up in USAGE (help is the
+        // USAGE text).
+        for cmd in KNOWN_COMMANDS.iter().filter(|c| **c != "help") {
+            assert!(USAGE.contains(&format!("eva {cmd}")), "USAGE missing 'eva {cmd}'");
+        }
     }
 }

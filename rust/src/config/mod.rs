@@ -153,6 +153,12 @@ pub struct TrainConfig {
     /// carve-evenly-from-the-backend fallback) — see
     /// [`crate::coordinator::dp`].
     pub worker_threads: Option<usize>,
+    /// ISA path for the `f32x8` micro-kernels
+    /// (`auto` | `avx2` | `sse2` | `scalar`). `None` inherits the
+    /// process-wide path (CLI `--simd`, the `EVA_SIMD` env var, or the
+    /// auto-detected best) — see [`crate::simd`]. Numerics are
+    /// bit-identical across paths, so this is a pure performance knob.
+    pub simd: Option<String>,
 }
 
 impl Default for TrainConfig {
@@ -173,6 +179,7 @@ impl Default for TrainConfig {
             eval_every: 1,
             backend: None,
             worker_threads: None,
+            simd: None,
         }
     }
 }
@@ -282,6 +289,14 @@ impl TrainConfig {
                     }
                     c.worker_threads = Some(n);
                 }
+                "simd" => {
+                    let s = val.as_str().ok_or("simd: string")?;
+                    // Validate the spelling eagerly; availability is
+                    // checked at install time (a config written on an
+                    // AVX2 host must still *parse* elsewhere).
+                    crate::simd::SimdChoice::parse(s)?;
+                    c.simd = Some(s.to_string());
+                }
                 "optimizer" => c.optim.algorithm = val.as_str().ok_or("optimizer")?.to_string(),
                 "momentum" => c.optim.hp.momentum = val.as_f64().ok_or("momentum")? as f32,
                 "weight_decay" => c.optim.hp.weight_decay = val.as_f64().ok_or("wd")? as f32,
@@ -362,6 +377,9 @@ impl TrainConfig {
         if let Some(w) = self.worker_threads {
             pairs.push(("worker_threads", Json::Num(w as f64)));
         }
+        if let Some(s) = &self.simd {
+            pairs.push(("simd", Json::Str(s.clone())));
+        }
         Json::obj(pairs)
     }
 }
@@ -402,6 +420,7 @@ mod tests {
         c.max_steps = Some(123);
         c.backend = Some("threads:2".into());
         c.worker_threads = Some(3);
+        c.simd = Some("scalar".into());
         c.lr_schedule = LrSchedule::Step;
         let back = TrainConfig::from_json(&c.to_json().dump()).unwrap();
         assert_eq!(back.name, c.name);
@@ -414,6 +433,7 @@ mod tests {
         assert_eq!(back.max_steps, Some(123));
         assert_eq!(back.backend.as_deref(), Some("threads:2"));
         assert_eq!(back.worker_threads, Some(3));
+        assert_eq!(back.simd.as_deref(), Some("scalar"));
         assert_eq!(back.lr_schedule, LrSchedule::Step);
         assert!(matches!(back.arch, ModelArch::Classifier { ref hidden } if hidden == &[256, 128, 64]));
         // Autoencoder arch round-trips via the "arch" key.
@@ -460,6 +480,18 @@ mod tests {
         let c = TrainConfig::from_json(r#"{"worker_threads": 2}"#).unwrap();
         assert_eq!(c.worker_threads, Some(2));
         assert!(TrainConfig::from_json(r#"{"worker_threads": 0}"#).is_err());
+    }
+
+    #[test]
+    fn simd_key_parses_and_validates() {
+        // All spellings parse, even paths this host can't run —
+        // availability is an install-time check, not a parse error.
+        for s in ["auto", "avx2", "sse2", "scalar"] {
+            let c = TrainConfig::from_json(&format!(r#"{{"simd": "{s}"}}"#)).unwrap();
+            assert_eq!(c.simd.as_deref(), Some(s));
+        }
+        assert!(TrainConfig::from_json(r#"{"simd": "neon"}"#).is_err());
+        assert!(TrainConfig::from_json(r#"{"simd": 2}"#).is_err());
     }
 
     #[test]

@@ -118,6 +118,7 @@ pub fn cfg(
         eval_every: 1,
         backend: None,
         worker_threads: None,
+        simd: None,
     }
 }
 

@@ -44,6 +44,7 @@ pub mod optim;
 pub mod rng;
 pub mod runtime;
 pub mod serve;
+pub mod simd;
 pub mod tensor;
 pub mod testing;
 pub mod train;

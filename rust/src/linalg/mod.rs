@@ -16,6 +16,13 @@
 //! These are the exact "expensive inverse" code paths whose cost Eva's
 //! Sherman–Morrison identity eliminates — Table 1 / Table 5 benches call
 //! them directly.
+//!
+//! Inner loops (the Cholesky row-prefix dots, the triangular-solve
+//! axpys) run on the `f32x8` micro-kernels via [`crate::tensor`], so
+//! they inherit the same determinism contract: bit-identical across
+//! backends, thread counts, and ISA paths (`docs/KERNELS.md`).
+
+#![warn(missing_docs)]
 
 use std::ops::Range;
 

@@ -37,6 +37,14 @@ fn run(args: &[String]) -> Result<()> {
         eva::coordinator::dp::set_default_worker_threads(Some(n));
         println!("dp worker lanes: {n} per worker");
     }
+    // ISA path for the f32x8 micro-kernels. Like --backend, a
+    // process-wide knob applying to every command; numerics are
+    // bit-identical across paths (docs/KERNELS.md).
+    if let Some(spec) = cli.opt("simd") {
+        let choice = eva::simd::SimdChoice::parse(spec).map_err(|e| anyhow!(e))?;
+        let isa = eva::simd::install(&choice).map_err(|e| anyhow!(e))?;
+        println!("simd kernels: {}", isa.name());
+    }
     match cli.command.as_str() {
         "" | "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -119,6 +127,10 @@ fn train(cli: &Cli) -> Result<()> {
         // already set the process-wide default from the CLI.
         cfg.worker_threads = None;
     }
+    if cli.opt("simd").is_some() {
+        // Same precedence for the ISA path: run() already installed it.
+        cfg.simd = None;
+    }
     println!(
         "train: dataset={} optimizer={} epochs={} batch={} lr={} engine={:?}",
         cfg.dataset, cfg.optim.algorithm, cfg.epochs, cfg.batch_size, cfg.base_lr, cfg.engine
@@ -175,9 +187,10 @@ fn serve(cli: &Cli) -> Result<()> {
     let svc = Service::start(cfg.clone());
     let server = Server::start(svc.clone(), &addr)?;
     println!(
-        "serve: listening on {} | backend {} | max {} sessions | quantum {} steps | checkpoints → {}",
+        "serve: listening on {} | backend {} | simd {} | max {} sessions | quantum {} steps | checkpoints → {}",
         server.addr(),
         eva::backend::global().label(),
+        eva::simd::active().name(),
         cfg.max_sessions,
         cfg.quantum_steps,
         cfg.checkpoint_dir,
@@ -195,6 +208,16 @@ fn list() -> Result<()> {
         "backends:    seq threads threads:N   (current: {}, hardware: {})",
         eva::backend::global().label(),
         eva::backend::default_threads()
+    );
+    println!(
+        "simd:        {}   (active: {}, available: {})",
+        "auto avx2 sse2 scalar",
+        eva::simd::active().name(),
+        eva::simd::available_isas()
+            .iter()
+            .map(|i| i.name())
+            .collect::<Vec<_>>()
+            .join(" ")
     );
     println!("experiments: {}", eva::exp::ALL.join(" "));
     match eva::runtime::Runtime::open_default() {

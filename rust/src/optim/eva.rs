@@ -58,6 +58,9 @@ impl Eva {
     }
 
     /// Update the running-average KVs (Eq. 14–15); first step copies.
+    /// The per-layer blends run on the `f32x8` elementwise kernel
+    /// (`ā ← (1−ξ)·ā + ξ·ā_new`, same arithmetic as the plain loop —
+    /// IEEE addition is commutative — on every ISA path).
     fn update_kvs(&mut self, ctx: &StepCtx) {
         let xi = self.hp.running_avg;
         if !self.initialized {
@@ -67,14 +70,10 @@ impl Eva {
             return;
         }
         for (state, s) in self.a_bar.iter_mut().zip(ctx.stats) {
-            for (sv, &nv) in state.iter_mut().zip(&s.a_mean) {
-                *sv = xi * nv + (1.0 - xi) * *sv;
-            }
+            crate::simd::blend8(state, 1.0 - xi, xi, &s.a_mean);
         }
         for (state, s) in self.b_bar.iter_mut().zip(ctx.stats) {
-            for (sv, &nv) in state.iter_mut().zip(&s.b_mean) {
-                *sv = xi * nv + (1.0 - xi) * *sv;
-            }
+            crate::simd::blend8(state, 1.0 - xi, xi, &s.b_mean);
         }
     }
 

@@ -64,10 +64,10 @@ impl Optimizer for EvaF {
             self.a_bar = ctx.stats.iter().map(|s| s.a_mean.clone()).collect();
             self.initialized = true;
         } else {
+            // KV running average on the f32x8 blend kernel (same
+            // arithmetic as the plain loop on every ISA path).
             for (state, s) in self.a_bar.iter_mut().zip(ctx.stats) {
-                for (sv, &nv) in state.iter_mut().zip(&s.a_mean) {
-                    *sv = xi * nv + (1.0 - xi) * *sv;
-                }
+                crate::simd::blend8(state, 1.0 - xi, xi, &s.a_mean);
             }
         }
         let gamma = self.hp.damping;

@@ -49,6 +49,10 @@ impl Foof {
         step % self.hp.update_interval.max(1) as u64 == 0
     }
 
+    /// Refresh the running factor `R` and its inverse (or rank-1
+    /// eigenpair). The blends and the power-iteration matvecs run on
+    /// the `f32x8` micro-kernels via `tensor`, so a refresh is
+    /// bit-identical across backends and ISA paths.
     fn refresh(&mut self, ctx: &StepCtx) {
         let xi = self.hp.running_avg;
         if !self.initialized {

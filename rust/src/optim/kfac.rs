@@ -51,6 +51,11 @@ impl Kfac {
         step % self.hp.update_interval.max(1) as u64 == 0
     }
 
+    /// Refresh the running KFs and their damped inverses. The factor
+    /// blends (`Q ← (1−ξ)Q + ξ·BBᵀ/n`, likewise `R`) and the Cholesky
+    /// solves inside `damped_inverse` stream through the `f32x8`
+    /// micro-kernels ([`crate::simd`] via `tensor`/`linalg`), so a
+    /// refresh is bit-identical across backends and ISA paths.
     fn refresh(&mut self, ctx: &StepCtx) {
         let xi = self.hp.running_avg;
         if !self.initialized {

@@ -98,6 +98,10 @@ impl Shampoo {
         self.initialized = true;
     }
 
+    /// Accumulate per-tile gradient statistics `M₁ += GGᵀ`,
+    /// `M₂ += GᵀG`. The products and the `axpy` accumulations run on
+    /// the `f32x8` micro-kernels via `tensor`, so accumulation is
+    /// bit-identical across backends and ISA paths.
     fn accumulate(&mut self, grads: &[Tensor]) {
         for (layer, g) in self.tiles.iter_mut().zip(grads) {
             for t in layer.iter_mut() {

@@ -117,10 +117,12 @@ unsafe impl Send for Session {}
 
 impl Session {
     /// Admit a new session for `cfg`. The config's process-global knobs
-    /// (`backend`, `worker_threads`) are stripped — one tenant must not
-    /// reconfigure the shared pool — and only the native engine is
-    /// accepted (PJRT state lives in device buffers and cannot be
-    /// checkpointed).
+    /// (`backend`, `worker_threads`, `simd`) are stripped — one tenant
+    /// must not reconfigure the shared pool or the process ISA path
+    /// (and because numerics are bit-identical across ISA paths, a
+    /// tenant's checkpoint restores identically regardless of the
+    /// server's `--simd`) — and only the native engine is accepted
+    /// (PJRT state lives in device buffers and cannot be checkpointed).
     pub fn new(id: u64, name: &str, priority: usize, cfg: &TrainConfig) -> Result<Self, String> {
         if !matches!(cfg.engine, Engine::Native) {
             return Err("serve sessions require the native engine".into());
@@ -128,6 +130,7 @@ impl Session {
         let mut cfg = cfg.clone();
         cfg.backend = None;
         cfg.worker_threads = None;
+        cfg.simd = None;
         let trainer = Trainer::from_config(&cfg).map_err(|e| e.to_string())?;
         let lp = LoopState::new(&trainer);
         Ok(Session {
@@ -325,6 +328,7 @@ mod tests {
             eval_every: 1,
             backend: None,
             worker_threads: None,
+            simd: None,
         }
     }
 
@@ -360,8 +364,11 @@ mod tests {
             .unwrap_or_else(|e| e.into_inner());
         let mut cfg = tiny_cfg("sgd", 4);
         cfg.backend = Some("threads:2".into());
+        cfg.simd = Some("scalar".into());
         let before = crate::backend::global().label();
+        let simd_before = crate::simd::active();
         let _s = Session::new(2, "y", 1, &cfg).unwrap();
         assert_eq!(crate::backend::global().label(), before);
+        assert_eq!(crate::simd::active(), simd_before);
     }
 }

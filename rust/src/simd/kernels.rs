@@ -1,0 +1,445 @@
+//! The routed micro-kernels: generic 8-lane bodies, monomorphized per
+//! ISA and dispatched on [`crate::simd::active`].
+//!
+//! Each kernel is one `#[inline(always)]` body written against
+//! [`SimdVec`], instantiated three times (AVX2 / SSE2 / scalar). The
+//! AVX2 instantiations sit inside `#[target_feature(enable = "avx2")]`
+//! functions so the intrinsics inline; they are only reachable when the
+//! runtime probe confirmed AVX2 (see `mod.rs`). Remainder elements
+//! (`len % 8`) always run the same plain scalar tail, identical on
+//! every path.
+
+use super::vec::{F32x8, SimdVec};
+#[cfg(target_arch = "x86_64")]
+use super::vec::x86::{Avx2Vec, Sse2Vec};
+use super::{active, Isa};
+
+// ---------------------------------------------------------------------------
+// Generic bodies
+// ---------------------------------------------------------------------------
+
+/// Dot product: two interleaved 8-lane accumulators (lane `l` of
+/// accumulator `p` sums `a[16k + 8p + l]·b[16k + 8p + l]` in ascending
+/// `k`), combined lane-wise, then folded with the canonical
+/// [`F32x8::hsum`] bracketing; the `< 8` remainder accumulates
+/// left-to-right on the scalar tail. The tree is a pure function of
+/// the length — never of the ISA, backend, or thread count.
+#[inline(always)]
+unsafe fn dot_body<V: SimdVec>(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let blocks = n / 8;
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let mut acc0 = V::zero();
+    let mut acc1 = V::zero();
+    for k in 0..blocks / 2 {
+        let i = 16 * k;
+        acc0 = acc0.add(V::load(ap.add(i)).mul(V::load(bp.add(i))));
+        acc1 = acc1.add(V::load(ap.add(i + 8)).mul(V::load(bp.add(i + 8))));
+    }
+    if blocks % 2 == 1 {
+        let i = 8 * (blocks - 1);
+        acc0 = acc0.add(V::load(ap.add(i)).mul(V::load(bp.add(i))));
+    }
+    let mut s = acc0.add(acc1).hsum();
+    for i in 8 * blocks..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `y[i] += alpha * x[i]` — elementwise, so any blocking is
+/// arithmetic-neutral; vectorization never changes a bit.
+#[inline(always)]
+unsafe fn axpy_body<V: SimdVec>(alpha: f32, x: &[f32], y: &mut [f32]) {
+    let n = y.len().min(x.len());
+    let blocks = n / 8;
+    let va = V::splat(alpha);
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    for k in 0..blocks {
+        let i = 8 * k;
+        V::load(yp.add(i)).add(va.mul(V::load(xp.add(i)))).store(yp.add(i));
+    }
+    for i in 8 * blocks..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// `y[i] *= s` — elementwise.
+#[inline(always)]
+unsafe fn scale_body<V: SimdVec>(y: &mut [f32], s: f32) {
+    let n = y.len();
+    let blocks = n / 8;
+    let vs = V::splat(s);
+    let yp = y.as_mut_ptr();
+    for k in 0..blocks {
+        let i = 8 * k;
+        V::load(yp.add(i)).mul(vs).store(yp.add(i));
+    }
+    for i in 8 * blocks..n {
+        y[i] *= s;
+    }
+}
+
+/// One whole matmul output row: `crow += Σ_k a[k·astride] · b_k` with
+/// `b_k = b[k·n..(k+1)·n]`, `n = crow.len()`, `kk = b.len()/n`. The
+/// entire k-sweep runs inside a single ISA dispatch (one call per
+/// output row, not per (row, k) pair). Exactly-zero `a` coefficients
+/// skip their sweep on every path alike. Elementwise per `(k, j)` with
+/// k ascending per element — bit-identical to the repeated-axpy loop
+/// it fuses, on every path.
+#[inline(always)]
+unsafe fn row_mac_body<V: SimdVec>(crow: &mut [f32], a: &[f32], astride: usize, b: &[f32]) {
+    let n = crow.len();
+    if n == 0 {
+        return;
+    }
+    let kk = b.len() / n;
+    let blocks = n / 8;
+    let yp = crow.as_mut_ptr();
+    for k in 0..kk {
+        let aik = a[k * astride];
+        if aik == 0.0 {
+            continue;
+        }
+        let bp = b.as_ptr().add(k * n);
+        let va = V::splat(aik);
+        for blk in 0..blocks {
+            let i = 8 * blk;
+            V::load(yp.add(i)).add(va.mul(V::load(bp.add(i)))).store(yp.add(i));
+        }
+        for i in 8 * blocks..n {
+            *yp.add(i) += aik * *bp.add(i);
+        }
+    }
+}
+
+/// One whole `A·Bᵀ` output row: `crow[j] = dot(arow, bt_j)` with
+/// `bt_j = bt[j·k..(j+1)·k]`, `k = arow.len()` — every dot runs
+/// [`dot_body`]'s fixed tree, all `crow.len()` of them inside a single
+/// ISA dispatch.
+#[inline(always)]
+unsafe fn row_dots_body<V: SimdVec>(crow: &mut [f32], arow: &[f32], bt: &[f32]) {
+    let k = arow.len();
+    for (j, cv) in crow.iter_mut().enumerate() {
+        *cv = dot_body::<V>(arow, &bt[j * k..(j + 1) * k]);
+    }
+}
+
+/// `y[i] = beta*y[i] + alpha*x[i]` — elementwise, two independent
+/// rounded multiplies then one rounded add on every path.
+#[inline(always)]
+unsafe fn blend_body<V: SimdVec>(y: &mut [f32], beta: f32, alpha: f32, x: &[f32]) {
+    let n = y.len().min(x.len());
+    let blocks = n / 8;
+    let vb = V::splat(beta);
+    let va = V::splat(alpha);
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    for k in 0..blocks {
+        let i = 8 * k;
+        let vy = vb.mul(V::load(yp.add(i))).add(va.mul(V::load(xp.add(i))));
+        vy.store(yp.add(i));
+    }
+    for i in 8 * blocks..n {
+        y[i] = beta * y[i] + alpha * x[i];
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-ISA instantiations
+// ---------------------------------------------------------------------------
+
+macro_rules! avx2_entry {
+    ($name:ident, ($($arg:ident : $ty:ty),*) -> $ret:ty, $body:ident) => {
+        #[cfg(target_arch = "x86_64")]
+        #[target_feature(enable = "avx2")]
+        unsafe fn $name($($arg: $ty),*) -> $ret {
+            $body::<Avx2Vec>($($arg),*)
+        }
+    };
+}
+
+avx2_entry!(dot_avx2, (a: &[f32], b: &[f32]) -> f32, dot_body);
+avx2_entry!(axpy_avx2, (alpha: f32, x: &[f32], y: &mut [f32]) -> (), axpy_body);
+avx2_entry!(scale_avx2, (y: &mut [f32], s: f32) -> (), scale_body);
+avx2_entry!(blend_avx2, (y: &mut [f32], beta: f32, alpha: f32, x: &[f32]) -> (), blend_body);
+avx2_entry!(
+    row_mac_avx2,
+    (crow: &mut [f32], a: &[f32], astride: usize, b: &[f32]) -> (),
+    row_mac_body
+);
+avx2_entry!(row_dots_avx2, (crow: &mut [f32], arow: &[f32], bt: &[f32]) -> (), row_dots_body);
+
+// SSE2 is baseline on x86_64 — no target_feature gate needed.
+#[cfg(target_arch = "x86_64")]
+unsafe fn dot_sse2(a: &[f32], b: &[f32]) -> f32 {
+    dot_body::<Sse2Vec>(a, b)
+}
+#[cfg(target_arch = "x86_64")]
+unsafe fn axpy_sse2(alpha: f32, x: &[f32], y: &mut [f32]) {
+    axpy_body::<Sse2Vec>(alpha, x, y)
+}
+#[cfg(target_arch = "x86_64")]
+unsafe fn scale_sse2(y: &mut [f32], s: f32) {
+    scale_body::<Sse2Vec>(y, s)
+}
+#[cfg(target_arch = "x86_64")]
+unsafe fn blend_sse2(y: &mut [f32], beta: f32, alpha: f32, x: &[f32]) {
+    blend_body::<Sse2Vec>(y, beta, alpha, x)
+}
+#[cfg(target_arch = "x86_64")]
+unsafe fn row_mac_sse2(crow: &mut [f32], a: &[f32], astride: usize, b: &[f32]) {
+    row_mac_body::<Sse2Vec>(crow, a, astride, b)
+}
+#[cfg(target_arch = "x86_64")]
+unsafe fn row_dots_sse2(crow: &mut [f32], arow: &[f32], bt: &[f32]) {
+    row_dots_body::<Sse2Vec>(crow, arow, bt)
+}
+
+// ---------------------------------------------------------------------------
+// Dispatched entrypoints
+// ---------------------------------------------------------------------------
+
+/// Dot product over two equal-length slices on the fixed 8-lane
+/// accumulation tree (see `docs/KERNELS.md`): the micro-kernel behind
+/// [`crate::tensor::dot`]'s chunk bodies and the `matmul_a_bt` row
+/// tiles. Bit-identical on every ISA path.
+///
+/// # Examples
+///
+/// ```
+/// let a = [1.0f32; 16];
+/// let b: Vec<f32> = (0..16).map(|i| i as f32).collect();
+/// assert_eq!(eva::simd::dot8(&a, &b), 120.0);
+/// ```
+#[inline]
+pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: active() returns Avx2 only after the runtime probe.
+        Isa::Avx2 => unsafe { dot_avx2(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is unconditionally available on x86_64.
+        Isa::Sse2 => unsafe { dot_sse2(a, b) },
+        // SAFETY: the scalar body has no ISA requirement.
+        _ => unsafe { dot_body::<F32x8>(a, b) },
+    }
+}
+
+/// `y += alpha · x` over slices — the 8×-wide elementwise tile behind
+/// `tmatvec`/`mean_rows` row accumulation, `Tensor::axpy`/`add_outer`,
+/// and the triangular-solve sweeps (matmul rows use the fused
+/// [`row_mac8`] so a whole k-sweep costs one dispatch). Elementwise,
+/// so it is bit-identical on every ISA path *and* to the plain scalar
+/// loop it replaced.
+///
+/// # Examples
+///
+/// ```
+/// // One k-step of a row accumulation: acc += w_i * row.
+/// let mut acc = vec![1.0f32; 10];
+/// let row = vec![0.5f32; 10];
+/// eva::simd::axpy8(2.0, &row, &mut acc);
+/// assert!(acc.iter().all(|&v| v == 2.0));
+/// ```
+#[inline]
+pub fn axpy8(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: active() returns Avx2 only after the runtime probe.
+        Isa::Avx2 => unsafe { axpy_avx2(alpha, x, y) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is unconditionally available on x86_64.
+        Isa::Sse2 => unsafe { axpy_sse2(alpha, x, y) },
+        // SAFETY: the scalar body has no ISA requirement.
+        _ => unsafe { axpy_body::<F32x8>(alpha, x, y) },
+    }
+}
+
+/// `y *= s` over a slice. Elementwise; bit-identical on every path.
+#[inline]
+pub fn scale8(y: &mut [f32], s: f32) {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: active() returns Avx2 only after the runtime probe.
+        Isa::Avx2 => unsafe { scale_avx2(y, s) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is unconditionally available on x86_64.
+        Isa::Sse2 => unsafe { scale_sse2(y, s) },
+        // SAFETY: the scalar body has no ISA requirement.
+        _ => unsafe { scale_body::<F32x8>(y, s) },
+    }
+}
+
+/// The matmul row-tile entrypoint: one whole output row
+/// `crow += Σ_k a[k·astride] · b[k·n..(k+1)·n]` (`n = crow.len()`,
+/// `k` ranging over `b.len()/n`) in a single ISA dispatch. `astride`
+/// is 1 when the A coefficients for this row are contiguous
+/// (`matmul`), or the A column stride for transpose-free `Aᵀ·B`
+/// (`matmul_at_b`). Per-element accumulation is k-ascending on every
+/// path — bit-identical across ISAs *and* to the scalar loop nest it
+/// replaces.
+///
+/// # Examples
+///
+/// ```
+/// // One 1×2·2×3 product row: C[0,:] = 2·B[0,:] + 3·B[1,:].
+/// let b = [1.0f32, 10.0, 100.0, 2.0, 20.0, 200.0];
+/// let mut crow = [0.0f32; 3];
+/// eva::simd::row_mac8(&mut crow, &[2.0, 3.0], 1, &b);
+/// assert_eq!(crow, [8.0, 80.0, 800.0]);
+/// ```
+#[inline]
+pub fn row_mac8(crow: &mut [f32], a: &[f32], astride: usize, b: &[f32]) {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: active() returns Avx2 only after the runtime probe.
+        Isa::Avx2 => unsafe { row_mac_avx2(crow, a, astride, b) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is unconditionally available on x86_64.
+        Isa::Sse2 => unsafe { row_mac_sse2(crow, a, astride, b) },
+        // SAFETY: the scalar body has no ISA requirement.
+        _ => unsafe { row_mac_body::<F32x8>(crow, a, astride, b) },
+    }
+}
+
+/// The `A·Bᵀ` row-tile entrypoint: `crow[j] = dot(arow, bt[j·k..])`
+/// for every `j` (`k = arow.len()`) in a single ISA dispatch, each dot
+/// on [`dot8`]'s fixed tree. Bit-identical on every path.
+#[inline]
+pub fn row_dots8(crow: &mut [f32], arow: &[f32], bt: &[f32]) {
+    debug_assert_eq!(bt.len(), arow.len() * crow.len());
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: active() returns Avx2 only after the runtime probe.
+        Isa::Avx2 => unsafe { row_dots_avx2(crow, arow, bt) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is unconditionally available on x86_64.
+        Isa::Sse2 => unsafe { row_dots_sse2(crow, arow, bt) },
+        // SAFETY: the scalar body has no ISA requirement.
+        _ => unsafe { row_dots_body::<F32x8>(crow, arow, bt) },
+    }
+}
+
+/// `y = beta·y + alpha·x` over slices — running averages (Eva's KV
+/// blends, Eq. 14–15; the K-FAC/FOOF factor blends via
+/// [`crate::tensor::Tensor::blend`]). Elementwise; bit-identical on
+/// every path.
+#[inline]
+pub fn blend8(y: &mut [f32], beta: f32, alpha: f32, x: &[f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: active() returns Avx2 only after the runtime probe.
+        Isa::Avx2 => unsafe { blend_avx2(y, beta, alpha, x) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is unconditionally available on x86_64.
+        Isa::Sse2 => unsafe { blend_sse2(y, beta, alpha, x) },
+        // SAFETY: the scalar body has no ISA requirement.
+        _ => unsafe { blend_body::<F32x8>(y, beta, alpha, x) },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::simd::{install, is_available, SimdChoice};
+
+    fn vecs(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg64::seeded(seed);
+        let mut a = vec![0.0f32; n];
+        let mut b = vec![0.0f32; n];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        (a, b)
+    }
+
+    /// Every available ISA path reproduces the scalar reference
+    /// bit-for-bit on every kernel, including tail lengths.
+    #[test]
+    fn isa_paths_match_scalar_reference_bitwise() {
+        let _serial = crate::backend::TEST_GLOBAL_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let prev = crate::simd::active();
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 64, 1000, 8195] {
+            let (a, b) = vecs(n, 42 + n as u64);
+            install(&SimdChoice::Force(Isa::Scalar)).unwrap();
+            let dot_ref = dot8(&a, &b);
+            let mut axpy_ref = b.clone();
+            axpy8(0.37, &a, &mut axpy_ref);
+            let mut scale_ref = a.clone();
+            scale8(&mut scale_ref, -1.25);
+            let mut blend_ref = b.clone();
+            blend8(&mut blend_ref, 0.95, 0.05, &a);
+            // Row tiles: 3 "k-steps" over rows of length n (a carries
+            // a zero to exercise the skip arm on every path).
+            let coeffs = [0.6f32, 0.0, -1.1];
+            let bmat: Vec<f32> = (0..3 * n).map(|i| (i as f32 * 0.11).sin()).collect();
+            let mut mac_ref = a.clone();
+            row_mac8(&mut mac_ref, &coeffs, 1, &bmat);
+            let mut dots_ref = vec![0.0f32; 3];
+            row_dots8(&mut dots_ref, &a, &bmat);
+            for isa in [Isa::Sse2, Isa::Avx2] {
+                if !is_available(isa) {
+                    continue;
+                }
+                install(&SimdChoice::Force(isa)).unwrap();
+                assert_eq!(dot8(&a, &b).to_bits(), dot_ref.to_bits(), "dot8 {isa:?} n={n}");
+                let mut y = b.clone();
+                axpy8(0.37, &a, &mut y);
+                assert_eq!(y, axpy_ref, "axpy8 {isa:?} n={n}");
+                let mut y = a.clone();
+                scale8(&mut y, -1.25);
+                assert_eq!(y, scale_ref, "scale8 {isa:?} n={n}");
+                let mut y = b.clone();
+                blend8(&mut y, 0.95, 0.05, &a);
+                assert_eq!(y, blend_ref, "blend8 {isa:?} n={n}");
+                let mut y = a.clone();
+                row_mac8(&mut y, &coeffs, 1, &bmat);
+                assert_eq!(y, mac_ref, "row_mac8 {isa:?} n={n}");
+                let mut y = vec![0.0f32; 3];
+                row_dots8(&mut y, &a, &bmat);
+                assert_eq!(y, dots_ref, "row_dots8 {isa:?} n={n}");
+            }
+        }
+        install(&SimdChoice::Force(prev)).unwrap();
+    }
+
+    /// The kernels compute the right values, not just consistent ones.
+    #[test]
+    fn kernels_match_naive_math() {
+        let (a, b) = vecs(37, 7);
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot8(&a, &b) - naive).abs() < 1e-4);
+        let mut y = b.clone();
+        axpy8(2.0, &a, &mut y);
+        for i in 0..37 {
+            assert_eq!(y[i].to_bits(), (b[i] + 2.0 * a[i]).to_bits());
+        }
+        let mut y = a.clone();
+        scale8(&mut y, 0.5);
+        for i in 0..37 {
+            assert_eq!(y[i].to_bits(), (a[i] * 0.5).to_bits());
+        }
+        let mut y = b.clone();
+        blend8(&mut y, 0.25, 0.75, &a);
+        for i in 0..37 {
+            assert_eq!(y[i].to_bits(), (0.25 * b[i] + 0.75 * a[i]).to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_slices_are_fine() {
+        assert_eq!(dot8(&[], &[]), 0.0);
+        let mut y: Vec<f32> = Vec::new();
+        axpy8(1.0, &[], &mut y);
+        scale8(&mut y, 2.0);
+        blend8(&mut y, 0.5, 0.5, &[]);
+        assert!(y.is_empty());
+    }
+}

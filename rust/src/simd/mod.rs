@@ -1,0 +1,254 @@
+//! Explicit `f32x8` SIMD micro-kernels under the dispatch layer.
+//!
+//! The tensor/linalg hot loops — matmul row tiles, dot-product chunk
+//! bodies, elementwise axpy/scale/blend — run on an 8-lane `f32`
+//! abstraction with three runtime-selected implementations:
+//!
+//! * **avx2** — one 256-bit register per tile (x86_64, detected via
+//!   `is_x86_feature_detected!("avx2")`);
+//! * **sse2** — two 128-bit halves (x86_64 baseline);
+//! * **scalar** — a portable `[f32; 8]` computing the *same 8-lane
+//!   accumulation tree*, so it is the reference semantics, not an
+//!   approximation.
+//!
+//! **Determinism contract** (full statement in `docs/KERNELS.md`):
+//! every path performs identical per-lane IEEE-754 operations — no FMA
+//! contraction (SSE2 has none, so fusing on AVX2 would break parity),
+//! one canonical horizontal-sum bracketing ([`F32x8::hsum`]), and
+//! reduction trees derived only from operand sizes. Combined with the
+//! backend layer's fixed chunk grids ([`crate::backend`]), results are
+//! **bit-identical** across `scalar`/`sse2`/`avx2` × `seq`/`threads:N`
+//! (`tests/simd_parity.rs`), so checkpoints and training runs are
+//! ISA-portable.
+//!
+//! **Selection.** The process-wide path defaults to the best available
+//! ISA; override with the CLI flag `--simd auto|avx2|sse2|scalar`
+//! (every command that accepts `--backend`), the config key `"simd"`,
+//! the `EVA_SIMD` environment variable, or [`install`]. Because the
+//! paths are bit-identical, the knob is a pure performance/debugging
+//! control — switching it never changes a training run.
+
+#![warn(missing_docs)]
+
+mod kernels;
+mod vec;
+
+pub use kernels::{axpy8, blend8, dot8, row_dots8, row_mac8, scale8};
+pub use vec::F32x8;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Instruction-set path for the `f32x8` micro-kernels, best first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// 256-bit AVX2 tiles (x86_64, runtime-probed).
+    Avx2,
+    /// Paired 128-bit SSE2 tiles (x86_64 baseline).
+    Sse2,
+    /// Portable scalar fallback computing the same 8-lane tree.
+    Scalar,
+}
+
+impl Isa {
+    /// The CLI/config spelling: `avx2` | `sse2` | `scalar`.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Isa::Avx2 => "avx2",
+            Isa::Sse2 => "sse2",
+            Isa::Scalar => "scalar",
+        }
+    }
+
+    fn to_u8(self) -> u8 {
+        match self {
+            Isa::Avx2 => 0,
+            Isa::Sse2 => 1,
+            Isa::Scalar => 2,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Isa> {
+        match v {
+            0 => Some(Isa::Avx2),
+            1 => Some(Isa::Sse2),
+            2 => Some(Isa::Scalar),
+            _ => None,
+        }
+    }
+}
+
+/// True when `isa` can run on this host (scalar always can; the x86
+/// paths need an x86_64 build, and AVX2 additionally needs the CPU
+/// probe to pass).
+pub fn is_available(isa: Isa) -> bool {
+    match isa {
+        Isa::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => true,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => is_x86_feature_detected!("avx2"),
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => false,
+    }
+}
+
+/// The best ISA path available on this host.
+pub fn detect_best() -> Isa {
+    if is_available(Isa::Avx2) {
+        Isa::Avx2
+    } else if is_available(Isa::Sse2) {
+        Isa::Sse2
+    } else {
+        Isa::Scalar
+    }
+}
+
+/// Every ISA path runnable on this host, best first (always ends with
+/// [`Isa::Scalar`]). Parity tests iterate this.
+pub fn available_isas() -> Vec<Isa> {
+    [Isa::Avx2, Isa::Sse2, Isa::Scalar]
+        .into_iter()
+        .filter(|&isa| is_available(isa))
+        .collect()
+}
+
+/// Parsed `--simd` / `"simd"` selection (config/CLI layer).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdChoice {
+    /// Pick the best available path at install time.
+    Auto,
+    /// Force one specific path (install fails if the host lacks it).
+    Force(Isa),
+}
+
+impl SimdChoice {
+    /// Parse `auto | avx2 | sse2 | scalar`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "auto" => Ok(SimdChoice::Auto),
+            "avx2" => Ok(SimdChoice::Force(Isa::Avx2)),
+            "sse2" => Ok(SimdChoice::Force(Isa::Sse2)),
+            "scalar" => Ok(SimdChoice::Force(Isa::Scalar)),
+            other => Err(format!(
+                "unknown simd path '{other}' (use auto | avx2 | sse2 | scalar)"
+            )),
+        }
+    }
+
+    /// Canonical config-string (inverse of [`SimdChoice::parse`]).
+    pub fn label(&self) -> &'static str {
+        match self {
+            SimdChoice::Auto => "auto",
+            SimdChoice::Force(isa) => isa.name(),
+        }
+    }
+}
+
+/// `u8::MAX` = not yet resolved; first read resolves the boot default.
+const UNSET: u8 = u8::MAX;
+
+static ACTIVE: AtomicU8 = AtomicU8::new(UNSET);
+
+/// The ISA path kernels dispatch on. Resolved lazily on first use:
+/// the `EVA_SIMD` environment variable if set, otherwise
+/// [`detect_best`]; [`install`] overrides it at any time. Like every
+/// other selection surface (`--simd`, the config key), an `EVA_SIMD`
+/// value that is misspelled or not runnable on this host is a hard
+/// error (panic at first kernel use), never a silent downgrade — a
+/// perf harness that forces a path must get that path or fail.
+/// One relaxed atomic load on the hot path.
+#[inline]
+pub fn active() -> Isa {
+    match Isa::from_u8(ACTIVE.load(Ordering::Relaxed)) {
+        Some(isa) => isa,
+        None => boot_default(),
+    }
+}
+
+#[cold]
+fn boot_default() -> Isa {
+    let isa = match std::env::var("EVA_SIMD") {
+        Ok(v) => match SimdChoice::parse(&v) {
+            // Resolve without storing: an explicit install() racing
+            // this boot path must win, so only the CAS below may write.
+            Ok(choice) => resolve(&choice).unwrap_or_else(|e| panic!("EVA_SIMD={v}: {e}")),
+            Err(e) => panic!("EVA_SIMD: {e}"),
+        },
+        Err(_) => detect_best(),
+    };
+    // First resolution wins, but never clobber a concurrent install().
+    let _ = ACTIVE.compare_exchange(UNSET, isa.to_u8(), Ordering::Relaxed, Ordering::Relaxed);
+    Isa::from_u8(ACTIVE.load(Ordering::Relaxed)).unwrap_or(Isa::Scalar)
+}
+
+/// Validate `choice` against this host without touching the global.
+fn resolve(choice: &SimdChoice) -> Result<Isa, String> {
+    match *choice {
+        SimdChoice::Auto => Ok(detect_best()),
+        SimdChoice::Force(isa) => {
+            if !is_available(isa) {
+                return Err(format!(
+                    "simd path '{}' is not available on this host (best available: {})",
+                    isa.name(),
+                    detect_best().name()
+                ));
+            }
+            Ok(isa)
+        }
+    }
+}
+
+/// Make `choice` the process-wide ISA path; returns the resolved
+/// [`Isa`]. Forcing a path the host cannot run is an error (kernels
+/// would fault), so config typos and wrong-host checkpoints fail
+/// loudly instead of crashing mid-step.
+pub fn install(choice: &SimdChoice) -> Result<Isa, String> {
+    let isa = resolve(choice)?;
+    ACTIVE.store(isa.to_u8(), Ordering::Relaxed);
+    Ok(isa)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn choice_parses_and_labels() {
+        assert_eq!(SimdChoice::parse("auto").unwrap(), SimdChoice::Auto);
+        assert_eq!(
+            SimdChoice::parse("scalar").unwrap(),
+            SimdChoice::Force(Isa::Scalar)
+        );
+        assert_eq!(SimdChoice::parse("avx2").unwrap().label(), "avx2");
+        assert_eq!(SimdChoice::parse("sse2").unwrap().label(), "sse2");
+        assert!(SimdChoice::parse("neon").is_err());
+        for isa in [Isa::Avx2, Isa::Sse2, Isa::Scalar] {
+            assert_eq!(SimdChoice::parse(isa.name()).unwrap(), SimdChoice::Force(isa));
+        }
+    }
+
+    #[test]
+    fn scalar_is_always_available_and_best_is_sane() {
+        assert!(is_available(Isa::Scalar));
+        let best = detect_best();
+        assert!(is_available(best));
+        let all = available_isas();
+        assert_eq!(all.first().copied(), Some(best));
+        assert_eq!(all.last().copied(), Some(Isa::Scalar));
+    }
+
+    #[test]
+    fn install_switches_and_rejects_unavailable() {
+        let _serial = crate::backend::TEST_GLOBAL_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let prev = active();
+        assert_eq!(install(&SimdChoice::Force(Isa::Scalar)).unwrap(), Isa::Scalar);
+        assert_eq!(active(), Isa::Scalar);
+        assert_eq!(install(&SimdChoice::Auto).unwrap(), detect_best());
+        if !is_available(Isa::Avx2) {
+            assert!(install(&SimdChoice::Force(Isa::Avx2)).is_err());
+        }
+        install(&SimdChoice::Force(prev)).unwrap();
+    }
+}

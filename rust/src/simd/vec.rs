@@ -1,0 +1,340 @@
+//! The 8-lane `f32` value: portable reference semantics plus the
+//! per-ISA vector implementations behind them.
+//!
+//! [`F32x8`] is the *semantic model* of every SIMD path: a plain
+//! `[f32; 8]` with lane-wise `add`/`mul` and one canonical horizontal
+//! sum. The SSE2 and AVX2 implementations in [`x86`] reproduce its
+//! arithmetic exactly — same lane ops, same reduction bracketing, no
+//! fused multiply-add — so every path is bit-identical (see
+//! `docs/KERNELS.md` for the contract and `tests/simd_parity.rs` for
+//! the enforcement).
+
+/// A portable 8-lane `f32` value — the reference semantics every ISA
+/// path must reproduce bit-for-bit.
+///
+/// All operations are lane-wise IEEE-754 single precision with one
+/// rounding per multiply and per add (multiplies are never fused into
+/// adds: SSE2 has no FMA, so fusing on AVX2 would break cross-ISA
+/// bit-identity). The horizontal sum uses one fixed bracketing — see
+/// [`F32x8::hsum`].
+///
+/// # Examples
+///
+/// ```
+/// use eva::simd::F32x8;
+///
+/// let x = F32x8::from_array([1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+/// let y = F32x8::splat(2.0);
+/// // Lane-wise multiply, then the canonical horizontal sum.
+/// assert_eq!(x.mul(y).hsum(), 72.0);
+/// assert_eq!(x.add(y).to_array()[7], 10.0);
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct F32x8(pub(crate) [f32; 8]);
+
+impl F32x8 {
+    /// Number of lanes.
+    pub const LANES: usize = 8;
+
+    /// All lanes zero.
+    pub fn zero() -> Self {
+        F32x8([0.0; 8])
+    }
+
+    /// All lanes set to `v`.
+    pub fn splat(v: f32) -> Self {
+        F32x8([v; 8])
+    }
+
+    /// Build from an array of 8 lanes.
+    pub fn from_array(a: [f32; 8]) -> Self {
+        F32x8(a)
+    }
+
+    /// Load the first 8 elements of `s` (panics if `s` is shorter).
+    pub fn from_slice(s: &[f32]) -> Self {
+        let mut a = [0.0f32; 8];
+        a.copy_from_slice(&s[..8]);
+        F32x8(a)
+    }
+
+    /// The lanes as an array.
+    pub fn to_array(self) -> [f32; 8] {
+        self.0
+    }
+
+    /// Lane-wise addition.
+    pub fn add(self, o: Self) -> Self {
+        let mut r = [0.0f32; 8];
+        for i in 0..8 {
+            r[i] = self.0[i] + o.0[i];
+        }
+        F32x8(r)
+    }
+
+    /// Lane-wise multiplication (never fused into a following add).
+    pub fn mul(self, o: Self) -> Self {
+        let mut r = [0.0f32; 8];
+        for i in 0..8 {
+            r[i] = self.0[i] * o.0[i];
+        }
+        F32x8(r)
+    }
+
+    /// The canonical horizontal sum — the one bracketing every ISA
+    /// path uses:
+    ///
+    /// ```text
+    /// h_j = l_j + l_{j+4}            (fold 8 lanes to 4)
+    /// s   = ((h0 + h2) + (h1 + h3))  (fold 4 lanes to 1)
+    /// ```
+    ///
+    /// This is the natural AVX2 tree (`vextractf128` + add, then the
+    /// SSE `movehl`/`shuffle` fold); the scalar and SSE2 paths
+    /// replicate it exactly rather than summing lanes left-to-right.
+    pub fn hsum(self) -> f32 {
+        let l = self.0;
+        let h = [l[0] + l[4], l[1] + l[5], l[2] + l[6], l[3] + l[7]];
+        (h[0] + h[2]) + (h[1] + h[3])
+    }
+}
+
+/// The internal 8-lane vector contract the generic kernel bodies are
+/// written against. Implementations must be lane-exact against
+/// [`F32x8`]: same per-lane IEEE ops, same [`F32x8::hsum`] bracketing,
+/// and **no** FMA contraction.
+///
+/// All methods are `unsafe` because the x86 implementations may only
+/// run when the corresponding ISA was detected — the dispatchers in
+/// `kernels.rs` uphold that via [`crate::simd::active`].
+pub(crate) trait SimdVec: Copy {
+    /// All lanes zero.
+    unsafe fn zero() -> Self;
+    /// All lanes set to `v`.
+    unsafe fn splat(v: f32) -> Self;
+    /// Unaligned load of 8 consecutive `f32`s starting at `p`.
+    unsafe fn load(p: *const f32) -> Self;
+    /// Unaligned store of the 8 lanes starting at `p`.
+    unsafe fn store(self, p: *mut f32);
+    /// Lane-wise addition.
+    unsafe fn add(self, o: Self) -> Self;
+    /// Lane-wise multiplication.
+    unsafe fn mul(self, o: Self) -> Self;
+    /// The canonical horizontal sum (same bracketing as [`F32x8::hsum`]).
+    unsafe fn hsum(self) -> f32;
+}
+
+/// The scalar fallback *is* the reference value.
+impl SimdVec for F32x8 {
+    #[inline(always)]
+    unsafe fn zero() -> Self {
+        F32x8::zero()
+    }
+
+    #[inline(always)]
+    unsafe fn splat(v: f32) -> Self {
+        F32x8::splat(v)
+    }
+
+    #[inline(always)]
+    unsafe fn load(p: *const f32) -> Self {
+        let mut a = [0.0f32; 8];
+        std::ptr::copy_nonoverlapping(p, a.as_mut_ptr(), 8);
+        F32x8(a)
+    }
+
+    #[inline(always)]
+    unsafe fn store(self, p: *mut f32) {
+        std::ptr::copy_nonoverlapping(self.0.as_ptr(), p, 8);
+    }
+
+    #[inline(always)]
+    unsafe fn add(self, o: Self) -> Self {
+        F32x8::add(self, o)
+    }
+
+    #[inline(always)]
+    unsafe fn mul(self, o: Self) -> Self {
+        F32x8::mul(self, o)
+    }
+
+    #[inline(always)]
+    unsafe fn hsum(self) -> f32 {
+        F32x8::hsum(self)
+    }
+}
+
+/// x86_64 vector implementations (SSE2 half-pairs and AVX2).
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86 {
+    use super::SimdVec;
+    use core::arch::x86_64::*;
+
+    /// Fold a 4-lane `__m128` to one `f32` with the canonical
+    /// bracketing `(h0 + h2) + (h1 + h3)` — shared by the SSE2 and
+    /// AVX2 [`SimdVec::hsum`] implementations so both match
+    /// [`super::F32x8::hsum`] exactly.
+    ///
+    /// # Safety
+    /// SSE2 only (baseline on x86_64).
+    #[inline(always)]
+    pub(crate) unsafe fn hsum128(h: __m128) -> f32 {
+        // [h2, h3, h2, h3]
+        let swapped = _mm_movehl_ps(h, h);
+        // [h0+h2, h1+h3, _, _]
+        let folded = _mm_add_ps(h, swapped);
+        // lane 0 of `folded` + lane 1 of `folded`
+        let s = _mm_add_ss(folded, _mm_shuffle_ps(folded, folded, 0b01));
+        _mm_cvtss_f32(s)
+    }
+
+    /// Two SSE2 128-bit halves: `.0` holds lanes 0–3, `.1` lanes 4–7.
+    #[derive(Clone, Copy)]
+    pub(crate) struct Sse2Vec(__m128, __m128);
+
+    impl SimdVec for Sse2Vec {
+        #[inline(always)]
+        unsafe fn zero() -> Self {
+            Sse2Vec(_mm_setzero_ps(), _mm_setzero_ps())
+        }
+
+        #[inline(always)]
+        unsafe fn splat(v: f32) -> Self {
+            let s = _mm_set1_ps(v);
+            Sse2Vec(s, s)
+        }
+
+        #[inline(always)]
+        unsafe fn load(p: *const f32) -> Self {
+            Sse2Vec(_mm_loadu_ps(p), _mm_loadu_ps(p.add(4)))
+        }
+
+        #[inline(always)]
+        unsafe fn store(self, p: *mut f32) {
+            _mm_storeu_ps(p, self.0);
+            _mm_storeu_ps(p.add(4), self.1);
+        }
+
+        #[inline(always)]
+        unsafe fn add(self, o: Self) -> Self {
+            Sse2Vec(_mm_add_ps(self.0, o.0), _mm_add_ps(self.1, o.1))
+        }
+
+        #[inline(always)]
+        unsafe fn mul(self, o: Self) -> Self {
+            Sse2Vec(_mm_mul_ps(self.0, o.0), _mm_mul_ps(self.1, o.1))
+        }
+
+        #[inline(always)]
+        unsafe fn hsum(self) -> f32 {
+            // l_j + l_{j+4}, then the shared 4-lane fold.
+            hsum128(_mm_add_ps(self.0, self.1))
+        }
+    }
+
+    /// One AVX 256-bit register (dispatched behind the `avx2` probe;
+    /// the f32 ops used here are AVX, which AVX2 implies).
+    #[derive(Clone, Copy)]
+    pub(crate) struct Avx2Vec(__m256);
+
+    impl SimdVec for Avx2Vec {
+        #[inline(always)]
+        unsafe fn zero() -> Self {
+            Avx2Vec(_mm256_setzero_ps())
+        }
+
+        #[inline(always)]
+        unsafe fn splat(v: f32) -> Self {
+            Avx2Vec(_mm256_set1_ps(v))
+        }
+
+        #[inline(always)]
+        unsafe fn load(p: *const f32) -> Self {
+            Avx2Vec(_mm256_loadu_ps(p))
+        }
+
+        #[inline(always)]
+        unsafe fn store(self, p: *mut f32) {
+            _mm256_storeu_ps(p, self.0);
+        }
+
+        #[inline(always)]
+        unsafe fn add(self, o: Self) -> Self {
+            Avx2Vec(_mm256_add_ps(self.0, o.0))
+        }
+
+        #[inline(always)]
+        unsafe fn mul(self, o: Self) -> Self {
+            // Deliberately not _mm256_fmadd_ps anywhere: fusing would
+            // break bit-identity with the SSE2 and scalar paths.
+            Avx2Vec(_mm256_mul_ps(self.0, o.0))
+        }
+
+        #[inline(always)]
+        unsafe fn hsum(self) -> f32 {
+            let lo = _mm256_castps256_ps128(self.0);
+            let hi = _mm256_extractf128_ps(self.0, 1);
+            hsum128(_mm_add_ps(lo, hi))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_lane_ops() {
+        let x = F32x8::from_array([1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(x.add(F32x8::splat(1.0)).to_array()[0], 2.0);
+        assert_eq!(x.mul(x).to_array()[3], 16.0);
+        assert_eq!(F32x8::zero().hsum(), 0.0);
+        assert_eq!(x.hsum(), 36.0);
+        assert_eq!(F32x8::from_slice(&[2.0; 9]).hsum(), 16.0);
+    }
+
+    /// hsum follows the documented bracketing, not left-to-right
+    /// summation — assert with values where the two differ.
+    #[test]
+    fn hsum_uses_the_canonical_tree() {
+        let l = [1e8f32, 1.0, -1e8, 1.0, 0.5, 0.0, 0.25, 0.0];
+        let v = F32x8::from_array(l);
+        let h = [l[0] + l[4], l[1] + l[5], l[2] + l[6], l[3] + l[7]];
+        let expect = (h[0] + h[2]) + (h[1] + h[3]);
+        assert_eq!(v.hsum().to_bits(), expect.to_bits());
+    }
+
+    /// The x86 vector types are lane-exact against the reference.
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn x86_paths_match_reference_bitwise() {
+        let a: Vec<f32> = (0..8).map(|i| (i as f32 * 0.37).sin() * 1e3).collect();
+        let b: Vec<f32> = (0..8).map(|i| (i as f32 * 0.91).cos() + 0.1).collect();
+        let ra = F32x8::from_slice(&a);
+        let rb = F32x8::from_slice(&b);
+        let reference = ra.mul(rb).add(F32x8::splat(0.5));
+        let ref_sum = reference.hsum();
+
+        // SSE2 is baseline on x86_64 — always safe to run.
+        unsafe {
+            let va = x86::Sse2Vec::load(a.as_ptr());
+            let vb = x86::Sse2Vec::load(b.as_ptr());
+            let v = va.mul(vb).add(x86::Sse2Vec::splat(0.5));
+            let mut out = [0.0f32; 8];
+            v.store(out.as_mut_ptr());
+            assert_eq!(out, reference.to_array());
+            assert_eq!(v.hsum().to_bits(), ref_sum.to_bits());
+        }
+        if crate::simd::is_available(crate::simd::Isa::Avx2) {
+            unsafe {
+                let va = x86::Avx2Vec::load(a.as_ptr());
+                let vb = x86::Avx2Vec::load(b.as_ptr());
+                let v = va.mul(vb).add(x86::Avx2Vec::splat(0.5));
+                let mut out = [0.0f32; 8];
+                v.store(out.as_mut_ptr());
+                assert_eq!(out, reference.to_array());
+                assert_eq!(v.hsum().to_bits(), ref_sum.to_bits());
+            }
+        }
+    }
+}

@@ -10,14 +10,19 @@
 //! * [`matmul_a_bt`] — `C = A · Bᵀ` (e.g. `G = δᵀX` partners)
 //!
 //! All kernels walk the output row-contiguously and accumulate with an
-//! i-k-j loop order so the inner loop is a pure FMA stream the compiler
-//! vectorizes. Large products are **row-partitioned** across the
-//! backend ([`crate::backend`]): each lane owns a disjoint block of
+//! i-k-j loop order so each output row is one 8×-wide `f32x8` tile:
+//! `matmul`/`matmul_at_b` build a C row with [`crate::simd::row_mac8`]
+//! (`crow += a[i,k] · brow` over all k, 8 output columns per vector
+//! op, one ISA dispatch per row) and `matmul_a_bt` with
+//! [`crate::simd::row_dots8`] (each element one fixed-tree dot).
+//! Large products are **row-partitioned** across
+//! the backend ([`crate::backend`]): each lane owns a disjoint block of
 //! output rows, and per-element accumulation order (k ascending) is
 //! identical in the sequential and partitioned paths, so every backend
-//! produces bit-identical results. The `*_with` variants take an
-//! explicit backend (benches, parity tests); the plain names resolve
-//! the thread's scoped-or-global backend via [`crate::backend::current`].
+//! — and every ISA path, see `docs/KERNELS.md` — produces bit-identical
+//! results. The `*_with` variants take an explicit backend (benches,
+//! parity tests); the plain names resolve the thread's
+//! scoped-or-global backend via [`crate::backend::current`].
 
 use std::ops::Range;
 
@@ -37,6 +42,18 @@ fn par_worthwhile(bk: &dyn Backend, macs: usize) -> bool {
 }
 
 /// C = A(m,k) · B(k,n).
+///
+/// # Examples
+///
+/// ```
+/// use eva::tensor::{matmul, Tensor};
+///
+/// let a = Tensor::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+/// let b = Tensor::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+/// let c = matmul(&a, &b);
+/// assert_eq!(c.row(0), &[19.0, 22.0]);
+/// assert_eq!(matmul(&a, &Tensor::eye(2)), a);
+/// ```
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     matmul_with(&*backend::current(), a, b)
 }
@@ -64,22 +81,14 @@ pub fn matmul_into_with(bk: &dyn Backend, a: &Tensor, b: &Tensor, c: &mut Tensor
     c.data_mut().fill(0.0);
     let (ad, bd) = (a.data(), b.data());
     let cd = SendPtr(c.data_mut().as_mut_ptr());
-    // i-k-j: C[i,:] += A[i,k] * B[k,:]; inner loop is contiguous in both
-    // B and C.
+    // i-k-j: C[i,:] += A[i,k] * B[k,:]; each output row is one f32x8
+    // row-mac tile (the whole k-sweep runs in a single ISA dispatch),
+    // contiguous in both B and C.
     let rows = |r: Range<usize>| {
         for i in r {
             // SAFETY: row blocks from disjoint ranges never overlap.
             let crow = unsafe { std::slice::from_raw_parts_mut(cd.0.add(i * n), n) };
-            for k in 0..kk {
-                let aik = ad[i * kk + k];
-                if aik == 0.0 {
-                    continue;
-                }
-                let brow = &bd[k * n..(k + 1) * n];
-                for (cv, &bv) in crow.iter_mut().zip(brow) {
-                    *cv += aik * bv;
-                }
-            }
+            crate::simd::row_mac8(crow, &ad[i * kk..(i + 1) * kk], 1, bd);
         }
     };
     if par_worthwhile(bk, m.saturating_mul(n).saturating_mul(kk)) {
@@ -101,46 +110,27 @@ pub fn matmul_at_b_with(bk: &dyn Backend, a: &Tensor, b: &Tensor) -> Tensor {
     let (kb, n) = b.shape();
     assert_eq!(k, kb, "matmul_at_b inner-dim mismatch");
     let mut c = Tensor::zeros(m, n);
+    if k == 0 {
+        return c; // empty inner dim: the product is all zeros
+    }
     let (ad, bd) = (a.data(), b.data());
-    if par_worthwhile(bk, m.saturating_mul(n).saturating_mul(k)) {
-        // Row-partitioned: lane-local C rows; A is read with stride m,
-        // amortized over the contiguous length-n row update. Per
-        // element the accumulation is k-ascending — identical to the
-        // streaming path below, hence bit-equal results.
-        let cd = SendPtr(c.data_mut().as_mut_ptr());
-        backend::par_ranges(bk, m, ROW_GRAIN, &|r: Range<usize>| {
-            for i in r {
-                // SAFETY: row blocks from disjoint ranges never overlap.
-                let crow = unsafe { std::slice::from_raw_parts_mut(cd.0.add(i * n), n) };
-                for kk in 0..k {
-                    let aik = ad[kk * m + i];
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let brow = &bd[kk * n..(kk + 1) * n];
-                    for (cv, &bv) in crow.iter_mut().zip(brow) {
-                        *cv += aik * bv;
-                    }
-                }
-            }
-        });
-    } else {
-        // k-i-j order: stream over A and B rows; C row update contiguous.
-        let cd = c.data_mut();
-        for kk in 0..k {
-            let arow = &ad[kk * m..(kk + 1) * m];
-            let brow = &bd[kk * n..(kk + 1) * n];
-            for i in 0..m {
-                let aik = arow[i];
-                if aik == 0.0 {
-                    continue;
-                }
-                let crow = &mut cd[i * n..(i + 1) * n];
-                for (cv, &bv) in crow.iter_mut().zip(brow) {
-                    *cv += aik * bv;
-                }
-            }
+    // Row-partitioned when parallel: lane-local C rows; A is read with
+    // stride m inside the row-mac tile (the whole k-sweep is a single
+    // ISA dispatch per output row), amortized over the contiguous
+    // length-n row updates. Per element the accumulation is
+    // k-ascending in both branches, hence bit-equal results.
+    let cd = SendPtr(c.data_mut().as_mut_ptr());
+    let rows = |r: Range<usize>| {
+        for i in r {
+            // SAFETY: row blocks from disjoint ranges never overlap.
+            let crow = unsafe { std::slice::from_raw_parts_mut(cd.0.add(i * n), n) };
+            crate::simd::row_mac8(crow, &ad[i..], m, bd);
         }
+    };
+    if par_worthwhile(bk, m.saturating_mul(n).saturating_mul(k)) {
+        backend::par_ranges(bk, m, ROW_GRAIN, &rows);
+    } else {
+        rows(0..m);
     }
     c
 }
@@ -159,18 +149,18 @@ pub fn matmul_a_bt_with(bk: &dyn Backend, a: &Tensor, b: &Tensor) -> Tensor {
     let (ad, bd) = (a.data(), b.data());
     let cd = SendPtr(c.data_mut().as_mut_ptr());
     // Rows of A against rows of B: each output element is one dot of
-    // two contiguous slices. Uses the straight-line kernel directly so
-    // the explicit `bk` is the only backend this function touches
-    // (`super::dot` would route huge inner dims via the global).
+    // two contiguous slices, all n of them fused into one row-dots
+    // tile (a single ISA dispatch per output row, each dot on dot8's
+    // fixed tree). The tile never touches the backend layer, so the
+    // explicit `bk` is the only backend this function dispatches
+    // through (`super::dot` would route huge inner dims via the
+    // global).
     let rows = |r: Range<usize>| {
         for i in r {
             let arow = &ad[i * k..(i + 1) * k];
             // SAFETY: row blocks from disjoint ranges never overlap.
             let crow = unsafe { std::slice::from_raw_parts_mut(cd.0.add(i * n), n) };
-            for (j, cv) in crow.iter_mut().enumerate() {
-                let brow = &bd[j * k..(j + 1) * k];
-                *cv = super::dot_seq(arow, brow);
-            }
+            crate::simd::row_dots8(crow, arow, bd);
         }
     };
     if par_worthwhile(bk, m.saturating_mul(n).saturating_mul(k)) {

@@ -3,18 +3,22 @@
 //! A deliberately small tensor library: just what the native training
 //! path, the optimizer zoo, and the linear-algebra substrate need.
 //! Matrices are row-major `(rows, cols)`. The matmul family is written
-//! as blocked kernels over contiguous rows so the hot loops
-//! auto-vectorize; see `rust/benches/linalg_micro.rs` and
-//! EXPERIMENTS.md §Perf for measured throughput.
+//! as blocked kernels over contiguous rows whose inner loops run on
+//! the explicit `f32x8` micro-kernels ([`crate::simd`]) — AVX2/SSE2
+//! tiles with a bit-identical scalar fallback; see
+//! `rust/benches/simd_kernels.rs` and `docs/KERNELS.md`.
 //!
 //! Large operations dispatch through [`crate::backend`] (resolved per
 //! thread via [`crate::backend::current`]): matmuls and row-wise ops
 //! are row-partitioned, elementwise ops are range-partitioned, and
 //! reductions ([`dot`], [`Tensor::norm_sq`], [`Tensor::tmatvec`],
 //! [`Tensor::mean_rows`]) use a *size-derived* fixed chunk grid so the
-//! result is bit-identical under every backend and thread count. Small
-//! operands always run inline — dispatch overhead is gated by size
-//! thresholds, not flags.
+//! result is bit-identical under every backend and thread count — and,
+//! because every chunk body runs the same fixed 8-lane accumulation
+//! tree, under every ISA path too. Small operands always run inline —
+//! dispatch overhead is gated by size thresholds, not flags.
+
+#![warn(missing_docs)]
 
 mod matmul;
 pub use matmul::{
@@ -134,9 +138,11 @@ impl Tensor {
         Tensor { rows: xs.len(), cols: 1, data: xs.to_vec() }
     }
 
+    /// Number of rows.
     pub fn rows(&self) -> usize {
         self.rows
     }
+    /// Number of columns.
     pub fn cols(&self) -> usize {
         self.cols
     }
@@ -144,18 +150,23 @@ impl Tensor {
     pub fn len(&self) -> usize {
         self.data.len()
     }
+    /// True when the matrix holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
+    /// `(rows, cols)`.
     pub fn shape(&self) -> (usize, usize) {
         (self.rows, self.cols)
     }
+    /// The row-major element buffer.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
+    /// Mutable access to the row-major element buffer.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
+    /// Consume the matrix, returning its row-major buffer.
     pub fn into_vec(self) -> Vec<f32> {
         self.data
     }
@@ -229,9 +240,7 @@ impl Tensor {
     pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
         assert_eq!(self.shape(), other.shape());
         par_binary(&mut self.data, &other.data, |ys, xs| {
-            for (a, &b) in ys.iter_mut().zip(xs) {
-                *a += alpha * b;
-            }
+            crate::simd::axpy8(alpha, xs, ys);
         });
     }
 
@@ -239,18 +248,14 @@ impl Tensor {
     pub fn blend(&mut self, beta: f32, alpha: f32, other: &Tensor) {
         assert_eq!(self.shape(), other.shape());
         par_binary(&mut self.data, &other.data, |ys, xs| {
-            for (a, &b) in ys.iter_mut().zip(xs) {
-                *a = beta * *a + alpha * b;
-            }
+            crate::simd::blend8(ys, beta, alpha, xs);
         });
     }
 
     /// Scale all elements in place.
     pub fn scale(&mut self, s: f32) {
         par_unary(&mut self.data, |ys| {
-            for v in ys {
-                *v *= s;
-            }
+            crate::simd::scale8(ys, s);
         });
     }
 
@@ -331,9 +336,7 @@ impl Tensor {
                 let ui = alpha * u[i];
                 // SAFETY: row blocks from disjoint ranges never overlap.
                 let row = unsafe { std::slice::from_raw_parts_mut(dp.0.add(i * cols), cols) };
-                for (r, &vj) in row.iter_mut().zip(v) {
-                    *r += ui * vj;
-                }
+                crate::simd::axpy8(ui, v, row);
             }
         };
         if rows * cols >= PAR_ELEM_MIN {
@@ -453,9 +456,9 @@ fn weighted_col_sum_with(bk: &dyn Backend, t: &Tensor, weights: Option<&[f32]>) 
     let acc_rows = |acc: &mut [f32], r: Range<usize>| {
         for i in r {
             let wi = weights.map_or(1.0, |w| w[i]);
-            for (o, &v) in acc.iter_mut().zip(t.row(i)) {
-                *o += wi * v;
-            }
+            // acc += wi · row — the 8×-wide elementwise tile; identical
+            // arithmetic to the plain loop on every ISA path.
+            crate::simd::axpy8(wi, t.row(i), acc);
         }
     };
     let rows_per = (REDUCE_CHUNK / cols).max(rows.div_ceil(MAX_COL_PARTS)).max(1);
@@ -486,9 +489,11 @@ fn weighted_col_sum_with(bk: &dyn Backend, t: &Tensor, weights: Option<&[f32]>) 
 /// Dense dot product over f32 slices. Long inputs reduce over the
 /// fixed `REDUCE_CHUNK` grid through the thread's *current* backend
 /// (bit-identical for every backend — the grid depends only on the
-/// length); short inputs use the unrolled scalar kernel directly.
-/// Kernels that take an explicit backend handle must not call this in
-/// their inner loops — use the crate-private `dot_seq`.
+/// length); short inputs run the straight-line micro-kernel directly.
+/// Every chunk body is [`crate::simd::dot8`]'s fixed 8-lane tree, so
+/// the result is also bit-identical across ISA paths. Kernels that
+/// take an explicit backend handle must not call this in their inner
+/// loops — use the crate-private `dot_seq`.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
@@ -501,36 +506,22 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     dot_seq(a, b)
 }
 
-/// The straight-line unrolled dot kernel, 4-way unrolled; the compiler
-/// vectorizes each lane. Kernels taking an explicit backend use this
-/// directly so their only dispatch surface is the handle they were
-/// given.
+/// The straight-line chunk-body dot kernel: [`crate::simd::dot8`]'s
+/// fixed 8-lane accumulation tree (the ISA path is process-global and
+/// bit-identical everywhere). Kernels taking an explicit backend use
+/// this directly so their only *backend* dispatch surface is the
+/// handle they were given.
 #[inline]
 pub(crate) fn dot_seq(a: &[f32], b: &[f32]) -> f32 {
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
-    for k in 0..chunks {
-        let i = 4 * k;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-    }
-    let mut s = s0 + s1 + s2 + s3;
-    for i in 4 * chunks..n {
-        s += a[i] * b[i];
-    }
-    s
+    crate::simd::dot8(a, b)
 }
 
-/// axpy over raw slices: y += alpha * x.
+/// axpy over raw slices: y += alpha * x (the `f32x8` elementwise tile;
+/// bit-identical to the plain loop).
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, &xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    crate::simd::axpy8(alpha, x, y);
 }
 
 /// Euclidean norm of a slice.

@@ -84,6 +84,13 @@ impl Trainer {
             // coordinator runs in-process; see coordinator::dp).
             crate::coordinator::dp::set_default_worker_threads(cfg.worker_threads);
         }
+        if let Some(spec) = &cfg.simd {
+            // Like `backend`, a process-wide knob: forcing a path the
+            // host lacks fails here, loudly, not mid-step. Numerics are
+            // bit-identical across paths (see crate::simd).
+            let choice = crate::simd::SimdChoice::parse(spec).map_err(|e| anyhow!(e))?;
+            crate::simd::install(&choice).map_err(|e| anyhow!(e))?;
+        }
         let dataset = by_name(&cfg.dataset, cfg.seed).map_err(|e| anyhow!(e))?;
         let engine = match &cfg.engine {
             Engine::Native => {
@@ -554,6 +561,7 @@ mod tests {
             eval_every: 1,
             backend: None,
             worker_threads: None,
+            simd: None,
         }
     }
 

@@ -80,6 +80,7 @@ fn pjrt_trainer_end_to_end() {
         eval_every: 1,
         backend: None,
         worker_threads: None,
+        simd: None,
     };
     let mut t = Trainer::from_config(&cfg).unwrap();
     let r = t.run().unwrap();
@@ -108,6 +109,7 @@ fn native_and_pjrt_agree_on_learnability() {
         eval_every: 1,
         backend: None,
         worker_threads: None,
+        simd: None,
     };
     let mut native = Trainer::from_config(&mk(Engine::Native)).unwrap();
     let rn = native.run().unwrap();

@@ -1,0 +1,270 @@
+//! SIMD parity: every routed kernel must be **bit-identical** across
+//! all compiled ISA paths (`scalar`/`sse2`/`avx2`, whichever this host
+//! can run) × all backends (`seq`/`threads:2`/`threads:6`).
+//!
+//! This is the enforcement half of the determinism contract in
+//! `docs/KERNELS.md`: the fixed chunk grids come from the backend
+//! layer (`tests/backend_parity.rs`), the fixed 8-lane accumulation
+//! tree comes from `eva::simd` — together they make training runs and
+//! checkpoints portable across ISAs, thread counts, and schedulers.
+
+use std::sync::Mutex;
+
+use eva::backend::{self, Backend, BackendChoice, Sequential, Threaded};
+use eva::config::{ModelArch, OptimConfig, TrainConfig};
+use eva::linalg;
+use eva::optim::HyperParams;
+use eva::simd::{self, Isa, SimdChoice};
+use eva::tensor::{self, Tensor};
+use eva::testing::Gen;
+use eva::train::Trainer;
+
+/// The ISA path and the global backend are process-wide; tests that
+/// swap either serialize here.
+static GLOBAL_KNOBS: Mutex<()> = Mutex::new(());
+
+fn with_isa<T>(isa: Isa, f: impl FnOnce() -> T) -> T {
+    simd::install(&SimdChoice::Force(isa)).unwrap();
+    let out = f();
+    simd::install(&SimdChoice::Auto).unwrap();
+    out
+}
+
+fn with_global_backend<T>(choice: BackendChoice, f: impl FnOnce() -> T) -> T {
+    let prev = backend::global();
+    backend::install(&choice);
+    let out = f();
+    backend::set_global(prev);
+    out
+}
+
+fn backends() -> Vec<Box<dyn Backend>> {
+    vec![
+        Box::new(Sequential) as Box<dyn Backend>,
+        Box::new(Threaded::new(2)),
+        Box::new(Threaded::new(6)),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Slice-level micro-kernels
+// ---------------------------------------------------------------------------
+
+/// dot8/axpy8/scale8/blend8 agree bit-for-bit on every ISA path, at
+/// lengths exercising the vector blocks, the odd-block arm, and the
+/// scalar tail.
+#[test]
+fn slice_kernels_bit_identical_across_isas() {
+    let _serial = GLOBAL_KNOBS.lock().unwrap_or_else(|e| e.into_inner());
+    let mut g = Gen::new(2024);
+    for n in [0usize, 1, 5, 8, 16, 23, 24, 1000, 8192, 8203] {
+        let a = g.normal_vec(n.max(1))[..n].to_vec();
+        let b = g.normal_vec(n.max(1))[..n].to_vec();
+        // Row tiles: 4 k-steps over rows of length n; one coefficient
+        // is exactly zero to exercise the skip arm on every path.
+        let mut coeffs = g.normal_vec(4);
+        coeffs[2] = 0.0;
+        let bmat = g.normal_vec((4 * n).max(1))[..4 * n].to_vec();
+        type KernelOut = (f32, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>);
+        let runs: Vec<KernelOut> = simd::available_isas()
+            .into_iter()
+            .map(|isa| {
+                with_isa(isa, || {
+                    let d = simd::dot8(&a, &b);
+                    let mut y1 = b.clone();
+                    simd::axpy8(1.7, &a, &mut y1);
+                    let mut y2 = a.clone();
+                    simd::scale8(&mut y2, -0.3);
+                    let mut y3 = b.clone();
+                    simd::blend8(&mut y3, 0.95, 0.05, &a);
+                    let mut y4 = a.clone();
+                    simd::row_mac8(&mut y4, &coeffs, 1, &bmat);
+                    let mut y5 = vec![0.0f32; 4];
+                    simd::row_dots8(&mut y5, &a, &bmat);
+                    (d, y1, y2, y3, y4, y5)
+                })
+            })
+            .collect();
+        for (i, r) in runs.iter().enumerate().skip(1) {
+            assert_eq!(r.0.to_bits(), runs[0].0.to_bits(), "dot8 isa#{i} n={n}");
+            assert_eq!(r.1, runs[0].1, "axpy8 isa#{i} n={n}");
+            assert_eq!(r.2, runs[0].2, "scale8 isa#{i} n={n}");
+            assert_eq!(r.3, runs[0].3, "blend8 isa#{i} n={n}");
+            assert_eq!(r.4, runs[0].4, "row_mac8 isa#{i} n={n}");
+            assert_eq!(r.5, runs[0].5, "row_dots8 isa#{i} n={n}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Routed tensor/linalg kernels: ISA × backend grid
+// ---------------------------------------------------------------------------
+
+/// Matmul variants, tmatvec/mean_rows, spd_inverse, and eigh_jacobi
+/// produce the same bits under every (ISA, backend) combination —
+/// sizes sit above the parallel dispatch gates so the partitioned
+/// paths really run.
+#[test]
+fn routed_kernels_bit_identical_across_isa_backend_grid() {
+    let _serial = GLOBAL_KNOBS.lock().unwrap_or_else(|e| e.into_inner());
+    let mut g = Gen::new(77);
+    let (m, k, n) = (130usize, 70usize, 90usize);
+    let a = g.normal_tensor(m, k);
+    let b = g.normal_tensor(k, n);
+    let at = g.normal_tensor(k, m);
+    let bt = g.normal_tensor(n, k);
+    let t = g.normal_tensor(300, 300);
+    let x = g.normal_vec(300);
+    let spd = g.spd_tensor(96, 0.05);
+
+    let mut reference: Option<Vec<Vec<u32>>> = None;
+    for isa in simd::available_isas() {
+        with_isa(isa, || {
+            for bk in backends() {
+                let bk = &*bk;
+                let mut outs: Vec<Vec<u32>> = Vec::new();
+                let bits = |t: &Tensor| t.data().iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+                let vbits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+                outs.push(bits(&tensor::matmul_with(bk, &a, &b)));
+                outs.push(bits(&tensor::matmul_at_b_with(bk, &at, &b)));
+                outs.push(bits(&tensor::matmul_a_bt_with(bk, &a, &bt)));
+                outs.push(vbits(&t.tmatvec_with(bk, &x)));
+                outs.push(vbits(&t.mean_rows_with(bk)));
+                outs.push(bits(&linalg::spd_inverse_with(bk, &spd).unwrap()));
+                let (lambda, v) = linalg::eigh_jacobi_with(bk, &spd, 12);
+                outs.push(vbits(&lambda));
+                outs.push(bits(&v));
+                if reference.is_none() {
+                    reference = Some(outs);
+                } else {
+                    let want_all = reference.as_ref().unwrap();
+                    for (ki, (got, want)) in outs.iter().zip(want_all).enumerate() {
+                        assert_eq!(
+                            got,
+                            want,
+                            "kernel #{ki} diverges at isa={} backend={}",
+                            isa.name(),
+                            bk.label()
+                        );
+                    }
+                }
+            }
+        });
+    }
+}
+
+/// The globally-dispatched reduction (`Tensor::dot` above the chunk
+/// gate) agrees across the full ISA × backend grid too.
+#[test]
+fn global_reduction_bit_identical_across_grid() {
+    let _serial = GLOBAL_KNOBS.lock().unwrap_or_else(|e| e.into_inner());
+    let mut g = Gen::new(88);
+    let x = g.normal_tensor(300, 300); // 90k elements: above the gate
+    let y = g.normal_tensor(300, 300);
+    let mut reference: Option<u32> = None;
+    for isa in simd::available_isas() {
+        with_isa(isa, || {
+            for choice in [
+                BackendChoice::Sequential,
+                BackendChoice::Threaded(2),
+                BackendChoice::Threaded(6),
+            ] {
+                let d = with_global_backend(choice.clone(), || x.dot(&y)).to_bits();
+                match reference {
+                    None => reference = Some(d),
+                    Some(r) => assert_eq!(d, r, "dot diverges at isa={}", isa.name()),
+                }
+            }
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Full train steps: weights digest per optimizer family
+// ---------------------------------------------------------------------------
+
+/// A short native training run; returns the FNV digest of the exact
+/// final weight/bias bits.
+fn train_digest(optimizer: &str) -> u64 {
+    let mut hp = HyperParams::default();
+    hp.update_interval = 2;
+    hp.shampoo_block = 32;
+    let cfg = TrainConfig {
+        name: format!("simd-parity-{optimizer}"),
+        dataset: "c10-small".into(),
+        seed: 7,
+        arch: ModelArch::Classifier { hidden: vec![16] },
+        optim: OptimConfig { algorithm: optimizer.into(), hp },
+        engine: eva::config::Engine::Native,
+        epochs: 1,
+        batch_size: 32,
+        base_lr: 0.05,
+        lr_schedule: eva::config::LrSchedule::Cosine,
+        warmup_steps: 0,
+        max_steps: Some(4),
+        eval_every: 1,
+        backend: None,
+        worker_threads: None,
+        simd: None,
+    };
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    t.run().unwrap();
+    eva::serve::model_digest(t.model().expect("native engine"))
+}
+
+/// One full train run per optimizer family is bit-identical with
+/// `--simd scalar` vs the auto-detected best path — the end-to-end
+/// statement of ISA portability (checkpoints restore to the same bits
+/// on any host).
+#[test]
+fn train_step_digests_scalar_vs_auto() {
+    let _serial = GLOBAL_KNOBS.lock().unwrap_or_else(|e| e.into_inner());
+    for optimizer in ["eva", "kfac", "shampoo"] {
+        let scalar = with_isa(Isa::Scalar, || train_digest(optimizer));
+        let best = with_isa(simd::detect_best(), || train_digest(optimizer));
+        assert_eq!(
+            scalar, best,
+            "{optimizer}: weights diverge between --simd scalar and the {} path",
+            simd::detect_best().name()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Selection plumbing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn forcing_an_unavailable_path_errors() {
+    let _serial = GLOBAL_KNOBS.lock().unwrap_or_else(|e| e.into_inner());
+    for isa in [Isa::Avx2, Isa::Sse2, Isa::Scalar] {
+        let r = simd::install(&SimdChoice::Force(isa));
+        if simd::is_available(isa) {
+            assert_eq!(r.unwrap(), isa);
+        } else {
+            let e = r.unwrap_err();
+            assert!(e.contains(isa.name()), "{e}");
+        }
+    }
+    simd::install(&SimdChoice::Auto).unwrap();
+    assert_eq!(simd::active(), simd::detect_best());
+}
+
+/// The config key installs the path through Trainer::from_config, and
+/// an explicitly unavailable path fails loudly there.
+#[test]
+fn config_key_installs_simd_path() {
+    let _serial = GLOBAL_KNOBS.lock().unwrap_or_else(|e| e.into_inner());
+    let mut cfg = TrainConfig::from_json(
+        r#"{"name": "s", "dataset": "c10-small", "hidden": [8],
+            "max_steps": 1, "simd": "scalar"}"#,
+    )
+    .unwrap();
+    let _t = Trainer::from_config(&cfg).unwrap();
+    assert_eq!(simd::active(), Isa::Scalar);
+    simd::install(&SimdChoice::Auto).unwrap();
+    if !simd::is_available(Isa::Avx2) {
+        cfg.simd = Some("avx2".into());
+        assert!(Trainer::from_config(&cfg).is_err());
+    }
+}
