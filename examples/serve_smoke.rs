@@ -1,12 +1,18 @@
-//! Serve smoke: the full multi-tenant loop on a loopback port.
+//! Serve smoke: the full durable multi-tenant loop on a loopback port.
 //!
 //! Starts the training-session service plus its TCP control plane on
-//! an ephemeral loopback port, then drives two concurrent Eva
-//! sessions — one over the socket, one through the in-process client
-//! (both speak the same newline-delimited JSON) — checkpoints and
-//! cancels the first mid-run, restores it from the snapshot file, and
-//! asserts both tenants reach their step target. CI runs this as the
-//! serve smoke job.
+//! an ephemeral loopback port and drives the whole admission-control
+//! story end to end: two pinned blockers fill the live slots (one
+//! over the socket, one through the in-process client — both speak
+//! the same newline-delimited JSON), a third submission *queues* past
+//! the cap and is promoted when a slot frees, one tenant is
+//! explicitly checkpointed + cancelled and restored from the snapshot
+//! file, the periodic auto-checkpointer lands snapshots while
+//! everything runs, and finally a real SIGTERM triggers a
+//! checkpoint-everything shutdown — after which a fresh service
+//! resumes every lineage from disk (`resume_from_dir`): terminal
+//! sessions come back terminal (never resurrected) and the live ones
+//! run to their step target. CI runs this as the serve smoke job.
 //!
 //! ```text
 //! cargo run --release --example serve_smoke
@@ -17,7 +23,9 @@ use std::time::Duration;
 use eva::backend::{self, BackendChoice};
 use eva::config::{ModelArch, TrainConfig};
 use eva::serve::client::{LocalClient, ServeClient, TcpClient};
-use eva::serve::{ServeConfig, Server, Service};
+use eva::serve::{signal, ServeConfig, Server, Service};
+
+const TARGET: u64 = 40;
 
 fn tenant(seed: u64, steps: u64) -> TrainConfig {
     let mut c = TrainConfig {
@@ -25,7 +33,7 @@ fn tenant(seed: u64, steps: u64) -> TrainConfig {
         dataset: "c10-small".into(),
         seed,
         arch: ModelArch::Classifier { hidden: vec![32] },
-        epochs: 2,
+        epochs: 10_000, // max_steps is always the binding budget
         batch_size: 64,
         base_lr: 0.05,
         max_steps: Some(steps),
@@ -35,33 +43,65 @@ fn tenant(seed: u64, steps: u64) -> TrainConfig {
     c
 }
 
+/// Effectively-unbounded step budget: a blocker session can never
+/// finish during the smoke run, which makes every queueing assertion
+/// deterministic regardless of how fast the runner is.
+const PINNED: u64 = 1_000_000;
+
 fn main() {
     // A small threaded pool so the scheduler actually carves lanes.
     backend::install(&BackendChoice::Threaded(4));
+    signal::install_term_handler();
 
     let ckdir = std::env::temp_dir().join("eva-serve-smoke");
-    let svc = Service::start(ServeConfig {
+    let _ = std::fs::remove_dir_all(&ckdir);
+    let ckdir_s = ckdir.to_string_lossy().into_owned();
+    let serve_cfg = ServeConfig {
         addr: "127.0.0.1:0".into(),
-        max_sessions: 4,
+        max_sessions: 2, // two slots — a third tenant must queue
         quantum_steps: 4,
-        checkpoint_dir: ckdir.to_string_lossy().into_owned(),
+        checkpoint_every_steps: 8,
+        checkpoint_on_shutdown: true,
+        checkpoint_dir: ckdir_s.clone(),
         ..ServeConfig::default()
-    });
+    };
+    let svc = Service::start(serve_cfg.clone());
     let server = Server::start(svc.clone(), "127.0.0.1:0").expect("bind loopback");
     println!("serve_smoke: control plane on {}", server.addr());
 
-    let target = 40u64;
-
-    // Tenant A over the real socket.
+    // Two pinned blockers (one over the real socket, one through the
+    // in-process client — both speak the same ndjson) fill the cap.
     let mut tcp = TcpClient::connect(server.addr()).expect("connect");
-    let a = tcp.submit(&tenant(1, target), "tenant-a", 2).expect("submit A");
-
-    // Tenant B through the in-process client (same wire format).
+    let blk1 = tcp.submit(&tenant(91, PINNED), "blocker-1", 1).expect("submit blocker-1");
     let mut local = LocalClient::new(&svc);
-    let b = local.submit(&tenant(2, target), "tenant-b", 1).expect("submit B");
-    println!("serve_smoke: submitted sessions {a} (tcp) and {b} (in-process)");
+    let blk2 = local.submit(&tenant(92, PINNED), "blocker-2", 1).expect("submit blocker-2");
 
-    // Let tenant A make progress, then checkpoint + cancel it mid-run.
+    // Tenant C goes past the cap: queued, not rejected.
+    let (c, c_pos) = tcp.submit_as(&tenant(3, TARGET), "tenant-c", 1, None).expect("submit C");
+    assert_eq!(c_pos, 1, "over-cap submit must report its queue position");
+    let st = tcp.status(c).expect("status C");
+    assert_eq!(st.get_str("status"), Some("queued"), "{st:?}");
+    println!(
+        "serve_smoke: blockers {blk1} (tcp) + {blk2} (in-process) admitted; {c} queued at position {c_pos}"
+    );
+
+    // Freeing one slot must promote C queued -> running.
+    tcp.cancel(blk1).expect("cancel blocker-1");
+    let deadline = std::time::Instant::now() + Duration::from_secs(120);
+    loop {
+        let st = tcp.status(c).expect("status C");
+        let status = st.get_str("status").unwrap_or("?").to_string();
+        if status == "running" || status == "done" {
+            println!("serve_smoke: tenant C promoted ({status})");
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "tenant C was never promoted");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    tcp.cancel(blk2).expect("cancel blocker-2");
+
+    // Tenant A takes the freed slot; checkpoint + cancel it mid-run.
+    let a = tcp.submit(&tenant(1, TARGET), "tenant-a", 2).expect("submit A");
     let deadline = std::time::Instant::now() + Duration::from_secs(120);
     loop {
         let st = tcp.status(a).expect("status A");
@@ -75,39 +115,103 @@ fn main() {
     tcp.pause(a).expect("pause A");
     let path = tcp.checkpoint(a).expect("checkpoint A");
     tcp.cancel(a).expect("cancel A");
-    println!("serve_smoke: checkpointed tenant A → {path}");
+    println!("serve_smoke: checkpointed tenant A \u{2192} {path}");
 
-    // Restore the snapshot as a new session and let everything finish.
+    // Restore A from the explicit snapshot as a new session (fork —
+    // its own checkpoint lineage) and check the cursor survived.
     let a2 = tcp.submit_checkpoint(&path, "tenant-a-resumed", 2).expect("restore A");
-    let fa = tcp.wait_done(a2, Duration::from_secs(600)).expect("A' did not finish");
-    let fb = local.wait_done(b, Duration::from_secs(600)).expect("B did not finish");
+    let st = tcp.status(a2).expect("status A2");
+    assert!(
+        st.get_f64("step").unwrap_or(0.0) as u64 >= 8,
+        "fork must resume from the snapshot cursor: {st:?}"
+    );
 
-    // Both tenants must reach the step target.
-    for (label, st) in [("A'", &fa), ("B", &fb)] {
-        let step = st.get_f64("step").unwrap_or(0.0) as u64;
-        let total = st.get_f64("total_steps").unwrap_or(0.0) as u64;
-        assert_eq!(step, target, "tenant {label} stopped at {step}/{total}");
-        println!(
-            "serve_smoke: tenant {label} done — {step}/{total} steps, p50 {:.2} ms, p95 {:.2} ms",
-            st.get_f64("p50_step_ms").unwrap_or(0.0),
-            st.get_f64("p95_step_ms").unwrap_or(0.0),
-        );
+    // The periodic auto-checkpointer (every 8 steps, plus terminal
+    // tombstones) must land snapshots on its own, no client involved.
+    let deadline = std::time::Instant::now() + Duration::from_secs(120);
+    loop {
+        let stats = local.stats().expect("stats");
+        if stats.get_f64("auto_checkpoints").unwrap_or(0.0) >= 1.0 {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "no auto-checkpoint ever landed");
+        std::thread::sleep(Duration::from_millis(10));
     }
+    println!("serve_smoke: auto-checkpoints landing in {ckdir_s}");
+
+    // SIGTERM-style shutdown mid-run: a real signal through the
+    // std-only shim, then the same checkpoint-everything shutdown the
+    // `eva serve` loop performs on termination.
+    signal::raise_term();
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    while !signal::term_requested() {
+        assert!(std::time::Instant::now() < deadline, "SIGTERM never observed");
+        std::thread::yield_now();
+    }
+    println!("serve_smoke: SIGTERM observed — checkpointing live sessions and shutting down");
+    svc.shutdown();
+    server.join();
+
+    // Restart: a fresh service re-admits every lineage from disk.
+    // Five lineages exist — the two cancelled blockers and tenant-a
+    // must come back *terminal* (tombstones), while tenant-c and
+    // tenant-a-resumed run to the step target.
+    let svc2 = Service::start(ServeConfig {
+        max_sessions: 4,
+        checkpoint_on_shutdown: false,
+        ..serve_cfg
+    });
+    let ids = svc2.resume_from_dir(&ckdir_s).expect("resume dir");
+    assert_eq!(ids.len(), 5, "all five lineages must resume, got {ids:?}");
+    println!("serve_smoke: restarted — resumed {} lineages", ids.len());
+    let mut local2 = LocalClient::new(&svc2);
+    let mut finished = 0;
+    for &id in &ids {
+        let st = local2.status(id).expect("status of resumed session");
+        let name = st.get_str("name").unwrap_or("?").to_string();
+        let status = st.get_str("status").unwrap_or("?").to_string();
+        match name.as_str() {
+            "blocker-1" | "blocker-2" => {
+                assert_eq!(status, "cancelled", "'{name}' must stay cancelled: {st:?}");
+                println!("serve_smoke: '{name}' restored terminal (cancelled), not resurrected");
+            }
+            // A was cancelled, but on a very fast runner it may have
+            // finished first — terminal either way, never re-run.
+            "tenant-a" => {
+                assert!(
+                    status == "cancelled" || status == "done",
+                    "'{name}' must stay terminal across the restart: {st:?}"
+                );
+                println!("serve_smoke: '{name}' restored terminal ({status}), not resurrected");
+            }
+            _ => {
+                let fin =
+                    local2.wait_done(id, Duration::from_secs(600)).expect("resumed session");
+                let step = fin.get_f64("step").unwrap_or(0.0) as u64;
+                assert_eq!(step, TARGET, "session '{name}' stopped at {step}/{TARGET}");
+                finished += 1;
+                println!(
+                    "serve_smoke: '{name}' done — {step}/{TARGET} steps, p50 {:.2} ms, p95 {:.2} ms",
+                    fin.get_f64("p50_step_ms").unwrap_or(0.0),
+                    fin.get_f64("p95_step_ms").unwrap_or(0.0),
+                );
+            }
+        }
+    }
+    assert_eq!(finished, 2, "tenant-c and tenant-a-resumed must reach the target");
 
     // Service-level stats over the protocol.
-    let stats = local.stats().expect("stats");
+    let stats = local2.stats().expect("stats");
     println!(
-        "serve_smoke: backend {} ({} lanes), {} scheduler rounds, {} steps served, queue depth {}",
+        "serve_smoke: backend {} ({} lanes), {} rounds, {} steps served, queue depth {}, {} promotions",
         stats.get_str("backend").unwrap_or("?"),
         stats.get_f64("total_lanes").unwrap_or(0.0),
         stats.get_f64("rounds").unwrap_or(0.0),
         stats.get_f64("scheduler_steps").unwrap_or(0.0),
         stats.get_f64("queue_depth").unwrap_or(-1.0),
+        stats.get_f64("promotions").unwrap_or(0.0),
     );
-
-    // Shut down over the wire; the server drains and exits.
-    tcp.shutdown().expect("shutdown");
-    server.join();
+    svc2.shutdown();
     let _ = std::fs::remove_dir_all(ckdir);
     println!("serve_smoke: OK");
 }

@@ -39,6 +39,9 @@ fn run(n: usize) -> (f64, f64) {
     let svc = Service::start(ServeConfig {
         max_sessions: n,
         quantum_steps: 4,
+        // The tenants are still live when the window closes; a
+        // benchmark teardown should not snapshot them to disk.
+        checkpoint_on_shutdown: false,
         ..ServeConfig::default()
     });
     // Dataset generation happens inside submit, before t0; the first

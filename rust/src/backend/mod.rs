@@ -56,6 +56,15 @@ pub trait Backend: Send + Sync {
     /// Number of execution lanes this backend can use.
     fn threads(&self) -> usize;
 
+    /// Identity of the underlying worker pool; 0 for backends without
+    /// one ([`Sequential`], the default). Labels are not identities —
+    /// two `threads:N` backends with the same `N` are different pools
+    /// — so consumers that cache handles carved from a backend (the
+    /// serve scheduler) must key on this, not on [`Backend::label`].
+    fn pool_id(&self) -> u64 {
+        0
+    }
+
     /// Execute all chunk indices, returning after the last finishes.
     fn par_for(&self, chunks: usize, body: &(dyn Fn(usize) + Sync));
 }
@@ -98,6 +107,10 @@ impl Backend for Threaded {
 
     fn threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    fn pool_id(&self) -> u64 {
+        self.pool.id()
     }
 
     fn par_for(&self, chunks: usize, body: &(dyn Fn(usize) + Sync)) {
@@ -447,6 +460,13 @@ mod tests {
         assert!(BackendChoice::parse("threads:x").is_err());
         assert_eq!(BackendChoice::Sequential.build().label(), "seq");
         assert_eq!(BackendChoice::Threaded(2).build().label(), "threads:2");
+        // Pool identity: unique per pool (labels can collide), 0 when
+        // there is no pool.
+        let (t1, t2) = (Threaded::new(2), Threaded::new(2));
+        assert_eq!(t1.label(), t2.label());
+        assert_ne!(t1.pool_id(), t2.pool_id());
+        assert_ne!(t1.pool_id(), 0);
+        assert_eq!(Sequential.pool_id(), 0);
     }
 
     #[test]

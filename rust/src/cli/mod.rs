@@ -152,7 +152,17 @@ pub fn known_options(command: &str) -> Option<CommandSpec> {
             &[],
         ),
         "serve" => spec(
-            &["config", "addr", "max-sessions", "checkpoint-dir", "quantum"],
+            &[
+                "config",
+                "addr",
+                "max-sessions",
+                "max-per-tenant",
+                "checkpoint-dir",
+                "checkpoint-every",
+                "retain-terminal",
+                "resume-dir",
+                "quantum",
+            ],
             &[],
         ),
         "experiment" | "validate" | "list" | "info" => spec(&[], &[]),
@@ -171,7 +181,9 @@ USAGE:
             [--hidden D1,D2,...] [--backend seq|threads[:N]]
             [--worker-threads N] [--simd auto|avx2|sse2|scalar]
   eva serve [--config FILE] [--addr HOST:PORT] [--max-sessions N]
-            [--checkpoint-dir DIR] [--quantum N]
+            [--max-per-tenant N] [--checkpoint-dir DIR]
+            [--checkpoint-every N] [--retain-terminal N]
+            [--resume-dir DIR] [--quantum N]
   eva experiment <id|all>     regenerate a paper table/figure (see DESIGN.md §5)
   eva validate                cross-check PJRT artifacts vs native numerics
   eva list                    list datasets, optimizers, experiments, artifacts
@@ -198,13 +210,30 @@ OPTIONS:
 SERVE OPTIONS (multi-tenant training-session service):
   --addr HOST:PORT            control-plane listen address (newline-delimited
                               JSON; default 127.0.0.1:7931, port 0 = ephemeral)
-  --max-sessions N            admission cap on live sessions (default 8)
-  --checkpoint-dir DIR        where `checkpoint` snapshots are written
-                              (default ./checkpoints)
+  --max-sessions N            cap on concurrently *admitted* sessions
+                              (default 8); submits past it queue (reported
+                              queue_position) and are promoted FIFO within
+                              priority as slots free — never rejected
+  --max-per-tenant N          cap on live sessions per tenant (explicit
+                              submit `tenant` field, else the session-name
+                              prefix before the first '/'); 0 = unlimited
+  --checkpoint-dir DIR        where checkpoint snapshots are written
+                              (default ./checkpoints; writes are atomic
+                              tmp + rename)
+  --checkpoint-every N        auto-checkpoint each session every N steps
+                              (default 0 = off); live sessions are also
+                              snapshotted on shutdown/SIGTERM
+  --retain-terminal N         keep at most N terminal sessions for status
+                              queries (default 64); older ones are evicted
+  --resume-dir DIR            on boot, re-admit the newest checkpoint per
+                              session lineage found in DIR (restart-
+                              transparent serving)
   --quantum N                 steps per scheduler time-slice (default 8)
   --config FILE               JSON file with serve_addr / max_sessions /
-                              checkpoint_dir / quantum_steps keys
-                              (flags override the file)
+                              max_sessions_per_tenant / checkpoint_dir /
+                              checkpoint_every_steps / checkpoint_on_shutdown /
+                              retain_terminal / resume_dir / quantum_steps
+                              keys (flags override the file)
 
 EXAMPLES:
   eva train --preset quickstart --optimizer eva

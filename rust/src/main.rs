@@ -157,9 +157,11 @@ fn train(cli: &Cli) -> Result<()> {
 }
 
 /// `eva serve` — the multi-tenant training-session service. Blocks
-/// until a client sends `shutdown`.
+/// until a client sends `shutdown` or the process receives
+/// SIGTERM/SIGINT, which checkpoints every live session first; a
+/// restart with `--resume-dir` re-admits them.
 fn serve(cli: &Cli) -> Result<()> {
-    use eva::serve::{ServeConfig, Server, Service};
+    use eva::serve::{signal, ServeConfig, Server, Service};
     let mut cfg = if let Some(path) = cli.opt("config") {
         ServeConfig::from_file(path).map_err(|e| anyhow!(e))?
     } else {
@@ -174,8 +176,20 @@ fn serve(cli: &Cli) -> Result<()> {
         }
         cfg.max_sessions = n;
     }
+    if let Some(n) = cli.opt_usize("max-per-tenant").map_err(|e| anyhow!(e))? {
+        cfg.max_sessions_per_tenant = n;
+    }
     if let Some(d) = cli.opt("checkpoint-dir") {
         cfg.checkpoint_dir = d.to_string();
+    }
+    if let Some(n) = cli.opt_usize("checkpoint-every").map_err(|e| anyhow!(e))? {
+        cfg.checkpoint_every_steps = n as u64;
+    }
+    if let Some(n) = cli.opt_usize("retain-terminal").map_err(|e| anyhow!(e))? {
+        cfg.retain_terminal = n;
+    }
+    if let Some(d) = cli.opt("resume-dir") {
+        cfg.resume_dir = Some(d.to_string());
     }
     if let Some(q) = cli.opt_usize("quantum").map_err(|e| anyhow!(e))? {
         if q == 0 {
@@ -183,8 +197,19 @@ fn serve(cli: &Cli) -> Result<()> {
         }
         cfg.quantum_steps = q;
     }
+    // Catch SIGTERM/SIGINT before any session exists so no window is
+    // uncovered.
+    signal::install_term_handler();
     let addr = cfg.addr.clone();
+    // Service::start itself resumes cfg.resume_dir (so library
+    // embedders get the same boot semantics as the CLI).
     let svc = Service::start(cfg.clone());
+    if let Some(dir) = &cfg.resume_dir {
+        let n = svc.stats().sessions.len();
+        if n > 0 {
+            println!("serve: resumed {n} session(s) from {dir}");
+        }
+    }
     let server = Server::start(svc.clone(), &addr)?;
     println!(
         "serve: listening on {} | backend {} | simd {} | max {} sessions | quantum {} steps | checkpoints → {}",
@@ -195,7 +220,19 @@ fn serve(cli: &Cli) -> Result<()> {
         cfg.quantum_steps,
         cfg.checkpoint_dir,
     );
+    if cfg.checkpoint_every_steps > 0 {
+        println!("serve: auto-checkpoint every {} steps", cfg.checkpoint_every_steps);
+    }
     println!("serve: newline-delimited JSON; try {{\"cmd\":\"stats\"}} or {{\"cmd\":\"shutdown\"}}");
+    // Serve until a client shuts us down or a termination signal
+    // arrives (the atomic-flag shim in eva::serve::signal).
+    while !svc.is_stopped() && !signal::term_requested() {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    if signal::term_requested() && !svc.is_stopped() {
+        println!("serve: termination signal — checkpointing live sessions");
+        svc.shutdown();
+    }
     server.join();
     println!("serve: shut down");
     Ok(())

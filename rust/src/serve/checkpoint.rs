@@ -12,7 +12,18 @@
 //!
 //! Format: magic `EVACKPT` + a `u32` version, then a fixed field
 //! order per version (see [`Checkpoint::to_bytes`]). Unknown versions
-//! and truncated/oversized payloads are rejected on load.
+//! and truncated/oversized payloads are rejected on load. Version 2
+//! appends session metadata (name, priority, tenant, checkpoint stem,
+//! lifecycle [`status_tag`]) so a serve process restarted with
+//! `--resume-dir` can re-admit sessions with their full identity —
+//! including terminal states, which resume as terminal instead of
+//! re-running; version-1 files still load with default metadata.
+//!
+//! Writes are **atomic**: [`Checkpoint::save`] writes to a unique
+//! `*.tmp` sibling, fsyncs, then `rename`s onto the final path — a
+//! crash mid-write can only ever leave a stray `.tmp`, never a
+//! truncated `.ckpt` at the canonical name (the torn-checkpoint test
+//! in `tests/serve_admission.rs`).
 
 use crate::config::TrainConfig;
 use crate::data::BatcherSnapshot;
@@ -23,8 +34,33 @@ use crate::train::{EpochMetrics, LoopSnapshot, Trainer};
 
 /// Magic prefix of every checkpoint file.
 pub const MAGIC: &[u8; 7] = b"EVACKPT";
-/// Current checkpoint format version.
-pub const VERSION: u32 = 1;
+/// Current checkpoint format version (v2 = v1 + session metadata).
+pub const VERSION: u32 = 2;
+
+/// Session-status tags stored in v2 checkpoints, so terminal states
+/// survive a restart: a lineage whose newest snapshot is a `DONE` /
+/// `CANCELLED` / `FAILED` tombstone is re-admitted *as terminal* by
+/// `--resume-dir` instead of rising from the dead and training again.
+pub mod status_tag {
+    /// The session was live (queued or running) at capture.
+    pub const LIVE: u8 = 0;
+    /// The session had reached its step target.
+    pub const DONE: u8 = 1;
+    /// The session had been cancelled.
+    pub const CANCELLED: u8 = 2;
+    /// The session had failed.
+    pub const FAILED: u8 = 3;
+    /// The session was live but held by `pause` — restored paused,
+    /// so a restart doesn't silently resume a job the operator froze.
+    pub const PAUSED: u8 = 4;
+    /// Largest valid tag value.
+    pub const MAX: u8 = PAUSED;
+
+    /// True for the terminal tags (tombstones).
+    pub fn is_terminal(tag: u8) -> bool {
+        matches!(tag, DONE | CANCELLED | FAILED)
+    }
+}
 
 /// A complete, self-describing session snapshot.
 #[derive(Clone, Debug)]
@@ -40,10 +76,29 @@ pub struct Checkpoint {
     pub biases: Vec<Vec<f32>>,
     /// Exported optimizer state.
     pub opt_state: OptState,
+    /// Session display name at capture time (v2; empty for v1 files).
+    pub name: String,
+    /// Session scheduling priority at capture time (v2; 1 for v1
+    /// files).
+    pub priority: usize,
+    /// Session tenant at capture time (v2; empty for v1 files —
+    /// restore derives it from the name).
+    pub tenant: String,
+    /// Checkpoint lineage stem (`<safe-name>-<original-id>`): the file
+    /// prefix this session's snapshots are written under. Inherited
+    /// across `--resume-dir` restarts so one logical session keeps one
+    /// lineage, and the newest step of that lineage always wins (v2;
+    /// empty for v1 files).
+    pub stem: String,
+    /// Session lifecycle at capture time (see [`status_tag`]); v1
+    /// files read as [`status_tag::LIVE`].
+    pub status_tag: u8,
 }
 
 impl Checkpoint {
-    /// Capture a trainer + loop state (native engine only).
+    /// Capture a trainer + loop state (native engine only). Session
+    /// metadata defaults to empty; [`crate::serve::Session::checkpoint`]
+    /// fills it in.
     pub fn capture(trainer: &Trainer, lp: &crate::train::LoopState) -> Result<Self, String> {
         let model = trainer.model().ok_or("checkpoint requires the native engine")?;
         let opt = trainer.optimizer().ok_or("checkpoint requires the native engine")?;
@@ -53,6 +108,11 @@ impl Checkpoint {
             weights: model.weights.clone(),
             biases: model.biases.clone(),
             opt_state: opt.export_state(),
+            name: String::new(),
+            priority: 1,
+            tenant: String::new(),
+            stem: String::new(),
+            status_tag: status_tag::LIVE,
         })
     }
 
@@ -154,6 +214,12 @@ impl Checkpoint {
             w.u64(b.cols as u64);
             w.f32s(&b.data);
         }
+        // Session metadata (v2).
+        w.str(&self.name);
+        w.u64(self.priority as u64);
+        w.str(&self.tenant);
+        w.str(&self.stem);
+        w.u8(self.status_tag);
         w.buf
     }
 
@@ -165,8 +231,10 @@ impl Checkpoint {
             return Err("not an eva checkpoint (bad magic)".into());
         }
         let version = r.u32()?;
-        if version != VERSION {
-            return Err(format!("checkpoint version {version} unsupported (expected {VERSION})"));
+        if version != 1 && version != VERSION {
+            return Err(format!(
+                "checkpoint version {version} unsupported (expected 1..={VERSION})"
+            ));
         }
         let config = TrainConfig::from_json(&r.str()?)?;
         let step = r.u64()?;
@@ -249,6 +317,19 @@ impl Checkpoint {
             let data = r.f32s(rows.checked_mul(cols).ok_or("state buf overflow")?)?;
             bufs.push(StateBuf { name, rows, cols, data });
         }
+        let (sname, priority, tenant, stem, tag) = if version >= 2 {
+            let n = r.str()?;
+            let p = r.u64()? as usize;
+            let t = r.str()?;
+            let st = r.str()?;
+            let tag = r.u8()?;
+            if tag > status_tag::MAX {
+                return Err(format!("bad session status tag {tag}"));
+            }
+            (n, p.max(1), t, st, tag)
+        } else {
+            (String::new(), 1, String::new(), String::new(), status_tag::LIVE)
+        };
         r.finish()?;
         Ok(Checkpoint {
             config,
@@ -256,18 +337,57 @@ impl Checkpoint {
             weights,
             biases,
             opt_state: OptState { algo, version: opt_version, scalars, bufs },
+            name: sname,
+            priority,
+            tenant,
+            stem,
+            status_tag: tag,
         })
     }
 
-    /// Write to a file (parent directories are created).
+    /// Write to a file (parent directories are created). The write is
+    /// atomic: bytes go to a unique `*.tmp` sibling first (fsynced),
+    /// then `rename` moves it onto `path` — a crash mid-write never
+    /// leaves a truncated file at the canonical name.
     pub fn save(&self, path: &str) -> Result<(), String> {
+        use std::io::Write as _;
         let p = std::path::Path::new(path);
         if let Some(parent) = p.parent() {
             if !parent.as_os_str().is_empty() {
                 std::fs::create_dir_all(parent).map_err(|e| format!("{path}: {e}"))?;
             }
         }
-        std::fs::write(p, self.to_bytes()).map_err(|e| format!("{path}: {e}"))
+        // Unique tmp name: concurrent writers targeting the same final
+        // path (explicit + auto checkpoint racing at the same step,
+        // or an old serve process's shutdown sweep overlapping its
+        // replacement on one checkpoint_dir — hence the pid) must
+        // never interleave bytes in one tmp file.
+        static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let seq = TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let tmp = format!("{path}.{pid}.{seq}.tmp", pid = std::process::id());
+        let write = || -> std::io::Result<()> {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&self.to_bytes())?;
+            f.sync_all()?;
+            std::fs::rename(&tmp, p)?;
+            // fsync the directory entry too (Unix): without it the
+            // rename itself may not survive power loss, yet the
+            // auto-checkpoint clock has already been advanced by the
+            // caller on our Ok.
+            #[cfg(unix)]
+            {
+                let dir = match p.parent() {
+                    Some(d) if !d.as_os_str().is_empty() => d,
+                    _ => std::path::Path::new("."),
+                };
+                std::fs::File::open(dir)?.sync_all()?;
+            }
+            Ok(())
+        };
+        write().map_err(|e| {
+            let _ = std::fs::remove_file(&tmp);
+            format!("{path}: {e}")
+        })
     }
 
     /// Load from a file.
@@ -450,6 +570,42 @@ mod tests {
         ck.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(back.to_bytes(), ck.to_bytes());
+        // Session metadata round-trips (v2).
+        assert_eq!(back.name, "a");
+        assert_eq!(back.priority, 2);
+        assert_eq!(back.stem, "a-1");
+        // The atomic write leaves no tmp debris behind.
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().extension().is_some_and(|x| x == "tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "stray tmp files: {leftovers:?}");
         let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn version1_files_load_with_default_metadata() {
+        // Reconstruct a v1 payload from a v2 one: with empty metadata
+        // strings and priority 1 the v2 tail is exactly four u64-sized
+        // fields plus the status tag byte (33 bytes); strip it and
+        // patch the version field.
+        let mut s = Session::new(1, "a", 2, &cfg()).unwrap();
+        s.set_status(SessionStatus::Running);
+        s.run_quantum(2);
+        let mut ck = s.checkpoint().unwrap();
+        ck.name.clear();
+        ck.tenant.clear();
+        ck.stem.clear();
+        ck.priority = 1;
+        let mut bytes = ck.to_bytes();
+        bytes.truncate(bytes.len() - 33);
+        bytes[MAGIC.len()..MAGIC.len() + 4].copy_from_slice(&1u32.to_le_bytes());
+        let back = Checkpoint::from_bytes(&bytes).expect("v1 payload must still load");
+        assert_eq!(back.loop_snap.step, 2);
+        assert_eq!(back.name, "");
+        assert_eq!(back.priority, 1);
+        assert_eq!(back.stem, "");
+        assert_eq!(back.status_tag, status_tag::LIVE);
     }
 }

@@ -32,15 +32,40 @@ pub trait ServeClient {
         }
     }
 
-    /// Submit a config; returns the session id.
+    /// Submit a config; returns the session id. Never rejected for
+    /// capacity — past `max_sessions` the session queues (see
+    /// [`ServeClient::submit_as`] for the queue position).
     fn submit(&mut self, cfg: &TrainConfig, name: &str, priority: usize) -> Result<u64, String> {
-        let resp = self.request_ok(Json::obj(vec![
+        self.submit_as(cfg, name, priority, None).map(|(id, _)| id)
+    }
+
+    /// [`ServeClient::submit`] with an explicit tenant; returns
+    /// `(session id, queue_position)` — position 0 means the session
+    /// was admitted immediately, n ≥ 1 that it is n-th in the
+    /// admission queue.
+    fn submit_as(
+        &mut self,
+        cfg: &TrainConfig,
+        name: &str,
+        priority: usize,
+        tenant: Option<&str>,
+    ) -> Result<(u64, usize), String> {
+        let mut pairs = vec![
             ("cmd", Json::Str("submit".into())),
             ("config", cfg.to_json()),
             ("name", Json::Str(name.into())),
             ("priority", Json::Num(priority as f64)),
-        ]))?;
-        resp.get_f64("session").map(|v| v as u64).ok_or("no session id in response".into())
+        ];
+        if let Some(t) = tenant {
+            pairs.push(("tenant", Json::Str(t.into())));
+        }
+        let resp = self.request_ok(Json::obj(pairs))?;
+        let id = resp
+            .get_f64("session")
+            .map(|v| v as u64)
+            .ok_or("no session id in response")?;
+        let pos = resp.get_f64("queue_position").unwrap_or(0.0) as usize;
+        Ok((id, pos))
     }
 
     /// Submit a checkpoint file for restoration; returns the new

@@ -11,13 +11,23 @@
 //!   jobs can be time-sliced, paused and resumed mid-epoch.
 //! * [`checkpoint`] — versioned binary snapshots (weights, optimizer
 //!   state via [`crate::optim::Optimizer::export_state`], batcher
-//!   cursor + RNG, step counters). Save → restore → continue is
-//!   **bit-identical** to an uninterrupted run.
-//! * [`scheduler`] — runs every runnable session concurrently over the
-//!   shared compute pool, carving fair per-session lane budgets from
-//!   the global backend with [`crate::backend::split_weighted`]
-//!   (weighted by priority, re-carved on join/leave, degrading to
-//!   sequential at one lane).
+//!   cursor + RNG, step counters, session identity). Save → restore →
+//!   continue is **bit-identical** to an uninterrupted run, and writes
+//!   are atomic (tmp + rename — no torn files).
+//! * [`scheduler`] — promotes waiting sessions into free live slots
+//!   (FIFO within priority: submits past `max_sessions` queue instead
+//!   of erroring), runs every admitted runnable session concurrently
+//!   over the shared compute pool — carving fair per-session lane
+//!   budgets from the global backend with
+//!   [`crate::backend::split_weighted`] (weighted by priority,
+//!   re-carved on join/leave/pool swap, degrading to sequential at
+//!   one lane) — then handles durability: periodic auto-checkpoints
+//!   (`checkpoint_every_steps`) and terminal-session eviction
+//!   (`retain_terminal`).
+//! * [`signal`] — std-only SIGTERM/SIGINT shim; `eva serve` reacts by
+//!   checkpointing every live session and exiting, and a restart with
+//!   `--resume-dir` re-admits the newest snapshot per session lineage
+//!   ([`Service::resume_from_dir`]) — restart-transparent serving.
 //! * [`protocol`] / [`server`] / [`client`] — a newline-delimited-JSON
 //!   control plane (`submit` / `status` / `pause` / `resume` /
 //!   `checkpoint` / `cancel` / `stats` / `shutdown`) over
@@ -49,34 +59,63 @@ pub mod protocol;
 pub mod scheduler;
 pub mod server;
 pub mod session;
+pub mod signal;
 mod service;
 
 pub use checkpoint::Checkpoint;
 pub use client::{LocalClient, ServeClient, TcpClient};
 pub use server::Server;
 pub use service::{Service, ServiceStats};
-pub use session::{model_digest, Session, SessionState, SessionStatus};
+pub use session::{default_tenant, model_digest, Session, SessionState, SessionStatus};
 
 use crate::jsonx::Json;
 
 /// Service-level configuration, loadable from a JSON object with the
-/// keys `serve_addr`, `max_sessions`, `checkpoint_dir`,
-/// `quantum_steps` (all optional; unknown keys are rejected to catch
-/// typos, mirroring [`crate::config::TrainConfig::from_json`]).
+/// keys `serve_addr`, `max_sessions`, `max_sessions_per_tenant`,
+/// `checkpoint_dir`, `quantum_steps`, `checkpoint_every_steps`,
+/// `checkpoint_on_shutdown`, `retain_terminal`, `resume_dir` (all
+/// optional; unknown keys are rejected to catch typos, mirroring
+/// [`crate::config::TrainConfig::from_json`]).
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     /// TCP listen address for the control plane (`serve_addr`).
     /// Port 0 binds an ephemeral port (tests/CI).
     pub addr: String,
-    /// Maximum live (queued + running + paused) sessions; submits
-    /// beyond this are rejected (`max_sessions`).
+    /// Maximum concurrently *admitted* sessions (`max_sessions`).
+    /// Submits beyond this are parked in the admission queue
+    /// (`Queued`, with a reported `queue_position`) and promoted FIFO
+    /// within priority as slots free — never rejected.
     pub max_sessions: usize,
+    /// Per-tenant cap on *live* (queued + running + paused) sessions
+    /// (`max_sessions_per_tenant`); 0 = unlimited. Tenants are the
+    /// explicit `tenant` submit field, defaulting to the session-name
+    /// prefix before the first `/`. Keeps one client from
+    /// monopolizing the admission queue.
+    pub max_sessions_per_tenant: usize,
     /// Directory checkpoint snapshots are written to
     /// (`checkpoint_dir`).
     pub checkpoint_dir: String,
     /// Steps a session runs per scheduler round — the time-slice
     /// granularity for pause/checkpoint/cancel (`quantum_steps`).
     pub quantum_steps: usize,
+    /// Auto-checkpoint every session each time its step count
+    /// advances this far past its last snapshot
+    /// (`checkpoint_every_steps`); 0 = disabled. Scheduler-driven,
+    /// same path scheme and atomic write as the `checkpoint` command.
+    pub checkpoint_every_steps: u64,
+    /// Snapshot every live session during [`Service::shutdown`]
+    /// (`checkpoint_on_shutdown`, default true) so a restart with
+    /// `--resume-dir` loses nothing.
+    pub checkpoint_on_shutdown: bool,
+    /// How many terminal (done/cancelled/failed) sessions to keep in
+    /// the registry for `status` queries (`retain_terminal`); the
+    /// scheduler evicts the oldest beyond this, and `status` on an
+    /// evicted id reports "evicted".
+    pub retain_terminal: usize,
+    /// Directory to re-admit the newest checkpoint per session
+    /// lineage from at boot (`resume_dir`; the CLI flag
+    /// `--resume-dir` overrides it). `None` = fresh boot.
+    pub resume_dir: Option<String>,
     /// Scheduler idle sleep between rounds with no runnable session.
     pub idle_sleep_ms: u64,
 }
@@ -86,8 +125,13 @@ impl Default for ServeConfig {
         ServeConfig {
             addr: "127.0.0.1:7931".into(),
             max_sessions: 8,
+            max_sessions_per_tenant: 0,
             checkpoint_dir: "checkpoints".into(),
             quantum_steps: 8,
+            checkpoint_every_steps: 0,
+            checkpoint_on_shutdown: true,
+            retain_terminal: 64,
+            resume_dir: None,
             idle_sleep_ms: 5,
         }
     }
@@ -119,6 +163,24 @@ impl ServeConfig {
                     }
                     c.quantum_steps = n;
                 }
+                "max_sessions_per_tenant" => {
+                    c.max_sessions_per_tenant =
+                        val.as_usize().ok_or("max_sessions_per_tenant: number")?;
+                }
+                "checkpoint_every_steps" => {
+                    c.checkpoint_every_steps =
+                        val.as_usize().ok_or("checkpoint_every_steps: number")? as u64;
+                }
+                "checkpoint_on_shutdown" => {
+                    c.checkpoint_on_shutdown =
+                        val.as_bool().ok_or("checkpoint_on_shutdown: bool")?;
+                }
+                "retain_terminal" => {
+                    c.retain_terminal = val.as_usize().ok_or("retain_terminal: number")?;
+                }
+                "resume_dir" => {
+                    c.resume_dir = Some(val.as_str().ok_or("resume_dir: string")?.to_string());
+                }
                 other => return Err(format!("unknown serve config key '{other}'")),
             }
         }
@@ -140,14 +202,31 @@ mod tests {
     fn serve_config_parses_and_validates() {
         let c = ServeConfig::from_json(
             r#"{"serve_addr": "0.0.0.0:9000", "max_sessions": 3,
-                "checkpoint_dir": "/tmp/ck", "quantum_steps": 4}"#,
+                "checkpoint_dir": "/tmp/ck", "quantum_steps": 4,
+                "max_sessions_per_tenant": 2, "checkpoint_every_steps": 50,
+                "checkpoint_on_shutdown": false, "retain_terminal": 16,
+                "resume_dir": "/tmp/ck"}"#,
         )
         .unwrap();
         assert_eq!(c.addr, "0.0.0.0:9000");
         assert_eq!(c.max_sessions, 3);
         assert_eq!(c.checkpoint_dir, "/tmp/ck");
         assert_eq!(c.quantum_steps, 4);
+        assert_eq!(c.max_sessions_per_tenant, 2);
+        assert_eq!(c.checkpoint_every_steps, 50);
+        assert!(!c.checkpoint_on_shutdown);
+        assert_eq!(c.retain_terminal, 16);
+        assert_eq!(c.resume_dir.as_deref(), Some("/tmp/ck"));
+        // Defaults: quotas off, periodic checkpoints off, shutdown
+        // snapshot on.
+        let d = ServeConfig::from_json("{}").unwrap();
+        assert_eq!(d.max_sessions_per_tenant, 0);
+        assert_eq!(d.checkpoint_every_steps, 0);
+        assert!(d.checkpoint_on_shutdown);
+        assert_eq!(d.retain_terminal, 64);
+        assert!(d.resume_dir.is_none());
         assert!(ServeConfig::from_json(r#"{"max_sessions": 0}"#).is_err());
         assert!(ServeConfig::from_json(r#"{"port": 1}"#).is_err());
+        assert!(ServeConfig::from_json(r#"{"checkpoint_on_shutdown": 1}"#).is_err());
     }
 }

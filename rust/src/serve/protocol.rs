@@ -6,7 +6,7 @@
 //!
 //! | `cmd` | request fields | response fields |
 //! |---|---|---|
-//! | `submit` | `config` *(object)* **or** `checkpoint` *(path)*, `name`?, `priority`? | `session` |
+//! | `submit` | `config` *(object)* **or** `checkpoint` *(path)*, `name`?, `priority`?, `tenant`? | `session`, `status`, `queue_position` |
 //! | `status` | `session` | session state |
 //! | `pause` | `session` | session state |
 //! | `resume` | `session` | session state |
@@ -56,16 +56,27 @@ fn handle(svc: &Service, req: &Json) -> Result<Vec<(&'static str, Json)>, String
         "submit" => {
             let name = req.get_str("name").unwrap_or("job").to_string();
             let priority = req.get_usize("priority").unwrap_or(1);
+            let tenant = req.get_str("tenant");
             let id = if let Some(path) = req.get_str("checkpoint") {
-                svc.submit_checkpoint(path, &name, priority)?
+                svc.submit_checkpoint_as(path, &name, priority, tenant)?
             } else {
                 let cfg_json = req
                     .get("config")
                     .ok_or("submit needs 'config' (object) or 'checkpoint' (path)")?;
                 let cfg = TrainConfig::from_json(&cfg_json.dump())?;
-                svc.submit(&cfg, &name, priority)?
+                svc.submit_as(&cfg, &name, priority, tenant)?
             };
-            Ok(vec![("session", Json::Num(id as f64))])
+            // An over-cap submit is *queued*, not rejected — tell the
+            // client where it stands. Best-effort: the submit already
+            // succeeded, so a failed status lookup (the session can
+            // finish and be evicted in this very window) must not be
+            // reported as a submit error.
+            let mut fields = vec![("session", Json::Num(id as f64))];
+            if let Ok(st) = svc.status(id) {
+                fields.push(("status", Json::Str(st.status.as_str().to_string())));
+                fields.push(("queue_position", Json::Num(st.queue_position as f64)));
+            }
+            Ok(fields)
         }
         "status" => Ok(state_fields(&svc.status(session_arg(req)?)?)),
         "pause" => Ok(state_fields(&svc.pause(session_arg(req)?)?)),
@@ -95,8 +106,10 @@ pub fn session_state_json(st: &SessionState) -> Json {
     let mut pairs: Vec<(&str, Json)> = vec![
         ("id", Json::Num(st.id as f64)),
         ("name", Json::Str(st.name.clone())),
+        ("tenant", Json::Str(st.tenant.clone())),
         ("priority", Json::Num(st.priority as f64)),
         ("status", Json::Str(st.status.as_str().to_string())),
+        ("queue_position", Json::Num(st.queue_position as f64)),
         ("step", Json::Num(st.step as f64)),
         ("total_steps", Json::Num(st.total_steps as f64)),
         ("epoch", Json::Num(st.epoch as f64)),
@@ -121,11 +134,15 @@ pub fn stats_fields(st: &ServiceStats) -> Vec<(&'static str, Json)> {
         ("running", Json::Num(st.running as f64)),
         ("paused", Json::Num(st.paused as f64)),
         ("live", Json::Num(st.live as f64)),
+        ("admitted", Json::Num(st.admitted as f64)),
         ("max_sessions", Json::Num(st.max_sessions as f64)),
         ("total_lanes", Json::Num(st.total_lanes as f64)),
         ("backend", Json::Str(st.backend.clone())),
         ("rounds", Json::Num(st.rounds as f64)),
         ("scheduler_steps", Json::Num(st.scheduler_steps as f64)),
+        ("auto_checkpoints", Json::Num(st.auto_checkpoints as f64)),
+        ("promotions", Json::Num(st.promotions as f64)),
+        ("evicted", Json::Num(st.evicted as f64)),
         ("p50_step_ms", Json::Num(st.p50_step_ms)),
         ("p95_step_ms", Json::Num(st.p95_step_ms)),
         (
@@ -147,6 +164,7 @@ mod tests {
                 .join("eva-serve-proto-test")
                 .to_string_lossy()
                 .into_owned(),
+            checkpoint_on_shutdown: false,
             ..ServeConfig::default()
         })
     }
@@ -176,6 +194,8 @@ mod tests {
         let resp = dispatch(&svc, &req);
         assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
         assert_eq!(resp.get("id"), Some(&Json::Num(42.0)), "request id echoed");
+        // Under the cap: admitted straight away, no queue position.
+        assert_eq!(resp.get_f64("queue_position"), Some(0.0), "{resp:?}");
         let sid = resp.get_f64("session").unwrap();
         let resp = dispatch(
             &svc,
@@ -187,6 +207,7 @@ mod tests {
         assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
         let state = resp.get("session").unwrap();
         assert_eq!(state.get_str("name"), Some("p1"));
+        assert_eq!(state.get_str("tenant"), Some("p1"), "tenant defaults to the name prefix");
         assert_eq!(state.get_f64("priority"), Some(2.0));
         let resp = dispatch(
             &svc,

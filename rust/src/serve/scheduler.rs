@@ -1,17 +1,25 @@
 //! Fair time-slicing of sessions over the shared compute pool.
 //!
-//! Each **round**, the scheduler collects every runnable session
-//! (promoting `Queued` → `Running`), carves the global backend's lane
-//! budget into per-session handles with
-//! [`crate::backend::split_weighted`] — lanes proportional to session
-//! priority, re-carved only when the runnable set or weights change
-//! (join/leave/pause), since each carve builds real worker pools —
-//! and fans the quanta out with one [`crate::backend::par_map`] over
-//! the shared backend. Every session's compute then runs under
+//! Each **round**, the scheduler first promotes waiting sessions into
+//! free live slots (FIFO within priority — the admission queue), then
+//! collects every *admitted* runnable session (flipping `Queued` →
+//! `Running`), carves the global backend's lane budget into
+//! per-session handles with [`crate::backend::split_weighted`] —
+//! lanes proportional to session priority, re-carved only when the
+//! runnable set, weights, or the *identity* of the shared pool
+//! changes, since each carve builds real worker pools — and fans the
+//! quanta out with one [`crate::backend::par_map`] over the shared
+//! backend. Every session's compute then runs under
 //! [`crate::backend::with_backend`] on its own sub-pool handle: the
 //! same one-dispatch-layer shape the data-parallel coordinator uses,
 //! so numerics are bit-identical whatever the carve (a 1-lane share
 //! degrades to inline sequential execution).
+//!
+//! After the quanta, the round runs the durability housekeeping:
+//! sessions whose step advanced `checkpoint_every_steps` past their
+//! last snapshot are checkpointed (atomic tmp + rename, session lock
+//! dropped before disk I/O), and terminal sessions beyond the
+//! `retain_terminal` cap are evicted from the registry.
 //!
 //! A panic inside one session's step is contained: the session is
 //! marked `Failed` and the neighbouring tenants keep running.
@@ -20,16 +28,37 @@ use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 
 use crate::backend::{self, Backend};
-use crate::serve::service::Inner;
+use crate::serve::checkpoint::status_tag;
+use crate::serve::service::{self, Inner};
 use crate::serve::session::{Session, SessionStatus};
 
 /// Cached lane carve, invalidated when the runnable (id, priority) set
-/// or the shared backend changes.
+/// or the shared backend changes. The backend is keyed on **pool
+/// identity + label**, not label alone: two `threads:N` pools with the
+/// same `N` are different pools, and sub-pool handles carved from a
+/// replaced pool must not be reused (they would keep dispatching into
+/// the dead pool's workers).
 #[derive(Default)]
 pub(crate) struct CarveCache {
     key: Vec<(u64, usize)>,
-    parent: String,
+    parent: (u64, String),
     handles: Vec<Arc<dyn Backend>>,
+}
+
+impl CarveCache {
+    /// Make sure the cache matches `parent` + the runnable `key`,
+    /// re-carving if anything changed. Returns true when it re-carved.
+    pub(crate) fn ensure(&mut self, parent: &Arc<dyn Backend>, key: Vec<(u64, usize)>) -> bool {
+        let pkey = (parent.pool_id(), parent.label());
+        if self.key == key && self.parent == pkey {
+            return false;
+        }
+        let weights: Vec<usize> = key.iter().map(|(_, p)| *p).collect();
+        self.handles = backend::split_weighted(&**parent, &weights);
+        self.key = key;
+        self.parent = pkey;
+        true
+    }
 }
 
 /// Scheduler thread body: rounds until the service stops.
@@ -46,37 +75,41 @@ pub(crate) fn run(inner: Arc<Inner>) {
 
 /// One scheduler round; returns the total steps executed.
 pub(crate) fn round(inner: &Inner, carve: &mut CarveCache) -> usize {
-    // Collect runnable sessions, promoting freshly queued ones. Status
-    // transitions only ever happen under the session mutex.
+    // Fill freed slots from the admission queue.
+    service::promote_waiting(inner);
+    // Collect runnable sessions among the admitted. Status transitions
+    // only ever happen under the session mutex.
     let runnable: Vec<(u64, Arc<Mutex<Session>>, usize)> = {
         let map = inner.sessions.lock().unwrap_or_else(|e| e.into_inner());
         map.iter()
-            .filter_map(|(id, s)| {
-                let mut sl = s.lock().unwrap_or_else(|e| e.into_inner());
-                let status = sl.status().clone();
-                match status {
+            .filter_map(|(id, slot)| {
+                if !slot.admitted.load(Ordering::Relaxed) {
+                    return None; // parked in the admission queue
+                }
+                let mut sl = slot.sess.lock().unwrap_or_else(|e| e.into_inner());
+                match sl.status().clone() {
                     SessionStatus::Queued => sl.set_status(SessionStatus::Running),
                     SessionStatus::Running => {}
                     _ => return None,
                 }
-                let p = sl.priority;
-                Some((*id, Arc::clone(s), p))
+                Some((*id, Arc::clone(&slot.sess), slot.priority))
             })
             .collect()
     };
     if runnable.is_empty() {
+        // Housekeeping still runs on idle rounds: a cancelled/failed
+        // session must get its terminal tombstone (and a paused one
+        // its pending snapshot) even when nothing is stepping — a
+        // hard kill during an idle stretch must not resurrect it.
+        auto_checkpoint(inner);
+        evict_terminal(inner);
         return 0;
     }
     // (Re-)carve per-session lane budgets on join/leave or a backend
-    // swap.
+    // swap (pool identity, not just label — see CarveCache).
     let parent = backend::global();
     let key: Vec<(u64, usize)> = runnable.iter().map(|(id, _, p)| (*id, *p)).collect();
-    if carve.key != key || carve.parent != parent.label() {
-        let weights: Vec<usize> = key.iter().map(|(_, p)| *p).collect();
-        carve.handles = backend::split_weighted(&*parent, &weights);
-        carve.key = key;
-        carve.parent = parent.label();
-    }
+    carve.ensure(&parent, key);
     let handles = &carve.handles;
     let quantum = inner.cfg.quantum_steps;
     // Fan the quanta out over the shared pool; each session computes
@@ -105,7 +138,140 @@ pub(crate) fn round(inner: &Inner, carve: &mut CarveCache) -> usize {
     });
     let total: usize = steps.iter().sum();
     inner.sched_steps.fetch_add(total as u64, Ordering::Relaxed);
+    auto_checkpoint(inner);
+    evict_terminal(inner);
     total
+}
+
+/// Periodic durability: checkpoint every live session whose step
+/// advanced `checkpoint_every_steps` past its last snapshot, and
+/// write a one-time terminal *tombstone* for sessions that reached a
+/// terminal state — so a restart never resurrects a job the operator
+/// saw finish, fail or get cancelled. Runs between rounds (locks
+/// free); the disk write itself happens outside the session lock via
+/// [`service::checkpoint_session`].
+fn auto_checkpoint(inner: &Inner) {
+    let every = inner.cfg.checkpoint_every_steps;
+    let sessions: Vec<(u64, Arc<Mutex<Session>>, Arc<Mutex<()>>)> = inner
+        .sessions
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .iter()
+        .map(|(id, slot)| (*id, Arc::clone(&slot.sess), Arc::clone(&slot.ckpt_io)))
+        .collect();
+    for (id, sess, io) in sessions {
+        let due = {
+            let s = sess.lock().unwrap_or_else(|e| e.into_inner());
+            if s.status().is_live() {
+                // Periodic snapshots only when the operator asked —
+                // but a pause/resume flip must be re-stamped onto an
+                // existing lineage even with no step progress, or a
+                // hard kill silently un-pauses (or re-pauses) the
+                // session on the next restart.
+                let want_tag = if *s.status() == SessionStatus::Paused {
+                    status_tag::PAUSED
+                } else {
+                    status_tag::LIVE
+                };
+                (every > 0 && s.step_count() >= s.last_checkpoint_step() + every)
+                    || (s.ever_checkpointed() && s.last_checkpoint_tag() != want_tag)
+            } else {
+                // Tombstones are NOT gated on `every`: any lineage
+                // with on-disk snapshots must not be left LIVE-tagged
+                // once its session is terminal, or a hard kill
+                // resurrects it. A lineage with no files has nothing
+                // to contradict and gets no file.
+                s.ever_checkpointed() && !s.last_checkpoint_was_terminal()
+            }
+        };
+        if !due {
+            continue;
+        }
+        match service::checkpoint_session(&inner.cfg, &sess, &io) {
+            Ok(_) => {
+                inner.auto_checkpoints.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => eprintln!("serve: auto-checkpoint of session {id} failed: {e}"),
+        }
+    }
+}
+
+/// How many evicted ids to remember for the "evicted" status error.
+/// Bounds the memory of the eviction bookkeeping itself: a service
+/// churning through millions of short sessions must not re-grow the
+/// very leak `retain_terminal` fixes. Ids pruned from this memory
+/// fall back to the plain "no session" error.
+const EVICTED_IDS_REMEMBERED: usize = 1024;
+
+/// Drop the oldest terminal sessions beyond `retain_terminal` so a
+/// long-lived service doesn't grow its registry (and `stats` cost)
+/// without bound. A session whose lineage has on-disk snapshots but
+/// no terminal tombstone yet gets the tombstone written *before* it
+/// is forgotten — otherwise the stale LIVE snapshot would resurrect
+/// the job on the next `--resume-dir` with nobody left to contradict
+/// it. Evicted ids are remembered (up to [`EVICTED_IDS_REMEMBERED`])
+/// so `status` can report "evicted" instead of "no such session".
+fn evict_terminal(inner: &Inner) {
+    let cap = inner.cfg.retain_terminal;
+    // Phase 1 — find terminal sessions (oldest first: BTreeMap
+    // iteration is id-ascending) without any disk I/O under the map
+    // lock. try_lock: a busy session is mid-quantum, hence live.
+    type Candidate = (u64, Arc<Mutex<Session>>, Arc<Mutex<()>>, bool);
+    let terminal: Vec<Candidate> = {
+        let map = inner.sessions.lock().unwrap_or_else(|e| e.into_inner());
+        if map.len() <= cap {
+            return; // cheap out: terminal count ≤ registry size
+        }
+        map.iter()
+            .filter_map(|(id, slot)| match slot.sess.try_lock() {
+                Ok(s) if !s.status().is_live() => {
+                    let needs_tombstone =
+                        s.ever_checkpointed() && !s.last_checkpoint_was_terminal();
+                    Some((
+                        *id,
+                        Arc::clone(&slot.sess),
+                        Arc::clone(&slot.ckpt_io),
+                        needs_tombstone,
+                    ))
+                }
+                _ => None,
+            })
+            .collect()
+    };
+    if terminal.len() <= cap {
+        return;
+    }
+    // Phase 2 — tombstone where required (outside the map lock). A
+    // failed write keeps the session registered for a later retry.
+    let n_evict = terminal.len() - cap;
+    let mut evict_ids: Vec<u64> = Vec::with_capacity(n_evict);
+    for (id, sess, io, needs_tombstone) in terminal.into_iter().take(n_evict) {
+        if needs_tombstone {
+            match service::checkpoint_session(&inner.cfg, &sess, &io) {
+                Ok(_) => {
+                    inner.auto_checkpoints.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) => {
+                    eprintln!("serve: tombstone before evicting session {id} failed: {e}");
+                    continue;
+                }
+            }
+        }
+        evict_ids.push(id);
+    }
+    // Phase 3 — forget them. Terminal states are never left, so the
+    // collected sessions are still terminal here.
+    let mut map = inner.sessions.lock().unwrap_or_else(|e| e.into_inner());
+    let mut evicted = inner.evicted.lock().unwrap_or_else(|e| e.into_inner());
+    for id in evict_ids {
+        if map.remove(&id).is_some() {
+            evicted.insert(id);
+            inner.evicted_total.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    while evicted.len() > EVICTED_IDS_REMEMBERED {
+        evicted.pop_first();
+    }
 }
 
 fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
@@ -115,5 +281,31 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
         s.clone()
     } else {
         "opaque panic payload".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{Sequential, Threaded};
+
+    #[test]
+    fn carve_cache_rekeys_on_pool_identity_not_just_label() {
+        let mut cache = CarveCache::default();
+        let key = vec![(1u64, 2usize), (2, 1)];
+        let pool_a: Arc<dyn Backend> = Arc::new(Threaded::new(2));
+        let pool_b: Arc<dyn Backend> = Arc::new(Threaded::new(2));
+        assert_eq!(pool_a.label(), pool_b.label(), "setup: labels must collide");
+        assert_ne!(pool_a.pool_id(), pool_b.pool_id(), "pools have distinct identities");
+        assert!(cache.ensure(&pool_a, key.clone()), "first use carves");
+        assert!(!cache.ensure(&pool_a, key.clone()), "same pool + key reuses");
+        // The regression: swapping in a different pool with the same
+        // label used to silently reuse handles carved from the old one.
+        assert!(cache.ensure(&pool_b, key.clone()), "same-label pool swap must re-carve");
+        // And the other invalidation axes still work.
+        assert!(cache.ensure(&pool_b, vec![(1, 2)]), "runnable-set change re-carves");
+        let seq: Arc<dyn Backend> = Arc::new(Sequential);
+        assert!(cache.ensure(&seq, vec![(1, 2)]), "backend kind change re-carves");
+        assert_eq!(seq.pool_id(), 0, "Sequential has no pool identity");
     }
 }

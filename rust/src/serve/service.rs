@@ -1,6 +1,17 @@
 //! The multi-tenant service: session registry + scheduler lifecycle.
+//!
+//! **Admission control** (durable since ISSUE 5): `max_sessions` caps
+//! *admitted* sessions — the ones holding a live compute slot — not
+//! submissions. A submit beyond the cap parks the session in the
+//! admission queue (`Queued` with a 1-based `queue_position`); the
+//! scheduler promotes waiting sessions FIFO-within-priority as slots
+//! free up. `max_sessions_per_tenant` bounds how many *live* (queued
+//! + running + paused) sessions one tenant may hold, so a single
+//! client cannot monopolize the queue. Terminal sessions are retained
+//! for status queries up to `retain_terminal`, then evicted (a later
+//! `status` gets a distinct "evicted" error).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -11,15 +22,67 @@ use crate::serve::session::{Session, SessionState, SessionStatus};
 use crate::serve::ServeConfig;
 use crate::train::StepTimer;
 
+/// One registry entry: the session plus the scheduling metadata that
+/// must be readable without the session mutex, so admission
+/// bookkeeping and status queries never block behind a mid-quantum
+/// compute lock.
+pub(crate) struct Slot {
+    pub(crate) sess: Arc<Mutex<Session>>,
+    pub(crate) tenant: String,
+    pub(crate) priority: usize,
+    /// True once the session holds one of the `max_sessions` live
+    /// slots; false while parked in the admission queue. One-way;
+    /// flipped only by [`promote_waiting`] under the registry lock.
+    /// Key invariant: the scheduler only ever steps admitted
+    /// sessions, so an *unadmitted* session's mutex is never held
+    /// longer than a brief control-plane read.
+    pub(crate) admitted: AtomicBool,
+    /// Serializes checkpoint *writes* of this session. The session
+    /// mutex is deliberately dropped before disk I/O (a slow disk
+    /// must not stall the scheduler), so without this a stale LIVE
+    /// snapshot could rename over a freshly written terminal
+    /// tombstone at the same `<stem>-step<K>.ckpt` path and
+    /// un-tombstone the lineage.
+    pub(crate) ckpt_io: Arc<Mutex<()>>,
+}
+
+/// The admission-queue order shared by promotion, `queue_position`
+/// reporting and `stats`: higher priority first, then submission (id)
+/// order within a priority — FIFO within priority.
+pub(crate) fn admission_cmp(a: &(usize, u64), b: &(usize, u64)) -> std::cmp::Ordering {
+    b.0.cmp(&a.0).then(a.1.cmp(&b.1))
+}
+
+/// Order `(priority, id)` waiting entries into promotion order and
+/// return just the ids — the one shape behind [`promote_waiting`],
+/// [`Service::status`]'s `queue_position` and `stats`, so the three
+/// can never disagree about who is next.
+pub(crate) fn order_waiting(mut waiting: Vec<(usize, u64)>) -> Vec<u64> {
+    waiting.sort_by(admission_cmp);
+    waiting.into_iter().map(|(_, id)| id).collect()
+}
+
 /// Shared state between the service facade, the scheduler thread and
 /// the TCP server.
 pub(crate) struct Inner {
     pub(crate) cfg: ServeConfig,
-    pub(crate) sessions: Mutex<BTreeMap<u64, Arc<Mutex<Session>>>>,
+    pub(crate) sessions: Mutex<BTreeMap<u64, Slot>>,
+    /// Ids of terminal sessions dropped by the `retain_terminal` cap —
+    /// kept (bounded; see `scheduler::EVICTED_IDS_REMEMBERED`) so
+    /// `status` can distinguish "evicted" from "never existed".
+    pub(crate) evicted: Mutex<BTreeSet<u64>>,
+    /// Monotonic count of evictions (the stats counter — unlike the
+    /// id memory above, this never plateaus).
+    pub(crate) evicted_total: AtomicU64,
     pub(crate) next_id: AtomicU64,
     pub(crate) stop: AtomicBool,
     pub(crate) rounds: AtomicU64,
     pub(crate) sched_steps: AtomicU64,
+    /// Checkpoints written by the scheduler clock + shutdown snapshot
+    /// (explicit client `checkpoint` commands are not counted here).
+    pub(crate) auto_checkpoints: AtomicU64,
+    /// Waiting sessions promoted into live slots.
+    pub(crate) promotions: AtomicU64,
     sched_handle: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
@@ -34,16 +97,17 @@ pub struct Service {
 /// Aggregate service statistics (the `stats` protocol command).
 #[derive(Clone, Debug)]
 pub struct ServiceStats {
-    /// Sessions admitted but not yet picked up by the scheduler.
+    /// Admission-queue length: live sessions waiting for a slot.
     pub queue_depth: usize,
     /// Sessions currently being stepped.
     pub running: usize,
     /// Sessions held by `pause`.
     pub paused: usize,
-    /// Live sessions (queued + running + paused) against
-    /// `max_sessions`.
+    /// Live sessions (queued + running + paused), admitted or waiting.
     pub live: usize,
-    /// Admission cap.
+    /// Live sessions holding one of the `max_sessions` slots.
+    pub admitted: usize,
+    /// Admission cap on concurrently *admitted* sessions.
     pub max_sessions: usize,
     /// Lanes of the shared compute pool the scheduler carves.
     pub total_lanes: usize,
@@ -53,26 +117,122 @@ pub struct ServiceStats {
     pub rounds: u64,
     /// Optimizer steps executed by the scheduler, all sessions.
     pub scheduler_steps: u64,
+    /// Scheduler-driven checkpoints written (periodic + shutdown).
+    pub auto_checkpoints: u64,
+    /// Waiting sessions promoted into live slots so far.
+    pub promotions: u64,
+    /// Terminal sessions evicted by the `retain_terminal` cap.
+    pub evicted: u64,
     /// Median step latency (ms) across every session's lifetime.
     pub p50_step_ms: f64,
     /// 95th-percentile step latency (ms) across every session.
     pub p95_step_ms: f64,
-    /// Per-session states.
+    /// Per-session states (evicted sessions excluded).
     pub sessions: Vec<SessionState>,
+}
+
+/// Snapshot one session to its checkpoint lineage file under
+/// `cfg.checkpoint_dir`; returns `(path, step)`.
+///
+/// Lock discipline (the torn-checkpoint fix): the session mutex is
+/// held only for the *in-memory* capture — it is dropped before any
+/// filesystem work, so a slow disk never stalls a scheduler round on
+/// this session's lock — and [`Checkpoint::save`] writes tmp + rename,
+/// so a crash mid-write never leaves a truncated `.ckpt` at the
+/// canonical name. The periodic clock (`last_checkpoint_step`) is only
+/// advanced after the rename succeeds. `io` (the slot's
+/// [`Slot::ckpt_io`]) is held across capture → write → bookkeeping so
+/// same-session writers cannot reorder a stale LIVE snapshot over a
+/// terminal tombstone.
+pub(crate) fn checkpoint_session(
+    cfg: &ServeConfig,
+    sess: &Arc<Mutex<Session>>,
+    io: &Mutex<()>,
+) -> Result<(String, u64), String> {
+    let _write_order = io.lock().unwrap_or_else(|e| e.into_inner());
+    let (ck, stem) = {
+        let s = sess.lock().unwrap_or_else(|e| e.into_inner());
+        (s.checkpoint()?, s.ckpt_stem().to_string())
+    };
+    let step = ck.loop_snap.step;
+    let tag = ck.status_tag;
+    let path = std::path::Path::new(&cfg.checkpoint_dir)
+        .join(format!("{stem}-step{step}.ckpt"))
+        .to_string_lossy()
+        .into_owned();
+    ck.save(&path)?;
+    sess.lock().unwrap_or_else(|e| e.into_inner()).note_checkpointed_at(step, tag);
+    Ok((path, step))
+}
+
+/// Promote waiting sessions into free live slots in
+/// [`admission_cmp`] order. Returns the number promoted.
+///
+/// The registry lock is held across the scan *and* the flips, so
+/// concurrent submits cannot both count the same free slot. The scan
+/// never blocks behind compute: waiting sessions are unadmitted (the
+/// scheduler never steps them, so their locks are only briefly held),
+/// and for admitted sessions a busy mutex *means* mid-quantum, hence
+/// live — `try_lock`-else-live is exact there. (A control-plane read
+/// holding a terminal session's lock can transiently over-count by
+/// one, which only delays a promotion to the next scheduler round.)
+pub(crate) fn promote_waiting(inner: &Inner) -> usize {
+    let map = inner.sessions.lock().unwrap_or_else(|e| e.into_inner());
+    let mut admitted_live = 0usize;
+    let mut waiting: Vec<(usize, u64)> = Vec::new();
+    for (id, slot) in map.iter() {
+        if slot.admitted.load(Ordering::Relaxed) {
+            let live = match slot.sess.try_lock() {
+                Ok(s) => s.status().is_live(),
+                Err(_) => true, // busy ⇒ mid-quantum ⇒ live
+            };
+            if live {
+                admitted_live += 1;
+            }
+        } else {
+            let s = slot.sess.lock().unwrap_or_else(|e| e.into_inner());
+            if *s.status() == SessionStatus::Queued {
+                waiting.push((slot.priority, *id));
+            }
+            // A paused-but-never-admitted session is live (it counts
+            // against quotas) but not promotable until resumed.
+        }
+    }
+    let free = inner.cfg.max_sessions.saturating_sub(admitted_live);
+    if free == 0 || waiting.is_empty() {
+        return 0;
+    }
+    let mut promoted = 0usize;
+    for id in order_waiting(waiting).into_iter().take(free) {
+        if let Some(slot) = map.get(&id) {
+            slot.admitted.store(true, Ordering::Relaxed);
+            promoted += 1;
+        }
+    }
+    inner.promotions.fetch_add(promoted as u64, Ordering::Relaxed);
+    promoted
 }
 
 impl Service {
     /// Start a service: the scheduler thread begins immediately;
     /// sessions arrive via [`Service::submit`] (or the TCP server /
-    /// clients layered on top).
+    /// clients layered on top). When `cfg.resume_dir` is set, the
+    /// previous incarnation's sessions are re-admitted before this
+    /// returns ([`Service::resume_from_dir`]; per-lineage failures
+    /// are logged, never fatal).
     pub fn start(cfg: ServeConfig) -> Service {
+        let resume_dir = cfg.resume_dir.clone();
         let inner = Arc::new(Inner {
             cfg,
             sessions: Mutex::new(BTreeMap::new()),
+            evicted: Mutex::new(BTreeSet::new()),
+            evicted_total: AtomicU64::new(0),
             next_id: AtomicU64::new(1),
             stop: AtomicBool::new(false),
             rounds: AtomicU64::new(0),
             sched_steps: AtomicU64::new(0),
+            auto_checkpoints: AtomicU64::new(0),
+            promotions: AtomicU64::new(0),
             sched_handle: Mutex::new(None),
         });
         let for_thread = Arc::clone(&inner);
@@ -81,7 +241,13 @@ impl Service {
             .spawn(move || scheduler::run(for_thread))
             .expect("spawn scheduler thread");
         *inner.sched_handle.lock().unwrap_or_else(|e| e.into_inner()) = Some(handle);
-        Service { inner }
+        let svc = Service { inner };
+        if let Some(dir) = resume_dir {
+            if let Err(e) = svc.resume_from_dir(&dir) {
+                eprintln!("serve: resume from '{dir}' failed: {e}");
+            }
+        }
+        svc
     }
 
     /// The service configuration.
@@ -96,75 +262,307 @@ impl Service {
     }
 
     /// Stop the scheduler and wake nothing further. Idempotent; joins
-    /// the scheduler thread so in-flight quanta finish first.
+    /// the scheduler thread so in-flight quanta finish first, then —
+    /// unless `checkpoint_on_shutdown` is off — snapshots every live
+    /// session to `checkpoint_dir`, and writes a terminal tombstone
+    /// for any terminal session whose lineage doesn't have one yet,
+    /// so a restart with [`Service::resume_from_dir`] reproduces the
+    /// pre-shutdown population exactly (terminal sessions come back
+    /// terminal, not resurrected).
     pub fn shutdown(&self) {
         self.inner.stop.store(true, Ordering::Relaxed);
         let handle = self.inner.sched_handle.lock().unwrap_or_else(|e| e.into_inner()).take();
-        if let Some(h) = handle {
-            let _ = h.join();
+        let Some(h) = handle else { return };
+        let _ = h.join();
+        if !self.inner.cfg.checkpoint_on_shutdown {
+            return;
+        }
+        // The scheduler is gone: session locks are only briefly held
+        // by control-plane commands now, so a blocking sweep is safe.
+        let sessions: Vec<(u64, Arc<Mutex<Session>>, Arc<Mutex<()>>)> = self
+            .inner
+            .sessions
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .map(|(id, slot)| (*id, Arc::clone(&slot.sess), Arc::clone(&slot.ckpt_io)))
+            .collect();
+        for (id, sess, io) in sessions {
+            let wants_snapshot = {
+                let s = sess.lock().unwrap_or_else(|e| e.into_inner());
+                s.status().is_live() || !s.last_checkpoint_was_terminal()
+            };
+            if !wants_snapshot {
+                continue;
+            }
+            match checkpoint_session(&self.inner.cfg, &sess, &io) {
+                Ok(_) => {
+                    self.inner.auto_checkpoints.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) => eprintln!("serve: shutdown checkpoint of session {id} failed: {e}"),
+            }
         }
     }
 
     fn admit(&self, session: Session) -> Result<u64, String> {
+        self.admit_with_quota(session, true)
+    }
+
+    /// Register a session. `enforce_quota` is false on the
+    /// `resume_from_dir` path: quotas bound *new* submissions, while a
+    /// restart re-admits the pre-restart population verbatim — a
+    /// lineage must never be silently dropped because the quota
+    /// config shrank or a tombstone hadn't landed before the kill.
+    fn admit_with_quota(&self, session: Session, enforce_quota: bool) -> Result<u64, String> {
+        let quota = self.inner.cfg.max_sessions_per_tenant;
         let mut map = self.inner.sessions.lock().unwrap_or_else(|e| e.into_inner());
-        let live = map
-            .values()
-            .filter(|s| s.lock().unwrap_or_else(|e| e.into_inner()).status().is_live())
-            .count();
-        if live >= self.inner.cfg.max_sessions {
-            return Err(format!(
-                "at capacity ({live}/{} live sessions)",
-                self.inner.cfg.max_sessions
-            ));
+        if enforce_quota && quota > 0 {
+            // Same lock discipline as promote_waiting: unadmitted
+            // sessions are read exactly (their locks are never
+            // compute-held), admitted ones count as live when busy
+            // (mid-quantum ⇒ live), so the check never stalls the
+            // control plane behind a quantum.
+            let used = map
+                .values()
+                .filter(|slot| slot.tenant == session.tenant)
+                .filter(|slot| {
+                    if slot.admitted.load(Ordering::Relaxed) {
+                        match slot.sess.try_lock() {
+                            Ok(s) => s.status().is_live(),
+                            Err(_) => true,
+                        }
+                    } else {
+                        slot.sess.lock().unwrap_or_else(|e| e.into_inner()).status().is_live()
+                    }
+                })
+                .count();
+            if used >= quota {
+                return Err(format!(
+                    "tenant '{}' is at its quota ({used}/{quota} live sessions)",
+                    session.tenant
+                ));
+            }
         }
         let id = session.id;
-        map.insert(id, Arc::new(Mutex::new(session)));
+        map.insert(
+            id,
+            Slot {
+                tenant: session.tenant.clone(),
+                priority: session.priority,
+                sess: Arc::new(Mutex::new(session)),
+                admitted: AtomicBool::new(false),
+                ckpt_io: Arc::new(Mutex::new(())),
+            },
+        );
+        drop(map);
+        // Grab a free slot immediately if one exists (the scheduler
+        // round would otherwise do this within ~idle_sleep_ms).
+        promote_waiting(&self.inner);
         Ok(id)
     }
 
-    /// Admit a new session for `cfg`; returns its id. Fails when the
-    /// service is at `max_sessions` live sessions.
+    /// Admit a new session for `cfg`; returns its id. Never rejects
+    /// for capacity — a submit past `max_sessions` parks in the
+    /// admission queue (check `queue_position` via [`Service::status`]).
+    /// Fails on a per-tenant quota violation or after shutdown.
     pub fn submit(&self, cfg: &TrainConfig, name: &str, priority: usize) -> Result<u64, String> {
+        self.submit_as(cfg, name, priority, None)
+    }
+
+    /// [`Service::submit`] with an explicit tenant (defaults to the
+    /// name prefix before the first `/`).
+    pub fn submit_as(
+        &self,
+        cfg: &TrainConfig,
+        name: &str,
+        priority: usize,
+        tenant: Option<&str>,
+    ) -> Result<u64, String> {
         if self.is_stopped() {
             return Err("service is shut down".into());
         }
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
-        self.admit(Session::new(id, name, priority, cfg)?)
+        let mut session = Session::new(id, name, priority, cfg)?;
+        if let Some(t) = tenant {
+            session.tenant = t.to_string();
+        }
+        self.admit(session)
     }
 
-    /// Admit a session restored from a checkpoint file.
+    /// Admit a session restored from a checkpoint file (fork
+    /// semantics: fresh checkpoint lineage under the new id).
     pub fn submit_checkpoint(
         &self,
         path: &str,
         name: &str,
         priority: usize,
     ) -> Result<u64, String> {
+        self.submit_checkpoint_as(path, name, priority, None)
+    }
+
+    /// [`Service::submit_checkpoint`] with an explicit tenant.
+    pub fn submit_checkpoint_as(
+        &self,
+        path: &str,
+        name: &str,
+        priority: usize,
+        tenant: Option<&str>,
+    ) -> Result<u64, String> {
         if self.is_stopped() {
             return Err("service is shut down".into());
         }
         let ck = Checkpoint::load(path)?;
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
-        self.admit(Session::from_checkpoint(id, name, priority, &ck)?)
+        let mut session = Session::from_checkpoint(id, name, priority, &ck)?;
+        if let Some(t) = tenant {
+            session.tenant = t.to_string();
+        }
+        self.admit(session)
+    }
+
+    /// Re-admit the newest checkpoint of every lineage found in `dir`
+    /// (files named `<stem>-step<N>.ckpt`), making a restarted serve
+    /// process transparent to clients: names, priorities, tenants and
+    /// checkpoint lineages all survive. Corrupt or torn files are
+    /// skipped with a warning, falling back to the next-newest step of
+    /// the same lineage; stray `*.tmp` files from interrupted atomic
+    /// writes are ignored entirely. Per-tenant quotas are *not*
+    /// enforced here — they bound new submissions, and dropping a
+    /// pre-restart lineage because the quota shrank would lose a job.
+    /// A missing directory resumes nothing. Returns the re-admitted
+    /// session ids.
+    pub fn resume_from_dir(&self, dir: &str) -> Result<Vec<u64>, String> {
+        if self.is_stopped() {
+            return Err("service is shut down".into());
+        }
+        let rd = match std::fs::read_dir(dir) {
+            Ok(rd) => rd,
+            // A dir that was never created is a fresh boot; any other
+            // failure (permissions, I/O) must surface — silently
+            // booting empty would strand every pre-restart session.
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => return Err(format!("{dir}: {e}")),
+        };
+        let mut lineages: BTreeMap<String, Vec<(u64, String)>> = BTreeMap::new();
+        for entry in rd.flatten() {
+            let path = entry.path();
+            let Some(fname) = path.file_name().and_then(|s| s.to_str()) else { continue };
+            let Some(base) = fname.strip_suffix(".ckpt") else { continue };
+            let Some((stem, step)) = base.rsplit_once("-step") else { continue };
+            let Ok(step) = step.parse::<u64>() else { continue };
+            lineages
+                .entry(stem.to_string())
+                .or_default()
+                .push((step, path.to_string_lossy().into_owned()));
+        }
+        let mut ids = Vec::new();
+        for (stem, mut files) in lineages {
+            files.sort_by(|a, b| b.0.cmp(&a.0));
+            for (step, path) in &files {
+                match self.resume_one(&stem, path) {
+                    Ok(id) => {
+                        ids.push(id);
+                        break;
+                    }
+                    Err(e) => eprintln!(
+                        "serve: resume of lineage '{stem}' at step {step} failed ({e}); \
+                         trying an older snapshot"
+                    ),
+                }
+            }
+        }
+        Ok(ids)
+    }
+
+    fn resume_one(&self, stem: &str, path: &str) -> Result<u64, String> {
+        let ck = Checkpoint::load(path)?;
+        // Stems embed the session's *original* id; fresh ids must
+        // never reuse one, or a new submit with the same name would
+        // mint an identical stem and the two sessions would overwrite
+        // each other's checkpoint lineage.
+        if let Some((_, tail)) = stem.rsplit_once('-') {
+            if let Ok(old_id) = tail.parse::<u64>() {
+                self.inner.next_id.fetch_max(old_id.saturating_add(1), Ordering::Relaxed);
+            }
+        }
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        self.admit_with_quota(Session::from_checkpoint_lineage(id, &ck, stem)?, false)
     }
 
     fn session(&self, id: u64) -> Result<Arc<Mutex<Session>>, String> {
-        self.inner
+        self.session_entry(id).map(|(sess, _)| sess)
+    }
+
+    fn session_entry(&self, id: u64) -> Result<(Arc<Mutex<Session>>, Arc<Mutex<()>>), String> {
+        let found = self
+            .inner
             .sessions
             .lock()
             .unwrap_or_else(|e| e.into_inner())
             .get(&id)
-            .cloned()
-            .ok_or_else(|| format!("no session {id}"))
+            .map(|slot| (Arc::clone(&slot.sess), Arc::clone(&slot.ckpt_io)));
+        match found {
+            Some(s) => Ok(s),
+            None
+                if self
+                    .inner
+                    .evicted
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .contains(&id) =>
+            {
+                Err(format!(
+                    "session {id} was evicted (terminal history is capped at {})",
+                    self.inner.cfg.retain_terminal
+                ))
+            }
+            None => Err(format!("no session {id}")),
+        }
     }
 
-    /// Point-in-time state of one session.
+    /// Ids of sessions waiting in the admission queue, in
+    /// [`admission_cmp`] order. Only *unadmitted* sessions are locked
+    /// (briefly — the scheduler never steps them), so this never
+    /// blocks behind a running quantum; positions are exact, which
+    /// the submit response relies on.
+    fn waiting_order(&self) -> Vec<u64> {
+        let candidates: Vec<(u64, usize, Arc<Mutex<Session>>)> = self
+            .inner
+            .sessions
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .filter(|(_, slot)| !slot.admitted.load(Ordering::Relaxed))
+            .map(|(id, slot)| (*id, slot.priority, Arc::clone(&slot.sess)))
+            .collect();
+        let mut waiting: Vec<(usize, u64)> = Vec::new();
+        for (id, priority, sess) in candidates {
+            let s = sess.lock().unwrap_or_else(|e| e.into_inner());
+            if *s.status() == SessionStatus::Queued {
+                waiting.push((priority, id));
+            }
+        }
+        order_waiting(waiting)
+    }
+
+    /// Point-in-time state of one session, including its admission
+    /// queue position (0 once admitted).
     pub fn status(&self, id: u64) -> Result<SessionState, String> {
-        let s = self.session(id)?;
-        let s = s.lock().unwrap_or_else(|e| e.into_inner());
-        Ok(s.state())
+        let sess = self.session(id)?;
+        let mut st = {
+            let s = sess.lock().unwrap_or_else(|e| e.into_inner());
+            s.state()
+        };
+        if st.status == SessionStatus::Queued {
+            if let Some(pos) = self.waiting_order().iter().position(|&x| x == id) {
+                st.queue_position = pos + 1;
+            }
+        }
+        Ok(st)
     }
 
-    /// Hold a session after its current quantum. No-op on terminal
+    /// Hold a session after its current quantum. A waiting session
+    /// leaves the admission queue until resumed. No-op on terminal
     /// sessions.
     pub fn pause(&self, id: u64) -> Result<SessionState, String> {
         let s = self.session(id)?;
@@ -173,17 +571,28 @@ impl Service {
         Ok(s.state())
     }
 
-    /// Re-queue a paused session.
+    /// Re-queue a paused session (it keeps its slot if it was already
+    /// admitted; otherwise it re-enters the admission queue — the
+    /// returned state carries its `queue_position`).
     pub fn resume(&self, id: u64) -> Result<SessionState, String> {
-        let s = self.session(id)?;
-        let mut s = s.lock().unwrap_or_else(|e| e.into_inner());
-        if *s.status() == SessionStatus::Paused {
-            s.set_status(SessionStatus::Queued);
+        let sess = self.session(id)?;
+        let mut st = {
+            let mut s = sess.lock().unwrap_or_else(|e| e.into_inner());
+            if *s.status() == SessionStatus::Paused {
+                s.set_status(SessionStatus::Queued);
+            }
+            s.state()
+        };
+        if st.status == SessionStatus::Queued {
+            if let Some(pos) = self.waiting_order().iter().position(|&x| x == id) {
+                st.queue_position = pos + 1;
+            }
         }
-        Ok(s.state())
+        Ok(st)
     }
 
-    /// Cancel a session (terminal). No-op if already terminal.
+    /// Cancel a session (terminal; frees its slot or queue spot).
+    /// No-op if already terminal.
     pub fn cancel(&self, id: u64) -> Result<SessionState, String> {
         let s = self.session(id)?;
         let mut s = s.lock().unwrap_or_else(|e| e.into_inner());
@@ -192,24 +601,12 @@ impl Service {
     }
 
     /// Snapshot a session to `checkpoint_dir`; returns the file path.
-    /// Waits for the session's current quantum (it takes the session
-    /// lock), so the snapshot is step-atomic.
+    /// The in-memory capture waits for the session's current quantum
+    /// (step-atomic); the disk write happens outside the session lock
+    /// and is atomic (tmp + rename).
     pub fn checkpoint(&self, id: u64) -> Result<(String, u64), String> {
-        let s = self.session(id)?;
-        let s = s.lock().unwrap_or_else(|e| e.into_inner());
-        let ck = s.checkpoint()?;
-        let step = ck.loop_snap.step;
-        let safe_name: String = s
-            .name
-            .chars()
-            .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
-            .collect();
-        let path = std::path::Path::new(&self.inner.cfg.checkpoint_dir)
-            .join(format!("{safe_name}-{id}-step{step}.ckpt"))
-            .to_string_lossy()
-            .into_owned();
-        ck.save(&path)?;
-        Ok((path, step))
+        let (sess, io) = self.session_entry(id)?;
+        checkpoint_session(&self.inner.cfg, &sess, &io)
     }
 
     /// FNV digest of a session's exact model bits (see
@@ -223,33 +620,58 @@ impl Service {
 
     /// Aggregate statistics + per-session states.
     pub fn stats(&self) -> ServiceStats {
-        let sessions: Vec<Arc<Mutex<Session>>> = self
+        let slots: Vec<(bool, Arc<Mutex<Session>>)> = self
             .inner
             .sessions
             .lock()
             .unwrap_or_else(|e| e.into_inner())
             .values()
-            .cloned()
+            .map(|slot| (slot.admitted.load(Ordering::Relaxed), Arc::clone(&slot.sess)))
             .collect();
-        let mut states = Vec::with_capacity(sessions.len());
+        let mut states = Vec::with_capacity(slots.len());
+        let mut admitted_flags = Vec::with_capacity(slots.len());
         let mut agg = StepTimer::new();
-        for s in &sessions {
-            let s = s.lock().unwrap_or_else(|e| e.into_inner());
+        for (admitted, sess) in &slots {
+            let s = sess.lock().unwrap_or_else(|e| e.into_inner());
             agg.merge(s.timer());
+            admitted_flags.push(*admitted);
             states.push(s.state());
         }
+        // Admission-queue order over the snapshot just taken.
+        let waiting = order_waiting(
+            states
+                .iter()
+                .zip(&admitted_flags)
+                .filter(|(st, admitted)| st.status == SessionStatus::Queued && !**admitted)
+                .map(|(st, _)| (st.priority, st.id))
+                .collect(),
+        );
+        for (pos, id) in waiting.iter().enumerate() {
+            if let Some(st) = states.iter_mut().find(|st| st.id == *id) {
+                st.queue_position = pos + 1;
+            }
+        }
         let count = |st: &SessionStatus| states.iter().filter(|x| &x.status == st).count();
+        let admitted = states
+            .iter()
+            .zip(&admitted_flags)
+            .filter(|(st, admitted)| st.status.is_live() && **admitted)
+            .count();
         let backend = crate::backend::global();
         ServiceStats {
-            queue_depth: count(&SessionStatus::Queued),
+            queue_depth: waiting.len(),
             running: count(&SessionStatus::Running),
             paused: count(&SessionStatus::Paused),
             live: states.iter().filter(|x| x.status.is_live()).count(),
+            admitted,
             max_sessions: self.inner.cfg.max_sessions,
             total_lanes: backend.threads(),
             backend: backend.label(),
             rounds: self.inner.rounds.load(Ordering::Relaxed),
             scheduler_steps: self.inner.sched_steps.load(Ordering::Relaxed),
+            auto_checkpoints: self.inner.auto_checkpoints.load(Ordering::Relaxed),
+            promotions: self.inner.promotions.load(Ordering::Relaxed),
+            evicted: self.inner.evicted_total.load(Ordering::Relaxed),
             p50_step_ms: agg.percentile_ms(50.0),
             p95_step_ms: agg.percentile_ms(95.0),
             sessions: states,
@@ -284,27 +706,33 @@ mod tests {
                 .to_string_lossy()
                 .into_owned(),
             quantum_steps: 4,
+            checkpoint_on_shutdown: false,
             ..ServeConfig::default()
         }
     }
 
     #[test]
-    fn service_runs_sessions_to_completion_and_enforces_capacity() {
+    fn service_queues_over_cap_and_promotes_as_slots_free() {
         let svc = Service::start(test_cfg());
         // Two long-running tenants pin both capacity slots
         // deterministically (they cannot finish during the test).
         let a = svc.submit(&tiny(1_000_000), "a", 1).unwrap();
         let b = svc.submit(&tiny(1_000_000), "b", 2).unwrap();
-        assert!(svc.submit(&tiny(10), "c", 1).is_err(), "capacity must be enforced");
-        // Cancelling frees the slots.
+        // Over-cap submit queues instead of erroring.
+        let c = svc.submit(&tiny(10), "c", 1).unwrap();
+        let sc = svc.status(c).unwrap();
+        assert_eq!(sc.status, SessionStatus::Queued, "over-cap submit must queue");
+        assert_eq!(sc.queue_position, 1, "sole waiter is first in line");
+        assert_eq!(sc.step, 0, "waiting sessions must not be stepped");
+        // Cancelling the slot holders lets the waiter in.
         svc.cancel(a).unwrap();
         svc.cancel(b).unwrap();
-        let c = svc.submit(&tiny(10), "c", 1).unwrap();
         let deadline = std::time::Instant::now() + std::time::Duration::from_secs(120);
         loop {
             let sc = svc.status(c).unwrap();
             if sc.status == SessionStatus::Done {
                 assert_eq!(sc.step, 10);
+                assert_eq!(sc.queue_position, 0);
                 break;
             }
             assert!(std::time::Instant::now() < deadline, "session c did not finish");
@@ -314,10 +742,33 @@ mod tests {
         assert_eq!(st.sessions.len(), 3);
         assert_eq!(st.max_sessions, 2);
         assert!(st.scheduler_steps >= 10);
+        assert!(st.promotions >= 1, "the waiter was promoted");
         assert!(svc.status(999).is_err());
         svc.shutdown();
         assert!(svc.submit(&tiny(1), "late", 1).is_err());
         let _ = std::fs::remove_dir_all(std::env::temp_dir().join("eva-serve-svc-test"));
+    }
+
+    #[test]
+    fn per_tenant_quota_bounds_live_sessions() {
+        let svc = Service::start(ServeConfig {
+            max_sessions: 1, // one slot: quota must bite on *queued* sessions too
+            max_sessions_per_tenant: 2,
+            ..test_cfg()
+        });
+        let j1 = svc.submit(&tiny(1_000_000), "acme/j1", 1).unwrap();
+        let _j2 = svc.submit(&tiny(1_000_000), "acme/j2", 1).unwrap();
+        let err = svc.submit(&tiny(5), "acme/j3", 1).unwrap_err();
+        assert!(err.contains("quota"), "{err}");
+        // Another tenant is unaffected; an explicit tenant field wins
+        // over the name prefix.
+        svc.submit(&tiny(1_000_000), "zeta/j1", 1).unwrap();
+        let err = svc.submit_as(&tiny(5), "other-name", 1, Some("acme")).unwrap_err();
+        assert!(err.contains("acme"), "{err}");
+        // Freeing one of the tenant's sessions frees the quota.
+        svc.cancel(j1).unwrap();
+        svc.submit(&tiny(1_000_000), "acme/j4", 1).unwrap();
+        svc.shutdown();
     }
 
     #[test]

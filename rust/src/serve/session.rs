@@ -18,7 +18,9 @@ use crate::train::{LoopState, StepOutcome, StepTimer, Trainer};
 /// `Failed`) are never left.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum SessionStatus {
-    /// Admitted, waiting for the scheduler to pick it up.
+    /// Waiting: either parked in the admission queue (over
+    /// `max_sessions`, reported with a `queue_position`) or admitted
+    /// and about to be picked up by the next scheduler round.
     Queued,
     /// Being stepped by the scheduler.
     Running,
@@ -61,10 +63,16 @@ pub struct SessionState {
     pub id: u64,
     /// Client-supplied display name.
     pub name: String,
+    /// Tenant this session is accounted to (explicit `tenant` submit
+    /// field, else the name prefix before the first `/`).
+    pub tenant: String,
     /// Scheduling weight (≥ 1).
     pub priority: usize,
     /// Lifecycle state.
     pub status: SessionStatus,
+    /// 1-based position in the admission queue while parked over
+    /// `max_sessions`; 0 once admitted (or terminal).
+    pub queue_position: usize,
     /// Failure message, when `status` is `Failed`.
     pub error: Option<String>,
     /// Steps taken so far.
@@ -94,6 +102,27 @@ pub struct Session {
     /// Scheduling weight (≥ 1); the scheduler carves lanes
     /// proportionally to it.
     pub priority: usize,
+    /// Tenant key for per-tenant quotas (see [`default_tenant`]).
+    /// (The admitted/waiting flag lives in the service registry, not
+    /// here, so admission bookkeeping never touches this mutex.)
+    pub(crate) tenant: String,
+    /// Step the most recent checkpoint captured (explicit or auto) —
+    /// the periodic auto-checkpoint clock.
+    last_ckpt_step: u64,
+    /// Lifecycle tag the most recent snapshot carried (see
+    /// [`crate::serve::checkpoint::status_tag`]): what the on-disk
+    /// lineage currently claims about this session. Terminal tags are
+    /// tombstones, written exactly once; a LIVE/PAUSED mismatch with
+    /// the actual status means the lineage needs re-stamping.
+    last_ckpt_tag: u8,
+    /// Whether any snapshot of this lineage has ever been written —
+    /// eviction must tombstone such a lineage before forgetting the
+    /// session, or the stale LIVE snapshot would resurrect it on the
+    /// next `--resume-dir`.
+    ever_checkpointed: bool,
+    /// Checkpoint lineage stem (`<safe-name>-<original-id>`), stable
+    /// across `--resume-dir` restarts.
+    ckpt_stem: String,
     trainer: Trainer,
     lp: LoopState,
     status: SessionStatus,
@@ -137,6 +166,11 @@ impl Session {
             id,
             name: name.to_string(),
             priority: priority.clamp(1, 100),
+            tenant: default_tenant(name).to_string(),
+            last_ckpt_step: 0,
+            last_ckpt_tag: crate::serve::checkpoint::status_tag::LIVE,
+            ever_checkpointed: false,
+            ckpt_stem: safe_stem(name, id),
             status: if lp.is_done() { SessionStatus::Done } else { SessionStatus::Queued },
             lp,
             trainer,
@@ -149,7 +183,11 @@ impl Session {
 
     /// Rebuild a session from a checkpoint (the restore half of
     /// `serve::checkpoint`). Continuing the restored session is
-    /// bit-identical to never having snapshotted.
+    /// bit-identical to never having snapshotted. This is the *fork*
+    /// path (explicit client `submit` of a checkpoint file): the new
+    /// session gets a fresh checkpoint lineage stem so its future
+    /// snapshots never collide with the original's. Boot-time
+    /// re-admission uses [`Session::from_checkpoint_lineage`] instead.
     pub fn from_checkpoint(
         id: u64,
         name: &str,
@@ -160,9 +198,60 @@ impl Session {
         ck.apply(&mut s.trainer)?;
         s.lp = LoopState::restore(&s.trainer, &ck.loop_snap)?;
         s.last_loss = ck.loop_snap.final_loss;
+        s.last_ckpt_step = ck.loop_snap.step;
         if s.lp.is_done() {
             s.status = SessionStatus::Done;
         }
+        Ok(s)
+    }
+
+    /// Rebuild a session from a checkpoint *continuing its lineage*:
+    /// name, priority, tenant, lifecycle state and the checkpoint
+    /// stem come from the snapshot's own metadata, so a
+    /// `--resume-dir` boot reproduces the pre-restart session
+    /// population — a lineage whose newest snapshot is a terminal
+    /// tombstone comes back *terminal* (status queryable, never
+    /// re-run) — and later snapshots keep overwriting the same
+    /// lineage, so the newest step always wins on the next resume.
+    /// `fallback_stem` (the on-disk file prefix) covers v1 files,
+    /// whose metadata carries no stem: without it every restart would
+    /// fork such a lineage into a fresh one and duplicate the job.
+    pub fn from_checkpoint_lineage(
+        id: u64,
+        ck: &Checkpoint,
+        fallback_stem: &str,
+    ) -> Result<Self, String> {
+        use crate::serve::checkpoint::status_tag;
+        let name = if ck.name.is_empty() { "restored" } else { ck.name.as_str() };
+        let mut s = Session::from_checkpoint(id, name, ck.priority.max(1), ck)?;
+        if !ck.tenant.is_empty() {
+            s.tenant = ck.tenant.clone();
+        }
+        if !ck.stem.is_empty() {
+            s.ckpt_stem = ck.stem.clone();
+        } else if !fallback_stem.is_empty() {
+            s.ckpt_stem = fallback_stem.to_string();
+        }
+        match ck.status_tag {
+            status_tag::DONE => s.status = SessionStatus::Done,
+            status_tag::CANCELLED => s.status = SessionStatus::Cancelled,
+            status_tag::FAILED => {
+                s.status = SessionStatus::Failed("failed before the restart".into())
+            }
+            status_tag::PAUSED => {
+                // Don't un-finish a session that is Done by its loop
+                // state; otherwise the operator's pause survives.
+                if s.status == SessionStatus::Queued {
+                    s.status = SessionStatus::Paused;
+                }
+            }
+            _ => {}
+        }
+        s.last_ckpt_tag = ck.status_tag;
+        // The lineage provably has at least one on-disk snapshot (we
+        // just loaded it), so eviction knows a tombstone is required
+        // before this session may be forgotten.
+        s.ever_checkpointed = true;
         Ok(s)
     }
 
@@ -235,13 +324,63 @@ impl Session {
         self.lp.is_done()
     }
 
-    /// Point-in-time state snapshot for status/stats reporting.
+    /// Steps taken so far.
+    pub fn step_count(&self) -> u64 {
+        self.lp.step()
+    }
+
+    /// Tenant this session is accounted to.
+    pub fn tenant(&self) -> &str {
+        &self.tenant
+    }
+
+    /// File-name stem this session's checkpoints are written under.
+    pub fn ckpt_stem(&self) -> &str {
+        &self.ckpt_stem
+    }
+
+    /// Step captured by the most recent checkpoint (0 if none) — what
+    /// the scheduler's `checkpoint_every_steps` clock compares against.
+    pub fn last_checkpoint_step(&self) -> u64 {
+        self.last_ckpt_step
+    }
+
+    /// Lifecycle tag of this lineage's newest snapshot.
+    pub fn last_checkpoint_tag(&self) -> u8 {
+        self.last_ckpt_tag
+    }
+
+    /// True once this lineage's newest snapshot is a terminal
+    /// tombstone — the scheduler then never rewrites it.
+    pub fn last_checkpoint_was_terminal(&self) -> bool {
+        crate::serve::checkpoint::status_tag::is_terminal(self.last_ckpt_tag)
+    }
+
+    /// True once any snapshot of this lineage exists on disk.
+    pub fn ever_checkpointed(&self) -> bool {
+        self.ever_checkpointed
+    }
+
+    /// Record that a checkpoint capturing `step` with lifecycle `tag`
+    /// was durably written (resets the periodic auto-checkpoint
+    /// clock).
+    pub(crate) fn note_checkpointed_at(&mut self, step: u64, tag: u8) {
+        self.last_ckpt_step = self.last_ckpt_step.max(step);
+        self.last_ckpt_tag = tag;
+        self.ever_checkpointed = true;
+    }
+
+    /// Point-in-time state snapshot for status/stats reporting. The
+    /// `queue_position` field is filled by the service (it needs the
+    /// registry-wide waiting order); it is 0 here.
     pub fn state(&self) -> SessionState {
         SessionState {
             id: self.id,
             name: self.name.clone(),
+            tenant: self.tenant.clone(),
             priority: self.priority,
             status: self.status.clone(),
+            queue_position: 0,
             error: match &self.status {
                 SessionStatus::Failed(e) => Some(e.clone()),
                 _ => None,
@@ -257,9 +396,25 @@ impl Session {
         }
     }
 
-    /// Snapshot everything needed to resume this session elsewhere.
+    /// Snapshot everything needed to resume this session elsewhere,
+    /// including its identity metadata (name, priority, tenant,
+    /// checkpoint lineage stem, lifecycle tag — so terminal states
+    /// survive a restart).
     pub fn checkpoint(&self) -> Result<Checkpoint, String> {
-        Checkpoint::capture(&self.trainer, &self.lp)
+        use crate::serve::checkpoint::status_tag;
+        let mut ck = Checkpoint::capture(&self.trainer, &self.lp)?;
+        ck.name = self.name.clone();
+        ck.priority = self.priority;
+        ck.tenant = self.tenant.clone();
+        ck.stem = self.ckpt_stem.clone();
+        ck.status_tag = match &self.status {
+            SessionStatus::Done => status_tag::DONE,
+            SessionStatus::Cancelled => status_tag::CANCELLED,
+            SessionStatus::Failed(_) => status_tag::FAILED,
+            SessionStatus::Paused => status_tag::PAUSED,
+            _ => status_tag::LIVE,
+        };
+        Ok(ck)
     }
 
     /// Lifetime step-latency samples (for stats aggregation).
@@ -278,6 +433,24 @@ impl Session {
     pub fn digest(&self) -> u64 {
         model_digest(self.trainer.model().expect("native session has a model"))
     }
+}
+
+/// Tenant a session belongs to when the submit carried no explicit
+/// `tenant` field: the name prefix before the first `/` (the whole
+/// name when there is none). `"acme/retrain-7"` → `"acme"`.
+pub fn default_tenant(name: &str) -> &str {
+    name.split('/').next().unwrap_or(name)
+}
+
+/// File-name-safe checkpoint stem for a session: the sanitized name
+/// plus the service-assigned id (`<safe-name>-<id>`), the prefix every
+/// snapshot of this session is written under.
+pub(crate) fn safe_stem(name: &str, id: u64) -> String {
+    let safe: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+        .collect();
+    format!("{safe}-{id}")
 }
 
 /// FNV-1a 64-bit digest over a model's parameter bits. Two models
@@ -350,6 +523,46 @@ mod tests {
         assert_eq!(s.status(), &SessionStatus::Done);
         // eval works on demand.
         assert!(s.eval().unwrap().is_finite());
+    }
+
+    #[test]
+    fn tenant_defaults_and_lineage_restore_preserve_identity() {
+        assert_eq!(default_tenant("acme/retrain-7"), "acme");
+        assert_eq!(default_tenant("solo-job"), "solo-job");
+        assert_eq!(default_tenant(""), "");
+        let mut s = Session::new(7, "acme/j1", 3, &tiny_cfg("sgd", 8)).unwrap();
+        assert_eq!(s.tenant(), "acme");
+        assert_eq!(s.ckpt_stem(), "acme_j1-7");
+        s.set_status(SessionStatus::Running);
+        s.run_quantum(3);
+        let ck = s.checkpoint().unwrap();
+        assert_eq!((ck.name.as_str(), ck.priority, ck.tenant.as_str()), ("acme/j1", 3, "acme"));
+        // Lineage restore keeps name/priority/tenant/stem; fork restore
+        // gets a fresh stem under the new id.
+        let lineage = Session::from_checkpoint_lineage(42, &ck, "").unwrap();
+        assert_eq!(lineage.name, "acme/j1");
+        assert_eq!(lineage.priority, 3);
+        assert_eq!(lineage.tenant(), "acme");
+        assert_eq!(lineage.ckpt_stem(), "acme_j1-7");
+        assert_eq!(lineage.last_checkpoint_step(), 3);
+        let fork = Session::from_checkpoint(43, "fork", 1, &ck).unwrap();
+        assert_eq!(fork.ckpt_stem(), "fork-43");
+        // A pause survives a lineage restore — restarts must not
+        // silently resume a job the operator froze.
+        s.set_status(SessionStatus::Paused);
+        let pck = s.checkpoint().unwrap();
+        assert_eq!(pck.status_tag, crate::serve::checkpoint::status_tag::PAUSED);
+        let paused = Session::from_checkpoint_lineage(45, &pck, "").unwrap();
+        assert_eq!(paused.status(), &SessionStatus::Paused);
+        assert!(!paused.last_checkpoint_was_terminal());
+        // Terminal states survive a lineage restore: a cancelled
+        // tombstone comes back cancelled, never re-run.
+        s.set_status(SessionStatus::Cancelled);
+        let tomb = s.checkpoint().unwrap();
+        assert_eq!(tomb.status_tag, crate::serve::checkpoint::status_tag::CANCELLED);
+        let back = Session::from_checkpoint_lineage(44, &tomb, "").unwrap();
+        assert_eq!(back.status(), &SessionStatus::Cancelled);
+        assert!(back.last_checkpoint_was_terminal());
     }
 
     #[test]

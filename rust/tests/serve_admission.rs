@@ -1,0 +1,354 @@
+//! Durable admission control (ISSUE 5 acceptance).
+//!
+//! * Over-cap submissions **queue** (with a reported `queue_position`)
+//!   instead of erroring, and are promoted FIFO-within-priority as
+//!   live slots free.
+//! * Per-tenant quotas bound how much of the queue one client can
+//!   hold.
+//! * A serve process killed after `checkpoint_every_steps` — or shut
+//!   down gracefully with `checkpoint_on_shutdown` — and restarted
+//!   with `resume_from_dir` finishes every session with weight
+//!   digests bit-identical to an uninterrupted run (the PR 3
+//!   bit-identity witness).
+//! * Torn checkpoints (stray `.tmp`, truncated `.ckpt`) never shadow
+//!   a good snapshot.
+//! * Terminal sessions beyond `retain_terminal` are evicted and
+//!   report a distinct "evicted" error.
+
+use std::time::Duration;
+
+use eva::config::{ModelArch, TrainConfig};
+use eva::serve::client::{LocalClient, ServeClient};
+use eva::serve::{ServeConfig, Service, Session, SessionState, SessionStatus};
+
+fn tenant_cfg(seed: u64, optimizer: &str, steps: u64) -> TrainConfig {
+    let mut c = TrainConfig {
+        name: format!("adm-{seed}"),
+        dataset: "c10-small".into(),
+        seed,
+        arch: ModelArch::Classifier { hidden: vec![12] },
+        // Enough epochs that max_steps is always the binding budget.
+        epochs: 10_000,
+        batch_size: 32,
+        base_lr: 0.05,
+        max_steps: Some(steps),
+        ..TrainConfig::default()
+    };
+    c.optim.algorithm = optimizer.into();
+    c
+}
+
+/// Step a session to completion alone, no scheduler involved — the
+/// uninterrupted ground truth every restore must reproduce bit-for-bit.
+fn solo_digest(cfg: &TrainConfig) -> u64 {
+    let mut s = Session::new(0, "solo", 1, cfg).unwrap();
+    while !s.is_done() {
+        assert!(s.run_quantum(16) > 0);
+    }
+    s.digest()
+}
+
+fn temp_dir(tag: &str) -> String {
+    let d = std::env::temp_dir().join(format!("eva-serve-admission-{tag}"));
+    let _ = std::fs::remove_dir_all(&d);
+    d.to_string_lossy().into_owned()
+}
+
+fn serve_cfg(dir: &str) -> ServeConfig {
+    ServeConfig {
+        checkpoint_dir: dir.to_string(),
+        checkpoint_on_shutdown: false,
+        quantum_steps: 2,
+        ..ServeConfig::default()
+    }
+}
+
+fn wait_for(deadline_s: u64, what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = std::time::Instant::now() + Duration::from_secs(deadline_s);
+    while !cond() {
+        assert!(std::time::Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+fn ckpt_count(dir: &str) -> usize {
+    std::fs::read_dir(dir)
+        .map(|rd| {
+            rd.flatten()
+                .filter(|e| {
+                    e.path().file_name().and_then(|f| f.to_str()).is_some_and(|f| {
+                        f.ends_with(".ckpt")
+                    })
+                })
+                .count()
+        })
+        .unwrap_or(0)
+}
+
+#[test]
+fn over_cap_submits_queue_and_promote_fifo_within_priority() {
+    let dir = temp_dir("queue");
+    let svc = Service::start(ServeConfig { max_sessions: 1, ..serve_cfg(&dir) });
+    let mut client = LocalClient::new(&svc);
+    // One long-running session pins the only slot.
+    let blocker = svc.submit(&tenant_cfg(1, "eva", 1_000_000), "blk", 1).unwrap();
+    wait_for(120, "blocker to start", || svc.status(blocker).unwrap().step > 0);
+    // Over-cap submits queue — the protocol reports the position.
+    let (a, a_pos) = client.submit_as(&tenant_cfg(2, "eva", 6), "a", 1, None).unwrap();
+    let (b, b_pos) = client.submit_as(&tenant_cfg(3, "eva", 6), "b", 1, None).unwrap();
+    let (c, c_pos) = client.submit_as(&tenant_cfg(4, "eva", 6), "c", 5, None).unwrap();
+    assert_eq!(a_pos, 1, "first waiter");
+    assert_eq!(b_pos, 2, "FIFO among equal priorities");
+    assert_eq!(c_pos, 1, "higher priority jumps the queue");
+    for (id, pos) in [(a, 2), (b, 3), (c, 1)] {
+        let st = svc.status(id).unwrap();
+        assert_eq!(st.status, SessionStatus::Queued, "session {id} must be parked");
+        assert_eq!(st.queue_position, pos, "session {id}");
+        assert_eq!(st.step, 0, "waiting sessions must not be stepped");
+    }
+    // Free the slot: promotion order must be c (priority), then a,
+    // then b (submission order). With one slot, "x started ⇒ everyone
+    // ahead of x is done" holds at every sample, whatever the poll
+    // rate.
+    svc.cancel(blocker).unwrap();
+    let started = |st: &SessionState| {
+        st.step > 0 || matches!(st.status, SessionStatus::Running | SessionStatus::Done)
+    };
+    wait_for(300, "all queued sessions to finish", || {
+        // Read in reverse promotion order so each implication's
+        // premise is sampled before its conclusion.
+        let sb = svc.status(b).unwrap();
+        let sa = svc.status(a).unwrap();
+        let sc = svc.status(c).unwrap();
+        if started(&sb) {
+            assert_eq!(sa.status, SessionStatus::Done, "b ran before a finished");
+        }
+        if started(&sa) {
+            assert_eq!(sc.status, SessionStatus::Done, "a ran before higher-priority c");
+        }
+        [&sa, &sb, &sc].iter().all(|st| st.status == SessionStatus::Done)
+    });
+    for id in [a, b, c] {
+        let st = svc.status(id).unwrap();
+        assert_eq!(st.step, 6);
+        assert_eq!(st.queue_position, 0);
+    }
+    let stats = svc.stats();
+    assert!(stats.promotions >= 3, "three waiters were promoted, saw {}", stats.promotions);
+    assert_eq!(stats.queue_depth, 0);
+    svc.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn per_tenant_quota_holds_over_the_protocol() {
+    let dir = temp_dir("quota");
+    let svc = Service::start(ServeConfig {
+        max_sessions: 1,
+        max_sessions_per_tenant: 2,
+        ..serve_cfg(&dir)
+    });
+    let mut client = LocalClient::new(&svc);
+    // Tenant from the name prefix: both live (one running, one
+    // queued) count against acme's quota.
+    let (j1, _) = client.submit_as(&tenant_cfg(10, "eva", 1_000_000), "acme/j1", 1, None).unwrap();
+    client.submit_as(&tenant_cfg(11, "eva", 1_000_000), "acme/j2", 1, None).unwrap();
+    let err = client
+        .submit_as(&tenant_cfg(12, "eva", 4), "acme/j3", 1, None)
+        .unwrap_err();
+    assert!(err.contains("quota"), "{err}");
+    // An explicit tenant field beats the name prefix.
+    let err = client
+        .submit_as(&tenant_cfg(13, "eva", 4), "innocuous-name", 1, Some("acme"))
+        .unwrap_err();
+    assert!(err.contains("acme"), "{err}");
+    // Other tenants are unaffected.
+    client.submit_as(&tenant_cfg(14, "eva", 1_000_000), "beta/j1", 1, None).unwrap();
+    // Freeing one of acme's live sessions frees its quota.
+    svc.cancel(j1).unwrap();
+    client.submit_as(&tenant_cfg(15, "eva", 1_000_000), "acme/j4", 1, None).unwrap();
+    svc.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn auto_checkpoint_survives_a_hard_kill_and_resumes_bit_identical() {
+    let cfg = tenant_cfg(55, "eva", 24);
+    let solo = solo_digest(&cfg);
+    let dir = temp_dir("auto");
+    // Periodic snapshots only — shutdown writes nothing, like a
+    // process killed without warning (everything after the last
+    // auto-checkpoint is lost).
+    let svc = Service::start(ServeConfig {
+        checkpoint_every_steps: 4,
+        ..serve_cfg(&dir)
+    });
+    svc.submit(&cfg, "auto/ck", 3).unwrap();
+    wait_for(300, "a periodic checkpoint to land", || ckpt_count(&dir) > 0);
+    // "Kill" the process: stop without any graceful snapshot — only
+    // what the periodic checkpointer already wrote survives.
+    svc.shutdown();
+    // Restart and re-admit the newest snapshot of the lineage.
+    let svc2 = Service::start(serve_cfg(&dir));
+    let ids = svc2.resume_from_dir(&dir).unwrap();
+    assert_eq!(ids.len(), 1, "one lineage, one resumed session");
+    let st = svc2.status(ids[0]).unwrap();
+    assert_eq!(st.name, "auto/ck", "name survives the restart");
+    assert_eq!(st.priority, 3, "priority survives the restart");
+    assert_eq!(st.tenant, "auto", "tenant survives the restart");
+    assert!(st.step >= 4, "resumed from a snapshot at least one interval in");
+    wait_for(300, "resumed session to finish", || {
+        svc2.status(ids[0]).unwrap().status == SessionStatus::Done
+    });
+    assert_eq!(
+        svc2.model_digest(ids[0]).unwrap(),
+        solo,
+        "kill + resume diverged from the uninterrupted run"
+    );
+    svc2.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn shutdown_checkpoint_makes_restart_transparent_even_for_waiting_sessions() {
+    // a pins the only slot and can never finish; b therefore stays in
+    // the admission queue at step 0 — the restart must recover both:
+    // a mid-run, b still waiting.
+    let cfg_a = tenant_cfg(101, "eva", 1_000_000);
+    let cfg_b = tenant_cfg(202, "eva-s", 20);
+    let solo_b = solo_digest(&cfg_b);
+    let dir = temp_dir("shutdown");
+    let svc = Service::start(ServeConfig {
+        max_sessions: 1,
+        checkpoint_on_shutdown: true,
+        ..serve_cfg(&dir)
+    });
+    let a = svc.submit(&cfg_a, "alpha/a", 2).unwrap();
+    let b = svc.submit(&cfg_b, "beta/b", 1).unwrap();
+    // c is cancelled pre-shutdown: its *terminal* status must survive
+    // the restart too (tombstone), not resurrect and train.
+    let c = svc.submit(&tenant_cfg(303, "sgd", 8), "gamma/c", 1).unwrap();
+    svc.cancel(c).unwrap();
+    wait_for(300, "a to make progress", || svc.status(a).unwrap().step >= 4);
+    let st_b = svc.status(b).unwrap();
+    assert_eq!(st_b.step, 0, "b must still be waiting");
+    assert_eq!(st_b.queue_position, 1);
+    svc.shutdown(); // graceful: snapshots live sessions + tombstones
+    assert!(ckpt_count(&dir) >= 3, "two live snapshots + one tombstone");
+    let svc2 = Service::start(ServeConfig { max_sessions: 2, ..serve_cfg(&dir) });
+    let ids = svc2.resume_from_dir(&dir).unwrap();
+    assert_eq!(ids.len(), 3);
+    let mut found = (false, false, false);
+    for &id in &ids {
+        let st = svc2.status(id).unwrap();
+        match st.name.as_str() {
+            "alpha/a" => {
+                assert!(st.step >= 4, "a resumed mid-run");
+                assert_eq!(st.priority, 2, "priority survives the restart");
+                assert_eq!(st.tenant, "alpha");
+                svc2.cancel(id).unwrap(); // never finishes; identity checked
+                found.0 = true;
+            }
+            "beta/b" => {
+                wait_for(600, "resumed b to finish", || {
+                    svc2.status(id).unwrap().status == SessionStatus::Done
+                });
+                let st = svc2.status(id).unwrap();
+                assert_eq!(st.step, 20);
+                assert_eq!(
+                    svc2.model_digest(id).unwrap(),
+                    solo_b,
+                    "waiting session b diverged across the restart"
+                );
+                found.1 = true;
+            }
+            "gamma/c" => {
+                assert_eq!(
+                    st.status,
+                    SessionStatus::Cancelled,
+                    "terminal status must survive the restart"
+                );
+                found.2 = true;
+            }
+            other => panic!("unexpected resumed session name '{other}'"),
+        }
+    }
+    assert_eq!(found, (true, true, true), "all three lineages resumed");
+    // Fresh ids never collide with ids embedded in resumed lineage
+    // stems: a new same-named submit must not mint stem "alpha_a-1"
+    // again and start overwriting the resumed lineage's files.
+    let fresh = svc2.submit(&tenant_cfg(404, "sgd", 4), "alpha/a", 1).unwrap();
+    assert!(fresh > 3, "fresh id {fresh} must exceed every id embedded in a resumed stem");
+    svc2.cancel(fresh).unwrap();
+    svc2.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn torn_checkpoints_never_shadow_a_good_snapshot() {
+    let cfg = tenant_cfg(7, "eva", 12);
+    let solo = solo_digest(&cfg);
+    let dir = temp_dir("torn");
+    std::fs::create_dir_all(&dir).unwrap();
+    // A genuine snapshot at step 5 via the atomic writer.
+    let mut s = Session::new(9, "torn", 2, &cfg).unwrap();
+    s.set_status(SessionStatus::Running);
+    assert_eq!(s.run_quantum(5), 5);
+    let good_path = format!("{dir}/torn-9-step5.ckpt");
+    s.checkpoint().unwrap().save(&good_path).unwrap();
+    let good_bytes = std::fs::read(&good_path).unwrap();
+    // Torn debris a crash could leave: an interrupted atomic write
+    // (`*.tmp`, ignored by suffix) and a truncated file that somehow
+    // landed at a canonical name with a *newer* step (corrupt, so the
+    // resume scan must fall back to the older good snapshot).
+    std::fs::write(format!("{dir}/torn-9-step9.ckpt.0.tmp"), &good_bytes[..64]).unwrap();
+    std::fs::write(format!("{dir}/torn-9-step8.ckpt"), &good_bytes[..good_bytes.len() / 2])
+        .unwrap();
+    // Boot with `resume_dir` in the config: Service::start itself
+    // must perform the resume (the CLI flag is just sugar over this).
+    let svc = Service::start(ServeConfig { resume_dir: Some(dir.clone()), ..serve_cfg(&dir) });
+    let ids: Vec<u64> = svc.stats().sessions.iter().map(|s| s.id).collect();
+    assert_eq!(ids.len(), 1, "one lineage resumes despite the debris");
+    // The scheduler starts stepping immediately, so only a lower
+    // bound is stable here; the digest below is the real witness that
+    // the resume came from the good step-5 bytes (the torn step-8
+    // file cannot even be parsed).
+    assert!(svc.status(ids[0]).unwrap().step >= 5);
+    wait_for(300, "resumed session to finish", || {
+        svc.status(ids[0]).unwrap().status == SessionStatus::Done
+    });
+    assert_eq!(svc.model_digest(ids[0]).unwrap(), solo, "torn-file fallback diverged");
+    svc.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn terminal_sessions_beyond_retain_cap_report_evicted() {
+    let dir = temp_dir("evict");
+    let svc = Service::start(ServeConfig {
+        max_sessions: 4,
+        retain_terminal: 1,
+        ..serve_cfg(&dir)
+    });
+    let a = svc.submit(&tenant_cfg(31, "sgd", 4), "e1", 1).unwrap();
+    wait_for(120, "e1 to finish or be evicted", || match svc.status(a) {
+        Ok(st) => st.status == SessionStatus::Done,
+        Err(_) => true,
+    });
+    let b = svc.submit(&tenant_cfg(32, "sgd", 4), "e2", 1).unwrap();
+    wait_for(120, "e2 to finish or be evicted", || match svc.status(b) {
+        Ok(st) => st.status == SessionStatus::Done,
+        Err(_) => true,
+    });
+    // With two terminal sessions and a cap of one, the scheduler must
+    // evict the oldest; its id then reports a distinct error.
+    wait_for(120, "e1 to be evicted", || svc.status(a).is_err());
+    let err = svc.status(a).unwrap_err();
+    assert!(err.contains("evicted"), "want a distinct eviction error, got: {err}");
+    // Unknown ids still get the plain not-found error.
+    let err = svc.status(99_999).unwrap_err();
+    assert!(err.contains("no session"), "{err}");
+    assert!(svc.stats().evicted >= 1);
+    svc.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -54,6 +54,9 @@ fn scheduled_digests(cfgs: &[(TrainConfig, usize)], quantum: usize) -> Vec<u64> 
     let svc = Service::start(ServeConfig {
         max_sessions: cfgs.len().max(1),
         quantum_steps: quantum,
+        // Durability is serve_admission.rs territory; these parity
+        // tests must not write tombstones into ./checkpoints.
+        checkpoint_on_shutdown: false,
         ..ServeConfig::default()
     });
     let mut client = LocalClient::new(&svc);
@@ -103,6 +106,7 @@ fn tcp_server_speaks_the_protocol_end_to_end() {
     let svc = Service::start(ServeConfig {
         max_sessions: 2,
         quantum_steps: 4,
+        checkpoint_on_shutdown: false,
         ..ServeConfig::default()
     });
     let server = Server::start(svc.clone(), "127.0.0.1:0").unwrap();
@@ -161,6 +165,7 @@ fn checkpoint_resume_through_the_service_matches_uninterrupted() {
         max_sessions: 4,
         quantum_steps: 3,
         checkpoint_dir: dir.to_string_lossy().into_owned(),
+        checkpoint_on_shutdown: false,
         ..ServeConfig::default()
     });
     let mut client = LocalClient::new(&svc);
