@@ -43,6 +43,7 @@ fn main() -> anyhow::Result<()> {
                 backend: None,
                 worker_threads: None,
                 simd: None,
+                telemetry: None,
             };
             let mut t = Trainer::from_config(&cfg)?;
             let r = t.run()?;

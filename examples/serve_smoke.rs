@@ -7,7 +7,10 @@
 //! the same newline-delimited JSON), a third submission *queues* past
 //! the cap and is promoted when a slot frees, one tenant is
 //! explicitly checkpointed + cancelled and restored from the snapshot
-//! file, the periodic auto-checkpointer lands snapshots while
+//! file, a live `watch` stream follows one tenant's per-step events
+//! (loss, latency, telemetry phase breakdown) over the socket until it
+//! finishes and the `metrics` command dumps the process-wide registry,
+//! the periodic auto-checkpointer lands snapshots while
 //! everything runs, and finally a real SIGTERM triggers a
 //! checkpoint-everything shutdown — after which a fresh service
 //! resumes every lineage from disk (`resume_from_dir`): terminal
@@ -125,6 +128,48 @@ fn main() {
         st.get_f64("step").unwrap_or(0.0) as u64 >= 8,
         "fork must resume from the snapshot cursor: {st:?}"
     );
+
+    // Live observability over the same socket: stream tenant C's
+    // per-step events until it finishes. The stream replays the
+    // session's buffered ring first, so every step C has taken is
+    // delivered even though the watch attached mid-run.
+    let mut events = 0usize;
+    let mut last_step = 0u64;
+    let end = tcp
+        .watch(c, &mut |ev| {
+            events += 1;
+            last_step = ev.get_f64("step").unwrap_or(0.0) as u64;
+            if events == 1 || last_step % 16 == 0 {
+                println!(
+                    "serve_smoke:   watch seq={} step={} loss={:.4} ({:.2} ms)",
+                    ev.get_f64("seq").unwrap_or(-1.0),
+                    last_step,
+                    ev.get_f64("loss").unwrap_or(f64::NAN),
+                    ev.get_f64("step_ms").unwrap_or(0.0),
+                );
+            }
+        })
+        .expect("watch C");
+    assert_eq!(end.get_str("status"), Some("done"), "{end:?}");
+    assert!(events > 0, "watch delivered no step events");
+    assert_eq!(last_step, TARGET, "watch must follow C to its step target");
+    println!("serve_smoke: watched tenant C live — {events} step events to step {last_step}");
+
+    // The metrics command dumps the process-wide telemetry registry.
+    let metrics = tcp.metrics().expect("metrics");
+    let telem = metrics.get_str("telemetry").unwrap_or("?").to_string();
+    if telem == "on" {
+        let steps = metrics
+            .get("counters")
+            .and_then(|c| c.as_obj())
+            .and_then(|c| c.get("train.steps"))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0);
+        assert!(steps >= TARGET as f64, "train.steps counter lagged: {steps}");
+        println!("serve_smoke: metrics — telemetry on, train.steps={steps}");
+    } else {
+        println!("serve_smoke: metrics — telemetry {telem}");
+    }
 
     // The periodic auto-checkpointer (every 8 steps, plus terminal
     // tombstones) must land snapshots on its own, no client involved.

@@ -1,0 +1,290 @@
+//! Bench: the persisted perf trajectory — one machine-readable
+//! snapshot (`BENCH_telemetry.json` at the repository root) covering
+//! the three layers whose performance the project tracks over time:
+//!
+//! * **kernels** — GFLOP/s per micro-kernel per ISA path (dot8,
+//!   axpy8, and the 256³ matmul tile on one lane);
+//! * **serve** — aggregate optimizer steps/s at 1, 2 and 4 concurrent
+//!   Eva tenants on a fixed 4-lane pool;
+//! * **phases** — the per-phase step breakdown per optimizer family
+//!   (eva / kfac / shampoo), read from the telemetry registry after a
+//!   short instrumented run — mean milliseconds per span.
+//!
+//! With `EVA_BENCH_GATE=1` the run first loads the committed snapshot
+//! and **fails if any kernel's GFLOP/s regressed by more than 20%**.
+//! A baseline carrying `"provisional": true` (the checked-in
+//! placeholder before the first real CI measurement lands) reports
+//! the comparison without failing. Serve throughput and phase means
+//! are recorded but never gated — they are scheduler- and
+//! host-load-sensitive in a way the single-lane kernel numbers are
+//! not.
+//!
+//! Run: `cargo bench --bench bench_snapshot`
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use eva::backend::{self, BackendChoice, Sequential};
+use eva::config::{ModelArch, OptimConfig, TrainConfig};
+use eva::jsonx::Json;
+use eva::optim::HyperParams;
+use eva::rng::Pcg64;
+use eva::serve::{ServeConfig, Service};
+use eva::simd::{self, SimdChoice};
+use eva::telemetry::{self, TelemetryChoice};
+use eva::tensor::{matmul_with, Tensor};
+use eva::train::Trainer;
+
+/// `cargo bench` runs with `rust/` as the working directory; the
+/// snapshot lives at the repository root next to the other BENCH
+/// artifacts.
+const SNAPSHOT_PATH: &str = "../BENCH_telemetry.json";
+
+/// A kernel may lose this fraction of its committed GFLOP/s before
+/// the gate fails the run.
+const REGRESSION_TOLERANCE: f64 = 0.20;
+
+fn random(rng: &mut Pcg64, r: usize, c: usize) -> Tensor {
+    let mut t = Tensor::zeros(r, c);
+    rng.fill_normal(t.data_mut(), 1.0);
+    t
+}
+
+/// Median-of-reps seconds for `f` (first call is warmup).
+fn time(reps: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    let mut samples: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+/// GFLOP/s per kernel per ISA path, keyed `kernel/isa`.
+fn kernel_section() -> BTreeMap<String, f64> {
+    let mut rng = Pcg64::seeded(42);
+    let mut out = BTreeMap::new();
+
+    let n = 1 << 16;
+    let mut a = vec![0.0f32; n];
+    let mut b = vec![0.0f32; n];
+    rng.fill_normal(&mut a, 1.0);
+    rng.fill_normal(&mut b, 1.0);
+    let vec_flops = 2.0 * n as f64;
+
+    let d = 256usize;
+    let ma = random(&mut rng, d, d);
+    let mb = random(&mut rng, d, d);
+    let mat_flops = 2.0 * (d as f64).powi(3);
+
+    for isa in simd::available_isas() {
+        simd::install(&SimdChoice::Force(isa)).unwrap();
+        let t = time(5, || {
+            let mut acc = 0.0f32;
+            for _ in 0..2000 {
+                acc += simd::dot8(&a, &b);
+            }
+            std::hint::black_box(acc);
+        }) / 2000.0;
+        out.insert(format!("dot8/{}", isa.name()), vec_flops / t / 1e9);
+
+        let mut y = vec![0.0f32; n];
+        let t = time(5, || {
+            for _ in 0..2000 {
+                simd::axpy8(1e-9, &a, &mut y);
+            }
+            std::hint::black_box(y[0]);
+        }) / 2000.0;
+        out.insert(format!("axpy8/{}", isa.name()), vec_flops / t / 1e9);
+
+        // One lane: isolates the ISA effect from threading.
+        let t = time(5, || {
+            std::hint::black_box(matmul_with(&Sequential, &ma, &mb));
+        });
+        out.insert(format!("matmul256/{}", isa.name()), mat_flops / t / 1e9);
+    }
+    simd::install(&SimdChoice::Auto).unwrap();
+    out
+}
+
+fn tenant(seed: u64) -> TrainConfig {
+    let mut c = TrainConfig {
+        name: format!("bench-{seed}"),
+        dataset: "c10-small".into(),
+        seed,
+        arch: ModelArch::Classifier { hidden: vec![32] },
+        epochs: 1000, // never finishes inside the window
+        batch_size: 64,
+        base_lr: 0.05,
+        ..TrainConfig::default()
+    };
+    c.optim.algorithm = "eva".into();
+    c
+}
+
+/// Aggregate steps/s at `n` equal-priority Eva tenants.
+fn serve_steps_per_s(n: usize) -> f64 {
+    let svc = Service::start(ServeConfig {
+        max_sessions: n,
+        quantum_steps: 4,
+        checkpoint_on_shutdown: false,
+        ..ServeConfig::default()
+    });
+    let ids: Vec<u64> =
+        (0..n).map(|i| svc.submit(&tenant(i as u64), "t", 1).expect("submit")).collect();
+    let t0 = Instant::now();
+    std::thread::sleep(Duration::from_millis(1000));
+    let stats = svc.stats();
+    let elapsed = t0.elapsed().as_secs_f64();
+    svc.shutdown();
+    let total: u64 =
+        ids.iter().map(|id| stats.sessions.iter().find(|s| s.id == *id).unwrap().step).sum();
+    total as f64 / elapsed
+}
+
+/// Short instrumented run of one optimizer family; returns every
+/// non-empty histogram as `name → {count, mean_ms}`.
+fn phase_section(optimizer: &str) -> Json {
+    let mut hp = HyperParams::default();
+    hp.update_interval = 2;
+    hp.shampoo_block = 32;
+    let cfg = TrainConfig {
+        name: format!("bench-phases-{optimizer}"),
+        dataset: "c10-small".into(),
+        seed: 7,
+        arch: ModelArch::Classifier { hidden: vec![32] },
+        optim: OptimConfig { algorithm: optimizer.into(), hp },
+        epochs: 1000,
+        batch_size: 64,
+        base_lr: 0.05,
+        max_steps: Some(24),
+        eval_every: 8,
+        ..TrainConfig::default()
+    };
+    telemetry::reset_all();
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    t.run().unwrap();
+    let map: BTreeMap<String, Json> = telemetry::histograms()
+        .iter()
+        .filter(|h| h.count() > 0)
+        .map(|h| {
+            (
+                h.name().to_string(),
+                Json::obj(vec![
+                    ("count", Json::Num(h.count() as f64)),
+                    ("mean_ms", Json::Num(h.mean_ms())),
+                ]),
+            )
+        })
+        .collect();
+    Json::Obj(map)
+}
+
+/// Load the committed baseline's kernel table, plus its provisional
+/// flag. `None` when no baseline exists or it doesn't parse.
+fn load_baseline() -> Option<(BTreeMap<String, f64>, bool)> {
+    let text = std::fs::read_to_string(SNAPSHOT_PATH).ok()?;
+    let v = Json::parse(&text).ok()?;
+    let provisional = v.get("provisional").and_then(|p| p.as_bool()).unwrap_or(false);
+    let kernels = v
+        .get("kernels")?
+        .as_obj()?
+        .iter()
+        .filter_map(|(k, val)| val.as_f64().map(|f| (k.clone(), f)))
+        .collect();
+    Some((kernels, provisional))
+}
+
+fn main() {
+    let gate = std::env::var("EVA_BENCH_GATE").map(|v| v == "1").unwrap_or(false);
+    telemetry::install(&TelemetryChoice::On);
+
+    println!("bench_snapshot — recording the perf trajectory to {SNAPSHOT_PATH}");
+    let baseline = load_baseline();
+
+    println!("\n-- kernels (GFLOP/s per ISA) --");
+    let kernels = kernel_section();
+    for (k, g) in &kernels {
+        println!("{k:<20} {g:>8.2} GFLOP/s");
+    }
+
+    println!("\n-- serve throughput (4 lanes, quantum 4, eva tenants) --");
+    backend::install(&BackendChoice::Threaded(4));
+    let mut serve = BTreeMap::new();
+    for n in [1usize, 2, 4] {
+        let sps = serve_steps_per_s(n);
+        println!("{n} tenants: {sps:.1} steps/s");
+        assert!(sps > 0.0, "no steps executed at n={n}");
+        serve.insert(format!("steps_per_s/{n}"), Json::Num(sps));
+    }
+
+    println!("\n-- per-phase step breakdown per optimizer --");
+    let mut phases = BTreeMap::new();
+    for optimizer in ["eva", "kfac", "shampoo"] {
+        let section = phase_section(optimizer);
+        let steps = section
+            .get("train.step_us")
+            .and_then(|h| h.get_f64("count"))
+            .unwrap_or(0.0);
+        let mean = section
+            .get("train.step_us")
+            .and_then(|h| h.get_f64("mean_ms"))
+            .unwrap_or(0.0);
+        println!("{optimizer:<8} {steps:>4.0} steps, mean {mean:.3} ms/step");
+        assert!(steps > 0.0, "{optimizer}: telemetry recorded no steps");
+        phases.insert(optimizer.to_string(), section);
+    }
+
+    let snapshot = Json::obj(vec![
+        ("bench", Json::Str("bench_snapshot".into())),
+        // A freshly measured snapshot is authoritative; only the
+        // hand-written placeholder sets this true.
+        ("provisional", Json::Bool(false)),
+        ("host_isa", Json::Str(simd::detect_best().name().into())),
+        (
+            "kernels",
+            Json::Obj(kernels.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect()),
+        ),
+        ("serve", Json::Obj(serve)),
+        ("phases", Json::Obj(phases)),
+    ]);
+    let mut text = snapshot.pretty();
+    text.push('\n');
+    std::fs::write(SNAPSHOT_PATH, text).expect("write snapshot");
+    println!("\nwrote {SNAPSHOT_PATH}");
+
+    // The regression gate runs against the *previous* committed
+    // snapshot (loaded before the overwrite above).
+    match baseline {
+        Some((base, provisional)) if gate => {
+            let mut failures = Vec::new();
+            for (k, &want) in &base {
+                let Some(&got) = kernels.get(k) else { continue };
+                let floor = want * (1.0 - REGRESSION_TOLERANCE);
+                let verdict = if got < floor { "REGRESSED" } else { "ok" };
+                println!("gate {k:<20} baseline {want:>8.2} now {got:>8.2}  {verdict}");
+                if got < floor {
+                    failures.push(format!(
+                        "{k}: {got:.2} GFLOP/s < {floor:.2} (baseline {want:.2} - 20%)"
+                    ));
+                }
+            }
+            if provisional {
+                println!("baseline is provisional: comparison is informational only");
+            } else {
+                assert!(
+                    failures.is_empty(),
+                    "kernel GFLOP/s regressions:\n{}",
+                    failures.join("\n")
+                );
+                println!("gate passed: no kernel regressed more than 20%");
+            }
+        }
+        Some(_) => println!("gate disabled (set EVA_BENCH_GATE=1 to enforce)"),
+        None => println!("no committed baseline; gate skipped"),
+    }
+}

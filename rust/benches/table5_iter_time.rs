@@ -32,6 +32,7 @@ fn mean_step_ms(optimizer: &str, interval: usize, engine: Engine) -> anyhow::Res
         backend: None,
         worker_threads: None,
         simd: None,
+        telemetry: None,
     };
     let mut t = Trainer::from_config(&cfg)?;
     let _warm = t.run()?; // includes compile/alloc warmup inside

@@ -104,7 +104,7 @@ impl Cli {
 /// with `--backend` everywhere: both select a compute path whose
 /// numerics are bit-identical, so they apply uniformly to every
 /// subcommand.
-pub const GLOBAL_OPTIONS: &[&str] = &["backend", "worker-threads", "simd"];
+pub const GLOBAL_OPTIONS: &[&str] = &["backend", "worker-threads", "simd", "telemetry"];
 
 /// Every command registered in [`known_options`] (canonical names
 /// only; the parser also accepts `""`/`--help`/`-h` as `help`). Tests
@@ -206,6 +206,12 @@ OPTIONS:
                               an error). Applies to every command; numerics
                               are bit-identical across paths — see
                               docs/KERNELS.md.
+  --telemetry on|off          metrics registry + tracing spans (default on;
+                              env EVA_TELEMETRY overrides the default).
+                              Instrumentation never touches numerics: runs
+                              are bit-identical either way. `eva serve`
+                              exposes the registry via the `metrics` and
+                              streaming `watch` protocol commands.
 
 SERVE OPTIONS (multi-tenant training-session service):
   --addr HOST:PORT            control-plane listen address (newline-delimited

@@ -159,6 +159,12 @@ pub struct TrainConfig {
     /// auto-detected best) — see [`crate::simd`]. Numerics are
     /// bit-identical across paths, so this is a pure performance knob.
     pub simd: Option<String>,
+    /// Telemetry recording (`on` | `off`). `None` inherits the
+    /// process-wide mode (CLI `--telemetry`, the `EVA_TELEMETRY` env
+    /// var, or the on-by-default boot state) — see
+    /// [`crate::telemetry`]. Telemetry never touches numerics, so this
+    /// is a pure observability knob.
+    pub telemetry: Option<String>,
 }
 
 impl Default for TrainConfig {
@@ -180,6 +186,7 @@ impl Default for TrainConfig {
             backend: None,
             worker_threads: None,
             simd: None,
+            telemetry: None,
         }
     }
 }
@@ -297,6 +304,12 @@ impl TrainConfig {
                     crate::simd::SimdChoice::parse(s)?;
                     c.simd = Some(s.to_string());
                 }
+                "telemetry" => {
+                    let s = val.as_str().ok_or("telemetry: string")?;
+                    // Validate eagerly so config typos fail at load time.
+                    crate::telemetry::TelemetryChoice::parse(s)?;
+                    c.telemetry = Some(s.to_string());
+                }
                 "optimizer" => c.optim.algorithm = val.as_str().ok_or("optimizer")?.to_string(),
                 "momentum" => c.optim.hp.momentum = val.as_f64().ok_or("momentum")? as f32,
                 "weight_decay" => c.optim.hp.weight_decay = val.as_f64().ok_or("wd")? as f32,
@@ -380,6 +393,9 @@ impl TrainConfig {
         if let Some(s) = &self.simd {
             pairs.push(("simd", Json::Str(s.clone())));
         }
+        if let Some(t) = &self.telemetry {
+            pairs.push(("telemetry", Json::Str(t.clone())));
+        }
         Json::obj(pairs)
     }
 }
@@ -421,6 +437,7 @@ mod tests {
         c.backend = Some("threads:2".into());
         c.worker_threads = Some(3);
         c.simd = Some("scalar".into());
+        c.telemetry = Some("off".into());
         c.lr_schedule = LrSchedule::Step;
         let back = TrainConfig::from_json(&c.to_json().dump()).unwrap();
         assert_eq!(back.name, c.name);
@@ -434,6 +451,7 @@ mod tests {
         assert_eq!(back.backend.as_deref(), Some("threads:2"));
         assert_eq!(back.worker_threads, Some(3));
         assert_eq!(back.simd.as_deref(), Some("scalar"));
+        assert_eq!(back.telemetry.as_deref(), Some("off"));
         assert_eq!(back.lr_schedule, LrSchedule::Step);
         assert!(matches!(back.arch, ModelArch::Classifier { ref hidden } if hidden == &[256, 128, 64]));
         // Autoencoder arch round-trips via the "arch" key.
@@ -492,6 +510,16 @@ mod tests {
         }
         assert!(TrainConfig::from_json(r#"{"simd": "neon"}"#).is_err());
         assert!(TrainConfig::from_json(r#"{"simd": 2}"#).is_err());
+    }
+
+    #[test]
+    fn telemetry_key_parses_and_validates() {
+        for s in ["on", "off"] {
+            let c = TrainConfig::from_json(&format!(r#"{{"telemetry": "{s}"}}"#)).unwrap();
+            assert_eq!(c.telemetry.as_deref(), Some(s));
+        }
+        assert!(TrainConfig::from_json(r#"{"telemetry": "loud"}"#).is_err());
+        assert!(TrainConfig::from_json(r#"{"telemetry": 1}"#).is_err());
     }
 
     #[test]

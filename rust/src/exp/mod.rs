@@ -119,6 +119,7 @@ pub fn cfg(
         backend: None,
         worker_threads: None,
         simd: None,
+        telemetry: None,
     }
 }
 

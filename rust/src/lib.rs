@@ -45,6 +45,7 @@ pub mod rng;
 pub mod runtime;
 pub mod serve;
 pub mod simd;
+pub mod telemetry;
 pub mod tensor;
 pub mod testing;
 pub mod train;

@@ -45,6 +45,13 @@ fn run(args: &[String]) -> Result<()> {
         let isa = eva::simd::install(&choice).map_err(|e| anyhow!(e))?;
         println!("simd kernels: {}", isa.name());
     }
+    // Telemetry knob (metrics registry + tracing spans). Process-wide
+    // like the others; instrumentation never touches numerics.
+    if let Some(spec) = cli.opt("telemetry") {
+        let choice = eva::telemetry::TelemetryChoice::parse(spec).map_err(|e| anyhow!(e))?;
+        eva::telemetry::install(&choice);
+        println!("telemetry: {}", choice.label());
+    }
     match cli.command.as_str() {
         "" | "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -131,6 +138,10 @@ fn train(cli: &Cli) -> Result<()> {
         // Same precedence for the ISA path: run() already installed it.
         cfg.simd = None;
     }
+    if cli.opt("telemetry").is_some() {
+        // Same precedence for the telemetry knob.
+        cfg.telemetry = None;
+    }
     println!(
         "train: dataset={} optimizer={} epochs={} batch={} lr={} engine={:?}",
         cfg.dataset, cfg.optim.algorithm, cfg.epochs, cfg.batch_size, cfg.base_lr, cfg.engine
@@ -212,10 +223,11 @@ fn serve(cli: &Cli) -> Result<()> {
     }
     let server = Server::start(svc.clone(), &addr)?;
     println!(
-        "serve: listening on {} | backend {} | simd {} | max {} sessions | quantum {} steps | checkpoints → {}",
+        "serve: listening on {} | backend {} | simd {} | telemetry {} | max {} sessions | quantum {} steps | checkpoints → {}",
         server.addr(),
         eva::backend::global().label(),
         eva::simd::active().name(),
+        if eva::telemetry::enabled() { "on" } else { "off" },
         cfg.max_sessions,
         cfg.quantum_steps,
         cfg.checkpoint_dir,
@@ -234,6 +246,10 @@ fn serve(cli: &Cli) -> Result<()> {
         svc.shutdown();
     }
     server.join();
+    // Final registry dump — the service's perf trajectory for the log.
+    if eva::telemetry::enabled() {
+        println!("\n-- telemetry --\n{}", eva::telemetry::render_text());
+    }
     println!("serve: shut down");
     Ok(())
 }

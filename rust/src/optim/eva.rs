@@ -122,36 +122,44 @@ impl Optimizer for Eva {
     }
 
     fn step(&mut self, ctx: &StepCtx) -> Update {
+        use crate::telemetry as tm;
         let gamma = self.hp.damping;
         let grads = decayed_grads(ctx, self.hp.weight_decay);
         // Layers are independent; fan the rank-one preconditioning
         // across the compute backend (identical per-layer arithmetic).
         let bk = crate::backend::current();
         let pre: Vec<Tensor> = if self.use_kvs {
-            self.update_kvs(ctx);
+            tm::time_phase("kv_refresh", &tm::OPTIM_EVA_KV_REFRESH_US, || self.update_kvs(ctx));
             let (a_bar, b_bar) = (&self.a_bar, &self.b_bar);
-            crate::backend::par_map(&*bk, grads.len(), |l| {
-                Self::precondition_layer(&grads[l], &a_bar[l], &b_bar[l], gamma)
+            tm::time_phase("precondition", &tm::OPTIM_EVA_PRECONDITION_US, || {
+                crate::backend::par_map(&*bk, grads.len(), |l| {
+                    Self::precondition_layer(&grads[l], &a_bar[l], &b_bar[l], gamma)
+                })
             })
         } else {
-            crate::backend::par_map(&*bk, grads.len(), |l| {
-                Self::precondition_layer_gradonly(&grads[l], gamma)
+            tm::time_phase("precondition", &tm::OPTIM_EVA_PRECONDITION_US, || {
+                crate::backend::par_map(&*bk, grads.len(), |l| {
+                    Self::precondition_layer_gradonly(&grads[l], gamma)
+                })
             })
         };
-        // KL clipping over weight tensors (Eq. 16).
-        let mut pre = pre;
-        if self.use_kl_clip {
-            let pg = super::pg_inner(&pre, &grads);
-            let nu = kl_clip_factor(self.hp.kl_clip, ctx.lr, pg);
-            if nu < 1.0 {
-                for p in &mut pre {
-                    p.scale(nu);
+        tm::time_phase("apply", &tm::OPTIM_EVA_APPLY_US, || {
+            // KL clipping over weight tensors (Eq. 16).
+            let mut pre = pre;
+            if self.use_kl_clip {
+                let pg = super::pg_inner(&pre, &grads);
+                let nu = kl_clip_factor(self.hp.kl_clip, ctx.lr, pg);
+                if nu < 1.0 {
+                    for p in &mut pre {
+                        p.scale(nu);
+                    }
                 }
             }
-        }
-        // Biases follow SGD (paper: non-supported params update by SGD).
-        let mu = if self.use_momentum { self.hp.momentum } else { 0.0 };
-        self.momentum.apply(mu, ctx.lr, pre, ctx.bias_grads.to_vec())
+            // Biases follow SGD (paper: non-supported params update by
+            // SGD).
+            let mu = if self.use_momentum { self.hp.momentum } else { 0.0 };
+            self.momentum.apply(mu, ctx.lr, pre, ctx.bias_grads.to_vec())
+        })
     }
 
     fn state_bytes(&self) -> usize {

@@ -112,24 +112,30 @@ impl Optimizer for Kfac {
     }
 
     fn step(&mut self, ctx: &StepCtx) -> Update {
+        use crate::telemetry as tm;
         if self.is_refresh_step(ctx.step) {
-            self.refresh(ctx);
+            tm::time_phase("refresh", &tm::OPTIM_KFAC_REFRESH_US, || self.refresh(ctx));
         }
         assert!(self.initialized, "first K-FAC step must be a refresh step");
         let grads = decayed_grads(ctx, self.hp.weight_decay);
         let bk = crate::backend::current();
         let (q_inv, r_inv) = (&self.q_inv, &self.r_inv);
-        let mut pre: Vec<Tensor> = crate::backend::par_map(&*bk, grads.len(), |l| {
-            matmul(&matmul(&q_inv[l], &grads[l]), &r_inv[l])
+        let pre: Vec<Tensor> = tm::time_phase("precondition", &tm::OPTIM_KFAC_PRECONDITION_US, || {
+            crate::backend::par_map(&*bk, grads.len(), |l| {
+                matmul(&matmul(&q_inv[l], &grads[l]), &r_inv[l])
+            })
         });
-        let pg = super::pg_inner(&pre, &grads);
-        let nu = kl_clip_factor(self.hp.kl_clip, ctx.lr, pg);
-        if nu < 1.0 {
-            for p in &mut pre {
-                p.scale(nu);
+        tm::time_phase("apply", &tm::OPTIM_KFAC_APPLY_US, || {
+            let mut pre = pre;
+            let pg = super::pg_inner(&pre, &grads);
+            let nu = kl_clip_factor(self.hp.kl_clip, ctx.lr, pg);
+            if nu < 1.0 {
+                for p in &mut pre {
+                    p.scale(nu);
+                }
             }
-        }
-        self.momentum.apply(self.hp.momentum, ctx.lr, pre, ctx.bias_grads.to_vec())
+            self.momentum.apply(self.hp.momentum, ctx.lr, pre, ctx.bias_grads.to_vec())
+        })
     }
 
     fn state_bytes(&self) -> usize {

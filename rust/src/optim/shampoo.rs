@@ -151,38 +151,47 @@ impl Optimizer for Shampoo {
     }
 
     fn step(&mut self, ctx: &StepCtx) -> Update {
+        use crate::telemetry as tm;
         let grads = decayed_grads(ctx, self.hp.weight_decay);
         if !self.initialized {
             self.init_tiles(&grads);
         }
         // Statistics accumulate every step (cheap matmuls); the
         // expensive inverse roots refresh on the interval.
-        self.accumulate(&grads);
+        tm::time_phase("accumulate", &tm::OPTIM_SHAMPOO_ACCUMULATE_US, || {
+            self.accumulate(&grads)
+        });
         if self.is_refresh_step(ctx.step) || !self.roots_ready {
-            self.refresh_roots();
+            tm::time_phase("refresh", &tm::OPTIM_SHAMPOO_REFRESH_US, || self.refresh_roots());
         }
-        let mut pre: Vec<Tensor> = grads
-            .iter()
-            .zip(&self.tiles)
-            .map(|(g, layer)| {
-                let mut p = Tensor::zeros(g.rows(), g.cols());
-                for t in layer {
-                    let blk = g.submatrix(t.r0, t.r1, t.c0, t.c1);
-                    let pb = matmul(&matmul(&t.l_root, &blk), &t.r_root);
-                    p.paste(t.r0, t.c0, &pb);
-                }
-                p
-            })
-            .collect();
-        if self.use_grafting {
-            for (p, g) in pre.iter_mut().zip(&grads) {
-                let pn = p.norm_sq();
-                if pn > 1e-24 {
-                    p.scale((g.norm_sq() / pn).sqrt());
+        let pre: Vec<Tensor> =
+            tm::time_phase("precondition", &tm::OPTIM_SHAMPOO_PRECONDITION_US, || {
+                grads
+                    .iter()
+                    .zip(&self.tiles)
+                    .map(|(g, layer)| {
+                        let mut p = Tensor::zeros(g.rows(), g.cols());
+                        for t in layer {
+                            let blk = g.submatrix(t.r0, t.r1, t.c0, t.c1);
+                            let pb = matmul(&matmul(&t.l_root, &blk), &t.r_root);
+                            p.paste(t.r0, t.c0, &pb);
+                        }
+                        p
+                    })
+                    .collect()
+            });
+        tm::time_phase("apply", &tm::OPTIM_SHAMPOO_APPLY_US, || {
+            let mut pre = pre;
+            if self.use_grafting {
+                for (p, g) in pre.iter_mut().zip(&grads) {
+                    let pn = p.norm_sq();
+                    if pn > 1e-24 {
+                        p.scale((g.norm_sq() / pn).sqrt());
+                    }
                 }
             }
-        }
-        self.momentum.apply(self.hp.momentum, ctx.lr, pre, ctx.bias_grads.to_vec())
+            self.momentum.apply(self.hp.momentum, ctx.lr, pre, ctx.bias_grads.to_vec())
+        })
     }
 
     fn state_bytes(&self) -> usize {

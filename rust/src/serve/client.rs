@@ -132,6 +132,25 @@ pub trait ServeClient {
         self.request_ok(Json::obj(vec![("cmd", Json::Str("stats".into()))]))
     }
 
+    /// The process-wide telemetry registry (`metrics` command):
+    /// `telemetry` on/off, `counters`/`gauges` as name → value,
+    /// `histograms` as name → `{count, mean_ms, p50_ms, p95_ms}`.
+    fn metrics(&mut self) -> Result<Json, String> {
+        self.request_ok(Json::obj(vec![("cmd", Json::Str("metrics".into()))]))
+    }
+
+    /// Stream a session's per-step events until it goes terminal.
+    /// `on_event` is called once per `"event": "step"` object (`seq`,
+    /// `step`, `loss`, `step_ms`, `phases`; see
+    /// [`crate::serve::protocol`]); the returned object is the final
+    /// `"event": "end"` line carrying the session's terminal status.
+    /// Events dropped by the session's bounded ring (slow consumer)
+    /// appear as gaps in `seq`. Over TCP this reads the server's
+    /// stream; in-process it polls
+    /// [`crate::serve::Service::watch_events`] — both deliver
+    /// identical objects.
+    fn watch(&mut self, id: u64, on_event: &mut dyn FnMut(&Json)) -> Result<Json, String>;
+
     /// Ask the service to stop.
     fn shutdown(&mut self) -> Result<(), String> {
         self.request_ok(Json::obj(vec![("cmd", Json::Str("shutdown".into()))]))?;
@@ -179,14 +198,9 @@ impl TcpClient {
         let writer = stream.try_clone()?;
         Ok(TcpClient { reader: BufReader::new(stream), writer })
     }
-}
 
-impl ServeClient for TcpClient {
-    fn request(&mut self, req: Json) -> Result<Json, String> {
-        let mut line = req.dump();
-        line.push('\n');
-        self.writer.write_all(line.as_bytes()).map_err(|e| format!("send: {e}"))?;
-        self.writer.flush().map_err(|e| format!("send: {e}"))?;
+    /// Read one newline-terminated response object.
+    fn recv_line(&mut self) -> Result<Json, String> {
         let mut resp = String::new();
         loop {
             match self.reader.read_line(&mut resp) {
@@ -202,6 +216,43 @@ impl ServeClient for TcpClient {
             }
         }
         Json::parse(resp.trim()).map_err(|e| format!("bad response: {e}"))
+    }
+
+    fn send_line(&mut self, req: &Json) -> Result<(), String> {
+        let mut line = req.dump();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes()).map_err(|e| format!("send: {e}"))?;
+        self.writer.flush().map_err(|e| format!("send: {e}"))
+    }
+}
+
+impl ServeClient for TcpClient {
+    fn request(&mut self, req: Json) -> Result<Json, String> {
+        self.send_line(&req)?;
+        self.recv_line()
+    }
+
+    fn watch(&mut self, id: u64, on_event: &mut dyn FnMut(&Json)) -> Result<Json, String> {
+        self.send_line(&Json::obj(vec![
+            ("cmd", Json::Str("watch".into())),
+            ("session", Json::Num(id as f64)),
+        ]))?;
+        // Ack line first; an unknown session is an ordinary error.
+        let ack = self.recv_line()?;
+        if ack.get("ok") != Some(&Json::Bool(true)) {
+            return Err(ack.get_str("error").unwrap_or("watch failed").to_string());
+        }
+        loop {
+            let line = self.recv_line()?;
+            if line.get("ok") != Some(&Json::Bool(true)) {
+                return Err(line.get_str("error").unwrap_or("watch failed").to_string());
+            }
+            match line.get_str("event") {
+                Some("step") => on_event(&line),
+                Some("end") => return Ok(line),
+                _ => {} // future event kinds: skip, don't break old clients
+            }
+        }
     }
 }
 
@@ -224,5 +275,41 @@ impl ServeClient for LocalClient {
         // exercises exactly what the socket path does.
         let req = Json::parse(&req.dump())?;
         Ok(dispatch(&self.svc, &req))
+    }
+
+    fn watch(&mut self, id: u64, on_event: &mut dyn FnMut(&Json)) -> Result<Json, String> {
+        use crate::serve::protocol::step_event_fields;
+        let mut seq = 0u64;
+        self.svc.watch_events(id, seq)?; // validate the id up front
+        loop {
+            let (events, terminal) = self.svc.watch_events(id, seq)?;
+            for ev in &events {
+                seq = ev.seq + 1;
+                // Same object shape as the TCP stream lines.
+                let mut pairs = vec![("ok", Json::Bool(true))];
+                pairs.extend(step_event_fields(ev));
+                on_event(&Json::obj(pairs));
+            }
+            if terminal {
+                let status = self
+                    .svc
+                    .status(id)
+                    .map(|st| st.status.as_str().to_string())
+                    .unwrap_or_else(|_| "evicted".into());
+                return Ok(Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("event", Json::Str("end".into())),
+                    ("status", Json::Str(status)),
+                ]));
+            }
+            if self.svc.is_stopped() {
+                return Ok(Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("event", Json::Str("end".into())),
+                    ("status", Json::Str("stopped".into())),
+                ]));
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
     }
 }

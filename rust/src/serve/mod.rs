@@ -30,9 +30,13 @@
 //!   ([`Service::resume_from_dir`]) — restart-transparent serving.
 //! * [`protocol`] / [`server`] / [`client`] — a newline-delimited-JSON
 //!   control plane (`submit` / `status` / `pause` / `resume` /
-//!   `checkpoint` / `cancel` / `stats` / `shutdown`) over
-//!   `std::net::TcpListener`, plus an in-process client that speaks
-//!   the same wire format for tests and embedding.
+//!   `checkpoint` / `cancel` / `stats` / `metrics` / `shutdown`, plus
+//!   the streaming `watch` command that pushes one line per completed
+//!   optimizer step) over `std::net::TcpListener`, plus an in-process
+//!   client that speaks the same wire format for tests and embedding.
+//!   `metrics` dumps the process-wide [`crate::telemetry`] registry;
+//!   `watch` is backed by each session's bounded [`StepEvent`] ring,
+//!   so a slow or stalled watcher can never block the scheduler.
 //!
 //! Run it with `eva serve [--addr A] [--max-sessions N]
 //! [--checkpoint-dir D]`, or embed it:
@@ -66,7 +70,7 @@ pub use checkpoint::Checkpoint;
 pub use client::{LocalClient, ServeClient, TcpClient};
 pub use server::Server;
 pub use service::{Service, ServiceStats};
-pub use session::{default_tenant, model_digest, Session, SessionState, SessionStatus};
+pub use session::{default_tenant, model_digest, Session, SessionState, SessionStatus, StepEvent};
 
 use crate::jsonx::Json;
 

@@ -13,11 +13,24 @@
 //! | `checkpoint` | `session` | `path`, `step` |
 //! | `cancel` | `session` | session state |
 //! | `stats` | — | service stats + per-session states |
+//! | `metrics` | — | [`crate::telemetry`] registry dump (`telemetry`, `counters`, `gauges`, `histograms`) |
+//! | `watch` | `session` | *streaming* — see below |
 //! | `shutdown` | — | `stopping: true` |
 //!
 //! Every response carries `ok` (bool) and, on failure, `error`
 //! (string). A request's `id` field, if present, is echoed back so
 //! clients can pipeline.
+//!
+//! `watch` is the one command that does **not** fit the
+//! one-line-in/one-line-out shape, so the TCP server handles it
+//! before [`dispatch`] (see [`crate::serve::server`]): the response
+//! is an acknowledgement line (`"event": "watching"`), then one line
+//! per completed optimizer step (`"event": "step"` with `seq`,
+//! `step`, `loss`, `step_ms` and a `phases` object of per-phase
+//! microseconds), then a final `"event": "end"` line carrying the
+//! session's terminal status. Dropped events from a slow reader show
+//! up as gaps in `seq`. Calling `watch` through [`dispatch`] (the
+//! in-process path) returns an error pointing at the streaming API.
 
 use crate::config::TrainConfig;
 use crate::jsonx::Json;
@@ -87,6 +100,17 @@ fn handle(svc: &Service, req: &Json) -> Result<Vec<(&'static str, Json)>, String
             Ok(vec![("path", Json::Str(path)), ("step", Json::Num(step as f64))])
         }
         "stats" => Ok(stats_fields(&svc.stats())),
+        "metrics" => Ok(metrics_fields()),
+        // `watch` streams many lines; dispatch is strictly one
+        // request / one response, so the TCP server intercepts it
+        // before this point. Reaching here means an in-process caller
+        // (LocalClient has a dedicated `watch`) or a transport bug.
+        "watch" => Err(
+            "'watch' streams newline-delimited step events and is only \
+             available over the TCP transport (or Service::watch_events \
+             / ServeClient::watch in-process)"
+            .into(),
+        ),
         "shutdown" => {
             svc.shutdown();
             Ok(vec![("stopping", Json::Bool(true))])
@@ -149,6 +173,67 @@ pub fn stats_fields(st: &ServiceStats) -> Vec<(&'static str, Json)> {
             "sessions",
             Json::Arr(st.sessions.iter().map(session_state_json).collect()),
         ),
+    ]
+}
+
+/// The process-wide telemetry registry as protocol response fields
+/// (the `metrics` command). Counters and gauges are `name → value`
+/// objects; histograms map `name → {count, mean_ms, p50_ms, p95_ms}`.
+/// With telemetry off everything reads zero and `telemetry` is
+/// `"off"`, so clients can tell "disabled" from "idle".
+pub fn metrics_fields() -> Vec<(&'static str, Json)> {
+    let counters = crate::telemetry::counters()
+        .iter()
+        .map(|c| (c.name(), Json::Num(c.get() as f64)))
+        .collect::<Vec<_>>();
+    let gauges = crate::telemetry::gauges()
+        .iter()
+        .map(|g| (g.name(), Json::Num(g.get() as f64)))
+        .collect::<Vec<_>>();
+    let histograms = crate::telemetry::histograms()
+        .iter()
+        .map(|h| {
+            (
+                h.name(),
+                Json::obj(vec![
+                    ("count", Json::Num(h.count() as f64)),
+                    ("mean_ms", Json::Num(h.mean_ms())),
+                    ("p50_ms", Json::Num(h.percentile_ms(50.0))),
+                    ("p95_ms", Json::Num(h.percentile_ms(95.0))),
+                ]),
+            )
+        })
+        .collect::<Vec<_>>();
+    vec![
+        (
+            "telemetry",
+            Json::Str(if crate::telemetry::enabled() { "on" } else { "off" }.into()),
+        ),
+        ("counters", Json::obj(counters)),
+        ("gauges", Json::obj(gauges)),
+        ("histograms", Json::obj(histograms)),
+    ]
+}
+
+/// One [`crate::serve::StepEvent`] as a `watch` stream line body
+/// (shared by the TCP streaming loop and the in-process client so
+/// the two transports emit identical objects). `phases` is an object
+/// of per-phase microseconds in recorded order; it is empty when
+/// telemetry is off (the stream itself still flows — step, loss and
+/// wall time come from the session, not the registry).
+pub fn step_event_fields(ev: &crate::serve::StepEvent) -> Vec<(&'static str, Json)> {
+    let phases = ev
+        .phases
+        .iter()
+        .map(|(label, us)| (*label, Json::Num(*us as f64)))
+        .collect::<Vec<_>>();
+    vec![
+        ("event", Json::Str("step".into())),
+        ("seq", Json::Num(ev.seq as f64)),
+        ("step", Json::Num(ev.step as f64)),
+        ("loss", Json::Num(ev.loss as f64)),
+        ("step_ms", Json::Num(ev.step_ms)),
+        ("phases", Json::obj(phases)),
     ]
 }
 
@@ -236,5 +321,53 @@ mod tests {
         assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
         assert!(Json::parse(&resp.dump()).is_ok());
         svc.shutdown();
+    }
+
+    #[test]
+    fn metrics_dumps_registry_and_watch_needs_streaming() {
+        let svc = svc();
+        let resp = dispatch(&svc, &Json::obj(vec![("cmd", Json::Str("metrics".into()))]));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        assert!(matches!(resp.get_str("telemetry"), Some("on") | Some("off")));
+        let counters = resp.get("counters").and_then(|c| c.as_obj()).unwrap();
+        assert!(counters.contains_key("train.steps"), "{counters:?}");
+        let hists = resp.get("histograms").and_then(|h| h.as_obj()).unwrap();
+        let step = hists.get("train.step_us").unwrap();
+        assert!(step.get_f64("count").is_some());
+        assert!(step.get_f64("p95_ms").is_some());
+        assert!(Json::parse(&resp.dump()).is_ok(), "metrics must round-trip");
+        // watch cannot fit the one-line dispatch shape.
+        let resp = dispatch(
+            &svc,
+            &Json::obj(vec![
+                ("cmd", Json::Str("watch".into())),
+                ("session", Json::Num(1.0)),
+            ]),
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert!(resp.get_str("error").unwrap().contains("stream"), "{resp:?}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn step_event_fields_serialize_phases_in_order() {
+        let ev = crate::serve::StepEvent {
+            seq: 3,
+            step: 4,
+            loss: 0.5,
+            step_ms: 1.25,
+            phases: vec![("data", 10), ("forward_backward", 200)],
+        };
+        let obj = Json::obj(step_event_fields(&ev));
+        assert_eq!(obj.get_str("event"), Some("step"));
+        assert_eq!(obj.get_f64("seq"), Some(3.0));
+        assert_eq!(obj.get_f64("step"), Some(4.0));
+        assert_eq!(obj.get_f64("step_ms"), Some(1.25));
+        let phases = obj.get("phases").and_then(|p| p.as_obj()).unwrap();
+        assert_eq!(phases.get("data").and_then(|v| v.as_f64()), Some(10.0));
+        assert_eq!(
+            phases.get("forward_backward").and_then(|v| v.as_f64()),
+            Some(200.0)
+        );
     }
 }

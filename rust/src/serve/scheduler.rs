@@ -79,13 +79,16 @@ pub(crate) fn round(inner: &Inner, carve: &mut CarveCache) -> usize {
     service::promote_waiting(inner);
     // Collect runnable sessions among the admitted. Status transitions
     // only ever happen under the session mutex.
+    let (mut admitted, mut waiting) = (0u64, 0u64);
     let runnable: Vec<(u64, Arc<Mutex<Session>>, usize)> = {
         let map = inner.sessions.lock().unwrap_or_else(|e| e.into_inner());
         map.iter()
             .filter_map(|(id, slot)| {
                 if !slot.admitted.load(Ordering::Relaxed) {
+                    waiting += 1;
                     return None; // parked in the admission queue
                 }
+                admitted += 1;
                 let mut sl = slot.sess.lock().unwrap_or_else(|e| e.into_inner());
                 match sl.status().clone() {
                     SessionStatus::Queued => sl.set_status(SessionStatus::Running),
@@ -96,6 +99,10 @@ pub(crate) fn round(inner: &Inner, carve: &mut CarveCache) -> usize {
             })
             .collect()
     };
+    if crate::telemetry::enabled() {
+        crate::telemetry::SERVE_SESSIONS_ADMITTED.set(admitted);
+        crate::telemetry::SERVE_QUEUE_DEPTH.set(waiting);
+    }
     if runnable.is_empty() {
         // Housekeeping still runs on idle rounds: a cancelled/failed
         // session must get its terminal tombstone (and a paused one
@@ -109,9 +116,18 @@ pub(crate) fn round(inner: &Inner, carve: &mut CarveCache) -> usize {
     // swap (pool identity, not just label — see CarveCache).
     let parent = backend::global();
     let key: Vec<(u64, usize)> = runnable.iter().map(|(id, _, p)| (*id, *p)).collect();
+    // Scheduler spans record straight into the registry histograms —
+    // NOT via `time_phase`: the thread-local phase list is only
+    // drained on stepping threads, and the scheduler thread isn't one.
+    let telemetry_on = crate::telemetry::enabled();
+    let carve_t0 = telemetry_on.then(std::time::Instant::now);
     carve.ensure(&parent, key);
+    if let Some(t0) = carve_t0 {
+        crate::telemetry::SERVE_SCHED_CARVE_US.record_us(t0.elapsed().as_micros() as u64);
+    }
     let handles = &carve.handles;
     let quantum = inner.cfg.quantum_steps;
+    let quantum_t0 = telemetry_on.then(std::time::Instant::now);
     // Fan the quanta out over the shared pool; each session computes
     // under its own carved handle.
     let steps = backend::par_map(&*parent, runnable.len(), |i| {
@@ -136,6 +152,9 @@ pub(crate) fn round(inner: &Inner, carve: &mut CarveCache) -> usize {
             }
         }
     });
+    if let Some(t0) = quantum_t0 {
+        crate::telemetry::SERVE_SCHED_QUANTUM_US.record_us(t0.elapsed().as_micros() as u64);
+    }
     let total: usize = steps.iter().sum();
     inner.sched_steps.fetch_add(total as u64, Ordering::Relaxed);
     auto_checkpoint(inner);

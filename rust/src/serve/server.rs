@@ -6,13 +6,22 @@
 //! [`crate::serve::protocol`]). A `shutdown` command — or
 //! [`crate::serve::Service::shutdown`] from the embedding process —
 //! stops the accept loop and drains the handlers.
+//!
+//! The streaming `watch` command is the one exception to the
+//! one-line-in/one-line-out shape: it is intercepted here, before
+//! [`dispatch`], and turns the connection into a step-event stream
+//! (ack line, one line per step, a final `end` line) until the
+//! watched session goes terminal, the client disconnects or the
+//! service stops. Watchers only ever *poll* the session's bounded
+//! event ring — a slow or absent reader costs dropped events (visible
+//! as `seq` gaps), never scheduler stalls.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::time::Duration;
 
 use crate::jsonx::Json;
-use crate::serve::protocol::dispatch;
+use crate::serve::protocol::{dispatch, step_event_fields};
 use crate::serve::service::Service;
 
 /// Hard cap on one request line. Submit configs are a few KiB; a
@@ -107,6 +116,15 @@ fn handle_conn(stream: TcpStream, svc: Service) {
                     ])
                 } else {
                     match Json::parse(line.trim()) {
+                        // `watch` streams many lines; it cannot go
+                        // through the one-response dispatch.
+                        Ok(req) if req.get_str("cmd") == Some("watch") => {
+                            line.clear();
+                            if stream_watch(&mut write, &svc, &req) {
+                                continue; // end line delivered; conn reusable
+                            }
+                            break; // client gone mid-stream
+                        }
                         Ok(req) => dispatch(&svc, &req),
                         Err(e) => Json::obj(vec![
                             ("ok", Json::Bool(false)),
@@ -140,5 +158,91 @@ fn handle_conn(stream: TcpStream, svc: Service) {
             }
             Err(_) => break,
         }
+    }
+}
+
+/// How often the watch loop polls the session's event ring. Far below
+/// realistic step latency, so events stream with negligible lag while
+/// an idle watcher costs two mutex grabs per tick.
+const WATCH_POLL: Duration = Duration::from_millis(10);
+
+/// Serve one `watch` request as a step-event stream: an
+/// acknowledgement line, one line per completed step, and a final
+/// `end` line once the session goes terminal (or the service stops).
+/// Returns `true` when the connection is still usable for further
+/// requests (the stream concluded with a delivered line) and `false`
+/// when the peer vanished mid-stream. Never blocks the scheduler —
+/// this thread only polls [`Service::watch_events`].
+fn stream_watch(write: &mut TcpStream, svc: &Service, req: &Json) -> bool {
+    let echo_id = req.get("id").cloned();
+    let send = |write: &mut TcpStream, mut pairs: Vec<(&'static str, Json)>| -> bool {
+        if let Some(id) = &echo_id {
+            pairs.push(("id", id.clone()));
+        }
+        let mut out = Json::obj(pairs).dump();
+        out.push('\n');
+        write.write_all(out.as_bytes()).is_ok() && write.flush().is_ok()
+    };
+    let fail = |write: &mut TcpStream, e: String| -> bool {
+        send(write, vec![("ok", Json::Bool(false)), ("error", Json::Str(e))])
+    };
+    let Some(id) = req.get_f64("session").map(|v| v as u64) else {
+        return fail(write, "missing 'session' id".into());
+    };
+    // Validate the id before acking, so watching a bogus session is an
+    // ordinary single-line error, not an ack followed by a failure.
+    let mut seq = 0u64;
+    if let Err(e) = svc.watch_events(id, seq) {
+        return fail(write, e);
+    }
+    if !send(
+        write,
+        vec![
+            ("ok", Json::Bool(true)),
+            ("event", Json::Str("watching".into())),
+            ("session", Json::Num(id as f64)),
+        ],
+    ) {
+        return false;
+    }
+    loop {
+        let (events, terminal) = match svc.watch_events(id, seq) {
+            Ok(v) => v,
+            // Evicted mid-watch: surface it and end the stream.
+            Err(e) => return fail(write, e),
+        };
+        for ev in &events {
+            seq = ev.seq + 1;
+            let mut pairs = vec![("ok", Json::Bool(true))];
+            pairs.extend(step_event_fields(ev));
+            if !send(write, pairs) {
+                return false; // client gone; the session steps on
+            }
+        }
+        if terminal {
+            let status = svc
+                .status(id)
+                .map(|st| st.status.as_str().to_string())
+                .unwrap_or_else(|_| "evicted".into());
+            return send(
+                write,
+                vec![
+                    ("ok", Json::Bool(true)),
+                    ("event", Json::Str("end".into())),
+                    ("status", Json::Str(status)),
+                ],
+            );
+        }
+        if svc.is_stopped() {
+            return send(
+                write,
+                vec![
+                    ("ok", Json::Bool(true)),
+                    ("event", Json::Str("end".into())),
+                    ("status", Json::Str("stopped".into())),
+                ],
+            );
+        }
+        std::thread::sleep(WATCH_POLL);
     }
 }

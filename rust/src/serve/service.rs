@@ -18,7 +18,7 @@ use std::sync::{Arc, Mutex};
 use crate::config::TrainConfig;
 use crate::serve::checkpoint::Checkpoint;
 use crate::serve::scheduler;
-use crate::serve::session::{Session, SessionState, SessionStatus};
+use crate::serve::session::{Session, SessionState, SessionStatus, StepEvent};
 use crate::serve::ServeConfig;
 use crate::train::StepTimer;
 
@@ -160,7 +160,15 @@ pub(crate) fn checkpoint_session(
         .join(format!("{stem}-step{step}.ckpt"))
         .to_string_lossy()
         .into_owned();
+    // Direct record (not `time_phase`): checkpoint I/O runs on the
+    // scheduler/control-plane threads, which never drain the
+    // per-step thread-local phase list.
+    let io_t0 = crate::telemetry::enabled().then(std::time::Instant::now);
     ck.save(&path)?;
+    if let Some(t0) = io_t0 {
+        crate::telemetry::SERVE_SCHED_CHECKPOINT_IO_US.record_us(t0.elapsed().as_micros() as u64);
+        crate::telemetry::SERVE_CHECKPOINTS.add(1);
+    }
     sess.lock().unwrap_or_else(|e| e.into_inner()).note_checkpointed_at(step, tag);
     Ok((path, step))
 }
@@ -607,6 +615,19 @@ impl Service {
     pub fn checkpoint(&self, id: u64) -> Result<(String, u64), String> {
         let (sess, io) = self.session_entry(id)?;
         checkpoint_session(&self.inner.cfg, &sess, &io)
+    }
+
+    /// Step events of one session with sequence number `since` or
+    /// later, plus a `terminal` flag: once true no further events can
+    /// arrive (the session left the live set), so a watcher should
+    /// drain what it got and stop. Backed by the session's bounded
+    /// event ring ([`Session::events_since`]) — a slow watcher sees a
+    /// sequence-number gap rather than stalling the stepper. The TCP
+    /// `watch` stream and the in-process client both poll this.
+    pub fn watch_events(&self, id: u64, since: u64) -> Result<(Vec<StepEvent>, bool), String> {
+        let sess = self.session(id)?;
+        let s = sess.lock().unwrap_or_else(|e| e.into_inner());
+        Ok((s.events_since(since), !s.status().is_live()))
     }
 
     /// FNV digest of a session's exact model bits (see

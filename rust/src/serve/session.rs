@@ -7,12 +7,37 @@
 //! checkpoint / cancel take effect at quantum granularity without ever
 //! tearing a step in half.
 
+use std::collections::VecDeque;
+
 use anyhow::Result;
 
 use crate::config::{Engine, TrainConfig};
 use crate::nn::Mlp;
 use crate::serve::checkpoint::Checkpoint;
 use crate::train::{LoopState, StepOutcome, StepTimer, Trainer};
+
+/// Per-session step-event ring capacity. A slow (or absent) watcher
+/// costs a session at most this many buffered events; older ones are
+/// dropped oldest-first, so stepping never blocks on a consumer.
+const EVENT_RING_CAP: usize = 256;
+
+/// One per-step record streamed to `watch` clients: loss, latency and
+/// the step's telemetry phase breakdown (label → µs; empty when
+/// telemetry is off).
+#[derive(Clone, Debug)]
+pub struct StepEvent {
+    /// Monotonic per-session sequence number (starts at 0); watchers
+    /// resume from the last seq they saw.
+    pub seq: u64,
+    /// Global step count after this step.
+    pub step: u64,
+    /// Training loss of this step's batch.
+    pub loss: f32,
+    /// Wall time of this step in milliseconds.
+    pub step_ms: f64,
+    /// Phase breakdown from the telemetry spans, in first-seen order.
+    pub phases: Vec<(&'static str, u64)>,
+}
 
 /// Lifecycle of a session. Terminal states (`Done`, `Cancelled`,
 /// `Failed`) are never left.
@@ -131,6 +156,10 @@ pub struct Session {
     last_val: Option<f32>,
     /// Lanes granted by the most recent scheduler carve.
     pub lane_share: usize,
+    /// Bounded ring of recent step events for `watch` streaming.
+    events: VecDeque<StepEvent>,
+    /// Next event sequence number.
+    next_seq: u64,
 }
 
 // SAFETY: sessions cross threads (scheduler fan-out, service
@@ -160,6 +189,7 @@ impl Session {
         cfg.backend = None;
         cfg.worker_threads = None;
         cfg.simd = None;
+        cfg.telemetry = None;
         let trainer = Trainer::from_config(&cfg).map_err(|e| e.to_string())?;
         let lp = LoopState::new(&trainer);
         Ok(Session {
@@ -178,6 +208,8 @@ impl Session {
             last_loss: f32::NAN,
             last_val: None,
             lane_share: 0,
+            events: VecDeque::new(),
+            next_seq: 0,
         })
     }
 
@@ -256,16 +288,44 @@ impl Session {
     }
 
     /// Take exactly one optimizer step (latency recorded for the
-    /// p50/p95 stats).
+    /// p50/p95 stats; a [`StepEvent`] is appended to the bounded
+    /// `watch` ring — never blocking on consumers).
     pub fn step(&mut self) -> Result<StepOutcome> {
         let t0 = std::time::Instant::now();
         let out = self.lp.step_once(&mut self.trainer)?;
-        self.timer.record(t0.elapsed());
+        let wall = t0.elapsed();
+        self.timer.record(wall);
         self.last_loss = out.loss;
         if let Some(v) = out.val_metric {
             self.last_val = Some(v);
         }
+        // Drain the step's telemetry spans on the stepping thread (the
+        // phase list is thread-local). Empty when telemetry is off.
+        let phases = crate::telemetry::take_step_phases();
+        if self.events.len() >= EVENT_RING_CAP {
+            self.events.pop_front();
+        }
+        self.events.push_back(StepEvent {
+            seq: self.next_seq,
+            step: out.step,
+            loss: out.loss,
+            step_ms: wall.as_secs_f64() * 1e3,
+            phases,
+        });
+        self.next_seq += 1;
         Ok(out)
+    }
+
+    /// Step events with `seq >= since`, oldest first. Events older than
+    /// the ring capacity are gone (watchers that fall behind skip
+    /// ahead; `seq` gaps make the loss visible).
+    pub fn events_since(&self, since: u64) -> Vec<StepEvent> {
+        self.events.iter().filter(|e| e.seq >= since).cloned().collect()
+    }
+
+    /// Sequence number the next step event will carry.
+    pub fn next_event_seq(&self) -> u64 {
+        self.next_seq
     }
 
     /// Run the validation metric on demand (does not advance the loop).
@@ -502,6 +562,7 @@ mod tests {
             backend: None,
             worker_threads: None,
             simd: None,
+            telemetry: None,
         }
     }
 
@@ -578,10 +639,31 @@ mod tests {
         let mut cfg = tiny_cfg("sgd", 4);
         cfg.backend = Some("threads:2".into());
         cfg.simd = Some("scalar".into());
+        cfg.telemetry = Some("off".into());
         let before = crate::backend::global().label();
         let simd_before = crate::simd::active();
+        let tel_before = crate::telemetry::enabled();
         let _s = Session::new(2, "y", 1, &cfg).unwrap();
         assert_eq!(crate::backend::global().label(), before);
         assert_eq!(crate::simd::active(), simd_before);
+        assert_eq!(crate::telemetry::enabled(), tel_before);
+    }
+
+    #[test]
+    fn step_events_accumulate_and_resume_by_seq() {
+        let mut s = Session::new(3, "w", 1, &tiny_cfg("sgd", 12)).unwrap();
+        s.set_status(SessionStatus::Running);
+        s.run_quantum(5);
+        let ev = s.events_since(0);
+        assert_eq!(ev.len(), 5);
+        assert_eq!(ev[0].seq, 0);
+        assert_eq!(ev[0].step, 1);
+        assert_eq!(ev[4].step, 5);
+        assert!(ev.iter().all(|e| e.loss.is_finite() && e.step_ms >= 0.0));
+        // Watchers resume from the last seq they saw.
+        assert_eq!(s.events_since(3).len(), 2);
+        assert_eq!(s.next_event_seq(), 5);
+        // Losses in events match the step stream (last one == state).
+        assert_eq!(ev[4].loss.to_bits(), s.state().last_loss.to_bits());
     }
 }

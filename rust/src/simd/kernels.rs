@@ -216,6 +216,10 @@ unsafe fn row_dots_sse2(crow: &mut [f32], arow: &[f32], bt: &[f32]) {
 #[inline]
 pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
+    if crate::telemetry::enabled() {
+        crate::telemetry::SIMD_DOT8_CALLS.add(1);
+        crate::telemetry::SIMD_DOT8_FLOPS.add(2 * a.len() as u64);
+    }
     match active() {
         #[cfg(target_arch = "x86_64")]
         // SAFETY: active() returns Avx2 only after the runtime probe.
@@ -247,6 +251,10 @@ pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
 #[inline]
 pub fn axpy8(alpha: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
+    if crate::telemetry::enabled() {
+        crate::telemetry::SIMD_AXPY8_CALLS.add(1);
+        crate::telemetry::SIMD_AXPY8_FLOPS.add(2 * x.len() as u64);
+    }
     match active() {
         #[cfg(target_arch = "x86_64")]
         // SAFETY: active() returns Avx2 only after the runtime probe.
@@ -262,6 +270,10 @@ pub fn axpy8(alpha: f32, x: &[f32], y: &mut [f32]) {
 /// `y *= s` over a slice. Elementwise; bit-identical on every path.
 #[inline]
 pub fn scale8(y: &mut [f32], s: f32) {
+    if crate::telemetry::enabled() {
+        crate::telemetry::SIMD_SCALE8_CALLS.add(1);
+        crate::telemetry::SIMD_SCALE8_FLOPS.add(y.len() as u64);
+    }
     match active() {
         #[cfg(target_arch = "x86_64")]
         // SAFETY: active() returns Avx2 only after the runtime probe.
@@ -294,6 +306,10 @@ pub fn scale8(y: &mut [f32], s: f32) {
 /// ```
 #[inline]
 pub fn row_mac8(crow: &mut [f32], a: &[f32], astride: usize, b: &[f32]) {
+    if crate::telemetry::enabled() {
+        crate::telemetry::SIMD_ROW_MAC8_CALLS.add(1);
+        crate::telemetry::SIMD_ROW_MAC8_FLOPS.add(2 * b.len() as u64);
+    }
     match active() {
         #[cfg(target_arch = "x86_64")]
         // SAFETY: active() returns Avx2 only after the runtime probe.
@@ -312,6 +328,10 @@ pub fn row_mac8(crow: &mut [f32], a: &[f32], astride: usize, b: &[f32]) {
 #[inline]
 pub fn row_dots8(crow: &mut [f32], arow: &[f32], bt: &[f32]) {
     debug_assert_eq!(bt.len(), arow.len() * crow.len());
+    if crate::telemetry::enabled() {
+        crate::telemetry::SIMD_ROW_DOTS8_CALLS.add(1);
+        crate::telemetry::SIMD_ROW_DOTS8_FLOPS.add(2 * bt.len() as u64);
+    }
     match active() {
         #[cfg(target_arch = "x86_64")]
         // SAFETY: active() returns Avx2 only after the runtime probe.
@@ -331,6 +351,10 @@ pub fn row_dots8(crow: &mut [f32], arow: &[f32], bt: &[f32]) {
 #[inline]
 pub fn blend8(y: &mut [f32], beta: f32, alpha: f32, x: &[f32]) {
     debug_assert_eq!(x.len(), y.len());
+    if crate::telemetry::enabled() {
+        crate::telemetry::SIMD_BLEND8_CALLS.add(1);
+        crate::telemetry::SIMD_BLEND8_FLOPS.add(3 * x.len() as u64);
+    }
     match active() {
         #[cfg(target_arch = "x86_64")]
         // SAFETY: active() returns Avx2 only after the runtime probe.

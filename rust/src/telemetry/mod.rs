@@ -1,0 +1,661 @@
+//! Process-global telemetry: counters, gauges, histograms, and
+//! per-step tracing spans.
+//!
+//! A std-only, dependency-free observability layer. Three pieces:
+//!
+//! * **Registry** — a fixed catalog of process-global [`Counter`]s,
+//!   [`Gauge`]s and fixed-bucket [`Histogram`]s with hierarchical
+//!   dotted names (`simd.dot8.calls`, `train.step_us`,
+//!   `serve.sched.quantum_us`). Recording is a relaxed atomic add, so
+//!   an instrumented hot path costs ~one atomic add when telemetry is
+//!   enabled and a single branch on a cached flag when disabled.
+//! * **Spans** — [`time_phase`] wraps a code region, records its wall
+//!   time into a histogram *and* into a thread-local per-step phase
+//!   list that [`take_step_phases`] drains; the serve layer attaches
+//!   the drained breakdown to streaming `watch` events.
+//! * **Export** — [`counters`]/[`gauges`]/[`histograms`] enumerate the
+//!   catalog for the `metrics` protocol command and the bench-snapshot
+//!   harness; [`render_text`] is the human-readable dump `eva serve`
+//!   prints at shutdown.
+//!
+//! **Numerics are never touched.** Instrumentation only ever reads
+//! clocks and bumps atomics — the determinism contract
+//! (`docs/KERNELS.md`) is unaffected, and the simd/backend/serve
+//! parity tests pass with telemetry enabled and disabled
+//! (`rust/tests/telemetry.rs`). Counter values themselves are *not*
+//! deterministic (they depend on scheduling, chunk gates and host
+//! ISA) and live explicitly outside that contract.
+//!
+//! **Selection.** Telemetry defaults to **on**; disable with the CLI
+//! flag `--telemetry off`, the config key `"telemetry"`, the
+//! `EVA_TELEMETRY` environment variable, or [`install`] — the same
+//! resolution surfaces as `--simd`. A misspelled `EVA_TELEMETRY`
+//! value is a hard error at first use, never a silent default.
+
+#![warn(missing_docs)]
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// The enabled/disabled knob (threaded like --simd)
+// ---------------------------------------------------------------------------
+
+/// Parsed `--telemetry` / `"telemetry"` selection (config/CLI layer).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TelemetryChoice {
+    /// Record metrics and spans (the default).
+    On,
+    /// Compile the instrumentation down to a branch on a cached flag.
+    Off,
+}
+
+impl TelemetryChoice {
+    /// Parse `on | off`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "on" => Ok(TelemetryChoice::On),
+            "off" => Ok(TelemetryChoice::Off),
+            other => Err(format!("unknown telemetry mode '{other}' (use on | off)")),
+        }
+    }
+
+    /// Canonical config-string (inverse of [`TelemetryChoice::parse`]).
+    pub fn label(&self) -> &'static str {
+        match self {
+            TelemetryChoice::On => "on",
+            TelemetryChoice::Off => "off",
+        }
+    }
+
+    fn is_on(self) -> bool {
+        matches!(self, TelemetryChoice::On)
+    }
+}
+
+/// `u8::MAX` = not yet resolved; first read resolves the boot default.
+const UNSET: u8 = u8::MAX;
+
+static STATE: AtomicU8 = AtomicU8::new(UNSET);
+
+/// Whether telemetry is recording. Resolved lazily on first use: the
+/// `EVA_TELEMETRY` environment variable if set (`on`/`off`, anything
+/// else is a hard panic — never a silent default), otherwise **on**;
+/// [`install`] overrides it at any time. One relaxed atomic load on
+/// the hot path.
+#[inline]
+pub fn enabled() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        1 => true,
+        0 => false,
+        _ => boot_default(),
+    }
+}
+
+#[cold]
+fn boot_default() -> bool {
+    let on = match std::env::var("EVA_TELEMETRY") {
+        Ok(v) => match TelemetryChoice::parse(&v) {
+            Ok(choice) => choice.is_on(),
+            Err(e) => panic!("EVA_TELEMETRY: {e}"),
+        },
+        Err(_) => true,
+    };
+    // First resolution wins, but never clobber a concurrent install().
+    let _ = STATE.compare_exchange(UNSET, on as u8, Ordering::Relaxed, Ordering::Relaxed);
+    STATE.load(Ordering::Relaxed) == 1
+}
+
+/// Make `choice` the process-wide telemetry mode; returns the
+/// resolved enabled flag. Because telemetry never touches numerics,
+/// this is a pure observability control — switching it never changes
+/// a training run (enforced by `rust/tests/telemetry.rs`).
+pub fn install(choice: &TelemetryChoice) -> bool {
+    STATE.store(choice.is_on() as u8, Ordering::Relaxed);
+    choice.is_on()
+}
+
+// ---------------------------------------------------------------------------
+// Metric primitives
+// ---------------------------------------------------------------------------
+
+/// A monotonically increasing process-global counter.
+pub struct Counter {
+    name: &'static str,
+    v: AtomicU64,
+}
+
+impl Counter {
+    /// A new zeroed counter (const — counters are statics).
+    pub const fn new(name: &'static str) -> Self {
+        Counter { name, v: AtomicU64::new(0) }
+    }
+
+    /// Add `n` (one relaxed atomic add; a branch when disabled).
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.v.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    /// The dotted metric name.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn reset(&self) {
+        self.v.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A process-global last-value gauge.
+pub struct Gauge {
+    name: &'static str,
+    v: AtomicU64,
+}
+
+impl Gauge {
+    /// A new zeroed gauge (const — gauges are statics).
+    pub const fn new(name: &'static str) -> Self {
+        Gauge { name, v: AtomicU64::new(0) }
+    }
+
+    /// Set the current value (one relaxed store; a branch when disabled).
+    #[inline]
+    pub fn set(&self, v: u64) {
+        if enabled() {
+            self.v.store(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    /// The dotted metric name.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn reset(&self) {
+        self.v.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Log-linear bucket count: values `< 16` µs get exact buckets, then
+/// 8 sub-buckets per power of two up to `2^32` µs (~71 min); larger
+/// samples clamp into the last bucket. Relative quantization error is
+/// bounded by one sub-bucket width (≤ ~6%).
+const NBUCKETS: usize = 16 + 8 * 28;
+
+/// A fixed-bucket latency histogram over microsecond samples.
+///
+/// Recording is wait-free (three relaxed atomic adds); readers compute
+/// the exact `count`/mean and *approximate* percentiles from the
+/// log-linear bucket grid — approximation error is bounded by the
+/// sub-bucket width, ≤ ~6% of the value.
+pub struct Histogram {
+    name: &'static str,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    buckets: [AtomicU64; NBUCKETS],
+}
+
+fn bucket_index(us: u64) -> usize {
+    if us < 16 {
+        return us as usize;
+    }
+    let m = 63 - us.leading_zeros() as u64; // ≥ 4
+    let sub = (us >> (m - 3)) & 7;
+    let idx = 16 + ((m - 4) * 8 + sub) as usize;
+    idx.min(NBUCKETS - 1)
+}
+
+/// Representative (midpoint) microsecond value of a bucket.
+fn bucket_value_us(idx: usize) -> f64 {
+    if idx < 16 {
+        return idx as f64;
+    }
+    let rel = (idx - 16) as u64;
+    let m = rel / 8 + 4;
+    let sub = rel % 8;
+    let width = 1u64 << (m - 3);
+    ((1u64 << m) + sub * width) as f64 + width as f64 / 2.0
+}
+
+impl Histogram {
+    /// A new empty histogram (const — histograms are statics).
+    pub const fn new(name: &'static str) -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const Z: AtomicU64 = AtomicU64::new(0);
+        Histogram {
+            name,
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            buckets: [Z; NBUCKETS],
+        }
+    }
+
+    /// Record one microsecond sample (three relaxed adds; a branch
+    /// when disabled).
+    #[inline]
+    pub fn record_us(&self, us: u64) {
+        if !enabled() {
+            return;
+        }
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Exact number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact mean in milliseconds (0 when empty).
+    pub fn mean_ms(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64 / 1000.0
+    }
+
+    /// Approximate p-th percentile in milliseconds (p in [0, 100];
+    /// 0 when empty). Bucket-grid resolution: ≤ ~6% relative error.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * n as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return bucket_value_us(i) / 1000.0;
+            }
+        }
+        bucket_value_us(NBUCKETS - 1) / 1000.0
+    }
+
+    /// The dotted metric name.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn reset(&self) {
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_us.store(0, Ordering::Relaxed);
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-step tracing spans
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static STEP_PHASES: RefCell<Vec<(&'static str, u64)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Mark the start of a training step on this thread: clears the
+/// thread-local phase list so [`take_step_phases`] only ever sees the
+/// current step's spans. Called by `train::LoopState::step_once`.
+pub fn begin_step() {
+    STEP_PHASES.with(|p| p.borrow_mut().clear());
+}
+
+/// Time a phase of the current step: runs `f`, records its wall time
+/// into `hist` and into the thread-local phase list under `label`.
+/// When telemetry is disabled this is a single branch around `f` —
+/// no clock reads.
+#[inline]
+pub fn time_phase<R>(label: &'static str, hist: &'static Histogram, f: impl FnOnce() -> R) -> R {
+    if !enabled() {
+        return f();
+    }
+    let t0 = Instant::now();
+    let out = f();
+    let us = t0.elapsed().as_micros() as u64;
+    hist.record_us(us);
+    STEP_PHASES.with(|p| p.borrow_mut().push((label, us)));
+    out
+}
+
+/// Drain this thread's per-step phase spans, merging duplicate labels
+/// (sum) in first-seen order. The serve session loop calls this right
+/// after `step_once` — same thread — to build streaming `watch`
+/// events; draining also bounds the list between steps.
+pub fn take_step_phases() -> Vec<(&'static str, u64)> {
+    let raw = STEP_PHASES.with(|p| std::mem::take(&mut *p.borrow_mut()));
+    let mut merged: Vec<(&'static str, u64)> = Vec::with_capacity(raw.len());
+    for (label, us) in raw {
+        match merged.iter_mut().find(|(l, _)| *l == label) {
+            Some((_, total)) => *total += us,
+            None => merged.push((label, us)),
+        }
+    }
+    merged
+}
+
+// ---------------------------------------------------------------------------
+// Metric catalog
+// ---------------------------------------------------------------------------
+// The full name catalog is documented in docs/ARCHITECTURE.md
+// ("Telemetry"). Counters count kernel dispatches and their FLOP
+// estimates; histograms hold span wall times in microseconds.
+
+/// `simd.dot8` dispatches.
+pub static SIMD_DOT8_CALLS: Counter = Counter::new("simd.dot8.calls");
+/// FLOPs through `simd.dot8` (2n per call).
+pub static SIMD_DOT8_FLOPS: Counter = Counter::new("simd.dot8.flops");
+/// `simd.axpy8` dispatches.
+pub static SIMD_AXPY8_CALLS: Counter = Counter::new("simd.axpy8.calls");
+/// FLOPs through `simd.axpy8` (2n per call).
+pub static SIMD_AXPY8_FLOPS: Counter = Counter::new("simd.axpy8.flops");
+/// `simd.scale8` dispatches.
+pub static SIMD_SCALE8_CALLS: Counter = Counter::new("simd.scale8.calls");
+/// FLOPs through `simd.scale8` (n per call).
+pub static SIMD_SCALE8_FLOPS: Counter = Counter::new("simd.scale8.flops");
+/// `simd.blend8` dispatches.
+pub static SIMD_BLEND8_CALLS: Counter = Counter::new("simd.blend8.calls");
+/// FLOPs through `simd.blend8` (3n per call).
+pub static SIMD_BLEND8_FLOPS: Counter = Counter::new("simd.blend8.flops");
+/// `simd.row_mac8` dispatches (one per matmul output row).
+pub static SIMD_ROW_MAC8_CALLS: Counter = Counter::new("simd.row_mac8.calls");
+/// FLOPs through `simd.row_mac8` (2·k·n per call).
+pub static SIMD_ROW_MAC8_FLOPS: Counter = Counter::new("simd.row_mac8.flops");
+/// `simd.row_dots8` dispatches (one per matmul_a_bt output row).
+pub static SIMD_ROW_DOTS8_CALLS: Counter = Counter::new("simd.row_dots8.calls");
+/// FLOPs through `simd.row_dots8` (2·k·n per call).
+pub static SIMD_ROW_DOTS8_FLOPS: Counter = Counter::new("simd.row_dots8.flops");
+/// `tensor::matmul` products.
+pub static TENSOR_MATMUL_CALLS: Counter = Counter::new("tensor.matmul.calls");
+/// FLOPs through `tensor::matmul` (2mnk per product).
+pub static TENSOR_MATMUL_FLOPS: Counter = Counter::new("tensor.matmul.flops");
+/// `tensor::matmul_at_b` products.
+pub static TENSOR_MATMUL_AT_B_CALLS: Counter = Counter::new("tensor.matmul_at_b.calls");
+/// FLOPs through `tensor::matmul_at_b` (2mnk per product).
+pub static TENSOR_MATMUL_AT_B_FLOPS: Counter = Counter::new("tensor.matmul_at_b.flops");
+/// `tensor::matmul_a_bt` products.
+pub static TENSOR_MATMUL_A_BT_CALLS: Counter = Counter::new("tensor.matmul_a_bt.calls");
+/// FLOPs through `tensor::matmul_a_bt` (2mnk per product).
+pub static TENSOR_MATMUL_A_BT_FLOPS: Counter = Counter::new("tensor.matmul_a_bt.flops");
+/// `Tensor::tmatvec` products.
+pub static TENSOR_TMATVEC_CALLS: Counter = Counter::new("tensor.tmatvec.calls");
+/// FLOPs through `Tensor::tmatvec` (2·rows·cols per product).
+pub static TENSOR_TMATVEC_FLOPS: Counter = Counter::new("tensor.tmatvec.flops");
+/// Optimizer steps completed (any engine, any optimizer).
+pub static TRAIN_STEPS: Counter = Counter::new("train.steps");
+/// Auto + explicit checkpoints written by the serve layer.
+pub static SERVE_CHECKPOINTS: Counter = Counter::new("serve.checkpoints");
+
+/// Admitted (live) serve sessions, sampled each scheduler round.
+pub static SERVE_SESSIONS_ADMITTED: Gauge = Gauge::new("serve.sessions.admitted");
+/// Waiting (queued, unadmitted) serve sessions, sampled each round.
+pub static SERVE_QUEUE_DEPTH: Gauge = Gauge::new("serve.queue.depth");
+
+/// Whole optimizer step (`LoopState::step_once`), data to apply.
+pub static TRAIN_STEP_US: Histogram = Histogram::new("train.step_us");
+/// Batch index + gather phase of a step.
+pub static TRAIN_DATA_US: Histogram = Histogram::new("train.data_us");
+/// Model forward+backward phase of a step.
+pub static TRAIN_FORWARD_BACKWARD_US: Histogram = Histogram::new("train.forward_backward_us");
+/// `Optimizer::step` phase of a step (all optimizer-internal spans
+/// nest inside this one).
+pub static TRAIN_OPTIMIZER_US: Histogram = Histogram::new("train.optimizer_us");
+/// Weight-delta application phase of a step.
+pub static TRAIN_APPLY_US: Histogram = Histogram::new("train.apply_us");
+/// Validation pass on epoch-close steps.
+pub static TRAIN_EVAL_US: Histogram = Histogram::new("train.eval_us");
+/// Eva KV running-average refresh (Eq. 14–15).
+pub static OPTIM_EVA_KV_REFRESH_US: Histogram = Histogram::new("optim.eva.kv_refresh_us");
+/// Eva Sherman–Morrison preconditioning sweep (Eq. 13).
+pub static OPTIM_EVA_PRECONDITION_US: Histogram = Histogram::new("optim.eva.precondition_us");
+/// Eva KL clip + momentum apply (Eq. 16).
+pub static OPTIM_EVA_APPLY_US: Histogram = Histogram::new("optim.eva.apply_us");
+/// K-FAC factor blend + damped inverse refresh (Eq. 4–5).
+pub static OPTIM_KFAC_REFRESH_US: Histogram = Histogram::new("optim.kfac.refresh_us");
+/// K-FAC `Q⁻¹ G R⁻¹` preconditioning products (Eq. 5).
+pub static OPTIM_KFAC_PRECONDITION_US: Histogram = Histogram::new("optim.kfac.precondition_us");
+/// K-FAC KL clip + momentum apply.
+pub static OPTIM_KFAC_APPLY_US: Histogram = Histogram::new("optim.kfac.apply_us");
+/// Shampoo `M₁ += GGᵀ`, `M₂ += GᵀG` statistics accumulation (Eq. 8).
+pub static OPTIM_SHAMPOO_ACCUMULATE_US: Histogram = Histogram::new("optim.shampoo.accumulate_us");
+/// Shampoo inverse-fourth-root refresh (`spd_power` per tile).
+pub static OPTIM_SHAMPOO_REFRESH_US: Histogram = Histogram::new("optim.shampoo.refresh_us");
+/// Shampoo per-tile preconditioning products.
+pub static OPTIM_SHAMPOO_PRECONDITION_US: Histogram =
+    Histogram::new("optim.shampoo.precondition_us");
+/// Shampoo grafting + momentum apply.
+pub static OPTIM_SHAMPOO_APPLY_US: Histogram = Histogram::new("optim.shampoo.apply_us");
+/// Scheduler lane re-carves (`split_weighted` + sub-pool build).
+pub static SERVE_SCHED_CARVE_US: Histogram = Histogram::new("serve.sched.carve_us");
+/// One scheduler round's fan-out: every runnable session's quantum.
+pub static SERVE_SCHED_QUANTUM_US: Histogram = Histogram::new("serve.sched.quantum_us");
+/// One checkpoint capture + atomic write (auto or explicit).
+pub static SERVE_SCHED_CHECKPOINT_IO_US: Histogram =
+    Histogram::new("serve.sched.checkpoint_io_us");
+
+/// Every registered counter, catalog order.
+pub fn counters() -> &'static [&'static Counter] {
+    &[
+        &SIMD_DOT8_CALLS,
+        &SIMD_DOT8_FLOPS,
+        &SIMD_AXPY8_CALLS,
+        &SIMD_AXPY8_FLOPS,
+        &SIMD_SCALE8_CALLS,
+        &SIMD_SCALE8_FLOPS,
+        &SIMD_BLEND8_CALLS,
+        &SIMD_BLEND8_FLOPS,
+        &SIMD_ROW_MAC8_CALLS,
+        &SIMD_ROW_MAC8_FLOPS,
+        &SIMD_ROW_DOTS8_CALLS,
+        &SIMD_ROW_DOTS8_FLOPS,
+        &TENSOR_MATMUL_CALLS,
+        &TENSOR_MATMUL_FLOPS,
+        &TENSOR_MATMUL_AT_B_CALLS,
+        &TENSOR_MATMUL_AT_B_FLOPS,
+        &TENSOR_MATMUL_A_BT_CALLS,
+        &TENSOR_MATMUL_A_BT_FLOPS,
+        &TENSOR_TMATVEC_CALLS,
+        &TENSOR_TMATVEC_FLOPS,
+        &TRAIN_STEPS,
+        &SERVE_CHECKPOINTS,
+    ]
+}
+
+/// Every registered gauge, catalog order.
+pub fn gauges() -> &'static [&'static Gauge] {
+    &[&SERVE_SESSIONS_ADMITTED, &SERVE_QUEUE_DEPTH]
+}
+
+/// Every registered histogram, catalog order.
+pub fn histograms() -> &'static [&'static Histogram] {
+    &[
+        &TRAIN_STEP_US,
+        &TRAIN_DATA_US,
+        &TRAIN_FORWARD_BACKWARD_US,
+        &TRAIN_OPTIMIZER_US,
+        &TRAIN_APPLY_US,
+        &TRAIN_EVAL_US,
+        &OPTIM_EVA_KV_REFRESH_US,
+        &OPTIM_EVA_PRECONDITION_US,
+        &OPTIM_EVA_APPLY_US,
+        &OPTIM_KFAC_REFRESH_US,
+        &OPTIM_KFAC_PRECONDITION_US,
+        &OPTIM_KFAC_APPLY_US,
+        &OPTIM_SHAMPOO_ACCUMULATE_US,
+        &OPTIM_SHAMPOO_REFRESH_US,
+        &OPTIM_SHAMPOO_PRECONDITION_US,
+        &OPTIM_SHAMPOO_APPLY_US,
+        &SERVE_SCHED_CARVE_US,
+        &SERVE_SCHED_QUANTUM_US,
+        &SERVE_SCHED_CHECKPOINT_IO_US,
+    ]
+}
+
+/// Zero every registered metric. For benches and tests that want a
+/// clean window (e.g. per-optimizer phase profiles); the registry is
+/// process-global, so concurrent recorders will keep writing.
+pub fn reset_all() {
+    for c in counters() {
+        c.reset();
+    }
+    for g in gauges() {
+        g.reset();
+    }
+    for h in histograms() {
+        h.reset();
+    }
+}
+
+/// Human-readable registry dump (non-zero metrics only) — what
+/// `eva serve` prints at shutdown.
+pub fn render_text() -> String {
+    let mut out = String::new();
+    out.push_str(&format!("telemetry: {}\n", if enabled() { "on" } else { "off" }));
+    for c in counters() {
+        if c.get() > 0 {
+            out.push_str(&format!("  {:<34} {}\n", c.name(), c.get()));
+        }
+    }
+    for g in gauges() {
+        if g.get() > 0 {
+            out.push_str(&format!("  {:<34} {}\n", g.name(), g.get()));
+        }
+    }
+    for h in histograms() {
+        if h.count() > 0 {
+            out.push_str(&format!(
+                "  {:<34} n={} mean={:.3}ms p50={:.3}ms p95={:.3}ms\n",
+                h.name(),
+                h.count(),
+                h.mean_ms(),
+                h.percentile_ms(50.0),
+                h.percentile_ms(95.0)
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn choice_parses_and_labels() {
+        assert_eq!(TelemetryChoice::parse("on").unwrap(), TelemetryChoice::On);
+        assert_eq!(TelemetryChoice::parse("off").unwrap(), TelemetryChoice::Off);
+        assert_eq!(TelemetryChoice::parse("on").unwrap().label(), "on");
+        assert_eq!(TelemetryChoice::parse("off").unwrap().label(), "off");
+        assert!(TelemetryChoice::parse("maybe").is_err());
+    }
+
+    #[test]
+    fn counter_respects_the_knob() {
+        let _serial = crate::backend::TEST_GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = enabled();
+        static C: Counter = Counter::new("test.knob.counter");
+        install(&TelemetryChoice::On);
+        C.add(3);
+        assert_eq!(C.get(), 3);
+        install(&TelemetryChoice::Off);
+        C.add(5);
+        assert_eq!(C.get(), 3, "disabled counter must not move");
+        install(if prev { &TelemetryChoice::On } else { &TelemetryChoice::Off });
+    }
+
+    #[test]
+    fn bucket_grid_is_monotonic_and_tight() {
+        let mut last = 0usize;
+        for us in [0u64, 1, 7, 15, 16, 17, 100, 1000, 65_536, 1 << 25, u64::MAX] {
+            let idx = bucket_index(us);
+            assert!(idx >= last || us < 16, "bucket index regressed at {us}");
+            last = idx.max(last);
+            if us >= 16 && idx < NBUCKETS - 1 {
+                let rep = bucket_value_us(idx);
+                let rel = (rep - us as f64).abs() / us as f64;
+                assert!(rel < 0.07, "bucket rep {rep} too far from {us}");
+            }
+        }
+        assert_eq!(bucket_index(u64::MAX), NBUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_stats_and_percentile_bounds() {
+        let _serial = crate::backend::TEST_GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = enabled();
+        install(&TelemetryChoice::On);
+        static H: Histogram = Histogram::new("test.hist");
+        H.reset();
+        assert_eq!(H.count(), 0);
+        assert_eq!(H.mean_ms(), 0.0);
+        assert_eq!(H.percentile_ms(50.0), 0.0);
+        // One sample: every percentile is (approximately) that sample.
+        H.record_us(10_000);
+        for p in [0.0, 50.0, 100.0] {
+            assert!((H.percentile_ms(p) - 10.0).abs() < 1.0, "p{p} = {}", H.percentile_ms(p));
+        }
+        // Skewed set: p50 near the low mass, p100 near the max.
+        H.reset();
+        for us in [1000u64, 2000, 3000, 4000, 100_000] {
+            H.record_us(us);
+        }
+        assert_eq!(H.count(), 5);
+        assert!((H.mean_ms() - 22.0).abs() < 0.5);
+        assert!(H.percentile_ms(50.0) <= 4.5);
+        let p100 = H.percentile_ms(100.0);
+        assert!((95.0..110.0).contains(&p100), "p100 = {p100}");
+        H.reset();
+        install(if prev { &TelemetryChoice::On } else { &TelemetryChoice::Off });
+    }
+
+    #[test]
+    fn step_phases_merge_by_label_in_order() {
+        let _serial = crate::backend::TEST_GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = enabled();
+        install(&TelemetryChoice::On);
+        static H: Histogram = Histogram::new("test.phase.hist");
+        begin_step();
+        time_phase("alpha", &H, || std::thread::sleep(std::time::Duration::from_micros(200)));
+        time_phase("beta", &H, || ());
+        time_phase("alpha", &H, || ());
+        let phases = take_step_phases();
+        assert_eq!(phases.len(), 2);
+        assert_eq!(phases[0].0, "alpha");
+        assert_eq!(phases[1].0, "beta");
+        assert!(phases[0].1 >= 200, "alpha span lost its duration: {phases:?}");
+        // Drained: a second take is empty.
+        assert!(take_step_phases().is_empty());
+        H.reset();
+        install(if prev { &TelemetryChoice::On } else { &TelemetryChoice::Off });
+    }
+
+    #[test]
+    fn disabled_time_phase_records_nothing() {
+        let _serial = crate::backend::TEST_GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = enabled();
+        install(&TelemetryChoice::Off);
+        static H: Histogram = Histogram::new("test.disabled.hist");
+        begin_step();
+        let out = time_phase("gone", &H, || 42);
+        assert_eq!(out, 42);
+        assert_eq!(H.count(), 0);
+        assert!(take_step_phases().is_empty());
+        install(if prev { &TelemetryChoice::On } else { &TelemetryChoice::Off });
+    }
+}

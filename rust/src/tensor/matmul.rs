@@ -78,6 +78,10 @@ pub fn matmul_into_with(bk: &dyn Backend, a: &Tensor, b: &Tensor, c: &mut Tensor
     let (kb, n) = b.shape();
     assert_eq!(kk, kb, "matmul inner-dim mismatch");
     assert_eq!(c.shape(), (m, n), "matmul output shape mismatch");
+    if crate::telemetry::enabled() {
+        crate::telemetry::TENSOR_MATMUL_CALLS.add(1);
+        crate::telemetry::TENSOR_MATMUL_FLOPS.add(2 * (m * n * kk) as u64);
+    }
     c.data_mut().fill(0.0);
     let (ad, bd) = (a.data(), b.data());
     let cd = SendPtr(c.data_mut().as_mut_ptr());
@@ -109,6 +113,10 @@ pub fn matmul_at_b_with(bk: &dyn Backend, a: &Tensor, b: &Tensor) -> Tensor {
     let (k, m) = a.shape();
     let (kb, n) = b.shape();
     assert_eq!(k, kb, "matmul_at_b inner-dim mismatch");
+    if crate::telemetry::enabled() {
+        crate::telemetry::TENSOR_MATMUL_AT_B_CALLS.add(1);
+        crate::telemetry::TENSOR_MATMUL_AT_B_FLOPS.add(2 * (m * n * k) as u64);
+    }
     let mut c = Tensor::zeros(m, n);
     if k == 0 {
         return c; // empty inner dim: the product is all zeros
@@ -145,6 +153,10 @@ pub fn matmul_a_bt_with(bk: &dyn Backend, a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = a.shape();
     let (n, kb) = b.shape();
     assert_eq!(k, kb, "matmul_a_bt inner-dim mismatch");
+    if crate::telemetry::enabled() {
+        crate::telemetry::TENSOR_MATMUL_A_BT_CALLS.add(1);
+        crate::telemetry::TENSOR_MATMUL_A_BT_FLOPS.add(2 * (m * n * k) as u64);
+    }
     let mut c = Tensor::zeros(m, n);
     let (ad, bd) = (a.data(), b.data());
     let cd = SendPtr(c.data_mut().as_mut_ptr());

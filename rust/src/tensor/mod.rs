@@ -390,6 +390,10 @@ impl Tensor {
     /// [`tmatvec`](Tensor::tmatvec) with an explicit backend.
     pub fn tmatvec_with(&self, bk: &dyn Backend, x: &[f32]) -> Vec<f32> {
         assert_eq!(x.len(), self.rows);
+        if crate::telemetry::enabled() {
+            crate::telemetry::TENSOR_TMATVEC_CALLS.add(1);
+            crate::telemetry::TENSOR_TMATVEC_FLOPS.add(2 * (self.rows * self.cols) as u64);
+        }
         weighted_col_sum_with(bk, self, Some(x))
     }
 

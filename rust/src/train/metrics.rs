@@ -2,56 +2,149 @@
 
 use std::time::Duration;
 
+/// The first `WARM_CAP` samples are kept verbatim so
+/// [`StepTimer::steady_mean_ms`] can exclude warmup exactly.
+const WARM_CAP: usize = 64;
+
+/// At most this many recent samples back the percentile estimates.
+const RING_CAP: usize = 512;
+
 /// Collects per-step wall times and reports summary statistics.
+///
+/// Memory is **bounded** regardless of how long the run is (a
+/// long-lived serve session records one sample per step forever):
+/// the exact sample `count` and sum (hence an exact [`mean_ms`])
+/// are kept as scalars, the first [`WARM_CAP`] samples are retained
+/// verbatim for warmup-exclusion, and percentiles come from a ring
+/// of the most recent [`RING_CAP`] samples — so
+/// [`percentile_ms`](StepTimer::percentile_ms) reflects *current*
+/// step latency, is O([`RING_CAP`] log [`RING_CAP`]) to compute, and
+/// is exact whenever the timer holds at most [`RING_CAP`] samples.
+///
+/// [`mean_ms`]: StepTimer::mean_ms
 #[derive(Clone, Debug, Default)]
 pub struct StepTimer {
-    samples_us: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    /// First `WARM_CAP` samples ever recorded (exact warmup record).
+    warm: Vec<u64>,
+    /// Most recent `RING_CAP` samples; wraps at `pos` once full.
+    ring: Vec<u64>,
+    pos: usize,
 }
 
 impl StepTimer {
     pub fn new() -> Self {
-        StepTimer { samples_us: Vec::new() }
+        StepTimer::default()
     }
 
     pub fn record(&mut self, d: Duration) {
-        self.samples_us.push(d.as_micros() as u64);
+        self.record_us(d.as_micros() as u64);
     }
 
+    fn record_us(&mut self, us: u64) {
+        self.count += 1;
+        self.sum_us += us;
+        if self.warm.len() < WARM_CAP {
+            self.warm.push(us);
+        }
+        if self.ring.len() < RING_CAP {
+            self.ring.push(us);
+        } else {
+            self.ring[self.pos] = us;
+            self.pos = (self.pos + 1) % RING_CAP;
+        }
+    }
+
+    /// Exact number of samples ever recorded.
     pub fn count(&self) -> usize {
-        self.samples_us.len()
+        self.count as usize
     }
 
+    /// Number of samples currently retained for percentile estimates
+    /// (bounded by the ring capacity).
+    pub fn retained(&self) -> usize {
+        self.ring.len()
+    }
+
+    /// The ring capacity: percentiles are exact up to this many
+    /// samples, then reflect the most recent window of this size.
+    pub const fn sample_capacity() -> usize {
+        RING_CAP
+    }
+
+    /// Exact mean over *all* recorded samples, in milliseconds.
     pub fn mean_ms(&self) -> f64 {
-        if self.samples_us.is_empty() {
+        if self.count == 0 {
             return 0.0;
         }
-        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64 / 1000.0
+        self.sum_us as f64 / self.count as f64 / 1000.0
     }
 
-    /// p-th percentile in milliseconds (p in [0, 100]).
+    /// p-th percentile in milliseconds (p in [0, 100]) over the
+    /// retained recent-sample window — exact while at most
+    /// [`StepTimer::sample_capacity`] samples were recorded,
+    /// an approximation of recent latency afterwards.
     pub fn percentile_ms(&self, p: f64) -> f64 {
-        if self.samples_us.is_empty() {
+        if self.ring.is_empty() {
             return 0.0;
         }
-        let mut s = self.samples_us.clone();
+        let mut s = self.ring.clone();
         s.sort_unstable();
         let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
         s[idx.min(s.len() - 1)] as f64 / 1000.0
     }
 
-    /// Fold another timer's samples into this one (the serve stats
-    /// endpoint aggregates per-session timers this way).
+    /// Fold another timer into this one (the serve stats endpoint
+    /// aggregates per-session timers this way). Count and mean stay
+    /// exact; the percentile windows combine by an even-stride
+    /// subsample when the merged window overflows the ring, so both
+    /// sides stay represented.
     pub fn merge(&mut self, other: &StepTimer) {
-        self.samples_us.extend_from_slice(&other.samples_us);
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        for &us in &other.warm {
+            if self.warm.len() >= WARM_CAP {
+                break;
+            }
+            self.warm.push(us);
+        }
+        if other.ring.is_empty() {
+            return;
+        }
+        let mut combined = self.window();
+        combined.extend(other.window());
+        if combined.len() > RING_CAP {
+            combined = (0..RING_CAP)
+                .map(|i| combined[i * combined.len() / RING_CAP])
+                .collect();
+        }
+        self.ring = combined;
+        self.pos = 0;
+    }
+
+    /// The retained samples in chronological order.
+    fn window(&self) -> Vec<u64> {
+        if self.ring.len() < RING_CAP {
+            self.ring.clone()
+        } else {
+            let mut w = Vec::with_capacity(RING_CAP);
+            w.extend_from_slice(&self.ring[self.pos..]);
+            w.extend_from_slice(&self.ring[..self.pos]);
+            w
+        }
     }
 
     /// Mean excluding the first `k` warmup samples (JIT/caches).
+    /// Exact for `k` up to the retained warmup record (the first 64
+    /// samples); larger `k` clamps to that record.
     pub fn steady_mean_ms(&self, k: usize) -> f64 {
-        if self.samples_us.len() <= k {
+        if self.count as usize <= k {
             return self.mean_ms();
         }
-        let s = &self.samples_us[k..];
-        s.iter().sum::<u64>() as f64 / s.len() as f64 / 1000.0
+        let k = k.min(self.warm.len());
+        let warm_sum: u64 = self.warm[..k].iter().sum();
+        (self.sum_us - warm_sum) as f64 / (self.count - k as u64) as f64 / 1000.0
     }
 }
 
@@ -107,6 +200,82 @@ mod tests {
         assert!(t.percentile_ms(50.0) <= 4.0);
         // Excluding the 1ms warmup sample.
         assert!(t.steady_mean_ms(1) > t.percentile_ms(50.0));
+    }
+
+    #[test]
+    fn timer_empty_and_single_sample() {
+        let t = StepTimer::new();
+        assert_eq!(t.count(), 0);
+        assert_eq!(t.mean_ms(), 0.0);
+        assert_eq!(t.percentile_ms(50.0), 0.0);
+        assert_eq!(t.steady_mean_ms(3), 0.0);
+        let mut t = StepTimer::new();
+        t.record(Duration::from_millis(7));
+        assert_eq!(t.count(), 1);
+        assert!((t.mean_ms() - 7.0).abs() < 1e-9);
+        for p in [0.0, 50.0, 100.0] {
+            assert!((t.percentile_ms(p) - 7.0).abs() < 1e-9, "p{p}");
+        }
+        // k >= count falls back to the overall mean.
+        assert!((t.steady_mean_ms(1) - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timer_percentiles_stay_within_min_max() {
+        let mut t = StepTimer::new();
+        for ms in [5u64, 1, 9, 3, 7] {
+            t.record(Duration::from_millis(ms));
+        }
+        assert!((t.percentile_ms(0.0) - 1.0).abs() < 1e-9);
+        assert!((t.percentile_ms(100.0) - 9.0).abs() < 1e-9);
+        for p in [10.0, 25.0, 50.0, 75.0, 90.0] {
+            let v = t.percentile_ms(p);
+            assert!((1.0..=9.0).contains(&v), "p{p} = {v}");
+        }
+    }
+
+    #[test]
+    fn timer_memory_is_bounded_and_stats_stay_exact() {
+        let mut t = StepTimer::new();
+        let n = 10_000u64;
+        for i in 0..n {
+            t.record(Duration::from_micros(i));
+        }
+        assert_eq!(t.count(), n as usize);
+        assert!(t.retained() <= StepTimer::sample_capacity());
+        // Exact mean over all n samples: (n-1)/2 µs.
+        let want = (n - 1) as f64 / 2.0 / 1000.0;
+        assert!((t.mean_ms() - want).abs() < 1e-9);
+        // Percentiles reflect the most recent window.
+        let p50 = t.percentile_ms(50.0);
+        let lo = (n as f64 - StepTimer::sample_capacity() as f64) / 1000.0;
+        let hi = n as f64 / 1000.0;
+        assert!((lo..=hi).contains(&p50), "recent-window p50 = {p50}");
+    }
+
+    #[test]
+    fn timer_merge_keeps_count_mean_and_both_windows() {
+        let mut a = StepTimer::new();
+        let mut b = StepTimer::new();
+        for _ in 0..600 {
+            a.record(Duration::from_millis(1));
+        }
+        for _ in 0..600 {
+            b.record(Duration::from_millis(9));
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 1200);
+        assert!((a.mean_ms() - 5.0).abs() < 1e-9);
+        // Both sides survive the bounded merge: the extremes are both
+        // present in the combined window.
+        assert!((a.percentile_ms(0.0) - 1.0).abs() < 1e-9);
+        assert!((a.percentile_ms(100.0) - 9.0).abs() < 1e-9);
+        assert!(a.retained() <= StepTimer::sample_capacity());
+        // Merging an empty timer is a no-op on the stats.
+        let before = a.percentile_ms(50.0);
+        a.merge(&StepTimer::new());
+        assert_eq!(a.count(), 1200);
+        assert_eq!(a.percentile_ms(50.0), before);
     }
 
     #[test]

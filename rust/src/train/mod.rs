@@ -91,6 +91,14 @@ impl Trainer {
             let choice = crate::simd::SimdChoice::parse(spec).map_err(|e| anyhow!(e))?;
             crate::simd::install(&choice).map_err(|e| anyhow!(e))?;
         }
+        if let Some(spec) = &cfg.telemetry {
+            // Also process-wide. Instrumentation never touches numerics
+            // (see crate::telemetry), so flipping it cannot change a
+            // run's bits — only whether counters/histograms move.
+            let choice =
+                crate::telemetry::TelemetryChoice::parse(spec).map_err(|e| anyhow!(e))?;
+            crate::telemetry::install(&choice);
+        }
         let dataset = by_name(&cfg.dataset, cfg.seed).map_err(|e| anyhow!(e))?;
         let engine = match &cfg.engine {
             Engine::Native => {
@@ -187,11 +195,15 @@ impl Trainer {
 
     /// One optimizer step over the given sample indices.
     fn train_step(&mut self, idx: &[usize], lr: f32, step: u64) -> Result<f32> {
-        let (x, labels) = self.dataset.train.gather(idx);
+        use crate::telemetry as tm;
+        let (x, labels) =
+            tm::time_phase("data", &tm::TRAIN_DATA_US, || self.dataset.train.gather(idx));
         match &mut self.engine {
             EngineState::Native { model, optimizer } => {
                 let mode = optimizer.stats_mode_at(step);
-                let res = model.forward_backward(&x, &labels, mode);
+                let res = tm::time_phase("forward_backward", &tm::TRAIN_FORWARD_BACKWARD_US, || {
+                    model.forward_backward(&x, &labels, mode)
+                });
                 let ctx = StepCtx {
                     params: &model.weights,
                     grads: &res.grads,
@@ -200,8 +212,11 @@ impl Trainer {
                     lr,
                     step,
                 };
-                let update = optimizer.step(&ctx);
-                model.apply_update(&update.deltas, &update.bias_deltas);
+                let update =
+                    tm::time_phase("optimizer", &tm::TRAIN_OPTIMIZER_US, || optimizer.step(&ctx));
+                tm::time_phase("apply", &tm::TRAIN_APPLY_US, || {
+                    model.apply_update(&update.deltas, &update.bias_deltas)
+                });
                 Ok(res.loss)
             }
             EngineState::Pjrt { driver } => {
@@ -360,6 +375,7 @@ impl LoopState {
         if self.done {
             return Err(anyhow!("training loop already finished"));
         }
+        crate::telemetry::begin_step();
         let wall0 = std::time::Instant::now();
         let lr = trainer.cfg.lr_schedule.lr_at(
             trainer.cfg.base_lr,
@@ -383,7 +399,11 @@ impl LoopState {
             done: false,
         };
         if self.nsteps_in_epoch >= self.per_epoch || self.step >= self.total_steps {
-            let val_metric = trainer.evaluate()?;
+            let val_metric = crate::telemetry::time_phase(
+                "eval",
+                &crate::telemetry::TRAIN_EVAL_US,
+                || trainer.evaluate(),
+            )?;
             match trainer.dataset.task {
                 Task::Classification => self.best_acc = self.best_acc.max(val_metric),
                 Task::Autoencoding => self.best_loss = self.best_loss.min(val_metric),
@@ -410,7 +430,12 @@ impl LoopState {
         } else {
             self.epoch_wall_s += wall0.elapsed().as_secs_f64();
         }
-        self.total_wall_s += wall0.elapsed().as_secs_f64();
+        let wall = wall0.elapsed();
+        self.total_wall_s += wall.as_secs_f64();
+        if crate::telemetry::enabled() {
+            crate::telemetry::TRAIN_STEPS.add(1);
+            crate::telemetry::TRAIN_STEP_US.record_us(wall.as_micros() as u64);
+        }
         Ok(outcome)
     }
 
@@ -562,6 +587,7 @@ mod tests {
             backend: None,
             worker_threads: None,
             simd: None,
+            telemetry: None,
         }
     }
 

@@ -81,6 +81,7 @@ fn pjrt_trainer_end_to_end() {
         backend: None,
         worker_threads: None,
         simd: None,
+        telemetry: None,
     };
     let mut t = Trainer::from_config(&cfg).unwrap();
     let r = t.run().unwrap();
@@ -110,6 +111,7 @@ fn native_and_pjrt_agree_on_learnability() {
         backend: None,
         worker_threads: None,
         simd: None,
+        telemetry: None,
     };
     let mut native = Trainer::from_config(&mk(Engine::Native)).unwrap();
     let rn = native.run().unwrap();

@@ -206,6 +206,7 @@ fn train_digest(optimizer: &str) -> u64 {
         backend: None,
         worker_threads: None,
         simd: None,
+        telemetry: None,
     };
     let mut t = Trainer::from_config(&cfg).unwrap();
     t.run().unwrap();

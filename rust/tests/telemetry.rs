@@ -1,0 +1,213 @@
+//! Telemetry integration: the streaming `watch` protocol over real
+//! TCP, the `metrics` command, and the load-bearing guarantee that
+//! instrumentation never touches numerics — training digests are
+//! bit-identical with telemetry on and off.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use eva::config::{ModelArch, OptimConfig, TrainConfig};
+use eva::jsonx::Json;
+use eva::optim::HyperParams;
+use eva::serve::{ServeClient, Server, ServeConfig, Service, TcpClient};
+use eva::telemetry::{self, TelemetryChoice};
+use eva::train::Trainer;
+
+/// The telemetry switch is process-wide; tests in this binary that
+/// flip it (or depend on its value) serialize here.
+static GLOBAL_KNOBS: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    GLOBAL_KNOBS.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tiny(steps: u64) -> TrainConfig {
+    TrainConfig {
+        name: "telem".into(),
+        dataset: "c10-small".into(),
+        arch: ModelArch::Classifier { hidden: vec![8] },
+        max_steps: Some(steps),
+        epochs: 10_000, // max_steps is always the binding budget
+        batch_size: 32,
+        ..TrainConfig::default()
+    }
+}
+
+fn test_cfg(tag: &str) -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_sessions: 4,
+        quantum_steps: 2,
+        checkpoint_on_shutdown: false,
+        checkpoint_dir: std::env::temp_dir()
+            .join(format!("eva-telemetry-{tag}"))
+            .to_string_lossy()
+            .into_owned(),
+        ..ServeConfig::default()
+    }
+}
+
+#[test]
+fn watch_streams_steps_over_tcp_until_done() {
+    let _serial = lock();
+    telemetry::install(&TelemetryChoice::On);
+    let svc = Service::start(test_cfg("watch"));
+    let server = Server::start(svc.clone(), "127.0.0.1:0").unwrap();
+    let mut client = TcpClient::connect(server.addr()).unwrap();
+
+    let id = client.submit(&tiny(12), "w", 1).unwrap();
+    let mut events: Vec<Json> = Vec::new();
+    let end = client.watch(id, &mut |ev| events.push(ev.clone())).unwrap();
+    assert_eq!(end.get_str("event"), Some("end"));
+    assert_eq!(end.get_str("status"), Some("done"), "{end:?}");
+
+    // The ring (cap 256) held every event of a 12-step run, whether
+    // the watch attached before or after the steps ran.
+    assert_eq!(events.len(), 12, "one event per optimizer step");
+    let seqs: Vec<f64> = events.iter().map(|e| e.get_f64("seq").unwrap()).collect();
+    assert!(seqs.windows(2).all(|w| w[1] > w[0]), "seq must strictly increase: {seqs:?}");
+    assert_eq!(events.last().unwrap().get_f64("step"), Some(12.0));
+    for ev in &events {
+        assert_eq!(ev.get_str("event"), Some("step"));
+        assert!(ev.get_f64("loss").unwrap().is_finite());
+        assert!(ev.get_f64("step_ms").unwrap() >= 0.0);
+        // Telemetry is on: the native step phases must be present.
+        let phases = ev.get("phases").and_then(|p| p.as_obj()).unwrap();
+        assert!(phases.contains_key("forward_backward"), "{phases:?}");
+    }
+
+    // The connection survives a completed stream: ordinary commands
+    // keep working on it.
+    let stats = client.stats().unwrap();
+    assert!(stats.get_f64("scheduler_steps").unwrap() >= 12.0);
+
+    // The metrics command dumps the live registry over the same wire.
+    let metrics = client.metrics().unwrap();
+    assert_eq!(metrics.get_str("telemetry"), Some("on"));
+    let counters = metrics.get("counters").and_then(|c| c.as_obj()).unwrap();
+    assert!(counters.get("train.steps").and_then(|v| v.as_f64()).unwrap() >= 12.0);
+
+    // Watching a bogus id is an ordinary error, not a broken stream.
+    let err = client.watch(9999, &mut |_| {}).unwrap_err();
+    assert!(err.contains("9999"), "{err}");
+
+    svc.shutdown();
+    server.join();
+    let _ = std::fs::remove_dir_all(std::env::temp_dir().join("eva-telemetry-watch"));
+}
+
+#[test]
+fn watch_ends_when_session_cancelled_midstream() {
+    let _serial = lock();
+    let svc = Service::start(test_cfg("cancel"));
+    let server = Server::start(svc.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+    let mut ctl = TcpClient::connect(addr).unwrap();
+    let id = ctl.submit(&tiny(1_000_000), "long", 1).unwrap();
+
+    let watcher = std::thread::spawn(move || {
+        let mut client = TcpClient::connect(addr).unwrap();
+        let mut n = 0usize;
+        let end = client.watch(id, &mut |_| n += 1).unwrap();
+        (n, end)
+    });
+    // Wait until real steps exist (they are in the ring, so the
+    // watcher sees them even if it attached late), then terminate the
+    // session under the live stream.
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    while ctl.status(id).unwrap().get_f64("step").unwrap() < 4.0 {
+        assert!(std::time::Instant::now() < deadline, "session never stepped");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    ctl.cancel(id).unwrap();
+    let (n, end) = watcher.join().unwrap();
+    assert_eq!(end.get_str("status"), Some("cancelled"), "{end:?}");
+    assert!(n > 0, "watcher saw no events before the cancel");
+
+    svc.shutdown();
+    server.join();
+    let _ = std::fs::remove_dir_all(std::env::temp_dir().join("eva-telemetry-cancel"));
+}
+
+#[test]
+fn unread_watcher_never_stalls_the_scheduler() {
+    let _serial = lock();
+    let svc = Service::start(test_cfg("slow"));
+    let server = Server::start(svc.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+    let mut ctl = TcpClient::connect(addr).unwrap();
+    let long = ctl.submit(&tiny(1_000_000), "long", 1).unwrap();
+
+    // A watcher that sends the request and then never reads a byte:
+    // its stream backs up in kernel buffers and the session's event
+    // ring drops oldest — neither may block stepping.
+    let mut dead = TcpStream::connect(addr).unwrap();
+    let req = format!("{}\n", Json::obj(vec![
+        ("cmd", Json::Str("watch".into())),
+        ("session", Json::Num(long as f64)),
+    ]).dump());
+    dead.write_all(req.as_bytes()).unwrap();
+    dead.flush().unwrap();
+
+    // Other work proceeds at full speed while the dead watcher hangs.
+    let quick = ctl.submit(&tiny(20), "quick", 1).unwrap();
+    ctl.wait_done(quick, Duration::from_secs(120)).unwrap();
+    // And the watched session itself keeps stepping.
+    let before = ctl.status(long).unwrap().get_f64("step").unwrap();
+    std::thread::sleep(Duration::from_millis(200));
+    let after = ctl.status(long).unwrap().get_f64("step").unwrap();
+    assert!(after > before, "watched session stalled at step {after}");
+
+    ctl.cancel(long).unwrap();
+    drop(dead);
+    svc.shutdown();
+    server.join();
+    let _ = std::fs::remove_dir_all(std::env::temp_dir().join("eva-telemetry-slow"));
+}
+
+/// A short native training run; returns the FNV digest of the exact
+/// final weight/bias bits (same recipe as `tests/simd_parity.rs`).
+fn train_digest(optimizer: &str) -> u64 {
+    let mut hp = HyperParams::default();
+    hp.update_interval = 2;
+    hp.shampoo_block = 32;
+    let cfg = TrainConfig {
+        name: format!("telemetry-parity-{optimizer}"),
+        dataset: "c10-small".into(),
+        seed: 7,
+        arch: ModelArch::Classifier { hidden: vec![16] },
+        optim: OptimConfig { algorithm: optimizer.into(), hp },
+        epochs: 1,
+        batch_size: 32,
+        base_lr: 0.05,
+        lr_schedule: eva::config::LrSchedule::Cosine,
+        max_steps: Some(4),
+        eval_every: 1,
+        ..TrainConfig::default()
+    };
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    t.run().unwrap();
+    eva::serve::model_digest(t.model().expect("native engine"))
+}
+
+/// The determinism contract extends to observability: spans and
+/// counters only ever *read the clock and bump atomics* — flipping
+/// telemetry must not move a single weight bit for any optimizer
+/// family.
+#[test]
+fn training_digests_identical_with_telemetry_on_and_off() {
+    let _serial = lock();
+    for optimizer in ["eva", "kfac", "shampoo"] {
+        telemetry::install(&TelemetryChoice::On);
+        let on = train_digest(optimizer);
+        telemetry::install(&TelemetryChoice::Off);
+        let off = train_digest(optimizer);
+        telemetry::install(&TelemetryChoice::On);
+        assert_eq!(
+            on, off,
+            "{optimizer}: weights diverge between telemetry on and off"
+        );
+    }
+}
