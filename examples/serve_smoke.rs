@@ -20,13 +20,27 @@
 //! ```text
 //! cargo run --release --example serve_smoke
 //! ```
+//!
+//! With `--cluster`, the smoke instead drives the *router* control
+//! plane: two real serve processes behind a rendezvous-hashing router,
+//! a session submitted through the front door, a rolling-restart style
+//! `drain` that live-migrates it (checkpoint on the source, lineage
+//! resume on the target) while paused, and a run to the step target on
+//! its new host with a weights digest bit-identical to an
+//! uninterrupted single-host run. CI runs this as the cluster smoke
+//! job.
+//!
+//! ```text
+//! cargo run --release --example serve_smoke -- --cluster
+//! ```
 
 use std::time::Duration;
 
 use eva::backend::{self, BackendChoice};
+use eva::cluster::{ClusterConfig, HostSpec, Router, RouterServer};
 use eva::config::{ModelArch, TrainConfig};
 use eva::serve::client::{LocalClient, ServeClient, TcpClient};
-use eva::serve::{signal, ServeConfig, Server, Service};
+use eva::serve::{signal, ServeConfig, Server, Service, Session};
 
 const TARGET: u64 = 40;
 
@@ -51,7 +65,145 @@ fn tenant(seed: u64, steps: u64) -> TrainConfig {
 /// deterministic regardless of how fast the runner is.
 const PINNED: u64 = 1_000_000;
 
+/// `--cluster`: the multi-host story. Two serve processes, one router
+/// in front, one session live-migrated between them mid-run.
+fn cluster_smoke() {
+    backend::install(&BackendChoice::Threaded(4));
+
+    // Two backend hosts with their own checkpoint directories (the
+    // router reads the source host's directory during rescue, so in
+    // production these sit on a shared filesystem).
+    let mut dirs = Vec::new();
+    let mut hosts = Vec::new();
+    for tag in ["a", "b"] {
+        let dir = std::env::temp_dir().join(format!("eva-cluster-smoke-{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let dir_s = dir.to_string_lossy().into_owned();
+        let svc = Service::start(ServeConfig {
+            checkpoint_dir: dir_s.clone(),
+            checkpoint_every_steps: 8,
+            checkpoint_on_shutdown: false,
+            quantum_steps: 4,
+            ..ServeConfig::default()
+        });
+        let server = Server::start(svc.clone(), "127.0.0.1:0").expect("bind host");
+        println!("serve_smoke[cluster]: host {tag} on {}", server.addr());
+        dirs.push(dir_s);
+        hosts.push((svc, server));
+    }
+
+    let router = Router::start(ClusterConfig {
+        hosts: hosts
+            .iter()
+            .zip(&dirs)
+            .map(|((_, srv), dir)| HostSpec {
+                addr: srv.addr().to_string(),
+                checkpoint_dir: dir.clone(),
+            })
+            .collect(),
+        probe_interval_ms: 200,
+        probe_timeout_ms: 500,
+        probe_fails_down: 3,
+        request_timeout_ms: 10_000,
+        auto_migrate: true,
+        ..ClusterConfig::default()
+    });
+    let front = RouterServer::start(router.clone(), "127.0.0.1:0").expect("bind router");
+    println!("serve_smoke[cluster]: router front door on {}", front.addr());
+
+    // Submit THROUGH the router; note which host it picked.
+    let mut tcp = TcpClient::connect(front.addr()).expect("connect router");
+    let cfg = tenant(7, TARGET);
+    let (id, _) = tcp.submit_as(&cfg, "migrant", 1, None).expect("submit via router");
+    let src = router.placement(id).expect("placement").host;
+    let src_addr = router.host_addr(src).expect("source addr");
+    println!("serve_smoke[cluster]: session {id} placed on host {src_addr}");
+
+    // Let it train a little, then pause — the pause must survive the
+    // move along with the weights, optimizer state and step cursor.
+    let deadline = std::time::Instant::now() + Duration::from_secs(120);
+    loop {
+        let st = tcp.status(id).expect("status");
+        if st.get_f64("step").unwrap_or(0.0) >= 8.0 {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "session made no progress");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    tcp.pause(id).expect("pause");
+
+    // Rolling-restart shape: drain the source host. The router
+    // checkpoints the session there and lineage-resumes it on the
+    // peer; the cluster id never changes.
+    let resp = tcp.drain(&src_addr).expect("drain");
+    assert_eq!(resp.get_f64("migrated"), Some(1.0), "{resp:?}");
+    assert_eq!(resp.get_f64("failed"), Some(0.0), "{resp:?}");
+    let p = router.placement(id).expect("placement after drain");
+    assert_ne!(p.host, src, "session must have moved off the drained host");
+    let dst_addr = router.host_addr(p.host).expect("target addr");
+    let st = tcp.status(id).expect("status after migration");
+    assert_eq!(st.get_str("status"), Some("paused"), "pause survives migration: {st:?}");
+    assert_eq!(st.get_str("host"), Some(dst_addr.as_str()), "{st:?}");
+    println!(
+        "serve_smoke[cluster]: drained {src_addr} \u{2192} session {id} now paused on {dst_addr}"
+    );
+
+    // Resume through the same front door and run to the step target.
+    tcp.undrain(&src_addr).expect("undrain");
+    tcp.resume(id).expect("resume");
+    let fin = tcp.wait_done(id, Duration::from_secs(600)).expect("wait done");
+    assert_eq!(fin.get_f64("step"), Some(TARGET as f64), "{fin:?}");
+    println!("serve_smoke[cluster]: session {id} reached step {TARGET} on {dst_addr}");
+
+    // Bit-identity: the migrated run's final weights equal an
+    // uninterrupted in-process run of the same config.
+    let mut solo = Session::new(0, "solo", 1, &cfg).expect("solo session");
+    while !solo.is_done() {
+        solo.run_quantum(16);
+    }
+    let remote = router.placement(id).expect("placement").remote_id;
+    let got = hosts[p.host].0.model_digest(remote).expect("digest");
+    assert_eq!(got, solo.digest(), "migrated weights diverged from the uninterrupted run");
+    println!("serve_smoke[cluster]: weights digest {got:#018x} — bit-identical across the move");
+
+    // Cluster-level stats aggregate across hosts and re-key sessions
+    // to router ids.
+    let stats = tcp.stats().expect("cluster stats");
+    assert_eq!(stats.get_f64("hosts_reachable"), Some(2.0), "{stats:?}");
+    let sessions = stats.get("sessions").and_then(|s| s.as_arr()).cloned().unwrap_or_default();
+    assert!(
+        sessions
+            .iter()
+            .any(|s| s.get_f64("id") == Some(id as f64) && s.get_str("status") == Some("done")),
+        "cluster stats must show the migrated session done: {stats:?}"
+    );
+    let hosts_list = tcp.hosts().expect("hosts");
+    assert_eq!(hosts_list.len(), 2);
+    assert!(hosts_list.iter().all(|h| h.get_str("health") == Some("up")), "{hosts_list:?}");
+    println!(
+        "serve_smoke[cluster]: stats — {} hosts up, {} migrations, {} scheduler steps",
+        stats.get_f64("hosts_reachable").unwrap_or(0.0),
+        router.migrations(),
+        stats.get_f64("scheduler_steps").unwrap_or(0.0),
+    );
+
+    router.shutdown();
+    front.join();
+    for (svc, server) in hosts {
+        svc.shutdown();
+        server.join();
+    }
+    for dir in &dirs {
+        let _ = std::fs::remove_dir_all(dir);
+    }
+    println!("serve_smoke[cluster]: OK");
+}
+
 fn main() {
+    if std::env::args().any(|a| a == "--cluster") {
+        cluster_smoke();
+        return;
+    }
     // A small threaded pool so the scheduler actually carves lanes.
     backend::install(&BackendChoice::Threaded(4));
     signal::install_term_handler();

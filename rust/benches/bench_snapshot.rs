@@ -6,6 +6,9 @@
 //!   axpy8, and the 256³ matmul tile on one lane);
 //! * **serve** — aggregate optimizer steps/s at 1, 2 and 4 concurrent
 //!   Eva tenants on a fixed 4-lane pool;
+//! * **cluster** — aggregate steps/s through the router front door at
+//!   1 and 2 backend hosts (two sessions per host), measuring what
+//!   the proxy layer costs end to end;
 //! * **phases** — the per-phase step breakdown per optimizer family
 //!   (eva / kfac / shampoo), read from the telemetry registry after a
 //!   short instrumented run — mean milliseconds per span.
@@ -25,11 +28,13 @@ use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use eva::backend::{self, BackendChoice, Sequential};
+use eva::cluster::{ClusterConfig, HostSpec, Router, RouterServer};
 use eva::config::{ModelArch, OptimConfig, TrainConfig};
 use eva::jsonx::Json;
 use eva::optim::HyperParams;
 use eva::rng::Pcg64;
-use eva::serve::{ServeConfig, Service};
+use eva::serve::client::{ServeClient, TcpClient};
+use eva::serve::{ServeConfig, Server, Service};
 use eva::simd::{self, SimdChoice};
 use eva::telemetry::{self, TelemetryChoice};
 use eva::tensor::{matmul_with, Tensor};
@@ -146,6 +151,56 @@ fn serve_steps_per_s(n: usize) -> f64 {
     total as f64 / elapsed
 }
 
+/// Aggregate steps/s through the router front door with `n_hosts`
+/// backends and two equal-priority sessions per host — the end-to-end
+/// cost of the proxy layer, not just the schedulers behind it.
+fn router_steps_per_s(n_hosts: usize) -> f64 {
+    let mut hosts = Vec::new();
+    for _ in 0..n_hosts {
+        let svc = Service::start(ServeConfig {
+            max_sessions: 2 * n_hosts, // placement may be uneven
+            quantum_steps: 4,
+            checkpoint_on_shutdown: false,
+            ..ServeConfig::default()
+        });
+        let server = Server::start(svc.clone(), "127.0.0.1:0").expect("bind host");
+        hosts.push((svc, server));
+    }
+    let router = Router::start(ClusterConfig {
+        hosts: hosts
+            .iter()
+            .map(|(_, srv)| HostSpec {
+                addr: srv.addr().to_string(),
+                checkpoint_dir: String::new(),
+            })
+            .collect(),
+        probe_interval_ms: 0, // measure routing, not probing
+        ..ClusterConfig::default()
+    });
+    let front = RouterServer::start(router.clone(), "127.0.0.1:0").expect("bind router");
+    let mut client = TcpClient::connect(front.addr()).expect("connect router");
+    let ids: Vec<u64> = (0..2 * n_hosts)
+        .map(|i| {
+            let name = format!("r{i}");
+            client.submit_as(&tenant(100 + i as u64), &name, 1, None).expect("submit").0
+        })
+        .collect();
+    let t0 = Instant::now();
+    std::thread::sleep(Duration::from_millis(1000));
+    let total: f64 = ids
+        .iter()
+        .map(|&id| client.status(id).expect("status").get_f64("step").unwrap_or(0.0))
+        .sum();
+    let elapsed = t0.elapsed().as_secs_f64();
+    router.shutdown();
+    front.join();
+    for (svc, server) in hosts {
+        svc.shutdown();
+        server.join();
+    }
+    total / elapsed
+}
+
 /// Short instrumented run of one optimizer family; returns every
 /// non-empty histogram as `name → {count, mean_ms}`.
 fn phase_section(optimizer: &str) -> Json {
@@ -222,6 +277,15 @@ fn main() {
         serve.insert(format!("steps_per_s/{n}"), Json::Num(sps));
     }
 
+    println!("\n-- router throughput (2 sessions per host, via front door) --");
+    let mut cluster = BTreeMap::new();
+    for n in [1usize, 2] {
+        let sps = router_steps_per_s(n);
+        println!("{n} hosts: {sps:.1} steps/s");
+        assert!(sps > 0.0, "no steps flowed through the router at {n} hosts");
+        cluster.insert(format!("steps_per_s/hosts/{n}"), Json::Num(sps));
+    }
+
     println!("\n-- per-phase step breakdown per optimizer --");
     let mut phases = BTreeMap::new();
     for optimizer in ["eva", "kfac", "shampoo"] {
@@ -250,6 +314,7 @@ fn main() {
             Json::Obj(kernels.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect()),
         ),
         ("serve", Json::Obj(serve)),
+        ("cluster", Json::Obj(cluster)),
         ("phases", Json::Obj(phases)),
     ]);
     let mut text = snapshot.pretty();

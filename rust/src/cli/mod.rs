@@ -111,7 +111,7 @@ pub const GLOBAL_OPTIONS: &[&str] = &["backend", "worker-threads", "simd", "tele
 /// iterate this to keep [`USAGE`] and [`Cli::reject_unknown`] in sync
 /// instead of hand-maintaining a second list.
 pub const KNOWN_COMMANDS: &[&str] =
-    &["train", "serve", "experiment", "validate", "list", "info", "help"];
+    &["train", "serve", "router", "experiment", "validate", "list", "info", "help"];
 
 /// Per-command accepted options and flags.
 pub struct CommandSpec {
@@ -165,6 +165,20 @@ pub fn known_options(command: &str) -> Option<CommandSpec> {
             ],
             &[],
         ),
+        "router" => spec(
+            &[
+                "config",
+                "addr",
+                "hosts",
+                "checkpoint-dirs",
+                "probe-interval-ms",
+                "probe-timeout-ms",
+                "probe-fails",
+                "request-timeout-ms",
+                "auto-migrate",
+            ],
+            &[],
+        ),
         "experiment" | "validate" | "list" | "info" => spec(&[], &[]),
         "" | "help" | "--help" | "-h" => spec(&[], &[]),
         _ => None,
@@ -184,6 +198,10 @@ USAGE:
             [--max-per-tenant N] [--checkpoint-dir DIR]
             [--checkpoint-every N] [--retain-terminal N]
             [--resume-dir DIR] [--quantum N]
+  eva router [--config FILE] [--addr HOST:PORT] [--hosts A1,A2,...]
+            [--checkpoint-dirs D1,D2,...] [--probe-interval-ms N]
+            [--probe-timeout-ms N] [--probe-fails N]
+            [--request-timeout-ms N] [--auto-migrate on|off]
   eva experiment <id|all>     regenerate a paper table/figure (see DESIGN.md §5)
   eva validate                cross-check PJRT artifacts vs native numerics
   eva list                    list datasets, optimizers, experiments, artifacts
@@ -240,6 +258,26 @@ SERVE OPTIONS (multi-tenant training-session service):
                               checkpoint_every_steps / checkpoint_on_shutdown /
                               retain_terminal / resume_dir / quantum_steps
                               keys (flags override the file)
+
+ROUTER OPTIONS (multi-host cluster front door; see docs/ARCHITECTURE.md):
+  --addr HOST:PORT            router listen address (same ndjson protocol as
+                              serve; default 127.0.0.1:7940, port 0 = ephemeral)
+  --hosts A1,A2,...           backend serve addresses, comma-separated;
+                              sessions are placed by rendezvous hashing on
+                              their checkpoint lineage stem
+  --checkpoint-dirs D1,D2,... each host's checkpoint_dir as the *router* sees
+                              it (same order as --hosts); needed to rescue
+                              sessions off a host that dies without warning
+  --probe-interval-ms N       health-probe period (default 1000; the probe is
+                              the ordinary `stats` command)
+  --probe-timeout-ms N        per-host probe budget (default 500); a host that
+                              accepts TCP but never replies counts as failed
+  --probe-fails N             consecutive failed probes before a host is down
+                              and its sessions are rescued (default 3; fewer
+                              failures mark it suspect = no new placements)
+  --request-timeout-ms N      proxied client-request budget (default 5000)
+  --auto-migrate on|off       rescue sessions off down hosts from their newest
+                              loadable checkpoint (default on)
 
 EXAMPLES:
   eva train --preset quickstart --optimizer eva

@@ -1,0 +1,226 @@
+//! Multi-host serve cluster: a thin router/control plane in front of
+//! N backend [`crate::serve`] processes.
+//!
+//! One serve process hosts many sessions, but `max_sessions` caps the
+//! box. This module removes that cap without inventing a new
+//! protocol: the router speaks the *same* newline-delimited JSON as
+//! every serve host ([`crate::serve::protocol`]), so existing clients
+//! point at the router and see one big service.
+//!
+//! * [`routing`] — deterministic session→host placement by rendezvous
+//!   (highest-random-weight) hashing on the checkpoint lineage stem.
+//!   Adding or removing one host only remaps the sessions that hashed
+//!   to it; everything else stays put.
+//! * [`net`] — deadline-bounded request helpers over `std::net`. The
+//!   serve-layer [`crate::serve::TcpClient`] waits forever by design;
+//!   a router probing possibly-dead hosts cannot, so every connect,
+//!   send and receive here carries a timeout.
+//! * [`router`] — the control plane: host registry with periodic
+//!   health probes (the `stats` command doubles as the probe),
+//!   Up → Suspect → Down backoff, transparent proxying of
+//!   session-addressed commands, checkpoint-migration rebalancing
+//!   (snapshot on the source, `submit` with `lineage: true` on the
+//!   target, then cancel the source — in that order, so the bytes are
+//!   loaded before any tombstone can land), drain/undrain for rolling
+//!   restarts, and cluster-level `stats`/`metrics` aggregation.
+//! * [`server`] — the TCP front door, mirroring
+//!   [`crate::serve::server`] line framing, with a migration-aware
+//!   `watch` proxy: a stream interrupted by a migration ends with a
+//!   clean `"event": "end", "status": "migrating"` line (a redirect —
+//!   re-issue the watch), never a hang.
+//!
+//! Migration is exactly "checkpoint here, resume there": the EVACKPT
+//! format is host- and ISA-portable and restore-and-continue is
+//! bit-identical, so a moved session computes the same weights it
+//! would have on its original host. The one requirement is that the
+//! router can read each host's `checkpoint_dir` (shared or local
+//! filesystem) — that is also how sessions are rescued off a host
+//! that died without warning.
+//!
+//! Run it with `eva router --hosts 10.0.0.1:7931,10.0.0.2:7931`, or
+//! embed [`Router`] in-process (the cluster tests run a whole
+//! cluster, failures included, inside one test binary).
+
+#![warn(missing_docs)]
+
+pub mod net;
+pub mod router;
+pub mod routing;
+pub mod server;
+
+pub use router::{HostHealth, Placement, Router};
+pub use routing::rendezvous;
+pub use server::RouterServer;
+
+use crate::jsonx::Json;
+
+/// One backend serve process, as the router sees it.
+#[derive(Clone, Debug)]
+pub struct HostSpec {
+    /// Control-plane address of the serve process (`addr:port`).
+    pub addr: String,
+    /// The host's `checkpoint_dir`, as a path the *router* can read.
+    /// Needed to rescue sessions off a host that died without
+    /// warning (live drains go through the wire instead).
+    pub checkpoint_dir: String,
+}
+
+/// Cluster/router configuration, loadable from a JSON object with
+/// the keys `router_addr`, `hosts`, `probe_interval_ms`,
+/// `probe_timeout_ms`, `probe_fails_down`, `request_timeout_ms`,
+/// `auto_migrate` (all optional; unknown keys are rejected to catch
+/// typos, mirroring [`crate::serve::ServeConfig::from_json`]).
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// TCP listen address for the router (`router_addr`). Port 0
+    /// binds an ephemeral port (tests/CI).
+    pub router_addr: String,
+    /// Backend hosts (`hosts`: array of `"addr"` strings or
+    /// `{"addr": ..., "checkpoint_dir": ...}` objects).
+    pub hosts: Vec<HostSpec>,
+    /// Milliseconds between health-probe passes (`probe_interval_ms`);
+    /// 0 disables the probe thread — callers drive
+    /// [`Router::probe_once`] by hand (tests).
+    pub probe_interval_ms: u64,
+    /// Per-host connect + reply budget for one probe
+    /// (`probe_timeout_ms`). A host that accepts TCP but never
+    /// answers is just as failed as a refused connection.
+    pub probe_timeout_ms: u64,
+    /// Consecutive failed probes before a host goes `Down`
+    /// (`probe_fails_down`); below that it is `Suspect` — still
+    /// routable for existing sessions, excluded from new placements.
+    pub probe_fails_down: u32,
+    /// Timeout for proxied client requests (`request_timeout_ms`).
+    pub request_timeout_ms: u64,
+    /// Rescue sessions off a host the moment it goes `Down`
+    /// (`auto_migrate`, default true): newest loadable checkpoint in
+    /// that host's `checkpoint_dir`, resumed on a live host.
+    pub auto_migrate: bool,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            router_addr: "127.0.0.1:7940".into(),
+            hosts: Vec::new(),
+            probe_interval_ms: 1000,
+            probe_timeout_ms: 500,
+            probe_fails_down: 3,
+            request_timeout_ms: 5000,
+            auto_migrate: true,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Parse from a JSON object (see type docs for the keys).
+    pub fn from_json(text: &str) -> Result<Self, String> {
+        let v = Json::parse(text)?;
+        let obj = v.as_obj().ok_or("cluster config must be an object")?;
+        let mut c = ClusterConfig::default();
+        for (k, val) in obj {
+            match k.as_str() {
+                "router_addr" => {
+                    c.router_addr = val.as_str().ok_or("router_addr: string")?.to_string()
+                }
+                "hosts" => {
+                    let arr = val.as_arr().ok_or("hosts: array")?;
+                    c.hosts = arr.iter().map(host_spec).collect::<Result<_, _>>()?;
+                }
+                "probe_interval_ms" => {
+                    c.probe_interval_ms =
+                        val.as_usize().ok_or("probe_interval_ms: number")? as u64;
+                }
+                "probe_timeout_ms" => {
+                    let n = val.as_usize().ok_or("probe_timeout_ms: number")?;
+                    if n == 0 {
+                        return Err("probe_timeout_ms must be ≥ 1".into());
+                    }
+                    c.probe_timeout_ms = n as u64;
+                }
+                "probe_fails_down" => {
+                    let n = val.as_usize().ok_or("probe_fails_down: number")?;
+                    if n == 0 {
+                        return Err("probe_fails_down must be ≥ 1".into());
+                    }
+                    c.probe_fails_down = n as u32;
+                }
+                "request_timeout_ms" => {
+                    let n = val.as_usize().ok_or("request_timeout_ms: number")?;
+                    if n == 0 {
+                        return Err("request_timeout_ms must be ≥ 1".into());
+                    }
+                    c.request_timeout_ms = n as u64;
+                }
+                "auto_migrate" => c.auto_migrate = val.as_bool().ok_or("auto_migrate: bool")?,
+                other => return Err(format!("unknown cluster config key '{other}'")),
+            }
+        }
+        Ok(c)
+    }
+
+    /// Load from a JSON file.
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::from_json(&text)
+    }
+}
+
+fn host_spec(v: &Json) -> Result<HostSpec, String> {
+    if let Some(addr) = v.as_str() {
+        return Ok(HostSpec { addr: addr.to_string(), checkpoint_dir: String::new() });
+    }
+    let obj = v.as_obj().ok_or("hosts[]: string or object")?;
+    let mut spec = HostSpec { addr: String::new(), checkpoint_dir: String::new() };
+    for (k, val) in obj {
+        match k.as_str() {
+            "addr" => spec.addr = val.as_str().ok_or("hosts[].addr: string")?.to_string(),
+            "checkpoint_dir" => {
+                spec.checkpoint_dir =
+                    val.as_str().ok_or("hosts[].checkpoint_dir: string")?.to_string()
+            }
+            other => return Err(format!("unknown host key '{other}'")),
+        }
+    }
+    if spec.addr.is_empty() {
+        return Err("hosts[] entry needs a non-empty 'addr'".into());
+    }
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_config_parses_and_validates() {
+        let c = ClusterConfig::from_json(
+            r#"{"router_addr": "0.0.0.0:7940",
+                "hosts": ["10.0.0.1:7931",
+                          {"addr": "10.0.0.2:7931", "checkpoint_dir": "/data/ck2"}],
+                "probe_interval_ms": 250, "probe_timeout_ms": 100,
+                "probe_fails_down": 2, "request_timeout_ms": 900,
+                "auto_migrate": false}"#,
+        )
+        .unwrap();
+        assert_eq!(c.router_addr, "0.0.0.0:7940");
+        assert_eq!(c.hosts.len(), 2);
+        assert_eq!(c.hosts[0].addr, "10.0.0.1:7931");
+        assert_eq!(c.hosts[0].checkpoint_dir, "");
+        assert_eq!(c.hosts[1].checkpoint_dir, "/data/ck2");
+        assert_eq!(c.probe_interval_ms, 250);
+        assert_eq!(c.probe_timeout_ms, 100);
+        assert_eq!(c.probe_fails_down, 2);
+        assert_eq!(c.request_timeout_ms, 900);
+        assert!(!c.auto_migrate);
+        let d = ClusterConfig::from_json("{}").unwrap();
+        assert!(d.hosts.is_empty());
+        assert_eq!(d.probe_fails_down, 3);
+        assert!(d.auto_migrate);
+        assert!(ClusterConfig::from_json(r#"{"probe_fails_down": 0}"#).is_err());
+        assert!(ClusterConfig::from_json(r#"{"probe_timeout_ms": 0}"#).is_err());
+        assert!(ClusterConfig::from_json(r#"{"port": 1}"#).is_err());
+        assert!(ClusterConfig::from_json(r#"{"hosts": [{"addr": ""}]}"#).is_err());
+        assert!(ClusterConfig::from_json(r#"{"hosts": [{"host": "x"}]}"#).is_err());
+    }
+}

@@ -1,0 +1,161 @@
+//! Deadline-bounded ndjson requests over `std::net`.
+//!
+//! The serve-layer [`crate::serve::TcpClient`] is deliberately
+//! patient: it waits as long as the server needs. A router is the
+//! opposite — it talks to hosts that may be dead, wedged, or
+//! accepting TCP while never replying, and a health probe that can
+//! block forever is a health probe that can take the router down
+//! with the host. Every operation here carries a deadline: connects
+//! use [`std::net::TcpStream::connect_timeout`], reads poll in short
+//! slices against a caller-supplied budget, and a missed deadline is
+//! an ordinary `Err`, never a hang.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use crate::jsonx::Json;
+use crate::serve::server::MAX_LINE_BYTES;
+
+/// Read-poll slice. Short enough that a deadline is honored promptly;
+/// long enough that an idle wait costs a handful of syscalls.
+const POLL: Duration = Duration::from_millis(20);
+
+/// One timeout-bounded connection to a serve host (or router).
+pub struct Conn {
+    stream: TcpStream,
+    /// Bytes received but not yet consumed as a full line.
+    buf: Vec<u8>,
+    timeout: Duration,
+}
+
+impl Conn {
+    /// Connect within `timeout`. Resolution failures, refused
+    /// connections and slow handshakes all surface as `Err`.
+    pub fn connect(addr: &str, timeout: Duration) -> Result<Conn, String> {
+        let mut last = format!("{addr}: no addresses resolved");
+        for sa in addr.to_socket_addrs().map_err(|e| format!("{addr}: {e}"))? {
+            match TcpStream::connect_timeout(&sa, timeout) {
+                Ok(stream) => {
+                    stream
+                        .set_read_timeout(Some(POLL))
+                        .map_err(|e| format!("{addr}: {e}"))?;
+                    stream
+                        .set_nodelay(true)
+                        .map_err(|e| format!("{addr}: {e}"))?;
+                    return Ok(Conn { stream, buf: Vec::new(), timeout });
+                }
+                Err(e) => last = format!("{addr}: {e}"),
+            }
+        }
+        Err(last)
+    }
+
+    /// Send one request line.
+    pub fn send(&mut self, req: &Json) -> Result<(), String> {
+        let mut line = req.dump();
+        line.push('\n');
+        self.stream.write_all(line.as_bytes()).map_err(|e| format!("send: {e}"))?;
+        self.stream.flush().map_err(|e| format!("send: {e}"))
+    }
+
+    /// Receive one response line within this connection's timeout.
+    pub fn recv(&mut self) -> Result<Json, String> {
+        self.recv_deadline(Instant::now() + self.timeout)
+    }
+
+    /// Receive one response line by `deadline`. Partial lines survive
+    /// poll slices; a peer that accepts the request but never answers
+    /// is reported as a timeout, not waited on.
+    pub fn recv_deadline(&mut self, deadline: Instant) -> Result<Json, String> {
+        let mut chunk = [0u8; 4096];
+        loop {
+            if let Some(pos) = self.buf.iter().position(|&b| b == b'\n') {
+                let line: Vec<u8> = self.buf.drain(..=pos).collect();
+                let text = String::from_utf8_lossy(&line);
+                let text = text.trim();
+                if text.is_empty() {
+                    continue; // blank keep-alive line; keep reading
+                }
+                return Json::parse(text).map_err(|e| format!("bad response: {e}"));
+            }
+            if self.buf.len() > MAX_LINE_BYTES {
+                return Err(format!("response exceeds {MAX_LINE_BYTES} bytes"));
+            }
+            if Instant::now() >= deadline {
+                return Err("timed out waiting for a reply".into());
+            }
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return Err("peer closed the connection".into()),
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {}
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(format!("recv: {e}")),
+            }
+        }
+    }
+
+    /// Send one request and read its one-line response.
+    pub fn request(&mut self, req: &Json) -> Result<Json, String> {
+        self.send(req)?;
+        self.recv()
+    }
+}
+
+/// One-shot request: connect, ask, read one reply — all within
+/// `timeout` (connect and reply each get the full budget; a probe
+/// that needs both to be slow is failed either way). This is the
+/// router's workhorse for probes and proxied commands.
+pub fn request(addr: &str, req: &Json, timeout: Duration) -> Result<Json, String> {
+    let mut conn = Conn::connect(addr, timeout)?;
+    conn.request(req)
+}
+
+/// [`request`] that also surfaces protocol-level failures
+/// (`ok: false`) as `Err` carrying the server's error string.
+pub fn request_ok(addr: &str, req: &Json, timeout: Duration) -> Result<Json, String> {
+    let resp = request(addr, req, timeout)?;
+    match resp.get("ok") {
+        Some(Json::Bool(true)) => Ok(resp),
+        _ => Err(resp.get_str("error").unwrap_or("request failed").to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn connect_to_nothing_fails_fast() {
+        // Reserve a port, close the listener, connect to the corpse.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let t0 = Instant::now();
+        let err = Conn::connect(&addr, Duration::from_millis(300));
+        assert!(err.is_err());
+        assert!(t0.elapsed() < Duration::from_secs(5), "must not hang");
+    }
+
+    #[test]
+    fn silent_peer_times_out_instead_of_hanging() {
+        // A listener that accepts and then says nothing.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let hold = std::thread::spawn(move || listener.accept().map(|(s, _)| s));
+        let t0 = Instant::now();
+        let res = request(
+            &addr,
+            &Json::obj(vec![("cmd", Json::Str("stats".into()))]),
+            Duration::from_millis(200),
+        );
+        assert!(res.is_err(), "{res:?}");
+        assert!(res.unwrap_err().contains("timed out"));
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(180), "honors the budget");
+        assert!(waited < Duration::from_secs(5), "must not hang");
+        drop(hold.join());
+    }
+}

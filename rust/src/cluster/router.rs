@@ -1,0 +1,985 @@
+//! The cluster control plane: host registry, health probes,
+//! placement, proxying, and checkpoint-migration rebalancing.
+//!
+//! A [`Router`] owns no training state at all. Its entire world view
+//! is (a) a host registry refreshed by probing each host's `stats`
+//! command, and (b) a placement table mapping *cluster* session ids
+//! to `(host, remote id, lineage stem)`. Everything durable lives in
+//! the hosts' checkpoints, which is why a router can be restarted (or
+//! replaced) without losing a single session — rendezvous hashing
+//! recomputes the same placements from the same host list.
+//!
+//! ## Health state machine
+//!
+//! ```text
+//!            probe ok                probe failed
+//!   Up ───────────────▶ Up    Up ────────────────▶ Suspect
+//!   Suspect ──ok──────▶ Up    Suspect ──(n-th consecutive fail,
+//!   Down ──ok─────────▶ Up              n ≥ probe_fails_down)──▶ Down
+//! ```
+//!
+//! `Suspect` hosts keep serving their existing sessions (one missed
+//! probe is usually a GC pause, not a death) but receive no new
+//! placements. `Down` hosts trigger a rescue when `auto_migrate` is
+//! on: every session placed there is resumed from the newest loadable
+//! checkpoint in that host's `checkpoint_dir` onto a live host. The
+//! rescue re-runs each probe pass while the host stays `Down`, so a
+//! rescue blocked by a full cluster retries instead of giving up.
+//!
+//! ## Migration ordering
+//!
+//! A live drain moves a session in three wire calls, in an order that
+//! is load-bearing: **checkpoint** on the source, **submit** with
+//! `lineage: true` on the target, and only then **cancel** on the
+//! source. The target has loaded the snapshot bytes before the source
+//! is told to die, so the cancel-side terminal tombstone (which may
+//! overwrite the very same `<stem>-step<K>.ckpt` path) can no longer
+//! poison the move. Steps the source ran between the snapshot and the
+//! cancel are recomputed on the target — checkpoint restore is
+//! bit-identical, so the session's trajectory is unchanged, merely
+//! replayed.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::cluster::{net, routing, ClusterConfig};
+use crate::jsonx::Json;
+use crate::serve::protocol::forwardable;
+
+/// Probe-derived health of one backend host.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HostHealth {
+    /// Last probe succeeded; placeable.
+    Up,
+    /// Missed at least one probe but fewer than `probe_fails_down`
+    /// in a row; existing sessions stay, no new placements.
+    Suspect,
+    /// Missed `probe_fails_down` consecutive probes; rescue target.
+    Down,
+}
+
+impl HostHealth {
+    /// Lowercase wire name (`up` / `suspect` / `down`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            HostHealth::Up => "up",
+            HostHealth::Suspect => "suspect",
+            HostHealth::Down => "down",
+        }
+    }
+}
+
+/// Where one cluster session currently lives.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    /// Index into the configured host list.
+    pub host: usize,
+    /// The session id *on that host* (hosts mint their own ids; the
+    /// router's ids are cluster-wide and stable across migrations).
+    pub remote_id: u64,
+    /// Checkpoint lineage stem — the placement key and the session's
+    /// one identity across hosts.
+    pub stem: String,
+    /// A migration is in flight; session-addressed commands are
+    /// deferred (status reports `"migrating"`) until it lands.
+    pub migrating: bool,
+}
+
+/// A point-in-time registry view of one host (the `hosts` command).
+#[derive(Clone, Debug)]
+pub struct HostView {
+    /// Control-plane address.
+    pub addr: String,
+    /// Probe-derived health.
+    pub health: HostHealth,
+    /// Drained hosts receive no new placements (rolling restarts).
+    pub draining: bool,
+    /// Consecutive failed probes so far.
+    pub consecutive_failures: u32,
+    /// Live session count from the last successful probe.
+    pub live: u64,
+    /// The host's checkpoint directory as the router sees it.
+    pub checkpoint_dir: String,
+}
+
+struct HostEntry {
+    addr: String,
+    checkpoint_dir: String,
+    health: HostHealth,
+    draining: bool,
+    consecutive_failures: u32,
+    live: u64,
+}
+
+struct RouterInner {
+    cfg: ClusterConfig,
+    hosts: Mutex<Vec<HostEntry>>,
+    placements: Mutex<BTreeMap<u64, Placement>>,
+    next_id: AtomicU64,
+    stop: AtomicBool,
+    migrations: AtomicU64,
+    failed_probes: AtomicU64,
+    probe: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+/// The cluster router. Cheap to clone (an `Arc` around shared state);
+/// every clone talks to the same registry and placement table.
+#[derive(Clone)]
+pub struct Router {
+    inner: Arc<RouterInner>,
+}
+
+/// Response fields, keyed by owned strings so proxied host responses
+/// can be passed through without re-keying to `'static`.
+type Fields = BTreeMap<String, Json>;
+
+fn fields(pairs: Vec<(&str, Json)>) -> Fields {
+    pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect()
+}
+
+impl Router {
+    /// Build the registry and, when `probe_interval_ms > 0`, start
+    /// the background probe thread. Hosts start `Up` (optimistically
+    /// placeable before the first probe lands); cluster session ids
+    /// start at 1.
+    pub fn start(cfg: ClusterConfig) -> Router {
+        let hosts = cfg
+            .hosts
+            .iter()
+            .map(|h| HostEntry {
+                addr: h.addr.clone(),
+                checkpoint_dir: h.checkpoint_dir.clone(),
+                health: HostHealth::Up,
+                draining: false,
+                consecutive_failures: 0,
+                live: 0,
+            })
+            .collect();
+        let router = Router {
+            inner: Arc::new(RouterInner {
+                cfg,
+                hosts: Mutex::new(hosts),
+                placements: Mutex::new(BTreeMap::new()),
+                next_id: AtomicU64::new(1),
+                stop: AtomicBool::new(false),
+                migrations: AtomicU64::new(0),
+                failed_probes: AtomicU64::new(0),
+                probe: Mutex::new(None),
+            }),
+        };
+        let interval = router.inner.cfg.probe_interval_ms;
+        if interval > 0 {
+            let r = router.clone();
+            let handle = std::thread::Builder::new()
+                .name("eva-router-probe".into())
+                .spawn(move || {
+                    while !r.is_stopped() {
+                        r.probe_once();
+                        // Sleep in short slices so shutdown is prompt.
+                        let deadline = Instant::now() + Duration::from_millis(interval);
+                        while Instant::now() < deadline && !r.is_stopped() {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                    }
+                })
+                .expect("spawn probe thread");
+            *router.inner.probe.lock().unwrap() = Some(handle);
+        }
+        router
+    }
+
+    /// The cluster configuration this router was started with.
+    pub fn config(&self) -> &ClusterConfig {
+        &self.inner.cfg
+    }
+
+    /// Whether [`Router::shutdown`] has been requested.
+    pub fn is_stopped(&self) -> bool {
+        self.inner.stop.load(Ordering::Relaxed)
+    }
+
+    /// Stop the router (probe thread joined, front door drains).
+    /// Backend hosts are *not* shut down — they keep training; the
+    /// router is control plane only.
+    pub fn shutdown(&self) {
+        self.inner.stop.store(true, Ordering::Relaxed);
+        let handle = self.inner.probe.lock().unwrap().take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+
+    /// A session's current placement (tests and the watch proxy).
+    pub fn placement(&self, id: u64) -> Option<Placement> {
+        self.inner.placements.lock().unwrap().get(&id).cloned()
+    }
+
+    /// A host's control-plane address by registry index.
+    pub fn host_addr(&self, idx: usize) -> Option<String> {
+        self.inner.hosts.lock().unwrap().get(idx).map(|h| h.addr.clone())
+    }
+
+    /// Registry snapshot, configured order.
+    pub fn hosts(&self) -> Vec<HostView> {
+        self.inner
+            .hosts
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|h| HostView {
+                addr: h.addr.clone(),
+                health: h.health,
+                draining: h.draining,
+                consecutive_failures: h.consecutive_failures,
+                live: h.live,
+                checkpoint_dir: h.checkpoint_dir.clone(),
+            })
+            .collect()
+    }
+
+    /// Checkpoint-migrations completed since start.
+    pub fn migrations(&self) -> u64 {
+        self.inner.migrations.load(Ordering::Relaxed)
+    }
+
+    /// One health-probe pass over every host: `stats` with the probe
+    /// timeout, Up/Suspect/Down bookkeeping, then (with
+    /// `auto_migrate`) a rescue attempt for every host that is
+    /// `Down`. Runs on the probe thread when `probe_interval_ms > 0`;
+    /// call it directly for deterministic tests.
+    pub fn probe_once(&self) {
+        let probe_req = Json::obj(vec![("cmd", Json::Str("stats".into()))]);
+        let timeout = Duration::from_millis(self.inner.cfg.probe_timeout_ms);
+        let addrs: Vec<(usize, String)> = {
+            let hosts = self.inner.hosts.lock().unwrap();
+            hosts.iter().enumerate().map(|(i, h)| (i, h.addr.clone())).collect()
+        };
+        // Probe off-lock: a wedged host must not freeze the registry.
+        let results: Vec<(usize, Result<Json, String>)> = addrs
+            .iter()
+            .map(|(i, addr)| (*i, net::request_ok(addr, &probe_req, timeout)))
+            .collect();
+        let mut down_hosts = Vec::new();
+        {
+            let mut hosts = self.inner.hosts.lock().unwrap();
+            for (i, res) in results {
+                let Some(h) = hosts.get_mut(i) else { continue };
+                match res {
+                    Ok(resp) => {
+                        h.health = HostHealth::Up;
+                        h.consecutive_failures = 0;
+                        h.live = resp.get_f64("live").unwrap_or(0.0) as u64;
+                    }
+                    Err(_) => {
+                        h.consecutive_failures = h.consecutive_failures.saturating_add(1);
+                        self.inner.failed_probes.fetch_add(1, Ordering::Relaxed);
+                        crate::telemetry::CLUSTER_PROBE_FAILURES.add(1);
+                        h.health = if h.consecutive_failures >= self.inner.cfg.probe_fails_down
+                        {
+                            HostHealth::Down
+                        } else {
+                            HostHealth::Suspect
+                        };
+                    }
+                }
+                if h.health == HostHealth::Down {
+                    down_hosts.push(i);
+                }
+            }
+            let up = hosts.iter().filter(|h| h.health == HostHealth::Up).count();
+            crate::telemetry::CLUSTER_HOSTS_UP.set(up as u64);
+        }
+        if self.inner.cfg.auto_migrate {
+            for i in down_hosts {
+                self.rescue_host(i);
+            }
+        }
+    }
+
+    /// Probes failed since start (all hosts, all passes).
+    pub fn failed_probes(&self) -> u64 {
+        self.inner.failed_probes.load(Ordering::Relaxed)
+    }
+
+    /// Handle one parsed request, producing the response object —
+    /// the router-side counterpart of
+    /// [`crate::serve::protocol::dispatch`]; same envelope (`ok`,
+    /// `error`, echoed `id`).
+    pub fn dispatch(&self, req: &Json) -> Json {
+        let mut map = match self.handle(req) {
+            Ok(mut m) => {
+                m.insert("ok".into(), Json::Bool(true));
+                m
+            }
+            Err(e) => fields(vec![("ok", Json::Bool(false)), ("error", Json::Str(e))]),
+        };
+        if let Some(id) = req.get("id") {
+            map.insert("id".into(), id.clone());
+        }
+        Json::Obj(map)
+    }
+
+    fn handle(&self, req: &Json) -> Result<Fields, String> {
+        let cmd = req.get_str("cmd").ok_or("missing 'cmd'")?;
+        match cmd {
+            "submit" => self.submit(req),
+            "watch" => Err(
+                "'watch' streams newline-delimited step events and is only \
+                 available over the TCP transport"
+                    .into(),
+            ),
+            c if forwardable(c) => self.forward(req),
+            "stats" => self.stats(),
+            "metrics" => self.metrics(),
+            "hosts" => Ok(fields(vec![("hosts", self.hosts_json())])),
+            "drain" => {
+                let host = req.get_str("host").ok_or("missing 'host' address")?;
+                let (migrated, failed) = self.drain(host)?;
+                Ok(fields(vec![
+                    ("host", Json::Str(host.into())),
+                    ("migrated", Json::Num(migrated as f64)),
+                    ("failed", Json::Num(failed as f64)),
+                ]))
+            }
+            "undrain" => {
+                let host = req.get_str("host").ok_or("missing 'host' address")?;
+                self.undrain(host)?;
+                Ok(fields(vec![("host", Json::Str(host.into()))]))
+            }
+            "shutdown" => {
+                self.shutdown();
+                Ok(fields(vec![("stopping", Json::Bool(true))]))
+            }
+            other => Err(format!("unknown command '{other}'")),
+        }
+    }
+
+    /// Hosts new sessions may be placed on: `Up` and not draining.
+    fn placeable(&self, exclude: Option<usize>) -> Vec<(usize, String)> {
+        self.inner
+            .hosts
+            .lock()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .filter(|(i, h)| {
+                h.health == HostHealth::Up && !h.draining && Some(*i) != exclude
+            })
+            .map(|(i, h)| (i, h.addr.clone()))
+            .collect()
+    }
+
+    fn request_timeout(&self) -> Duration {
+        Duration::from_millis(self.inner.cfg.request_timeout_ms)
+    }
+
+    fn submit(&self, req: &Json) -> Result<Fields, String> {
+        // Placement key: the lineage stem when resuming a checkpoint
+        // (derived from the file name — `<stem>-step<N>.ckpt`), else
+        // the job name. The host then mints the real stem
+        // (`<safe-name>-<id>`), which we learn back via `status` so
+        // later migrations hash the same identity everywhere.
+        let key = req
+            .get_str("checkpoint")
+            .and_then(stem_of_path)
+            .or_else(|| req.get_str("name").map(String::from))
+            .unwrap_or_else(|| "job".into());
+        let candidates = self.placeable(None);
+        if candidates.is_empty() {
+            return Err("no live host to place the session on".into());
+        }
+        let addrs: Vec<&str> = candidates.iter().map(|(_, a)| a.as_str()).collect();
+        let mut fwd = req.clone();
+        if let Json::Obj(m) = &mut fwd {
+            m.remove("id"); // the router echoes the id itself
+        }
+        let timeout = self.request_timeout();
+        let mut last_err = String::new();
+        for rank in routing::ranked(&key, &addrs) {
+            let (idx, addr) = &candidates[rank];
+            match net::request_ok(addr, &fwd, timeout) {
+                Ok(resp) => {
+                    let remote_id = resp
+                        .get_f64("session")
+                        .map(|v| v as u64)
+                        .ok_or("host response carried no session id")?;
+                    // Learn the host-minted lineage stem. Best-effort:
+                    // an empty stem just means migrations fall back to
+                    // hashing by id (still deterministic).
+                    let stem = net::request_ok(
+                        addr,
+                        &Json::obj(vec![
+                            ("cmd", Json::Str("status".into())),
+                            ("session", Json::Num(remote_id as f64)),
+                        ]),
+                        timeout,
+                    )
+                    .ok()
+                    .and_then(|r| {
+                        r.get("session")
+                            .and_then(|s| s.get_str("lineage"))
+                            .map(String::from)
+                    })
+                    .unwrap_or_default();
+                    let cid = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+                    self.inner.placements.lock().unwrap().insert(
+                        cid,
+                        Placement {
+                            host: *idx,
+                            remote_id,
+                            stem,
+                            migrating: false,
+                        },
+                    );
+                    let mut out = fields(vec![
+                        ("session", Json::Num(cid as f64)),
+                        ("host", Json::Str(addr.clone())),
+                    ]);
+                    if let Some(st) = resp.get_str("status") {
+                        out.insert("status".into(), Json::Str(st.into()));
+                    }
+                    if let Some(qp) = resp.get_f64("queue_position") {
+                        out.insert("queue_position".into(), Json::Num(qp));
+                    }
+                    return Ok(out);
+                }
+                Err(e) => last_err = format!("{addr}: {e}"),
+            }
+        }
+        Err(format!("submit failed on every live host (last: {last_err})"))
+    }
+
+    /// Proxy a session-addressed command to the owning host,
+    /// rewriting cluster id → remote id on the way out and back.
+    fn forward(&self, req: &Json) -> Result<Fields, String> {
+        let cid = req
+            .get_f64("session")
+            .map(|v| v as u64)
+            .ok_or("missing 'session' id")?;
+        let p = self
+            .placement(cid)
+            .ok_or_else(|| format!("unknown session {cid}"))?;
+        if p.migrating {
+            if req.get_str("cmd") == Some("status") {
+                return Ok(fields(vec![("session", migrating_state_json(cid, &p))]));
+            }
+            return Err(format!("session {cid} is migrating between hosts; retry"));
+        }
+        let addr = self
+            .host_addr(p.host)
+            .ok_or_else(|| format!("session {cid}: host index {} gone", p.host))?;
+        let mut fwd = req.clone();
+        if let Json::Obj(m) = &mut fwd {
+            m.insert("session".into(), Json::Num(p.remote_id as f64));
+            m.remove("id");
+        }
+        let resp = net::request_ok(&addr, &fwd, self.request_timeout())
+            .map_err(|e| format!("host {addr}: {e}"))?;
+        let Json::Obj(mut m) = resp else {
+            return Err(format!("host {addr}: malformed response"));
+        };
+        m.remove("ok");
+        m.remove("id");
+        if let Some(Json::Obj(sess)) = m.get_mut("session") {
+            sess.insert("id".into(), Json::Num(cid as f64));
+            sess.insert("host".into(), Json::Str(addr));
+        }
+        Ok(m)
+    }
+
+    /// Stop admitting to `host_addr` and migrate every session placed
+    /// there onto live peers. Returns `(migrated, failed)`; failures
+    /// leave their sessions where they were (retry the drain). The
+    /// host stays registered and draining until [`Router::undrain`] —
+    /// the admit-stop / migrate / verify / re-admit loop of a rolling
+    /// restart.
+    pub fn drain(&self, host_addr: &str) -> Result<(usize, usize), String> {
+        let idx = self.host_index(host_addr)?;
+        self.inner.hosts.lock().unwrap()[idx].draining = true;
+        let victims: Vec<u64> = {
+            let placements = self.inner.placements.lock().unwrap();
+            placements
+                .iter()
+                .filter(|(_, p)| p.host == idx && !p.migrating)
+                .map(|(id, _)| *id)
+                .collect()
+        };
+        let mut migrated = 0;
+        let mut failed = 0;
+        for id in victims {
+            match self.migrate(id) {
+                Ok(()) => migrated += 1,
+                Err(_) => failed += 1,
+            }
+        }
+        Ok((migrated, failed))
+    }
+
+    /// Re-admit a drained host to placement.
+    pub fn undrain(&self, host_addr: &str) -> Result<(), String> {
+        let idx = self.host_index(host_addr)?;
+        self.inner.hosts.lock().unwrap()[idx].draining = false;
+        Ok(())
+    }
+
+    fn host_index(&self, addr: &str) -> Result<usize, String> {
+        self.inner
+            .hosts
+            .lock()
+            .unwrap()
+            .iter()
+            .position(|h| h.addr == addr)
+            .ok_or_else(|| format!("unknown host '{addr}'"))
+    }
+
+    /// Live-migrate one session off its current host: checkpoint at
+    /// the source, resume the lineage on the rendezvous-chosen
+    /// target, then cancel the source (strictly in that order — see
+    /// the module docs). Steps the source runs between snapshot and
+    /// cancel are recomputed, not lost: restore is bit-identical.
+    pub fn migrate(&self, cid: u64) -> Result<(), String> {
+        let (src_idx, remote_id, stem) = {
+            let mut placements = self.inner.placements.lock().unwrap();
+            let p = placements
+                .get_mut(&cid)
+                .ok_or_else(|| format!("unknown session {cid}"))?;
+            if p.migrating {
+                return Err(format!("session {cid} is already migrating"));
+            }
+            p.migrating = true;
+            (p.host, p.remote_id, p.stem.clone())
+        };
+        let result = self.migrate_live(cid, src_idx, remote_id, &stem);
+        if result.is_err() {
+            if let Some(p) = self.inner.placements.lock().unwrap().get_mut(&cid) {
+                p.migrating = false;
+            }
+        }
+        result
+    }
+
+    fn migrate_live(
+        &self,
+        cid: u64,
+        src_idx: usize,
+        remote_id: u64,
+        stem: &str,
+    ) -> Result<(), String> {
+        let src_addr = self
+            .host_addr(src_idx)
+            .ok_or_else(|| format!("host index {src_idx} gone"))?;
+        let timeout = self.request_timeout();
+        let resp = net::request_ok(
+            &src_addr,
+            &Json::obj(vec![
+                ("cmd", Json::Str("checkpoint".into())),
+                ("session", Json::Num(remote_id as f64)),
+            ]),
+            timeout,
+        )
+        .map_err(|e| format!("checkpoint on {src_addr}: {e}"))?;
+        let path = resp
+            .get_str("path")
+            .ok_or("checkpoint response carried no path")?
+            .to_string();
+        self.adopt(cid, src_idx, stem, &path, Some((src_addr, remote_id)))
+    }
+
+    /// Resume `path` on the best live host excluding `exclude`, then
+    /// (for live migrations) cancel the source copy, then repoint the
+    /// placement. Shared tail of drains and dead-host rescues.
+    fn adopt(
+        &self,
+        cid: u64,
+        exclude: usize,
+        stem: &str,
+        path: &str,
+        cancel_source: Option<(String, u64)>,
+    ) -> Result<(), String> {
+        let candidates = self.placeable(Some(exclude));
+        if candidates.is_empty() {
+            return Err("no live host to migrate to".into());
+        }
+        let addrs: Vec<&str> = candidates.iter().map(|(_, a)| a.as_str()).collect();
+        let key = if stem.is_empty() { path } else { stem };
+        let submit = Json::obj(vec![
+            ("cmd", Json::Str("submit".into())),
+            ("checkpoint", Json::Str(path.into())),
+            ("lineage", Json::Bool(true)),
+        ]);
+        let timeout = self.request_timeout();
+        let mut last_err = String::new();
+        for rank in routing::ranked(key, &addrs) {
+            let (tgt_idx, tgt_addr) = &candidates[rank];
+            match net::request_ok(tgt_addr, &submit, timeout) {
+                Ok(resp) => {
+                    let new_remote = resp
+                        .get_f64("session")
+                        .map(|v| v as u64)
+                        .ok_or("target response carried no session id")?;
+                    // The target has loaded the bytes; *now* the
+                    // source copy may die (its cancel tombstone can
+                    // no longer matter). Best-effort — a dead source
+                    // has already stopped on its own.
+                    if let Some((src_addr, old_remote)) = &cancel_source {
+                        let _ = net::request(
+                            src_addr,
+                            &Json::obj(vec![
+                                ("cmd", Json::Str("cancel".into())),
+                                ("session", Json::Num(*old_remote as f64)),
+                            ]),
+                            timeout,
+                        );
+                    }
+                    if let Some(p) = self.inner.placements.lock().unwrap().get_mut(&cid) {
+                        p.host = *tgt_idx;
+                        p.remote_id = new_remote;
+                        p.migrating = false;
+                    }
+                    self.inner.migrations.fetch_add(1, Ordering::Relaxed);
+                    crate::telemetry::CLUSTER_MIGRATIONS.add(1);
+                    return Ok(());
+                }
+                Err(e) => last_err = format!("{tgt_addr}: {e}"),
+            }
+        }
+        Err(format!("every migration target refused (last: {last_err})"))
+    }
+
+    /// Rescue every session placed on a `Down` host from the newest
+    /// loadable checkpoint in its `checkpoint_dir`. Sessions without
+    /// a loadable snapshot (or with no rescue target) stay pointed at
+    /// the dead host — visible as errors on access, retried next
+    /// probe pass, and live again if the host returns.
+    fn rescue_host(&self, idx: usize) -> (usize, usize) {
+        let dir = {
+            let hosts = self.inner.hosts.lock().unwrap();
+            match hosts.get(idx) {
+                Some(h) => h.checkpoint_dir.clone(),
+                None => return (0, 0),
+            }
+        };
+        let victims: Vec<(u64, String)> = {
+            let mut placements = self.inner.placements.lock().unwrap();
+            placements
+                .iter_mut()
+                .filter(|(_, p)| p.host == idx && !p.migrating)
+                .map(|(id, p)| {
+                    p.migrating = true;
+                    (*id, p.stem.clone())
+                })
+                .collect()
+        };
+        let mut rescued = 0;
+        let mut failed = 0;
+        for (cid, stem) in victims {
+            let outcome = if dir.is_empty() {
+                Err("host is down and has no checkpoint_dir configured".into())
+            } else if stem.is_empty() {
+                Err("no lineage stem recorded for this session".into())
+            } else {
+                match crate::serve::checkpoint::newest_loadable(&dir, &stem) {
+                    Some((_step, path, _ck)) => self.adopt(cid, idx, &stem, &path, None),
+                    None => Err(format!("no loadable checkpoint for '{stem}' in {dir}")),
+                }
+            };
+            match outcome {
+                Ok(()) => rescued += 1,
+                Err(_) => {
+                    failed += 1;
+                    if let Some(p) = self.inner.placements.lock().unwrap().get_mut(&cid) {
+                        p.migrating = false;
+                    }
+                }
+            }
+        }
+        (rescued, failed)
+    }
+
+    fn hosts_json(&self) -> Json {
+        Json::Arr(
+            self.hosts()
+                .into_iter()
+                .map(|h| {
+                    Json::obj(vec![
+                        ("addr", Json::Str(h.addr)),
+                        ("health", Json::Str(h.health.as_str().into())),
+                        ("draining", Json::Bool(h.draining)),
+                        ("consecutive_failures", Json::Num(h.consecutive_failures as f64)),
+                        ("live", Json::Num(h.live as f64)),
+                        ("checkpoint_dir", Json::Str(h.checkpoint_dir)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Cluster-level `stats`: per-host capacity and throughput fields
+    /// summed over every reachable host, every placed session's state
+    /// under its *cluster* id, the host registry, and router-side
+    /// counters.
+    fn stats(&self) -> Result<Fields, String> {
+        let stats_req = Json::obj(vec![("cmd", Json::Str("stats".into()))]);
+        let timeout = self.request_timeout();
+        let addrs: Vec<(usize, String)> = {
+            let hosts = self.inner.hosts.lock().unwrap();
+            hosts.iter().enumerate().map(|(i, h)| (i, h.addr.clone())).collect()
+        };
+        const SUMMED: &[&str] = &[
+            "queue_depth",
+            "running",
+            "paused",
+            "live",
+            "admitted",
+            "max_sessions",
+            "total_lanes",
+            "rounds",
+            "scheduler_steps",
+            "auto_checkpoints",
+            "promotions",
+            "evicted",
+        ];
+        let mut sums: BTreeMap<&str, f64> = SUMMED.iter().map(|k| (*k, 0.0)).collect();
+        let mut per_host = Vec::new();
+        let mut host_sessions: BTreeMap<usize, Vec<Json>> = BTreeMap::new();
+        let mut reachable = 0usize;
+        for (i, addr) in &addrs {
+            match net::request_ok(addr, &stats_req, timeout) {
+                Ok(resp) => {
+                    reachable += 1;
+                    for key in SUMMED {
+                        if let Some(v) = resp.get_f64(key) {
+                            *sums.get_mut(key).unwrap() += v;
+                        }
+                    }
+                    if let Some(sessions) = resp.get("sessions").and_then(|s| s.as_arr()) {
+                        host_sessions.insert(*i, sessions.clone());
+                    }
+                    per_host.push(Json::obj(vec![
+                        ("addr", Json::Str(addr.clone())),
+                        ("ok", Json::Bool(true)),
+                        ("live", Json::Num(resp.get_f64("live").unwrap_or(0.0))),
+                        ("running", Json::Num(resp.get_f64("running").unwrap_or(0.0))),
+                        (
+                            "queue_depth",
+                            Json::Num(resp.get_f64("queue_depth").unwrap_or(0.0)),
+                        ),
+                    ]));
+                }
+                Err(e) => per_host.push(Json::obj(vec![
+                    ("addr", Json::Str(addr.clone())),
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::Str(e)),
+                ])),
+            }
+        }
+        // Re-key each placed session's state under its cluster id.
+        let placements = self.inner.placements.lock().unwrap().clone();
+        let mut sessions = Vec::new();
+        for (cid, p) in &placements {
+            let found = host_sessions.get(&p.host).and_then(|list| {
+                list.iter()
+                    .find(|s| s.get_f64("id").map(|v| v as u64) == Some(p.remote_id))
+            });
+            match found {
+                Some(state) => {
+                    if let Json::Obj(mut m) = state.clone() {
+                        m.insert("id".into(), Json::Num(*cid as f64));
+                        if let Some(addr) =
+                            addrs.iter().find(|(i, _)| *i == p.host).map(|(_, a)| a)
+                        {
+                            m.insert("host".into(), Json::Str(addr.clone()));
+                        }
+                        sessions.push(Json::Obj(m));
+                    }
+                }
+                None if p.migrating => sessions.push(migrating_state_json(*cid, p)),
+                None => {} // evicted or unreachable host; omit
+            }
+        }
+        let mut out = fields(vec![
+            ("hosts_reachable", Json::Num(reachable as f64)),
+            ("hosts_total", Json::Num(addrs.len() as f64)),
+            ("sessions", Json::Arr(sessions)),
+            ("per_host", Json::Arr(per_host)),
+            ("hosts", self.hosts_json()),
+            (
+                "router",
+                Json::obj(vec![
+                    (
+                        "migrations",
+                        Json::Num(self.inner.migrations.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "failed_probes",
+                        Json::Num(self.inner.failed_probes.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "placements",
+                        Json::Num(placements.len() as f64),
+                    ),
+                ]),
+            ),
+        ]);
+        for key in SUMMED {
+            out.insert((*key).to_string(), Json::Num(sums[key]));
+        }
+        Ok(out)
+    }
+
+    /// Cluster-level `metrics`: counters and gauges summed across the
+    /// router's own registry and every reachable host (histograms
+    /// cannot be merged across processes, so only the router's own
+    /// are reported, with each host's full dump under `per_host`).
+    fn metrics(&self) -> Result<Fields, String> {
+        let mut out: Fields =
+            fields(crate::serve::protocol::metrics_fields());
+        let metrics_req = Json::obj(vec![("cmd", Json::Str("metrics".into()))]);
+        let timeout = self.request_timeout();
+        let addrs: Vec<String> = {
+            let hosts = self.inner.hosts.lock().unwrap();
+            hosts.iter().map(|h| h.addr.clone()).collect()
+        };
+        let mut per_host = Vec::new();
+        for addr in &addrs {
+            match net::request_ok(addr, &metrics_req, timeout) {
+                Ok(resp) => {
+                    for section in ["counters", "gauges"] {
+                        let (Some(Json::Obj(acc)), Some(Json::Obj(host_vals))) =
+                            (out.get_mut(section), resp.get(section))
+                        else {
+                            continue;
+                        };
+                        for (name, v) in host_vals {
+                            let add = v.as_f64().unwrap_or(0.0);
+                            let cur =
+                                acc.get(name).and_then(|x| x.as_f64()).unwrap_or(0.0);
+                            acc.insert(name.clone(), Json::Num(cur + add));
+                        }
+                    }
+                    let mut m = match resp {
+                        Json::Obj(m) => m,
+                        _ => BTreeMap::new(),
+                    };
+                    m.remove("ok");
+                    m.insert("addr".into(), Json::Str(addr.clone()));
+                    per_host.push(Json::Obj(m));
+                }
+                Err(e) => per_host.push(Json::obj(vec![
+                    ("addr", Json::Str(addr.clone())),
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::Str(e)),
+                ])),
+            }
+        }
+        out.insert("per_host".into(), Json::Arr(per_host));
+        Ok(out)
+    }
+}
+
+/// The synthesized `status` body while a session is mid-migration:
+/// enough identity to keep dashboards honest, with a status no host
+/// would ever report.
+fn migrating_state_json(cid: u64, p: &Placement) -> Json {
+    Json::obj(vec![
+        ("id", Json::Num(cid as f64)),
+        ("status", Json::Str("migrating".into())),
+        ("lineage", Json::Str(p.stem.clone())),
+    ])
+}
+
+/// Lineage stem from a checkpoint file path
+/// (`.../<stem>-step<N>.ckpt` → `<stem>`).
+fn stem_of_path(path: &str) -> Option<String> {
+    std::path::Path::new(path)
+        .file_name()
+        .and_then(|s| s.to_str())
+        .and_then(|f| f.strip_suffix(".ckpt"))
+        .and_then(|b| b.rsplit_once("-step"))
+        .map(|(stem, _)| stem.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::HostSpec;
+
+    fn cfg(hosts: Vec<&str>) -> ClusterConfig {
+        ClusterConfig {
+            hosts: hosts
+                .into_iter()
+                .map(|a| HostSpec { addr: a.into(), checkpoint_dir: String::new() })
+                .collect(),
+            probe_interval_ms: 0, // manual probing
+            probe_timeout_ms: 100,
+            request_timeout_ms: 200,
+            ..ClusterConfig::default()
+        }
+    }
+
+    #[test]
+    fn stem_of_path_parses_checkpoint_names() {
+        assert_eq!(stem_of_path("/ck/job-3-step40.ckpt").as_deref(), Some("job-3"));
+        assert_eq!(stem_of_path("rel/a_b-7-step0.ckpt").as_deref(), Some("a_b-7"));
+        assert_eq!(stem_of_path("noext"), None);
+        assert_eq!(stem_of_path("plain.ckpt"), None);
+    }
+
+    #[test]
+    fn unknown_commands_and_sessions_error_cleanly() {
+        let r = Router::start(cfg(vec![]));
+        let resp = r.dispatch(&Json::obj(vec![("cmd", Json::Str("nope".into()))]));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert!(resp.get_str("error").unwrap().contains("unknown command"));
+        let resp = r.dispatch(&Json::obj(vec![
+            ("cmd", Json::Str("status".into())),
+            ("session", Json::Num(7.0)),
+            ("id", Json::Num(9.0)),
+        ]));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(resp.get("id"), Some(&Json::Num(9.0)), "id echoed on errors");
+        // No hosts → no placement possible.
+        let resp = r.dispatch(&Json::obj(vec![
+            ("cmd", Json::Str("submit".into())),
+            ("checkpoint", Json::Str("/nonexistent-step0.ckpt".into())),
+        ]));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert!(resp.get_str("error").unwrap().contains("no live host"));
+        r.shutdown();
+    }
+
+    #[test]
+    fn probes_walk_up_suspect_down_and_count_failures() {
+        // Two dead addresses (bound then released).
+        let dead = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let mut c = cfg(vec![dead.as_str()]);
+        c.probe_fails_down = 2;
+        c.auto_migrate = false;
+        let r = Router::start(c);
+        assert_eq!(r.hosts()[0].health, HostHealth::Up, "optimistic start");
+        r.probe_once();
+        assert_eq!(r.hosts()[0].health, HostHealth::Suspect);
+        r.probe_once();
+        assert_eq!(r.hosts()[0].health, HostHealth::Down);
+        assert_eq!(r.failed_probes(), 2);
+        assert_eq!(r.hosts()[0].consecutive_failures, 2);
+        r.shutdown();
+    }
+
+    #[test]
+    fn drain_requires_a_known_host() {
+        let r = Router::start(cfg(vec!["127.0.0.1:1"]));
+        assert!(r.drain("127.0.0.1:2").is_err());
+        assert!(r.undrain("127.0.0.1:2").is_err());
+        r.drain("127.0.0.1:1").unwrap();
+        assert!(r.hosts()[0].draining);
+        r.undrain("127.0.0.1:1").unwrap();
+        assert!(!r.hosts()[0].draining);
+        r.shutdown();
+    }
+}

@@ -1,0 +1,146 @@
+//! Rendezvous (highest-random-weight) placement.
+//!
+//! Every (key, host) pair gets a pseudo-random score; the key lives
+//! on the highest-scoring host. Two properties make this the right
+//! shape for session placement:
+//!
+//! * **Deterministic** — every router instance, restarted or not,
+//!   computes the same placement from the same host list. No
+//!   placement table has to survive a router crash.
+//! * **Minimal disruption** — removing a host only remaps the keys
+//!   whose top choice it was (they fall to their second choice);
+//!   every other key's ranking is untouched. Consistent-hash rings
+//!   share the property but need virtual nodes to balance; HRW is
+//!   balanced by construction at our fleet sizes (N ≤ dozens, and
+//!   scoring is O(N) per placement — negligible next to a training
+//!   step).
+//!
+//! The key is the session's checkpoint lineage stem
+//! (`<safe-name>-<original-id>`), the one identity that survives
+//! checkpoint/restore and cluster migration — so a lineage resumed
+//! after a full cluster restart lands back on the host it would have
+//! been on all along.
+
+/// 64-bit FNV-1a over `bytes` — the same hash family the serve layer
+/// uses for weights digests: tiny, portable, and plenty uniform for
+/// placement scoring (this is load-balancing, not cryptography).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The rendezvous score of `key` on `host`. Key and host are hashed
+/// with a separator byte that cannot occur in either (neither stems
+/// nor socket addresses contain NUL), so `("ab", "c")` and
+/// `("a", "bc")` cannot collide structurally.
+pub fn score(key: &str, host: &str) -> u64 {
+    let mut bytes = Vec::with_capacity(key.len() + host.len() + 1);
+    bytes.extend_from_slice(key.as_bytes());
+    bytes.push(0);
+    bytes.extend_from_slice(host.as_bytes());
+    fnv1a(&bytes)
+}
+
+/// Index of the highest-scoring host for `key`, or `None` for an
+/// empty candidate list. Ties (astronomically unlikely, but the
+/// contract must be total) break toward the lexicographically
+/// smallest host string so every router agrees.
+pub fn rendezvous<S: AsRef<str>>(key: &str, hosts: &[S]) -> Option<usize> {
+    let mut best: Option<(u64, &str, usize)> = None;
+    for (i, h) in hosts.iter().enumerate() {
+        let h = h.as_ref();
+        let s = score(key, h);
+        let better = match best {
+            None => true,
+            Some((bs, bh, _)) => s > bs || (s == bs && h < bh),
+        };
+        if better {
+            best = Some((s, h, i));
+        }
+    }
+    best.map(|(_, _, i)| i)
+}
+
+/// All candidate indices for `key`, best first — the failover order a
+/// router walks when the top choice refuses a submit.
+pub fn ranked<S: AsRef<str>>(key: &str, hosts: &[S]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..hosts.len()).collect();
+    order.sort_by(|&a, &b| {
+        let (sa, sb) = (score(key, hosts[a].as_ref()), score(key, hosts[b].as_ref()));
+        sb.cmp(&sa).then_with(|| hosts[a].as_ref().cmp(hosts[b].as_ref()))
+    });
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn rendezvous_is_deterministic_and_total() {
+        let hosts = ["h1:7931", "h2:7931", "h3:7931"];
+        for key in ["job-1", "job-2", "tenant/x-17"] {
+            let a = rendezvous(key, &hosts).unwrap();
+            let b = rendezvous(key, &hosts).unwrap();
+            assert_eq!(a, b);
+        }
+        let none: [&str; 0] = [];
+        assert_eq!(rendezvous("job-1", &none), None);
+    }
+
+    #[test]
+    fn ranked_leads_with_the_rendezvous_winner() {
+        let hosts = ["h1:7931", "h2:7931", "h3:7931"];
+        for key in ["a-1", "b-2", "c-3", "d-4"] {
+            let order = ranked(key, &hosts);
+            assert_eq!(order.len(), 3);
+            assert_eq!(order[0], rendezvous(key, &hosts).unwrap());
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2], "a permutation of all hosts");
+        }
+    }
+
+    #[test]
+    fn removing_a_host_only_remaps_its_own_keys() {
+        let hosts = ["h1:7931", "h2:7931", "h3:7931", "h4:7931"];
+        let keys: Vec<String> = (0..300).map(|i| format!("job{i}-{i}")).collect();
+        let before: Vec<usize> =
+            keys.iter().map(|k| rendezvous(k, &hosts).unwrap()).collect();
+        // Drop h3 (index 2); survivors keep their identity strings.
+        let survivors = ["h1:7931", "h2:7931", "h4:7931"];
+        for (k, &was) in keys.iter().zip(&before) {
+            let now = rendezvous(k, &survivors).unwrap();
+            if was != 2 {
+                // Map the surviving index back to the original list.
+                let now_orig = [0usize, 1, 3][now];
+                assert_eq!(now_orig, was, "key {k} moved without its host dying");
+            }
+        }
+    }
+
+    #[test]
+    fn placement_is_roughly_balanced() {
+        let hosts = ["h1:7931", "h2:7931", "h3:7931"];
+        let mut counts = [0usize; 3];
+        for i in 0..600 {
+            counts[rendezvous(&format!("job{i}-{i}"), &hosts).unwrap()] += 1;
+        }
+        for &c in &counts {
+            // Perfect balance is 200 per host; allow a generous band.
+            assert!(c > 120 && c < 280, "skewed placement: {counts:?}");
+        }
+    }
+}

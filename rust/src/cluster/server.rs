@@ -1,0 +1,299 @@
+//! The router's TCP front door.
+//!
+//! Same line framing, limits and lifecycle as the per-host
+//! [`crate::serve::server`] (one request per line, one response per
+//! line, `MAX_LINE_BYTES` cap, non-blocking accept polled against
+//! shutdown) — a client cannot tell a router from a single host by
+//! its framing, only by the extra commands it answers.
+//!
+//! The streaming `watch` command is proxied, not forwarded blindly: a
+//! relay that just pipes bytes would hang forever when the upstream
+//! host dies or the session migrates away mid-stream. The proxy reads
+//! the upstream in short slices and re-checks the placement between
+//! slices, so every disruption ends the stream with a clean final
+//! line the client can act on:
+//!
+//! * `"status": "migrating"` — the session moved (or is moving) to
+//!   another host; re-issue the watch and the router will stream from
+//!   its new home. This is the redirect path; an upstream `end` with
+//!   `"cancelled"` caused by our own migration-cancel is rewritten to
+//!   it so clients never mistake a rebalance for a user cancel.
+//! * `"status": "unreachable"` — the host stopped answering and the
+//!   session has (so far) nowhere else to be.
+//! * `"status": "stopped"` / `"evicted"` — as in the serve layer.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use crate::cluster::net::Conn;
+use crate::cluster::router::{HostHealth, Router};
+use crate::jsonx::Json;
+use crate::serve::server::MAX_LINE_BYTES;
+
+/// How long one relay read waits before re-checking placement,
+/// health and shutdown. Step lines normally arrive much faster; this
+/// only bounds how stale the proxy's world view can get.
+const RELAY_SLICE: Duration = Duration::from_millis(200);
+
+/// A running router listener.
+pub struct RouterServer {
+    addr: SocketAddr,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RouterServer {
+    /// Bind `addr` (port 0 for ephemeral) and start accepting. Serves
+    /// until the router is shut down.
+    pub fn start(router: Router, addr: &str) -> std::io::Result<RouterServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let handle = std::thread::Builder::new()
+            .name("eva-router-accept".into())
+            .spawn(move || accept_loop(listener, router))?;
+        Ok(RouterServer { addr: local, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0 to the real ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until the accept loop exits (i.e. until the router is
+    /// shut down) and drain connection handlers.
+    pub fn join(mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, router: Router) {
+    let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !router.is_stopped() {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let router = router.clone();
+                if let Ok(h) = std::thread::Builder::new()
+                    .name("eva-router-conn".into())
+                    .spawn(move || handle_conn(stream, router))
+                {
+                    handlers.push(h);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => break,
+        }
+        handlers.retain(|h| !h.is_finished());
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+fn handle_conn(stream: TcpStream, router: Router) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let write = stream.try_clone();
+    let mut reader = BufReader::new(stream);
+    let Ok(mut write) = write else { return };
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) => {
+                if line.trim().is_empty() {
+                    line.clear();
+                    continue;
+                }
+                let resp = if line.len() > MAX_LINE_BYTES {
+                    Json::obj(vec![
+                        ("ok", Json::Bool(false)),
+                        (
+                            "error",
+                            Json::Str(format!("request exceeds {MAX_LINE_BYTES} bytes")),
+                        ),
+                    ])
+                } else {
+                    match Json::parse(line.trim()) {
+                        Ok(req) if req.get_str("cmd") == Some("watch") => {
+                            line.clear();
+                            if stream_watch_proxy(&mut write, &router, &req) {
+                                continue;
+                            }
+                            break; // client gone mid-stream
+                        }
+                        Ok(req) => router.dispatch(&req),
+                        Err(e) => Json::obj(vec![
+                            ("ok", Json::Bool(false)),
+                            ("error", Json::Str(format!("bad request: {e}"))),
+                        ]),
+                    }
+                };
+                let oversized = line.len() > MAX_LINE_BYTES;
+                line.clear();
+                let mut out = resp.dump();
+                out.push('\n');
+                if write.write_all(out.as_bytes()).is_err() || write.flush().is_err() {
+                    break;
+                }
+                if oversized {
+                    break;
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if router.is_stopped() || line.len() > MAX_LINE_BYTES {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// Proxy one `watch` as a step-event stream, ending cleanly on every
+/// disruption (see module docs). Returns `true` when the connection
+/// is still usable for further requests, `false` when the client
+/// vanished mid-stream.
+fn stream_watch_proxy(write: &mut TcpStream, router: &Router, req: &Json) -> bool {
+    let echo_id = req.get("id").cloned();
+    let send = |write: &mut TcpStream, mut pairs: Vec<(&'static str, Json)>| -> bool {
+        if let Some(id) = &echo_id {
+            pairs.push(("id", id.clone()));
+        }
+        let mut out = Json::obj(pairs).dump();
+        out.push('\n');
+        write.write_all(out.as_bytes()).is_ok() && write.flush().is_ok()
+    };
+    let fail = |write: &mut TcpStream, e: String| -> bool {
+        send(write, vec![("ok", Json::Bool(false)), ("error", Json::Str(e))])
+    };
+    let end = |write: &mut TcpStream, status: &str| -> bool {
+        send(
+            write,
+            vec![
+                ("ok", Json::Bool(true)),
+                ("event", Json::Str("end".into())),
+                ("status", Json::Str(status.into())),
+            ],
+        )
+    };
+    let Some(cid) = req.get_f64("session").map(|v| v as u64) else {
+        return fail(write, "missing 'session' id".into());
+    };
+    let Some(p) = router.placement(cid) else {
+        return fail(write, format!("unknown session {cid}"));
+    };
+    let timeout = Duration::from_millis(router.config().request_timeout_ms);
+    // Mid-migration at watch start: ack + immediate redirect, so a
+    // retrying client needs no special first-line handling.
+    if p.migrating {
+        if !send(
+            write,
+            vec![
+                ("ok", Json::Bool(true)),
+                ("event", Json::Str("watching".into())),
+                ("session", Json::Num(cid as f64)),
+            ],
+        ) {
+            return false;
+        }
+        return end(write, "migrating");
+    }
+    let Some(addr) = router.host_addr(p.host) else {
+        return fail(write, format!("session {cid}: host index {} gone", p.host));
+    };
+    let mut upstream = match Conn::connect(&addr, timeout) {
+        Ok(c) => c,
+        Err(e) => return fail(write, format!("host {addr}: {e}")),
+    };
+    let upstream_req = Json::obj(vec![
+        ("cmd", Json::Str("watch".into())),
+        ("session", Json::Num(p.remote_id as f64)),
+    ]);
+    let ack = match upstream.request(&upstream_req) {
+        Ok(a) => a,
+        Err(e) => return fail(write, format!("host {addr}: {e}")),
+    };
+    if ack.get("ok") != Some(&Json::Bool(true)) {
+        return fail(write, ack.get_str("error").unwrap_or("watch failed").to_string());
+    }
+    if !send(
+        write,
+        vec![
+            ("ok", Json::Bool(true)),
+            ("event", Json::Str("watching".into())),
+            ("session", Json::Num(cid as f64)),
+        ],
+    ) {
+        return false;
+    }
+    // `moved` = the placement no longer points where this stream
+    // reads from — the session migrated (or is migrating) away.
+    let moved = |router: &Router| -> bool {
+        router
+            .placement(cid)
+            .map(|q| q.migrating || q.host != p.host)
+            .unwrap_or(false)
+    };
+    loop {
+        match upstream.recv_deadline(Instant::now() + RELAY_SLICE) {
+            Ok(line_obj) => {
+                if line_obj.get_str("event") == Some("end") {
+                    // Our own migration cancels the source copy; its
+                    // stream then ends "cancelled". Report the truth.
+                    if line_obj.get_str("status") == Some("cancelled") && moved(router) {
+                        return end(write, "migrating");
+                    }
+                    let mut out = line_obj.dump();
+                    if let Some(id) = &echo_id {
+                        if let Json::Obj(mut m) = line_obj {
+                            m.insert("id".into(), id.clone());
+                            out = Json::Obj(m).dump();
+                        }
+                    }
+                    out.push('\n');
+                    return write.write_all(out.as_bytes()).is_ok() && write.flush().is_ok();
+                }
+                // Step line (or future event kind): relay verbatim.
+                let mut out = line_obj.dump();
+                out.push('\n');
+                if write.write_all(out.as_bytes()).is_err() || write.flush().is_err() {
+                    return false; // client gone; upstream stream ends with us
+                }
+            }
+            Err(e) if e.contains("timed out") => {
+                if router.placement(cid).is_none() {
+                    return end(write, "evicted");
+                }
+                if moved(router) {
+                    return end(write, "migrating");
+                }
+                if router.is_stopped() {
+                    return end(write, "stopped");
+                }
+                // A wedged upstream must not pin this thread forever:
+                // once the prober has declared the host down, give up.
+                let down = router
+                    .hosts()
+                    .get(p.host)
+                    .map(|h| h.health == HostHealth::Down)
+                    .unwrap_or(true);
+                if down {
+                    return end(write, "unreachable");
+                }
+            }
+            Err(_) => {
+                // Upstream closed or broke mid-stream.
+                return end(write, if moved(router) { "migrating" } else { "unreachable" });
+            }
+        }
+    }
+}

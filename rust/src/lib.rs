@@ -33,6 +33,7 @@
 
 pub mod backend;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -59,6 +59,7 @@ fn run(args: &[String]) -> Result<()> {
         }
         "train" => train(&cli),
         "serve" => serve(&cli),
+        "router" => router(&cli),
         "experiment" => {
             let id = cli
                 .positional
@@ -251,6 +252,115 @@ fn serve(cli: &Cli) -> Result<()> {
         println!("\n-- telemetry --\n{}", eva::telemetry::render_text());
     }
     println!("serve: shut down");
+    Ok(())
+}
+
+/// `eva router` — the cluster front door: places sessions across N
+/// backend serve processes, probes their health, and rescues sessions
+/// off dead hosts by checkpoint migration. Speaks the same ndjson
+/// protocol as `eva serve`, so any serve client works unchanged.
+fn router(cli: &Cli) -> Result<()> {
+    use eva::cluster::{ClusterConfig, HostSpec, Router, RouterServer};
+    use eva::serve::signal;
+    let mut cfg = if let Some(path) = cli.opt("config") {
+        ClusterConfig::from_file(path).map_err(|e| anyhow!(e))?
+    } else {
+        ClusterConfig::default()
+    };
+    if let Some(a) = cli.opt("addr") {
+        cfg.router_addr = a.to_string();
+    }
+    if let Some(hosts) = cli.opt("hosts") {
+        cfg.hosts = hosts
+            .split(',')
+            .map(|a| a.trim())
+            .filter(|a| !a.is_empty())
+            .map(|a| HostSpec { addr: a.to_string(), checkpoint_dir: String::new() })
+            .collect();
+    }
+    if let Some(dirs) = cli.opt("checkpoint-dirs") {
+        let dirs: Vec<&str> = dirs.split(',').map(|d| d.trim()).collect();
+        if dirs.len() != cfg.hosts.len() {
+            return Err(anyhow!(
+                "--checkpoint-dirs lists {} dirs for {} hosts",
+                dirs.len(),
+                cfg.hosts.len()
+            ));
+        }
+        for (h, d) in cfg.hosts.iter_mut().zip(dirs) {
+            h.checkpoint_dir = d.to_string();
+        }
+    }
+    if let Some(n) = cli.opt_usize("probe-interval-ms").map_err(|e| anyhow!(e))? {
+        cfg.probe_interval_ms = n as u64;
+    }
+    if let Some(n) = cli.opt_usize("probe-timeout-ms").map_err(|e| anyhow!(e))? {
+        if n == 0 {
+            return Err(anyhow!("--probe-timeout-ms must be ≥ 1"));
+        }
+        cfg.probe_timeout_ms = n as u64;
+    }
+    if let Some(n) = cli.opt_usize("probe-fails").map_err(|e| anyhow!(e))? {
+        if n == 0 {
+            return Err(anyhow!("--probe-fails must be ≥ 1"));
+        }
+        cfg.probe_fails_down = n as u32;
+    }
+    if let Some(n) = cli.opt_usize("request-timeout-ms").map_err(|e| anyhow!(e))? {
+        if n == 0 {
+            return Err(anyhow!("--request-timeout-ms must be ≥ 1"));
+        }
+        cfg.request_timeout_ms = n as u64;
+    }
+    if let Some(v) = cli.opt("auto-migrate") {
+        cfg.auto_migrate = match v {
+            "on" | "true" => true,
+            "off" | "false" => false,
+            other => return Err(anyhow!("--auto-migrate: 'on' or 'off', not '{other}'")),
+        };
+    }
+    if cfg.hosts.is_empty() {
+        return Err(anyhow!("router needs at least one backend host (--hosts A1,A2,...)"));
+    }
+    signal::install_term_handler();
+    let addr = cfg.router_addr.clone();
+    let router = Router::start(cfg.clone());
+    let server = RouterServer::start(router.clone(), &addr)?;
+    println!(
+        "router: listening on {} | {} host(s) | probe every {}ms ({}x{}ms to down) | auto-migrate {}",
+        server.addr(),
+        cfg.hosts.len(),
+        cfg.probe_interval_ms,
+        cfg.probe_fails_down,
+        cfg.probe_timeout_ms,
+        if cfg.auto_migrate { "on" } else { "off" },
+    );
+    for h in &cfg.hosts {
+        println!(
+            "router: host {}{}",
+            h.addr,
+            if h.checkpoint_dir.is_empty() {
+                String::new()
+            } else {
+                format!(" (checkpoints: {})", h.checkpoint_dir)
+            }
+        );
+    }
+    println!("router: newline-delimited JSON; try {{\"cmd\":\"hosts\"}} or {{\"cmd\":\"stats\"}}");
+    while !router.is_stopped() && !signal::term_requested() {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    if signal::term_requested() && !router.is_stopped() {
+        // Control plane only: backend hosts keep training and
+        // checkpointing; a restarted router recomputes placements.
+        println!("router: termination signal");
+        router.shutdown();
+    }
+    server.join();
+    if eva::telemetry::enabled() {
+        println!("\n-- telemetry --\n{}", eva::telemetry::render_text());
+    }
+    println!("router: shut down");
     Ok(())
 }
 

@@ -397,6 +397,59 @@ impl Checkpoint {
     }
 }
 
+/// Scan a checkpoint directory for lineage files
+/// (`<stem>-step<N>.ckpt`), grouped by stem with each lineage's
+/// snapshots sorted newest step first. Stray `*.tmp` files from
+/// interrupted atomic writes and unrelated names are skipped; files
+/// are *not* opened — callers validate with [`Checkpoint::load`] and
+/// fall back to the next-newest step on a torn file. A missing
+/// directory is an empty scan (fresh boot), any other I/O failure is
+/// an error. Shared by `Service::resume_from_dir` and the cluster
+/// router's dead-host migration, so the two can never disagree about
+/// which snapshot is "newest".
+pub fn scan_lineages(
+    dir: &str,
+) -> Result<std::collections::BTreeMap<String, Vec<(u64, String)>>, String> {
+    let mut lineages: std::collections::BTreeMap<String, Vec<(u64, String)>> =
+        std::collections::BTreeMap::new();
+    let rd = match std::fs::read_dir(dir) {
+        Ok(rd) => rd,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(lineages),
+        Err(e) => return Err(format!("{dir}: {e}")),
+    };
+    for entry in rd.flatten() {
+        let path = entry.path();
+        let Some(fname) = path.file_name().and_then(|s| s.to_str()) else { continue };
+        let Some(base) = fname.strip_suffix(".ckpt") else { continue };
+        let Some((stem, step)) = base.rsplit_once("-step") else { continue };
+        let Ok(step) = step.parse::<u64>() else { continue };
+        lineages
+            .entry(stem.to_string())
+            .or_default()
+            .push((step, path.to_string_lossy().into_owned()));
+    }
+    for files in lineages.values_mut() {
+        files.sort_by(|a, b| b.0.cmp(&a.0));
+    }
+    Ok(lineages)
+}
+
+/// The newest *loadable* snapshot of one lineage in `dir` — the
+/// migration entry point for resuming a session off a host that can
+/// no longer answer a `checkpoint` command. Torn or corrupt files are
+/// skipped in favor of the next-newest step (same fallback as
+/// `--resume-dir`). Returns `(step, path, checkpoint)`; `None` when
+/// the lineage has no loadable snapshot at all.
+pub fn newest_loadable(dir: &str, stem: &str) -> Option<(u64, String, Checkpoint)> {
+    let lineages = scan_lineages(dir).ok()?;
+    for (step, path) in lineages.get(stem)? {
+        if let Ok(ck) = Checkpoint::load(path) {
+            return Some((*step, path.clone(), ck));
+        }
+    }
+    None
+}
+
 // ---------------------------------------------------------------------------
 // Little-endian byte codec
 // ---------------------------------------------------------------------------

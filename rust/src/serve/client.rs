@@ -85,6 +85,48 @@ pub trait ServeClient {
         resp.get_f64("session").map(|v| v as u64).ok_or("no session id in response".into())
     }
 
+    /// Submit a checkpoint file *continuing* its recorded lineage —
+    /// name, priority, tenant, pause state and the checkpoint stem
+    /// all come from the file's metadata (migration semantics, not
+    /// fork semantics). Returns the new session id.
+    fn submit_checkpoint_lineage(&mut self, path: &str) -> Result<u64, String> {
+        let resp = self.request_ok(Json::obj(vec![
+            ("cmd", Json::Str("submit".into())),
+            ("checkpoint", Json::Str(path.into())),
+            ("lineage", Json::Bool(true)),
+        ]))?;
+        resp.get_f64("session").map(|v| v as u64).ok_or("no session id in response".into())
+    }
+
+    /// The host registry (`hosts` command): one entry per backend
+    /// host with `addr`, `health`, `draining`, `live`. A plain serve
+    /// process reports itself as a cluster of one; the router returns
+    /// its whole registry.
+    fn hosts(&mut self) -> Result<Vec<Json>, String> {
+        let resp = self.request_ok(Json::obj(vec![("cmd", Json::Str("hosts".into()))]))?;
+        resp.get("hosts")
+            .and_then(|h| h.as_arr().cloned())
+            .ok_or("no hosts in response".into())
+    }
+
+    /// Router-only: stop admitting to `host` and migrate its sessions
+    /// away (checkpoint there, resume elsewhere). Returns the
+    /// response object (`migrated`, `failed` counts).
+    fn drain(&mut self, host: &str) -> Result<Json, String> {
+        self.request_ok(Json::obj(vec![
+            ("cmd", Json::Str("drain".into())),
+            ("host", Json::Str(host.into())),
+        ]))
+    }
+
+    /// Router-only: re-admit a drained host.
+    fn undrain(&mut self, host: &str) -> Result<Json, String> {
+        self.request_ok(Json::obj(vec![
+            ("cmd", Json::Str("undrain".into())),
+            ("host", Json::Str(host.into())),
+        ]))
+    }
+
     /// One session's state object.
     fn status(&mut self, id: u64) -> Result<Json, String> {
         let resp = self.request_ok(Json::obj(vec![

@@ -6,7 +6,7 @@
 //!
 //! | `cmd` | request fields | response fields |
 //! |---|---|---|
-//! | `submit` | `config` *(object)* **or** `checkpoint` *(path)*, `name`?, `priority`?, `tenant`? | `session`, `status`, `queue_position` |
+//! | `submit` | `config` *(object)* **or** `checkpoint` *(path)* \[+ `lineage: true`\], `name`?, `priority`?, `tenant`? | `session`, `status`, `queue_position` |
 //! | `status` | `session` | session state |
 //! | `pause` | `session` | session state |
 //! | `resume` | `session` | session state |
@@ -14,8 +14,22 @@
 //! | `cancel` | `session` | session state |
 //! | `stats` | — | service stats + per-session states |
 //! | `metrics` | — | [`crate::telemetry`] registry dump (`telemetry`, `counters`, `gauges`, `histograms`) |
+//! | `hosts` | — | `hosts` array (one self entry; a cluster router returns its whole registry) |
 //! | `watch` | `session` | *streaming* — see below |
 //! | `shutdown` | — | `stopping: true` |
+//!
+//! A checkpoint `submit` is *fork* semantics by default (fresh
+//! lineage under the new id); with `"lineage": true` it instead
+//! **continues** the snapshot's lineage — name, priority, tenant,
+//! pause/terminal state and the checkpoint stem all come from the
+//! file's own metadata, which is how the cluster router migrates a
+//! session between hosts without forking its identity
+//! ([`crate::serve::Service::submit_checkpoint_lineage`]).
+//!
+//! The same wire protocol is spoken by single-process `eva serve`
+//! hosts and by the `eva router` cluster front door
+//! ([`crate::cluster`]); [`forwardable`] classifies which commands a
+//! router proxies to the backend host owning the addressed session.
 //!
 //! Every response carries `ok` (bool) and, on failure, `error`
 //! (string). A request's `id` field, if present, is echoed back so
@@ -71,7 +85,11 @@ fn handle(svc: &Service, req: &Json) -> Result<Vec<(&'static str, Json)>, String
             let priority = req.get_usize("priority").unwrap_or(1);
             let tenant = req.get_str("tenant");
             let id = if let Some(path) = req.get_str("checkpoint") {
-                svc.submit_checkpoint_as(path, &name, priority, tenant)?
+                if req.get("lineage").and_then(|v| v.as_bool()) == Some(true) {
+                    svc.submit_checkpoint_lineage(path)?
+                } else {
+                    svc.submit_checkpoint_as(path, &name, priority, tenant)?
+                }
             } else {
                 let cfg_json = req
                     .get("config")
@@ -101,6 +119,19 @@ fn handle(svc: &Service, req: &Json) -> Result<Vec<(&'static str, Json)>, String
         }
         "stats" => Ok(stats_fields(&svc.stats())),
         "metrics" => Ok(metrics_fields()),
+        // A plain serve process is a cluster of one: report itself so
+        // router-aware clients can speak to either endpoint uniformly.
+        "hosts" => {
+            let st = svc.stats();
+            let me = Json::obj(vec![
+                ("addr", Json::Str(svc.config().addr.clone())),
+                ("health", Json::Str("up".into())),
+                ("draining", Json::Bool(false)),
+                ("live", Json::Num(st.live as f64)),
+                ("checkpoint_dir", Json::Str(svc.config().checkpoint_dir.clone())),
+            ]);
+            Ok(vec![("hosts", Json::Arr(vec![me]))])
+        }
         // `watch` streams many lines; dispatch is strictly one
         // request / one response, so the TCP server intercepts it
         // before this point. Reaching here means an in-process caller
@@ -117,6 +148,21 @@ fn handle(svc: &Service, req: &Json) -> Result<Vec<(&'static str, Json)>, String
         }
         other => Err(format!("unknown command '{other}'")),
     }
+}
+
+/// Commands a cluster router forwards verbatim to the backend host
+/// that owns the addressed session (everything keyed by a `session`
+/// id, plus the streaming `watch`). The rest — `submit`, `stats`,
+/// `metrics`, `hosts`, `shutdown` and router-only verbs like `drain`
+/// — need placement or aggregation logic and are handled by the
+/// router itself.
+pub const FORWARDABLE_SESSION_CMDS: &[&str] =
+    &["status", "pause", "resume", "cancel", "checkpoint", "watch"];
+
+/// Whether a command is proxied as-is to the owning backend host by
+/// the cluster router (see [`FORWARDABLE_SESSION_CMDS`]).
+pub fn forwardable(cmd: &str) -> bool {
+    FORWARDABLE_SESSION_CMDS.contains(&cmd)
 }
 
 /// A session state as protocol response fields.
@@ -141,6 +187,7 @@ pub fn session_state_json(st: &SessionState) -> Json {
         ("p50_step_ms", Json::Num(st.p50_step_ms)),
         ("p95_step_ms", Json::Num(st.p95_step_ms)),
         ("lane_share", Json::Num(st.lane_share as f64)),
+        ("lineage", Json::Str(st.lineage.clone())),
     ];
     if let Some(v) = st.last_val_metric {
         pairs.push(("last_val_metric", Json::Num(v as f64)));

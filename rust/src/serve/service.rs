@@ -428,6 +428,36 @@ impl Service {
         self.admit(session)
     }
 
+    /// Admit a checkpoint file *continuing its lineage* — the cluster
+    /// migration entry point (the protocol reaches it via `submit`
+    /// with `"lineage": true`). Unlike [`Service::submit_checkpoint`]
+    /// (fork semantics: fresh stem under the new id), the restored
+    /// session keeps the snapshot's own name, priority, tenant,
+    /// pause/terminal state and checkpoint stem, so one logical
+    /// session keeps one identity as it moves between hosts — its
+    /// future snapshots extend the same lineage, and the stem-embedded
+    /// original id is reserved so fresh submits can never mint a
+    /// colliding stem. Per-tenant quotas are bypassed, as on the
+    /// `--resume-dir` path: a migration must never drop a session the
+    /// cluster already admitted. Returns the new local session id.
+    pub fn submit_checkpoint_lineage(&self, path: &str) -> Result<u64, String> {
+        if self.is_stopped() {
+            return Err("service is shut down".into());
+        }
+        let ck = Checkpoint::load(path)?;
+        // v1 snapshots carry no stem; fall back to the on-disk file
+        // prefix so even those keep a stable identity.
+        let fallback = std::path::Path::new(path)
+            .file_name()
+            .and_then(|s| s.to_str())
+            .and_then(|f| f.strip_suffix(".ckpt"))
+            .and_then(|b| b.rsplit_once("-step"))
+            .map(|(stem, _)| stem.to_string())
+            .unwrap_or_default();
+        let stem = if ck.stem.is_empty() { fallback } else { ck.stem.clone() };
+        self.admit_lineage(&ck, &stem)
+    }
+
     /// Re-admit the newest checkpoint of every lineage found in `dir`
     /// (files named `<stem>-step<N>.ckpt`), making a restarted serve
     /// process transparent to clients: names, priorities, tenants and
@@ -443,29 +473,12 @@ impl Service {
         if self.is_stopped() {
             return Err("service is shut down".into());
         }
-        let rd = match std::fs::read_dir(dir) {
-            Ok(rd) => rd,
-            // A dir that was never created is a fresh boot; any other
-            // failure (permissions, I/O) must surface — silently
-            // booting empty would strand every pre-restart session.
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
-            Err(e) => return Err(format!("{dir}: {e}")),
-        };
-        let mut lineages: BTreeMap<String, Vec<(u64, String)>> = BTreeMap::new();
-        for entry in rd.flatten() {
-            let path = entry.path();
-            let Some(fname) = path.file_name().and_then(|s| s.to_str()) else { continue };
-            let Some(base) = fname.strip_suffix(".ckpt") else { continue };
-            let Some((stem, step)) = base.rsplit_once("-step") else { continue };
-            let Ok(step) = step.parse::<u64>() else { continue };
-            lineages
-                .entry(stem.to_string())
-                .or_default()
-                .push((step, path.to_string_lossy().into_owned()));
-        }
+        // A dir that was never created is a fresh boot (empty scan);
+        // any other failure (permissions, I/O) surfaces — silently
+        // booting empty would strand every pre-restart session.
+        let lineages = crate::serve::checkpoint::scan_lineages(dir)?;
         let mut ids = Vec::new();
-        for (stem, mut files) in lineages {
-            files.sort_by(|a, b| b.0.cmp(&a.0));
+        for (stem, files) in lineages {
             for (step, path) in &files {
                 match self.resume_one(&stem, path) {
                     Ok(id) => {
@@ -484,6 +497,14 @@ impl Service {
 
     fn resume_one(&self, stem: &str, path: &str) -> Result<u64, String> {
         let ck = Checkpoint::load(path)?;
+        self.admit_lineage(&ck, stem)
+    }
+
+    /// Shared lineage-admission tail of `--resume-dir` boot and
+    /// [`Service::submit_checkpoint_lineage`]: reserve the
+    /// stem-embedded original id, mint a fresh local id, and admit
+    /// quota-free.
+    fn admit_lineage(&self, ck: &Checkpoint, stem: &str) -> Result<u64, String> {
         // Stems embed the session's *original* id; fresh ids must
         // never reuse one, or a new submit with the same name would
         // mint an identical stem and the two sessions would overwrite
@@ -494,7 +515,7 @@ impl Service {
             }
         }
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
-        self.admit_with_quota(Session::from_checkpoint_lineage(id, &ck, stem)?, false)
+        self.admit_with_quota(Session::from_checkpoint_lineage(id, ck, stem)?, false)
     }
 
     fn session(&self, id: u64) -> Result<Arc<Mutex<Session>>, String> {

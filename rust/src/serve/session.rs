@@ -116,6 +116,10 @@ pub struct SessionState {
     pub p95_step_ms: f64,
     /// Lanes the last scheduler carve granted this session.
     pub lane_share: usize,
+    /// Checkpoint lineage stem (`<safe-name>-<original-id>`) — the
+    /// stable identity of this logical session across restarts and
+    /// cluster migrations; routers key on it.
+    pub lineage: String,
 }
 
 /// A resumable, time-sliceable training job.
@@ -453,6 +457,7 @@ impl Session {
             p50_step_ms: self.timer.percentile_ms(50.0),
             p95_step_ms: self.timer.percentile_ms(95.0),
             lane_share: self.lane_share,
+            lineage: self.ckpt_stem.clone(),
         }
     }
 

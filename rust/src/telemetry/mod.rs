@@ -401,11 +401,20 @@ pub static TENSOR_TMATVEC_FLOPS: Counter = Counter::new("tensor.tmatvec.flops");
 pub static TRAIN_STEPS: Counter = Counter::new("train.steps");
 /// Auto + explicit checkpoints written by the serve layer.
 pub static SERVE_CHECKPOINTS: Counter = Counter::new("serve.checkpoints");
+/// Checkpoint-migrations completed by the cluster router (a session
+/// moved from one backend host to another).
+pub static CLUSTER_MIGRATIONS: Counter = Counter::new("cluster.migrations");
+/// Health probes that failed (timeout, refused connection, or a bad
+/// response) — each tick counts once per unreachable host.
+pub static CLUSTER_PROBE_FAILURES: Counter = Counter::new("cluster.probe.failures");
 
 /// Admitted (live) serve sessions, sampled each scheduler round.
 pub static SERVE_SESSIONS_ADMITTED: Gauge = Gauge::new("serve.sessions.admitted");
 /// Waiting (queued, unadmitted) serve sessions, sampled each round.
 pub static SERVE_QUEUE_DEPTH: Gauge = Gauge::new("serve.queue.depth");
+/// Backend hosts the cluster router currently considers up (probed
+/// healthy and not yet marked down).
+pub static CLUSTER_HOSTS_UP: Gauge = Gauge::new("cluster.hosts.up");
 
 /// Whole optimizer step (`LoopState::step_once`), data to apply.
 pub static TRAIN_STEP_US: Histogram = Histogram::new("train.step_us");
@@ -474,12 +483,14 @@ pub fn counters() -> &'static [&'static Counter] {
         &TENSOR_TMATVEC_FLOPS,
         &TRAIN_STEPS,
         &SERVE_CHECKPOINTS,
+        &CLUSTER_MIGRATIONS,
+        &CLUSTER_PROBE_FAILURES,
     ]
 }
 
 /// Every registered gauge, catalog order.
 pub fn gauges() -> &'static [&'static Gauge] {
-    &[&SERVE_SESSIONS_ADMITTED, &SERVE_QUEUE_DEPTH]
+    &[&SERVE_SESSIONS_ADMITTED, &SERVE_QUEUE_DEPTH, &CLUSTER_HOSTS_UP]
 }
 
 /// Every registered histogram, catalog order.

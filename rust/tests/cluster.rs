@@ -1,0 +1,437 @@
+//! Cluster fault-injection suite (ISSUE 7 acceptance).
+//!
+//! An in-process cluster — real `Service` instances behind real TCP
+//! servers, a real router in front — driven through real failures:
+//!
+//! * Kill one host mid-training: the router's probes detect it, the
+//!   session is rescued from its newest auto-checkpoint onto the
+//!   surviving host, and its final weights digest is **bit-identical**
+//!   to an uninterrupted single-host run.
+//! * Protocol adversarial cases at the router boundary: malformed
+//!   ndjson, unknown commands, a `watch` that spans a live migration
+//!   (must end with a clean redirect line, never hang), and a host
+//!   that accepts TCP but never replies (probe-timeout path).
+//! * Rendezvous placement properties over a few hundred synthetic
+//!   stems: deterministic, and removing one host remaps only the
+//!   sessions that lived there.
+
+use std::io::{BufRead, BufReader, Write};
+use std::time::{Duration, Instant};
+
+use eva::cluster::{rendezvous, ClusterConfig, HostHealth, HostSpec, Router, RouterServer};
+use eva::config::{ModelArch, TrainConfig};
+use eva::jsonx::Json;
+use eva::serve::client::{ServeClient, TcpClient};
+use eva::serve::{ServeConfig, Server, Service, Session};
+
+fn train_cfg(seed: u64, steps: u64) -> TrainConfig {
+    let mut c = TrainConfig {
+        name: format!("clu-{seed}"),
+        dataset: "c10-small".into(),
+        seed,
+        arch: ModelArch::Classifier { hidden: vec![12] },
+        // Enough epochs that max_steps is always the binding budget.
+        epochs: 10_000,
+        batch_size: 32,
+        base_lr: 0.05,
+        max_steps: Some(steps),
+        ..TrainConfig::default()
+    };
+    c.optim.algorithm = "eva".into();
+    c
+}
+
+/// Step the config to completion alone — the uninterrupted ground
+/// truth a migrated session must reproduce bit-for-bit.
+fn solo_digest(cfg: &TrainConfig) -> u64 {
+    let mut s = Session::new(0, "solo", 1, cfg).unwrap();
+    while !s.is_done() {
+        assert!(s.run_quantum(16) > 0);
+    }
+    s.digest()
+}
+
+fn temp_dir(tag: &str) -> String {
+    let d = std::env::temp_dir().join(format!("eva-cluster-{tag}"));
+    let _ = std::fs::remove_dir_all(&d);
+    d.to_string_lossy().into_owned()
+}
+
+fn wait_for(deadline_s: u64, what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(deadline_s);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// One backend host: a service with fast auto-checkpoints behind a
+/// real TCP server on an ephemeral port.
+fn start_host(dir: &str) -> (Service, Server) {
+    let svc = Service::start(ServeConfig {
+        checkpoint_dir: dir.to_string(),
+        // A "kill" must lose the un-snapshotted tail, like a real
+        // crash — rescue has to come from the periodic checkpoints.
+        checkpoint_on_shutdown: false,
+        checkpoint_every_steps: 4,
+        quantum_steps: 2,
+        ..ServeConfig::default()
+    });
+    let server = Server::start(svc.clone(), "127.0.0.1:0").unwrap();
+    (svc, server)
+}
+
+/// A router (manual probing — tests drive `probe_once` so failure
+/// detection is deterministic) over the given hosts, plus its TCP
+/// front door.
+fn start_router(hosts: Vec<(&str, String)>) -> (Router, RouterServer) {
+    let cfg = ClusterConfig {
+        router_addr: "127.0.0.1:0".into(),
+        hosts: hosts
+            .into_iter()
+            .map(|(addr, dir)| HostSpec { addr: addr.into(), checkpoint_dir: dir })
+            .collect(),
+        probe_interval_ms: 0,
+        probe_timeout_ms: 250,
+        probe_fails_down: 2,
+        request_timeout_ms: 5000,
+        auto_migrate: true,
+    };
+    let router = Router::start(cfg);
+    let server = RouterServer::start(router.clone(), "127.0.0.1:0").unwrap();
+    (router, server)
+}
+
+#[test]
+fn kill_one_host_migrates_from_newest_checkpoint_bit_identical() {
+    const TARGET: u64 = 40;
+    let (dir_a, dir_b) = (temp_dir("kill-a"), temp_dir("kill-b"));
+    let (svc_a, srv_a) = start_host(&dir_a);
+    let (svc_b, srv_b) = start_host(&dir_b);
+    let (addr_a, addr_b) = (srv_a.addr().to_string(), srv_b.addr().to_string());
+    let (router, front) =
+        start_router(vec![(addr_a.as_str(), dir_a.clone()), (addr_b.as_str(), dir_b.clone())]);
+    let mut client = TcpClient::connect(front.addr()).unwrap();
+
+    let cfg = train_cfg(11, TARGET);
+    let want = solo_digest(&cfg);
+    let (cid, _) = client.submit_as(&cfg, "victim", 1, None).unwrap();
+    let placed = router.placement(cid).expect("routed session has a placement");
+    assert!(!placed.stem.is_empty(), "router must learn the lineage stem");
+
+    // Train past the first auto-checkpoint (every 4 steps), and make
+    // sure the snapshot file itself has landed — that file is the
+    // only thing the rescue can use.
+    wait_for(120, "some progress", || {
+        client.status(cid).unwrap().get_f64("step").unwrap_or(0.0) >= 6.0
+    });
+    let victim_dir = if placed.host == 0 { &dir_a } else { &dir_b };
+    wait_for(120, "an auto-checkpoint on the victim host", || {
+        std::fs::read_dir(victim_dir)
+            .map(|rd| {
+                rd.flatten().any(|e| {
+                    e.file_name().to_string_lossy().ends_with(".ckpt")
+                })
+            })
+            .unwrap_or(false)
+    });
+
+    // Kill the host the session lives on — hard stop, no shutdown
+    // snapshot, listener gone.
+    let survivor_idx = if placed.host == 0 {
+        svc_a.shutdown();
+        1
+    } else {
+        svc_b.shutdown();
+        0
+    };
+
+    // The router notices (2 consecutive failed probes → Down) and
+    // rescues the session onto the survivor.
+    wait_for(60, "probes to mark the host down and rescue the session", || {
+        router.probe_once();
+        router.placement(cid).is_some_and(|p| p.host == survivor_idx && !p.migrating)
+    });
+    assert_eq!(router.hosts()[placed.host].health, HostHealth::Down);
+    assert!(router.migrations() >= 1, "rescue counts as a migration");
+
+    // The client keeps using the same cluster id, oblivious.
+    let st = client.wait_done(cid, Duration::from_secs(240)).unwrap();
+    assert_eq!(st.get_f64("step"), Some(TARGET as f64));
+    assert_eq!(
+        st.get_str("host"),
+        Some(if survivor_idx == 0 { addr_a.as_str() } else { addr_b.as_str() }),
+        "status reports the new home"
+    );
+
+    // Bit-identity: the migrated run's final weights equal an
+    // uninterrupted run's, exactly.
+    let survivor_svc = if survivor_idx == 0 { &svc_a } else { &svc_b };
+    let remote = router.placement(cid).unwrap().remote_id;
+    assert_eq!(
+        survivor_svc.model_digest(remote).unwrap(),
+        want,
+        "weights after kill + rescue must be bit-identical to an uninterrupted run"
+    );
+
+    // Cluster stats still account for the session under its cluster id.
+    let stats = client.stats().unwrap();
+    let sessions = stats.get("sessions").and_then(|s| s.as_arr()).unwrap().clone();
+    assert!(
+        sessions.iter().any(|s| s.get_f64("id") == Some(cid as f64)
+            && s.get_str("status") == Some("done")),
+        "{stats:?}"
+    );
+
+    router.shutdown();
+    front.join();
+    svc_a.shutdown();
+    svc_b.shutdown();
+    srv_a.join();
+    srv_b.join();
+}
+
+#[test]
+fn drain_migrates_live_sessions_and_undrain_readmits() {
+    let (dir_a, dir_b) = (temp_dir("drain-a"), temp_dir("drain-b"));
+    let (svc_a, srv_a) = start_host(&dir_a);
+    let (svc_b, srv_b) = start_host(&dir_b);
+    let (addr_a, addr_b) = (srv_a.addr().to_string(), srv_b.addr().to_string());
+    let (router, front) =
+        start_router(vec![(addr_a.as_str(), dir_a.clone()), (addr_b.as_str(), dir_b.clone())]);
+    let mut client = TcpClient::connect(front.addr()).unwrap();
+
+    // A long-running session we can drain mid-flight.
+    let (cid, _) = client.submit_as(&train_cfg(21, 1_000_000), "drainee", 1, None).unwrap();
+    wait_for(120, "session to start", || {
+        client.status(cid).unwrap().get_f64("step").unwrap_or(0.0) > 0.0
+    });
+    let src = router.placement(cid).unwrap().host;
+    let src_addr = if src == 0 { &addr_a } else { &addr_b };
+    let dst = 1 - src;
+
+    // Rolling-restart shape: admit-stop + migrate...
+    let resp = client.drain(src_addr).unwrap();
+    assert_eq!(resp.get_f64("migrated"), Some(1.0), "{resp:?}");
+    assert_eq!(resp.get_f64("failed"), Some(0.0), "{resp:?}");
+    let p = router.placement(cid).unwrap();
+    assert_eq!(p.host, dst, "session moved to the peer");
+    assert!(!p.migrating);
+    // ...verify it kept stepping where it left off...
+    let step_after = client.status(cid).unwrap().get_f64("step").unwrap();
+    wait_for(120, "migrated session to keep stepping", || {
+        client.status(cid).unwrap().get_f64("step").unwrap() > step_after
+    });
+    // ...while the drained host takes no new work...
+    let hosts = client.hosts().unwrap();
+    let drained = hosts.iter().find(|h| h.get_str("addr") == Some(src_addr)).unwrap();
+    assert_eq!(drained.get("draining"), Some(&Json::Bool(true)));
+    let (other_cid, _) = client.submit_as(&train_cfg(22, 4), "filler", 1, None).unwrap();
+    assert_eq!(router.placement(other_cid).unwrap().host, dst, "drained host gets nothing");
+    // ...and re-admit.
+    client.undrain(src_addr).unwrap();
+    let hosts = client.hosts().unwrap();
+    let readmitted = hosts.iter().find(|h| h.get_str("addr") == Some(src_addr)).unwrap();
+    assert_eq!(readmitted.get("draining"), Some(&Json::Bool(false)));
+
+    client.cancel(cid).unwrap();
+    router.shutdown();
+    front.join();
+    svc_a.shutdown();
+    svc_b.shutdown();
+    srv_a.join();
+    srv_b.join();
+}
+
+#[test]
+fn watch_across_a_migration_ends_with_a_clean_redirect_line() {
+    let (dir_a, dir_b) = (temp_dir("watch-a"), temp_dir("watch-b"));
+    let (svc_a, srv_a) = start_host(&dir_a);
+    let (svc_b, srv_b) = start_host(&dir_b);
+    let (addr_a, addr_b) = (srv_a.addr().to_string(), srv_b.addr().to_string());
+    let (router, front) =
+        start_router(vec![(addr_a.as_str(), dir_a.clone()), (addr_b.as_str(), dir_b.clone())]);
+    let mut client = TcpClient::connect(front.addr()).unwrap();
+
+    let (cid, _) = client.submit_as(&train_cfg(31, 1_000_000), "watched", 1, None).unwrap();
+    wait_for(120, "session to start", || {
+        client.status(cid).unwrap().get_f64("step").unwrap_or(0.0) > 0.0
+    });
+    let src = router.placement(cid).unwrap().host;
+    let src_addr = if src == 0 { addr_a.clone() } else { addr_b.clone() };
+
+    // Watch on a second connection; the stream must terminate with a
+    // redirect once the session migrates out from under it — a
+    // blocking relay that never notices would hang this thread (and
+    // the channel timeout below would catch it).
+    let front_addr = front.addr();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let watcher = std::thread::spawn(move || {
+        let mut wc = TcpClient::connect(front_addr).unwrap();
+        let mut steps = 0usize;
+        let fin = wc.watch(cid, &mut |_| steps += 1);
+        let _ = tx.send((steps, fin));
+    });
+    // Give the watcher a moment to attach, then migrate the session.
+    wait_for(60, "watcher to see a step", || {
+        client.status(cid).unwrap().get_f64("step").unwrap_or(0.0) > 4.0
+    });
+    router.migrate(cid).unwrap();
+    let (_steps, fin) = rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("watch stream must terminate after the migration, not hang");
+    let fin = fin.expect("clean final line, not a transport error");
+    assert_eq!(fin.get_str("event"), Some("end"));
+    assert_eq!(
+        fin.get_str("status"),
+        Some("migrating"),
+        "a migration-cancel must read as a redirect, not a user cancel: {fin:?}"
+    );
+    watcher.join().unwrap();
+
+    // Re-issuing the watch follows the session to its new host.
+    let mut wc = TcpClient::connect(front.addr()).unwrap();
+    let seen = std::sync::atomic::AtomicUsize::new(0);
+    let cancel_at = 3;
+    let router2 = router.clone();
+    let fin = wc.watch(cid, &mut |_| {
+        // Cancel through the router once the new stream proves live.
+        if seen.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1 == cancel_at {
+            let r = router2.dispatch(&Json::obj(vec![
+                ("cmd", Json::Str("cancel".into())),
+                ("session", Json::Num(cid as f64)),
+            ]));
+            assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r:?}");
+        }
+    });
+    let fin = fin.unwrap();
+    assert_eq!(fin.get_str("event"), Some("end"));
+    assert_eq!(fin.get_str("status"), Some("cancelled"), "{fin:?}");
+
+    router.shutdown();
+    front.join();
+    svc_a.shutdown();
+    svc_b.shutdown();
+    srv_a.join();
+    srv_b.join();
+}
+
+#[test]
+fn router_boundary_rejects_malformed_and_unknown_requests() {
+    let dir = temp_dir("adv");
+    let (svc, srv) = start_host(&dir);
+    let addr = srv.addr().to_string();
+    let (router, front) = start_router(vec![(addr.as_str(), dir.clone())]);
+
+    // Raw socket: drive the framing layer directly.
+    let stream = std::net::TcpStream::connect(front.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut roundtrip = |line: &str| -> Json {
+        writer.write_all(line.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        Json::parse(resp.trim()).unwrap()
+    };
+
+    // Malformed ndjson → clean per-line error, connection stays up.
+    let r = roundtrip("{not json");
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    assert!(r.get_str("error").unwrap().contains("bad request"), "{r:?}");
+    // Unknown command.
+    let r = roundtrip(r#"{"cmd":"frobnicate"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    assert!(r.get_str("error").unwrap().contains("unknown command"), "{r:?}");
+    // Missing cmd.
+    let r = roundtrip("{}");
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    // Session-addressed command for a session that was never placed.
+    let r = roundtrip(r#"{"cmd":"status","session":404,"id":7}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(r.get("id"), Some(&Json::Num(7.0)), "id echoed on errors");
+    // Watch on an unknown session: one clean error line, no stream.
+    let r = roundtrip(r#"{"cmd":"watch","session":404}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    // The connection survived all of the above.
+    let r = roundtrip(r#"{"cmd":"hosts"}"#);
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r:?}");
+    assert_eq!(r.get("hosts").and_then(|h| h.as_arr()).map(|a| a.len()), Some(1));
+
+    router.shutdown();
+    front.join();
+    svc.shutdown();
+    srv.join();
+}
+
+#[test]
+fn host_that_accepts_but_never_replies_fails_probes_within_budget() {
+    // A listener that accepts connections and then says nothing —
+    // the nastiest failure mode for anything without read deadlines.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let stop_accept = stop.clone();
+    let hold = std::thread::spawn(move || {
+        let mut held = Vec::new();
+        // Keep accepted sockets open (never reply) until told to stop.
+        listener.set_nonblocking(true).unwrap();
+        while !stop_accept.load(std::sync::atomic::Ordering::Relaxed) {
+            if let Ok((s, _)) = listener.accept() {
+                held.push(s);
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    });
+
+    let (router, front) = start_router(vec![(addr.as_str(), String::new())]);
+    let t0 = Instant::now();
+    router.probe_once();
+    router.probe_once();
+    let elapsed = t0.elapsed();
+    assert_eq!(router.hosts()[0].health, HostHealth::Down);
+    assert_eq!(router.failed_probes(), 2);
+    // Each probe is bounded by probe_timeout_ms (250) — two passes
+    // must come in way under the 10s a blocking reader would burn.
+    assert!(elapsed < Duration::from_secs(5), "probe hung on a silent host: {elapsed:?}");
+
+    // Submitting with every host down is a clean error, not a hang.
+    let mut client = TcpClient::connect(front.addr()).unwrap();
+    let err = client.submit_as(&train_cfg(41, 4), "nope", 1, None).unwrap_err();
+    assert!(err.contains("no live host"), "{err}");
+
+    router.shutdown();
+    front.join();
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    hold.join().unwrap();
+}
+
+#[test]
+fn rendezvous_same_stem_same_host_and_minimal_disruption() {
+    // Integration-level restatement of the routing properties over a
+    // few hundred synthetic lineage stems, phrased exactly as the
+    // operational guarantees we rely on during drains.
+    let hosts = ["10.0.0.1:7931", "10.0.0.2:7931", "10.0.0.3:7931"];
+    let stems: Vec<String> = (0..400).map(|i| format!("tenant{}/job{i}-{i}", i % 7)).collect();
+    // Same stem → same host, every time.
+    for s in &stems {
+        assert_eq!(rendezvous(s, &hosts), rendezvous(s, &hosts));
+    }
+    let before: Vec<usize> = stems.iter().map(|s| rendezvous(s, &hosts).unwrap()).collect();
+    // Kill the middle host: only its sessions move.
+    let survivors = ["10.0.0.1:7931", "10.0.0.3:7931"];
+    let mut moved = 0usize;
+    for (s, &was) in stems.iter().zip(&before) {
+        let now = [0usize, 2][rendezvous(s, &survivors).unwrap()];
+        if was == 1 {
+            moved += 1;
+            assert_ne!(now, 1);
+        } else {
+            assert_eq!(now, was, "stem {s} moved although its host survived");
+        }
+    }
+    // The dead host actually owned a meaningful share.
+    assert!(moved > 60, "suspiciously few stems on the dead host: {moved}");
+}
