@@ -10,6 +10,11 @@
 //! file, a live `watch` stream follows one tenant's per-step events
 //! (loss, latency, telemetry phase breakdown) over the socket until it
 //! finishes and the `metrics` command dumps the process-wide registry,
+//! the Prometheus scrape endpoint answers a raw HTTP GET with health
+//! series (body kept as `serve_smoke_scrape.prom` for CI), the
+//! `health` command reports per-layer Sherman–Morrison denominator
+//! rings for a live eva session, shutdown flushes a Perfetto-loadable
+//! Chrome trace (`serve_smoke_trace.json`),
 //! the periodic auto-checkpointer lands snapshots while
 //! everything runs, and finally a real SIGTERM triggers a
 //! checkpoint-everything shutdown — after which a fresh service
@@ -34,15 +39,34 @@
 //! cargo run --release --example serve_smoke -- --cluster
 //! ```
 
+use std::io::{Read, Write};
 use std::time::Duration;
 
 use eva::backend::{self, BackendChoice};
 use eva::cluster::{ClusterConfig, HostSpec, Router, RouterServer};
 use eva::config::{ModelArch, TrainConfig};
+use eva::jsonx::Json;
 use eva::serve::client::{LocalClient, ServeClient, TcpClient};
 use eva::serve::{signal, ServeConfig, Server, Service, Session};
 
 const TARGET: u64 = 40;
+
+/// Artifacts the CI serve-smoke job validates after the run: the raw
+/// Prometheus scrape body and the Chrome trace-event file.
+const SCRAPE_OUT: &str = "serve_smoke_scrape.prom";
+const TRACE_OUT: &str = "serve_smoke_trace.json";
+
+/// One raw HTTP GET against the scrape endpoint (no client library —
+/// the responder is std-only and so is the smoke).
+fn http_get(addr: std::net::SocketAddr, path: &str) -> (String, String) {
+    let mut conn = std::net::TcpStream::connect(addr).expect("connect scrape endpoint");
+    conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    write!(conn, "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n").unwrap();
+    let mut raw = String::new();
+    conn.read_to_string(&mut raw).expect("read scrape response");
+    let (head, body) = raw.split_once("\r\n\r\n").expect("malformed HTTP response");
+    (head.to_string(), body.to_string())
+}
 
 fn tenant(seed: u64, steps: u64) -> TrainConfig {
     let mut c = TrainConfig {
@@ -170,7 +194,8 @@ fn cluster_smoke() {
     // to router ids.
     let stats = tcp.stats().expect("cluster stats");
     assert_eq!(stats.get_f64("hosts_reachable"), Some(2.0), "{stats:?}");
-    let sessions = stats.get("sessions").and_then(|s| s.as_arr()).cloned().unwrap_or_default();
+    let sessions =
+        stats.get("sessions").and_then(|s| s.as_arr()).map(|s| s.to_vec()).unwrap_or_default();
     assert!(
         sessions
             .iter()
@@ -185,6 +210,20 @@ fn cluster_smoke() {
         stats.get_f64("hosts_reachable").unwrap_or(0.0),
         router.migrations(),
         stats.get_f64("scheduler_steps").unwrap_or(0.0),
+    );
+
+    // The fleet health aggregate flows through the same front door:
+    // the router merges its own summary with one probe per host and
+    // stamps any host anomalies with the host address.
+    let health = tcp.health(None).expect("fleet health aggregate");
+    assert_eq!(health.get_f64("hosts_reachable"), Some(2.0), "{health:?}");
+    let per_host = health.get("per_host").and_then(|p| p.as_arr()).expect("per_host");
+    assert_eq!(per_host.len(), 2, "one health entry per host: {health:?}");
+    println!(
+        "serve_smoke[cluster]: fleet health — {}/{} hosts reporting, {} anomalies",
+        health.get_f64("hosts_reachable").unwrap_or(0.0),
+        health.get_f64("hosts_total").unwrap_or(0.0),
+        health.get("anomalies").and_then(|a| a.as_arr()).map_or(0, |a| a.len()),
     );
 
     router.shutdown();
@@ -206,6 +245,9 @@ fn main() {
     }
     // A small threaded pool so the scheduler actually carves lanes.
     backend::install(&BackendChoice::Threaded(4));
+    // The smoke asserts on the observability surfaces (scrape, trace,
+    // health), so force the registry on regardless of EVA_TELEMETRY.
+    eva::telemetry::install(&eva::telemetry::TelemetryChoice::On);
     signal::install_term_handler();
 
     let ckdir = std::env::temp_dir().join("eva-serve-smoke");
@@ -218,6 +260,12 @@ fn main() {
         checkpoint_every_steps: 8,
         checkpoint_on_shutdown: true,
         checkpoint_dir: ckdir_s.clone(),
+        // Observability surfaces under test: ephemeral scrape port,
+        // trace file for CI validation, dense health sampling so a
+        // 40-step run yields plenty of ring points.
+        metrics_addr: Some("127.0.0.1:0".into()),
+        trace_out: Some(TRACE_OUT.into()),
+        health_every_steps: 2,
         ..ServeConfig::default()
     };
     let svc = Service::start(serve_cfg.clone());
@@ -323,6 +371,44 @@ fn main() {
         println!("serve_smoke: metrics — telemetry {telem}");
     }
 
+    // Prometheus scrape surface: a raw HTTP GET against the separate
+    // metrics listener must return text exposition v0.0.4 carrying the
+    // health series the eva sessions just produced. The body is kept
+    // as a CI artifact for format validation.
+    let scrape_addr = svc.metrics_addr().expect("metrics listener must be up");
+    let (head, body) = http_get(scrape_addr, "/metrics");
+    assert!(head.starts_with("HTTP/1.1 200"), "scrape status: {head}");
+    assert!(head.contains("version=0.0.4"), "scrape content-type: {head}");
+    assert!(body.contains("# TYPE"), "scrape body missing TYPE comments");
+    assert!(
+        body.contains("eva_health_eva_sm_denom_l0"),
+        "scrape body missing per-layer health series"
+    );
+    std::fs::write(SCRAPE_OUT, &body).expect("persist scrape artifact");
+    println!(
+        "serve_smoke: scraped http://{scrape_addr}/metrics — {} bytes \u{2192} {SCRAPE_OUT}",
+        body.len()
+    );
+
+    // The `health` command: per-session form reports the per-layer
+    // Sherman–Morrison denominator rings for tenant C (an eva run),
+    // the aggregate form summarizes the whole process.
+    let hc = tcp.health(Some(c)).expect("health for tenant C");
+    let series = hc.get("series").and_then(|s| s.as_obj()).expect("health.series");
+    let denom = series
+        .get("eva.health.eva.sm_denom.l0")
+        .unwrap_or_else(|| panic!("no sm_denom ring for tenant C: {:?}", series.keys()));
+    assert!(denom.get_f64("n").unwrap_or(0.0) >= 1.0, "empty sm_denom ring: {denom:?}");
+    assert!(denom.get_f64("min").unwrap_or(0.0) > 0.0, "SM denominator must stay positive");
+    let agg = tcp.health(None).expect("aggregate health");
+    let anomalies = agg.get("anomalies").and_then(|a| a.as_arr()).map_or(0, |a| a.len());
+    println!(
+        "serve_smoke: health — sm_denom.l0 min {:.3e} mean {:.3e} over {} samples; {anomalies} anomalies fleet-wide",
+        denom.get_f64("min").unwrap_or(f64::NAN),
+        denom.get_f64("mean").unwrap_or(f64::NAN),
+        denom.get_f64("n").unwrap_or(0.0),
+    );
+
     // The periodic auto-checkpointer (every 8 steps, plus terminal
     // tombstones) must land snapshots on its own, no client involved.
     let deadline = std::time::Instant::now() + Duration::from_secs(120);
@@ -348,6 +434,21 @@ fn main() {
     println!("serve_smoke: SIGTERM observed — checkpointing live sessions and shutting down");
     svc.shutdown();
     server.join();
+
+    // Shutdown flushed the Chrome trace. It must be well-formed JSON
+    // whose events are all complete (`ph: "X"`) spans — exactly what
+    // Perfetto / chrome://tracing loads. CI re-validates the file
+    // (the restarted service below overwrites it with its own spans,
+    // which must be equally well-formed).
+    let trace_raw = std::fs::read_to_string(TRACE_OUT).expect("trace file written at shutdown");
+    let trace = Json::parse(&trace_raw).expect("trace must parse as JSON");
+    let spans = trace.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents array");
+    assert!(!spans.is_empty(), "trace has no spans");
+    for ev in spans {
+        assert_eq!(ev.get_str("ph"), Some("X"), "incomplete span: {ev:?}");
+        assert!(ev.get_f64("dur").is_some() && ev.get_str("name").is_some(), "{ev:?}");
+    }
+    println!("serve_smoke: trace — {} complete spans \u{2192} {TRACE_OUT}", spans.len());
 
     // Restart: a fresh service re-admits every lineage from disk.
     // Five lineages exist — the two cancelled blockers and tenant-a

@@ -202,7 +202,7 @@ fn router_steps_per_s(n_hosts: usize) -> f64 {
 }
 
 /// Short instrumented run of one optimizer family; returns every
-/// non-empty histogram as `name → {count, mean_ms}`.
+/// non-empty histogram as `name → {count, mean_ms, p99_ms, max_ms}`.
 fn phase_section(optimizer: &str) -> Json {
     let mut hp = HyperParams::default();
     hp.update_interval = 2;
@@ -232,6 +232,8 @@ fn phase_section(optimizer: &str) -> Json {
                 Json::obj(vec![
                     ("count", Json::Num(h.count() as f64)),
                     ("mean_ms", Json::Num(h.mean_ms())),
+                    ("p99_ms", Json::Num(h.percentile_ms(99.0))),
+                    ("max_ms", Json::Num(h.max_ms())),
                 ]),
             )
         })

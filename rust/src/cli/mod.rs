@@ -111,7 +111,7 @@ pub const GLOBAL_OPTIONS: &[&str] = &["backend", "worker-threads", "simd", "tele
 /// iterate this to keep [`USAGE`] and [`Cli::reject_unknown`] in sync
 /// instead of hand-maintaining a second list.
 pub const KNOWN_COMMANDS: &[&str] =
-    &["train", "serve", "router", "experiment", "validate", "list", "info", "help"];
+    &["train", "serve", "router", "health", "experiment", "validate", "list", "info", "help"];
 
 /// Per-command accepted options and flags.
 pub struct CommandSpec {
@@ -160,8 +160,12 @@ pub fn known_options(command: &str) -> Option<CommandSpec> {
                 "checkpoint-dir",
                 "checkpoint-every",
                 "retain-terminal",
+                "retain-snapshots",
                 "resume-dir",
                 "quantum",
+                "metrics-addr",
+                "trace-out",
+                "health-every",
             ],
             &[],
         ),
@@ -179,6 +183,7 @@ pub fn known_options(command: &str) -> Option<CommandSpec> {
             ],
             &[],
         ),
+        "health" => spec(&["addr", "session"], &[]),
         "experiment" | "validate" | "list" | "info" => spec(&[], &[]),
         "" | "help" | "--help" | "-h" => spec(&[], &[]),
         _ => None,
@@ -197,11 +202,17 @@ USAGE:
   eva serve [--config FILE] [--addr HOST:PORT] [--max-sessions N]
             [--max-per-tenant N] [--checkpoint-dir DIR]
             [--checkpoint-every N] [--retain-terminal N]
-            [--resume-dir DIR] [--quantum N]
+            [--retain-snapshots N] [--resume-dir DIR] [--quantum N]
+            [--metrics-addr HOST:PORT] [--trace-out FILE]
+            [--health-every N]
   eva router [--config FILE] [--addr HOST:PORT] [--hosts A1,A2,...]
             [--checkpoint-dirs D1,D2,...] [--probe-interval-ms N]
             [--probe-timeout-ms N] [--probe-fails N]
             [--request-timeout-ms N] [--auto-migrate on|off]
+  eva health [--addr HOST:PORT] [--session ID]
+                              optimizer-health report from a serve/router
+                              control plane: per-layer second-order
+                              diagnostics + anomaly flags
   eva experiment <id|all>     regenerate a paper table/figure (see DESIGN.md §5)
   eva validate                cross-check PJRT artifacts vs native numerics
   eva list                    list datasets, optimizers, experiments, artifacts
@@ -249,15 +260,31 @@ SERVE OPTIONS (multi-tenant training-session service):
                               snapshotted on shutdown/SIGTERM
   --retain-terminal N         keep at most N terminal sessions for status
                               queries (default 64); older ones are evicted
+  --retain-snapshots N        keep only the newest N loadable snapshots per
+                              checkpoint lineage, pruning older ones after
+                              each write (default 0 = unlimited; terminal
+                              tombstones are never pruned)
   --resume-dir DIR            on boot, re-admit the newest checkpoint per
                               session lineage found in DIR (restart-
                               transparent serving)
   --quantum N                 steps per scheduler time-slice (default 8)
+  --metrics-addr HOST:PORT    serve a Prometheus text-exposition scrape
+                              endpoint (HTTP GET) on a separate listener;
+                              port 0 = ephemeral (off by default)
+  --trace-out FILE            write a Chrome trace-event JSON of per-step
+                              phase spans at shutdown — open in Perfetto
+                              (ui.perfetto.dev) or chrome://tracing
+  --health-every N            sample per-layer optimizer-health diagnostics
+                              every Nth step (default 10; 0 = off). Purely
+                              observational: numerics are bit-identical at
+                              any cadence. Query via `eva health` or the
+                              `health` protocol command
   --config FILE               JSON file with serve_addr / max_sessions /
                               max_sessions_per_tenant / checkpoint_dir /
                               checkpoint_every_steps / checkpoint_on_shutdown /
-                              retain_terminal / resume_dir / quantum_steps
-                              keys (flags override the file)
+                              retain_terminal / retain_snapshots / resume_dir /
+                              quantum_steps / metrics_addr / trace_out /
+                              health_every_steps keys (flags override the file)
 
 ROUTER OPTIONS (multi-host cluster front door; see docs/ARCHITECTURE.md):
   --addr HOST:PORT            router listen address (same ndjson protocol as
@@ -278,6 +305,11 @@ ROUTER OPTIONS (multi-host cluster front door; see docs/ARCHITECTURE.md):
   --request-timeout-ms N      proxied client-request budget (default 5000)
   --auto-migrate on|off       rescue sessions off down hosts from their newest
                               loadable checkpoint (default on)
+
+HEALTH OPTIONS (optimizer-health report; speaks to serve or router):
+  --addr HOST:PORT            control plane to query (default 127.0.0.1:7931)
+  --session ID                report one session's per-layer rings instead of
+                              the service/fleet aggregate
 
 EXAMPLES:
   eva train --preset quickstart --optimizer eva

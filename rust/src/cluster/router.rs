@@ -330,6 +330,10 @@ impl Router {
                  available over the TCP transport"
                     .into(),
             ),
+            // Session-addressed `health` is forwardable (the owning
+            // host holds the rings); without a `session` it is a
+            // fleet aggregate, merged here like `metrics`.
+            "health" if req.get("session").is_none() => self.health_aggregate(),
             c if forwardable(c) => self.forward(req),
             "stats" => self.stats(),
             "metrics" => self.metrics(),
@@ -876,6 +880,59 @@ impl Router {
         }
         out.insert("per_host".into(), Json::Arr(per_host));
         Ok(out)
+    }
+
+    /// Cluster-level `health` (no `session` field): the router's own
+    /// aggregate summary, each reachable host's aggregate under
+    /// `per_host`, and every host's anomaly flags concatenated (each
+    /// stamped with its `host` address) so one request surfaces every
+    /// firing rule in the fleet.
+    fn health_aggregate(&self) -> Result<Fields, String> {
+        use crate::telemetry::health;
+        let own = health::with_global(health::summarize);
+        let health_req = Json::obj(vec![("cmd", Json::Str("health".into()))]);
+        let timeout = self.request_timeout();
+        let addrs: Vec<String> = {
+            let hosts = self.inner.hosts.lock().unwrap();
+            hosts.iter().map(|h| h.addr.clone()).collect()
+        };
+        let mut anomalies: Vec<Json> =
+            own.get("anomalies").and_then(|a| a.as_arr()).map(|a| a.to_vec()).unwrap_or_default();
+        let mut per_host = Vec::new();
+        let mut reachable = 0usize;
+        for addr in &addrs {
+            match net::request_ok(addr, &health_req, timeout) {
+                Ok(resp) => {
+                    reachable += 1;
+                    let Some(h) = resp.get("health") else { continue };
+                    if let Some(list) = h.get("anomalies").and_then(|a| a.as_arr()) {
+                        for f in list {
+                            let Json::Obj(mut m) = f.clone() else { continue };
+                            m.insert("host".into(), Json::Str(addr.clone()));
+                            anomalies.push(Json::Obj(m));
+                        }
+                    }
+                    per_host.push(Json::obj(vec![
+                        ("addr", Json::Str(addr.clone())),
+                        ("health", h.clone()),
+                    ]));
+                }
+                Err(e) => per_host.push(Json::obj(vec![
+                    ("addr", Json::Str(addr.clone())),
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::Str(e)),
+                ])),
+            }
+        }
+        let merged = Json::obj(vec![
+            ("every", own.get("every").cloned().unwrap_or(Json::Null)),
+            ("series", own.get("series").cloned().unwrap_or_else(|| Json::obj(vec![]))),
+            ("anomalies", Json::Arr(anomalies)),
+            ("hosts_reachable", Json::Num(reachable as f64)),
+            ("hosts_total", Json::Num(addrs.len() as f64)),
+            ("per_host", Json::Arr(per_host)),
+        ]);
+        Ok(fields(vec![("health", merged)]))
     }
 }
 

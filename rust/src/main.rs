@@ -60,6 +60,7 @@ fn run(args: &[String]) -> Result<()> {
         "train" => train(&cli),
         "serve" => serve(&cli),
         "router" => router(&cli),
+        "health" => health(&cli),
         "experiment" => {
             let id = cli
                 .positional
@@ -200,6 +201,9 @@ fn serve(cli: &Cli) -> Result<()> {
     if let Some(n) = cli.opt_usize("retain-terminal").map_err(|e| anyhow!(e))? {
         cfg.retain_terminal = n;
     }
+    if let Some(n) = cli.opt_usize("retain-snapshots").map_err(|e| anyhow!(e))? {
+        cfg.retain_snapshots = n;
+    }
     if let Some(d) = cli.opt("resume-dir") {
         cfg.resume_dir = Some(d.to_string());
     }
@@ -208,6 +212,15 @@ fn serve(cli: &Cli) -> Result<()> {
             return Err(anyhow!("--quantum must be ≥ 1"));
         }
         cfg.quantum_steps = q;
+    }
+    if let Some(a) = cli.opt("metrics-addr") {
+        cfg.metrics_addr = Some(a.to_string());
+    }
+    if let Some(p) = cli.opt("trace-out") {
+        cfg.trace_out = Some(p.to_string());
+    }
+    if let Some(n) = cli.opt_usize("health-every").map_err(|e| anyhow!(e))? {
+        cfg.health_every_steps = n as u64;
     }
     // Catch SIGTERM/SIGINT before any session exists so no window is
     // uncovered.
@@ -235,6 +248,15 @@ fn serve(cli: &Cli) -> Result<()> {
     );
     if cfg.checkpoint_every_steps > 0 {
         println!("serve: auto-checkpoint every {} steps", cfg.checkpoint_every_steps);
+    }
+    if cfg.retain_snapshots > 0 {
+        println!("serve: retaining {} snapshots per lineage", cfg.retain_snapshots);
+    }
+    if let Some(ma) = svc.metrics_addr() {
+        println!("serve: prometheus scrape endpoint on http://{ma}/metrics");
+    }
+    if let Some(path) = &cfg.trace_out {
+        println!("serve: chrome trace will be written to {path} at shutdown");
     }
     println!("serve: newline-delimited JSON; try {{\"cmd\":\"stats\"}} or {{\"cmd\":\"shutdown\"}}");
     // Serve until a client shuts us down or a termination signal
@@ -358,9 +380,36 @@ fn router(cli: &Cli) -> Result<()> {
     }
     server.join();
     if eva::telemetry::enabled() {
-        println!("\n-- telemetry --\n{}", eva::telemetry::render_text());
+        // Fleet-aggregated registry — counters/gauges summed across
+        // every reachable host (mirrors `eva serve`'s exit dump, but
+        // cluster-wide). Hosts outlive the router; unreachable ones
+        // appear as error entries under per_host.
+        let req = eva::jsonx::Json::obj(vec![("cmd", eva::jsonx::Json::Str("metrics".into()))]);
+        let dump = router.dispatch(&req);
+        println!("\n-- fleet metrics --\n{}", dump.pretty());
+        println!("\n-- router telemetry --\n{}", eva::telemetry::render_text());
     }
     println!("router: shut down");
+    Ok(())
+}
+
+/// `eva health` — query a serve (or router) control plane for the
+/// optimizer-health report: per-layer second-order diagnostics and
+/// anomaly flags. `--session ID` narrows to one session's rings;
+/// without it the service (or fleet) aggregate is reported.
+fn health(cli: &Cli) -> Result<()> {
+    use eva::serve::{ServeClient, TcpClient};
+    let addr = cli.opt_or("addr", "127.0.0.1:7931");
+    let session = cli.opt_usize("session").map_err(|e| anyhow!(e))?.map(|n| n as u64);
+    let mut client =
+        TcpClient::connect(&addr).map_err(|e| anyhow!("connect to {addr}: {e}"))?;
+    let report = client.health(session).map_err(|e| anyhow!(e))?;
+    println!("{}", report.pretty());
+    let n_anomalies =
+        report.get("anomalies").and_then(|a| a.as_arr()).map(|a| a.len()).unwrap_or(0);
+    if n_anomalies > 0 {
+        eprintln!("health: {n_anomalies} anomaly flag(s) raised");
+    }
     Ok(())
 }
 

@@ -106,6 +106,33 @@ impl Eva {
         p.scale(1.0 / gamma);
         p
     }
+
+    /// Sampled per-layer health probe: Sherman–Morrison denominator /
+    /// coefficient, KV norms, preconditioned-vs-raw cosine and norm
+    /// ratio. Read-only (recomputes one matvec per layer on the
+    /// calling thread) — never touches optimizer state or numerics.
+    fn record_health(&self, grads: &[Tensor], pre: &[Tensor], gamma: f32) {
+        use crate::telemetry::health;
+        health::sample("eva", "damping", gamma as f64);
+        for l in 0..grads.len() {
+            if self.use_kvs {
+                let (a, b) = (&self.a_bar[l], &self.b_bar[l]);
+                let (na2, nb2) = (dot(a, a), dot(b, b));
+                let denom = gamma + na2 * nb2;
+                let coeff = dot(&grads[l].matvec(a), b) / denom;
+                health::sample_layer("eva", "sm_denom", l, denom as f64);
+                health::sample_layer("eva", "sm_coeff", l, coeff as f64);
+                health::sample_layer("eva", "kv_a_norm", l, (na2 as f64).sqrt());
+                health::sample_layer("eva", "kv_b_norm", l, (nb2 as f64).sqrt());
+            }
+            let (pn, gn) = (pre[l].norm(), grads[l].norm());
+            if pn > 0.0 && gn > 0.0 {
+                let cos = pre[l].dot(&grads[l]) / (pn * gn);
+                health::sample_layer("eva", "precond_cosine", l, cos as f64);
+                health::sample_layer("eva", "precond_norm_ratio", l, (pn / gn) as f64);
+            }
+        }
+    }
 }
 
 impl Optimizer for Eva {
@@ -143,6 +170,9 @@ impl Optimizer for Eva {
                 })
             })
         };
+        if tm::health::due(ctx.step) {
+            self.record_health(&grads, &pre, gamma);
+        }
         tm::time_phase("apply", &tm::OPTIM_EVA_APPLY_US, || {
             // KL clipping over weight tensors (Eq. 16).
             let mut pre = pre;

@@ -77,6 +77,23 @@ impl Optimizer for EvaF {
             .enumerate()
             .map(|(l, g)| Self::precondition_layer(g, &self.a_bar[l], gamma))
             .collect();
+        if crate::telemetry::health::due(ctx.step) {
+            // Read-only sampled health probe (never changes numerics).
+            use crate::telemetry::health;
+            health::sample("eva-f", "damping", gamma as f64);
+            for (l, g) in grads.iter().enumerate() {
+                let a = &self.a_bar[l];
+                let na2 = dot(a, a);
+                health::sample_layer("eva-f", "sm_denom", l, (gamma + na2) as f64);
+                health::sample_layer("eva-f", "kv_a_norm", l, (na2 as f64).sqrt());
+                let (pn, gn) = (pre[l].norm(), g.norm());
+                if pn > 0.0 && gn > 0.0 {
+                    let cos = pre[l].dot(g) / (pn * gn);
+                    health::sample_layer("eva-f", "precond_cosine", l, cos as f64);
+                    health::sample_layer("eva-f", "precond_norm_ratio", l, (pn / gn) as f64);
+                }
+            }
+        }
         if self.use_kl_norm {
             // KL normalization: p ← p/√(Σ pᵀg). pᵀg ≥ 0 (PD preconditioner).
             let pg = super::pg_inner(&pre, &grads).max(1e-12);

@@ -64,6 +64,25 @@ impl Optimizer for EvaS {
         let grads = decayed_grads(ctx, self.hp.weight_decay);
         let mut pre: Vec<Tensor> =
             grads.iter().map(|g| Self::precondition_layer(g, gamma)).collect();
+        if crate::telemetry::health::due(ctx.step) {
+            // Read-only sampled health probe: recompute the rank-one
+            // KVs per layer (cheap means) for the SM denominator.
+            use crate::telemetry::health;
+            health::sample("eva-s", "damping", gamma as f64);
+            for (l, g) in grads.iter().enumerate() {
+                let (v1, v2) = Self::kvs_of(g);
+                let (n1, n2) = (dot(&v1, &v1), dot(&v2, &v2));
+                health::sample_layer("eva-s", "sm_denom", l, (gamma + n1 * n2) as f64);
+                health::sample_layer("eva-s", "kv_v1_norm", l, (n1 as f64).sqrt());
+                health::sample_layer("eva-s", "kv_v2_norm", l, (n2 as f64).sqrt());
+                let (pn, gn) = (pre[l].norm(), g.norm());
+                if pn > 0.0 && gn > 0.0 {
+                    let cos = pre[l].dot(g) / (pn * gn);
+                    health::sample_layer("eva-s", "precond_cosine", l, cos as f64);
+                    health::sample_layer("eva-s", "precond_norm_ratio", l, (pn / gn) as f64);
+                }
+            }
+        }
         if self.use_grafting {
             for (p, g) in pre.iter_mut().zip(&grads) {
                 let pn = p.norm_sq();

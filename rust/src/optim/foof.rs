@@ -120,6 +120,30 @@ impl Optimizer for Foof {
                 }
             })
             .collect();
+        if crate::telemetry::health::due(ctx.step) {
+            // Read-only sampled health probe (never changes numerics).
+            use crate::telemetry::health;
+            let alg = self.name();
+            health::sample(alg, "damping", gamma as f64);
+            health::sample(
+                alg,
+                "factor_staleness",
+                (ctx.step % self.hp.update_interval.max(1) as u64) as f64,
+            );
+            for (l, g) in grads.iter().enumerate() {
+                if self.rank1 {
+                    let (l1, _) = &self.eig[l];
+                    health::sample_layer(alg, "lambda1", l, *l1 as f64);
+                    health::sample_layer(alg, "rank1_coeff", l, (l1 / (gamma + l1)) as f64);
+                }
+                let (pn, gn) = (pre[l].norm(), g.norm());
+                if pn > 0.0 && gn > 0.0 {
+                    let cos = pre[l].dot(g) / (pn * gn);
+                    health::sample_layer(alg, "precond_cosine", l, cos as f64);
+                    health::sample_layer(alg, "precond_norm_ratio", l, (pn / gn) as f64);
+                }
+            }
+        }
         if self.use_kl_norm {
             let pg = super::pg_inner(&pre, &grads).max(1e-12);
             let inv = 1.0 / pg.sqrt();

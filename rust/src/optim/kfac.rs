@@ -125,6 +125,33 @@ impl Optimizer for Kfac {
                 matmul(&matmul(&q_inv[l], &grads[l]), &r_inv[l])
             })
         });
+        if tm::health::due(ctx.step) {
+            // Read-only sampled health probe: factored-damping split,
+            // factor staleness and preconditioned-vs-raw geometry.
+            let gamma = self.hp.damping;
+            tm::health::sample("kfac", "damping", gamma as f64);
+            tm::health::sample(
+                "kfac",
+                "factor_staleness",
+                (ctx.step % self.hp.update_interval.max(1) as u64) as f64,
+            );
+            for l in 0..grads.len() {
+                let (q, r) = (&self.q[l], &self.r[l]);
+                let tq = (trace(q) / q.rows() as f32).max(1e-8);
+                let tr = (trace(r) / r.rows() as f32).max(1e-8);
+                let pi = (tr / tq).sqrt();
+                tm::health::sample_layer("kfac", "pi", l, pi as f64);
+                let (gl, gr) = ((gamma.sqrt() / pi).max(1e-8), (pi * gamma.sqrt()).max(1e-8));
+                tm::health::sample_layer("kfac", "gamma_l", l, gl as f64);
+                tm::health::sample_layer("kfac", "gamma_r", l, gr as f64);
+                let (pn, gn) = (pre[l].norm(), grads[l].norm());
+                if pn > 0.0 && gn > 0.0 {
+                    let cos = pre[l].dot(&grads[l]) / (pn * gn);
+                    tm::health::sample_layer("kfac", "precond_cosine", l, cos as f64);
+                    tm::health::sample_layer("kfac", "precond_norm_ratio", l, (pn / gn) as f64);
+                }
+            }
+        }
         tm::time_phase("apply", &tm::OPTIM_KFAC_APPLY_US, || {
             let mut pre = pre;
             let pg = super::pg_inner(&pre, &grads);

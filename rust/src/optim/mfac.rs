@@ -60,7 +60,15 @@ impl MFac {
     /// `F_k⁻¹v = F_{k-1}⁻¹v − c_k (g_kᵀ F_{k-1}⁻¹ v) / d_k` where
     /// `c_k = F_{k-1}⁻¹ g_k`, `d_k = m + g_kᵀ c_k`. The `c_k` are built
     /// by running the length-(k−1) chain on `g_k` itself.
+    #[cfg(test)]
     fn inv_apply(&self, v: &[f32], lambda: f32) -> Vec<f32> {
+        self.inv_apply_full(v, lambda).0
+    }
+
+    /// [`Self::inv_apply`] plus the chain denominators `d_k` — the
+    /// Sherman–Morrison health quantities, returned at zero extra
+    /// compute for the sampled health probe.
+    fn inv_apply_full(&self, v: &[f32], lambda: f32) -> (Vec<f32>, Vec<f32>) {
         let m = self.history.len();
         let inv_l = 1.0 / lambda;
         // Pass 1: compute c_k and denominators d_k.
@@ -83,7 +91,7 @@ impl MFac {
             let coeff = dot(&self.history[j], &w) / ds[j];
             axpy(-coeff, &cs[j], &mut w);
         }
-        w
+        (w, ds)
     }
 }
 
@@ -110,7 +118,26 @@ impl Optimizer for MFac {
             self.history[self.next_slot] = flat.clone();
             self.next_slot = (self.next_slot + 1) % m;
         }
-        let pre_flat = self.inv_apply(&flat, self.hp.damping);
+        let (pre_flat, ds) = self.inv_apply_full(&flat, self.hp.damping);
+        if crate::telemetry::health::due(ctx.step) {
+            // Read-only sampled health probe: the chain denominators
+            // d_k are the SM health quantities, already computed.
+            use crate::telemetry::health;
+            health::sample("mfac", "damping", self.hp.damping as f64);
+            health::sample("mfac", "history_len", ds.len() as f64);
+            if !ds.is_empty() {
+                let min = ds.iter().copied().fold(f32::INFINITY, f32::min);
+                let mean = ds.iter().sum::<f32>() / ds.len() as f32;
+                health::sample("mfac", "sm_denom_min", min as f64);
+                health::sample("mfac", "sm_denom_mean", mean as f64);
+            }
+            let (pn, gn) = (crate::tensor::norm(&pre_flat), crate::tensor::norm(&flat));
+            if pn > 0.0 && gn > 0.0 {
+                let cos = dot(&pre_flat, &flat) / (pn * gn);
+                health::sample("mfac", "precond_cosine", cos as f64);
+                health::sample("mfac", "precond_norm_ratio", (pn / gn) as f64);
+            }
+        }
         let pre = self.unflatten(&pre_flat);
         self.momentum.apply(self.hp.momentum, ctx.lr, pre, ctx.bias_grads.to_vec())
     }

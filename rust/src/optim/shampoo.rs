@@ -180,6 +180,24 @@ impl Optimizer for Shampoo {
                     })
                     .collect()
             });
+        if tm::health::due(ctx.step) {
+            // Read-only sampled health probe (never changes numerics).
+            tm::health::sample("shampoo", "damping", self.hp.damping as f64);
+            tm::health::sample(
+                "shampoo",
+                "root_staleness",
+                (ctx.step % self.hp.update_interval.max(1) as u64) as f64,
+            );
+            for (l, g) in grads.iter().enumerate() {
+                tm::health::sample_layer("shampoo", "tiles", l, self.tiles[l].len() as f64);
+                let (pn, gn) = (pre[l].norm(), g.norm());
+                if pn > 0.0 && gn > 0.0 {
+                    let cos = pre[l].dot(g) / (pn * gn);
+                    tm::health::sample_layer("shampoo", "precond_cosine", l, cos as f64);
+                    tm::health::sample_layer("shampoo", "precond_norm_ratio", l, (pn / gn) as f64);
+                }
+            }
+        }
         tm::time_phase("apply", &tm::OPTIM_SHAMPOO_APPLY_US, || {
             let mut pre = pre;
             if self.use_grafting {

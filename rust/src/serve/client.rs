@@ -105,7 +105,8 @@ pub trait ServeClient {
     fn hosts(&mut self) -> Result<Vec<Json>, String> {
         let resp = self.request_ok(Json::obj(vec![("cmd", Json::Str("hosts".into()))]))?;
         resp.get("hosts")
-            .and_then(|h| h.as_arr().cloned())
+            .and_then(|h| h.as_arr())
+            .map(|h| h.to_vec())
             .ok_or("no hosts in response".into())
     }
 
@@ -179,6 +180,26 @@ pub trait ServeClient {
     /// `histograms` as name → `{count, mean_ms, p50_ms, p95_ms}`.
     fn metrics(&mut self) -> Result<Json, String> {
         self.request_ok(Json::obj(vec![("cmd", Json::Str("metrics".into()))]))
+    }
+
+    /// Optimizer-health summary (`health` command): per-session rings
+    /// and anomaly flags when `session` is given, the service-wide
+    /// aggregate otherwise. Returns the `health` object
+    /// (`{every, series, anomalies}`).
+    fn health(&mut self, session: Option<u64>) -> Result<Json, String> {
+        let mut pairs = vec![("cmd", Json::Str("health".into()))];
+        if let Some(id) = session {
+            pairs.push(("session", Json::Num(id as f64)));
+        }
+        let resp = self.request_ok(Json::obj(pairs))?;
+        resp.get("health").cloned().ok_or("no health in response".into())
+    }
+
+    /// Chrome trace-event JSON of per-step phase spans (`trace`
+    /// command) — write it to a file and open in Perfetto.
+    fn trace(&mut self) -> Result<Json, String> {
+        let resp = self.request_ok(Json::obj(vec![("cmd", Json::Str("trace".into()))]))?;
+        resp.get("trace").cloned().ok_or("no trace in response".into())
     }
 
     /// Stream a session's per-step events until it goes terminal.

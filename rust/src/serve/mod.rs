@@ -77,8 +77,9 @@ use crate::jsonx::Json;
 /// Service-level configuration, loadable from a JSON object with the
 /// keys `serve_addr`, `max_sessions`, `max_sessions_per_tenant`,
 /// `checkpoint_dir`, `quantum_steps`, `checkpoint_every_steps`,
-/// `checkpoint_on_shutdown`, `retain_terminal`, `resume_dir` (all
-/// optional; unknown keys are rejected to catch typos, mirroring
+/// `checkpoint_on_shutdown`, `retain_terminal`, `retain_snapshots`,
+/// `resume_dir`, `metrics_addr`, `trace_out`, `health_every_steps`
+/// (all optional; unknown keys are rejected to catch typos, mirroring
 /// [`crate::config::TrainConfig::from_json`]).
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -122,6 +123,25 @@ pub struct ServeConfig {
     pub resume_dir: Option<String>,
     /// Scheduler idle sleep between rounds with no runnable session.
     pub idle_sleep_ms: u64,
+    /// Keep only the newest N *loadable* snapshots per checkpoint
+    /// lineage, pruning older ones after each successful write
+    /// (`retain_snapshots`, CLI `--retain-snapshots`); 0 = unlimited.
+    /// Terminal tombstones are never pruned. Deletions bump the
+    /// `serve.ckpt.pruned` counter.
+    pub retain_snapshots: usize,
+    /// Optional listen address for the Prometheus scrape endpoint
+    /// (`metrics_addr`, CLI `--metrics-addr`); a separate std-only
+    /// HTTP GET listener serving text exposition v0.0.4. `None` = off.
+    pub metrics_addr: Option<String>,
+    /// Optional path a Chrome trace-event JSON file is written to at
+    /// shutdown (`trace_out`, CLI `--trace-out`) — the per-step phase
+    /// spans of every session, loadable in Perfetto. `None` = off.
+    pub trace_out: Option<String>,
+    /// Optimizer-health probe cadence in steps (`health_every_steps`,
+    /// CLI `--health-every`): sample per-layer second-order
+    /// diagnostics every Nth step; 0 disables probing. Observational
+    /// only — numerics are bit-identical at any cadence.
+    pub health_every_steps: u64,
 }
 
 impl Default for ServeConfig {
@@ -137,6 +157,10 @@ impl Default for ServeConfig {
             retain_terminal: 64,
             resume_dir: None,
             idle_sleep_ms: 5,
+            retain_snapshots: 0,
+            metrics_addr: None,
+            trace_out: None,
+            health_every_steps: crate::telemetry::health::DEFAULT_EVERY,
         }
     }
 }
@@ -185,6 +209,20 @@ impl ServeConfig {
                 "resume_dir" => {
                     c.resume_dir = Some(val.as_str().ok_or("resume_dir: string")?.to_string());
                 }
+                "retain_snapshots" => {
+                    c.retain_snapshots = val.as_usize().ok_or("retain_snapshots: number")?;
+                }
+                "metrics_addr" => {
+                    c.metrics_addr =
+                        Some(val.as_str().ok_or("metrics_addr: string")?.to_string());
+                }
+                "trace_out" => {
+                    c.trace_out = Some(val.as_str().ok_or("trace_out: string")?.to_string());
+                }
+                "health_every_steps" => {
+                    c.health_every_steps =
+                        val.as_usize().ok_or("health_every_steps: number")? as u64;
+                }
                 other => return Err(format!("unknown serve config key '{other}'")),
             }
         }
@@ -209,7 +247,9 @@ mod tests {
                 "checkpoint_dir": "/tmp/ck", "quantum_steps": 4,
                 "max_sessions_per_tenant": 2, "checkpoint_every_steps": 50,
                 "checkpoint_on_shutdown": false, "retain_terminal": 16,
-                "resume_dir": "/tmp/ck"}"#,
+                "resume_dir": "/tmp/ck", "retain_snapshots": 5,
+                "metrics_addr": "127.0.0.1:0", "trace_out": "/tmp/trace.json",
+                "health_every_steps": 25}"#,
         )
         .unwrap();
         assert_eq!(c.addr, "0.0.0.0:9000");
@@ -221,6 +261,10 @@ mod tests {
         assert!(!c.checkpoint_on_shutdown);
         assert_eq!(c.retain_terminal, 16);
         assert_eq!(c.resume_dir.as_deref(), Some("/tmp/ck"));
+        assert_eq!(c.retain_snapshots, 5);
+        assert_eq!(c.metrics_addr.as_deref(), Some("127.0.0.1:0"));
+        assert_eq!(c.trace_out.as_deref(), Some("/tmp/trace.json"));
+        assert_eq!(c.health_every_steps, 25);
         // Defaults: quotas off, periodic checkpoints off, shutdown
         // snapshot on.
         let d = ServeConfig::from_json("{}").unwrap();
@@ -229,6 +273,10 @@ mod tests {
         assert!(d.checkpoint_on_shutdown);
         assert_eq!(d.retain_terminal, 64);
         assert!(d.resume_dir.is_none());
+        assert_eq!(d.retain_snapshots, 0);
+        assert!(d.metrics_addr.is_none());
+        assert!(d.trace_out.is_none());
+        assert_eq!(d.health_every_steps, crate::telemetry::health::DEFAULT_EVERY);
         assert!(ServeConfig::from_json(r#"{"max_sessions": 0}"#).is_err());
         assert!(ServeConfig::from_json(r#"{"port": 1}"#).is_err());
         assert!(ServeConfig::from_json(r#"{"checkpoint_on_shutdown": 1}"#).is_err());

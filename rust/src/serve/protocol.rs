@@ -14,6 +14,8 @@
 //! | `cancel` | `session` | session state |
 //! | `stats` | — | service stats + per-session states |
 //! | `metrics` | — | [`crate::telemetry`] registry dump (`telemetry`, `counters`, `gauges`, `histograms`) |
+//! | `health` | `session`? | `health` object `{every, series, anomalies}` — per-session rings with `session`, else the service aggregate ([`crate::telemetry::health`]) |
+//! | `trace` | — | `trace`: Chrome trace-event JSON of per-step phase spans (open in Perfetto) |
 //! | `hosts` | — | `hosts` array (one self entry; a cluster router returns its whole registry) |
 //! | `watch` | `session` | *streaming* — see below |
 //! | `shutdown` | — | `stopping: true` |
@@ -119,6 +121,16 @@ fn handle(svc: &Service, req: &Json) -> Result<Vec<(&'static str, Json)>, String
         }
         "stats" => Ok(stats_fields(&svc.stats())),
         "metrics" => Ok(metrics_fields()),
+        // Optional `session`: per-session health rings when present,
+        // the process-global aggregate otherwise.
+        "health" => {
+            let id = req.get_f64("session").map(|v| v as u64);
+            Ok(vec![("health", svc.health(id)?)])
+        }
+        "trace" => Ok(vec![(
+            "trace",
+            crate::telemetry::export::chrome_trace_json(&svc.trace_spans()),
+        )]),
         // A plain serve process is a cluster of one: report itself so
         // router-aware clients can speak to either endpoint uniformly.
         "hosts" => {
@@ -157,7 +169,7 @@ fn handle(svc: &Service, req: &Json) -> Result<Vec<(&'static str, Json)>, String
 /// — need placement or aggregation logic and are handled by the
 /// router itself.
 pub const FORWARDABLE_SESSION_CMDS: &[&str] =
-    &["status", "pause", "resume", "cancel", "checkpoint", "watch"];
+    &["status", "pause", "resume", "cancel", "checkpoint", "watch", "health"];
 
 /// Whether a command is proxied as-is to the owning backend host by
 /// the cluster router (see [`FORWARDABLE_SESSION_CMDS`]).
@@ -225,9 +237,11 @@ pub fn stats_fields(st: &ServiceStats) -> Vec<(&'static str, Json)> {
 
 /// The process-wide telemetry registry as protocol response fields
 /// (the `metrics` command). Counters and gauges are `name → value`
-/// objects; histograms map `name → {count, mean_ms, p50_ms, p95_ms}`.
-/// With telemetry off everything reads zero and `telemetry` is
-/// `"off"`, so clients can tell "disabled" from "idle".
+/// objects; histograms map `name → {count, mean_ms, p50_ms, p95_ms,
+/// p99_ms, max_ms}` (the last two are additive extensions — old
+/// consumers that only read the original four keep parsing). With
+/// telemetry off everything reads zero and `telemetry` is `"off"`,
+/// so clients can tell "disabled" from "idle".
 pub fn metrics_fields() -> Vec<(&'static str, Json)> {
     let counters = crate::telemetry::counters()
         .iter()
@@ -247,6 +261,8 @@ pub fn metrics_fields() -> Vec<(&'static str, Json)> {
                     ("mean_ms", Json::Num(h.mean_ms())),
                     ("p50_ms", Json::Num(h.percentile_ms(50.0))),
                     ("p95_ms", Json::Num(h.percentile_ms(95.0))),
+                    ("p99_ms", Json::Num(h.percentile_ms(99.0))),
+                    ("max_ms", Json::Num(h.max_ms())),
                 ]),
             )
         })
@@ -382,6 +398,8 @@ mod tests {
         let step = hists.get("train.step_us").unwrap();
         assert!(step.get_f64("count").is_some());
         assert!(step.get_f64("p95_ms").is_some());
+        assert!(step.get_f64("p99_ms").is_some(), "additive p99 field");
+        assert!(step.get_f64("max_ms").is_some(), "additive max field");
         assert!(Json::parse(&resp.dump()).is_ok(), "metrics must round-trip");
         // watch cannot fit the one-line dispatch shape.
         let resp = dispatch(
@@ -393,6 +411,33 @@ mod tests {
         );
         assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
         assert!(resp.get_str("error").unwrap().contains("stream"), "{resp:?}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn health_and_trace_over_protocol() {
+        let svc = svc();
+        // Aggregate health: always answers, with or without samples.
+        let resp = dispatch(&svc, &Json::obj(vec![("cmd", Json::Str("health".into()))]));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        let health = resp.get("health").unwrap();
+        assert!(health.get_f64("every").is_some(), "{health:?}");
+        assert!(health.get("series").is_some() && health.get("anomalies").is_some());
+        // Per-session health needs a real session.
+        let resp = dispatch(
+            &svc,
+            &Json::obj(vec![
+                ("cmd", Json::Str("health".into())),
+                ("session", Json::Num(777.0)),
+            ]),
+        );
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+        // Trace always yields a well-formed Chrome trace envelope.
+        let resp = dispatch(&svc, &Json::obj(vec![("cmd", Json::Str("trace".into()))]));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+        let trace = resp.get("trace").unwrap();
+        assert!(trace.get("traceEvents").and_then(|t| t.as_arr()).is_some(), "{trace:?}");
+        assert!(forwardable("health"), "router forwards per-session health");
         svc.shutdown();
     }
 

@@ -84,6 +84,9 @@ pub(crate) struct Inner {
     /// Waiting sessions promoted into live slots.
     pub(crate) promotions: AtomicU64,
     sched_handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// Prometheus scrape listener (`cfg.metrics_addr`); `None` when
+    /// the endpoint is off or failed to bind. Stopped at shutdown.
+    metrics_srv: Mutex<Option<crate::telemetry::export::MetricsServer>>,
 }
 
 /// Handle to a running training-session service. Cheap to clone (all
@@ -170,7 +173,50 @@ pub(crate) fn checkpoint_session(
         crate::telemetry::SERVE_CHECKPOINTS.add(1);
     }
     sess.lock().unwrap_or_else(|e| e.into_inner()).note_checkpointed_at(step, tag);
+    if cfg.retain_snapshots > 0 {
+        prune_lineage(&cfg.checkpoint_dir, &stem, cfg.retain_snapshots);
+    }
     Ok((path, step))
+}
+
+/// Delete this lineage's snapshots beyond the newest `keep` *loadable*
+/// ones. Terminal tombstones are never deleted (they are what keeps a
+/// finished session finished across a `--resume-dir` restart), torn
+/// files are (they can never be loaded, so nothing is lost). Runs
+/// under the caller's [`Slot::ckpt_io`] lock, so a concurrent
+/// same-session write can never race the scan. Best-effort: failures
+/// are logged, never fatal — pruning must not fail a checkpoint that
+/// already landed. Each deletion bumps the `serve.ckpt.pruned`
+/// counter.
+pub(crate) fn prune_lineage(dir: &str, stem: &str, keep: usize) {
+    let lineages = match crate::serve::checkpoint::scan_lineages(dir) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("serve: snapshot prune scan of '{dir}' failed: {e}");
+            return;
+        }
+    };
+    let Some(files) = lineages.get(stem) else { return };
+    let mut kept = 0usize;
+    // Newest step first (scan_lineages order), so retention keeps the
+    // most recent snapshots.
+    for (_step, path) in files {
+        let loadable_live = match Checkpoint::load(path) {
+            // Tombstones are exempt from retention counting *and*
+            // deletion.
+            Ok(ck) if crate::serve::checkpoint::status_tag::is_terminal(ck.status_tag) => continue,
+            Ok(_) => true,
+            Err(_) => false,
+        };
+        if loadable_live && kept < keep {
+            kept += 1;
+            continue;
+        }
+        match std::fs::remove_file(path) {
+            Ok(()) => crate::telemetry::SERVE_CKPT_PRUNED.add(1),
+            Err(e) => eprintln!("serve: prune of '{path}' failed: {e}"),
+        }
+    }
 }
 
 /// Promote waiting sessions into free live slots in
@@ -230,6 +276,16 @@ impl Service {
     /// are logged, never fatal).
     pub fn start(cfg: ServeConfig) -> Service {
         let resume_dir = cfg.resume_dir.clone();
+        crate::telemetry::health::set_every(cfg.health_every_steps);
+        let metrics_srv = cfg.metrics_addr.as_deref().and_then(|addr| {
+            match crate::telemetry::export::MetricsServer::start(addr) {
+                Ok(srv) => Some(srv),
+                Err(e) => {
+                    eprintln!("serve: metrics endpoint on '{addr}' failed to bind: {e}");
+                    None
+                }
+            }
+        });
         let inner = Arc::new(Inner {
             cfg,
             sessions: Mutex::new(BTreeMap::new()),
@@ -242,6 +298,7 @@ impl Service {
             auto_checkpoints: AtomicU64::new(0),
             promotions: AtomicU64::new(0),
             sched_handle: Mutex::new(None),
+            metrics_srv: Mutex::new(metrics_srv),
         });
         let for_thread = Arc::clone(&inner);
         let handle = std::thread::Builder::new()
@@ -282,6 +339,22 @@ impl Service {
         let handle = self.inner.sched_handle.lock().unwrap_or_else(|e| e.into_inner()).take();
         let Some(h) = handle else { return };
         let _ = h.join();
+        // Export surfaces close with the scheduler: the trace now
+        // holds every step that will ever run, and the scrape
+        // endpoint dies with the service instead of serving a stale
+        // registry.
+        if let Some(path) = self.inner.cfg.trace_out.as_deref() {
+            let spans = self.trace_spans();
+            let out = std::path::Path::new(path);
+            if let Err(e) = crate::telemetry::export::write_chrome_trace(out, &spans) {
+                eprintln!("serve: trace export to '{path}' failed: {e}");
+            }
+        }
+        if let Some(srv) =
+            self.inner.metrics_srv.lock().unwrap_or_else(|e| e.into_inner()).as_mut()
+        {
+            srv.stop();
+        }
         if !self.inner.cfg.checkpoint_on_shutdown {
             return;
         }
@@ -719,6 +792,69 @@ impl Service {
             sessions: states,
         }
     }
+
+    /// Optimizer-health summary (the `health` protocol command):
+    /// per-session rings when `id` is given, otherwise the
+    /// process-global aggregate every stepped session feeds. Shape:
+    /// `{every, series, anomalies}` (see
+    /// [`crate::telemetry::health::summarize`]).
+    pub fn health(&self, id: Option<u64>) -> Result<crate::jsonx::Json, String> {
+        use crate::telemetry::health;
+        match id {
+            Some(id) => {
+                let sess = self.session(id)?;
+                let s = sess.lock().unwrap_or_else(|e| e.into_inner());
+                Ok(health::summarize(s.health()))
+            }
+            None => Ok(health::with_global(health::summarize)),
+        }
+    }
+
+    /// Chrome trace-event spans reconstructed from every session's
+    /// step-event ring: one complete (`ph:"X"`) span per telemetry
+    /// phase per retained step, pid = session id, timestamps laid out
+    /// cumulatively per session. Empty when telemetry is off (events
+    /// then carry no phase breakdown).
+    pub fn trace_spans(&self) -> Vec<crate::telemetry::export::TraceSpan> {
+        let sessions: Vec<(u64, Arc<Mutex<Session>>)> = self
+            .inner
+            .sessions
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .map(|(id, slot)| (*id, Arc::clone(&slot.sess)))
+            .collect();
+        let mut spans = Vec::new();
+        for (id, sess) in sessions {
+            let events = sess.lock().unwrap_or_else(|e| e.into_inner()).events_since(0);
+            let mut ts_us = 0u64;
+            for ev in events {
+                for (label, dur_us) in ev.phases {
+                    spans.push(crate::telemetry::export::TraceSpan {
+                        pid: id,
+                        tid: 0,
+                        name: label.to_string(),
+                        ts_us,
+                        dur_us,
+                    });
+                    ts_us += dur_us.max(1);
+                }
+            }
+        }
+        spans
+    }
+
+    /// Actual bound address of the Prometheus scrape endpoint (`None`
+    /// when `metrics_addr` is unset or the bind failed). With
+    /// `"host:0"` in the config this reports the kernel-chosen port.
+    pub fn metrics_addr(&self) -> Option<std::net::SocketAddr> {
+        self.inner
+            .metrics_srv
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .as_ref()
+            .map(|srv| srv.addr())
+    }
 }
 
 #[cfg(test)]
@@ -811,6 +947,40 @@ mod tests {
         svc.cancel(j1).unwrap();
         svc.submit(&tiny(1_000_000), "acme/j4", 1).unwrap();
         svc.shutdown();
+    }
+
+    #[test]
+    fn prune_lineage_keeps_newest_and_tombstones() {
+        use crate::serve::checkpoint::status_tag;
+        let dir = std::env::temp_dir().join("eva-serve-prune-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let dirs = dir.to_string_lossy().into_owned();
+        let sess = Session::new(1, "p", 1, &tiny(10)).unwrap();
+        let ck = sess.checkpoint().unwrap();
+        for step in 1..=4u64 {
+            ck.save(&format!("{dirs}/p-1-step{step}.ckpt")).unwrap();
+        }
+        // A terminal tombstone older than every live snapshot.
+        let mut tomb = ck.clone();
+        tomb.status_tag = status_tag::DONE;
+        tomb.save(&format!("{dirs}/p-1-step0.ckpt")).unwrap();
+        // A torn file newer than everything: never loadable, so it
+        // neither counts toward retention nor survives the prune.
+        std::fs::write(dir.join("p-1-step9.ckpt"), b"garbage").unwrap();
+        // An unrelated lineage must be untouched.
+        ck.save(&format!("{dirs}/other-2-step1.ckpt")).unwrap();
+        prune_lineage(&dirs, "p-1", 2);
+        let mut left: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        left.sort();
+        assert_eq!(
+            left,
+            ["other-2-step1.ckpt", "p-1-step0.ckpt", "p-1-step3.ckpt", "p-1-step4.ckpt"],
+            "keep the 2 newest loadable + the tombstone; drop older + torn"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -164,6 +164,9 @@ pub struct Session {
     events: VecDeque<StepEvent>,
     /// Next event sequence number.
     next_seq: u64,
+    /// Per-session optimizer-health rings (sampled; NOT checkpointed —
+    /// diagnostics restart empty after a restore, like the event ring).
+    health: crate::telemetry::series::SeriesStore,
 }
 
 // SAFETY: sessions cross threads (scheduler fan-out, service
@@ -214,6 +217,7 @@ impl Session {
             lane_share: 0,
             events: VecDeque::new(),
             next_seq: 0,
+            health: crate::telemetry::series::SeriesStore::new(),
         })
     }
 
@@ -306,6 +310,15 @@ impl Session {
         // Drain the step's telemetry spans on the stepping thread (the
         // phase list is thread-local). Empty when telemetry is off.
         let phases = crate::telemetry::take_step_phases();
+        // Likewise the sampled optimizer-health probes: into this
+        // session's rings and the process-global aggregate.
+        let samples = crate::telemetry::health::take_samples();
+        if !samples.is_empty() {
+            for (name, value) in &samples {
+                self.health.record(name, out.step, *value);
+            }
+            crate::telemetry::health::record_global(out.step, &samples);
+        }
         if self.events.len() >= EVENT_RING_CAP {
             self.events.pop_front();
         }
@@ -330,6 +343,12 @@ impl Session {
     /// Sequence number the next step event will carry.
     pub fn next_event_seq(&self) -> u64 {
         self.next_seq
+    }
+
+    /// This session's optimizer-health rings (empty when health
+    /// sampling is off or no probed step has run yet).
+    pub fn health(&self) -> &crate::telemetry::series::SeriesStore {
+        &self.health
     }
 
     /// Run the validation metric on demand (does not advance the loop).

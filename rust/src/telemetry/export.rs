@@ -1,0 +1,357 @@
+//! Standard export surfaces for the telemetry registry and health
+//! series: Prometheus text exposition and Chrome trace-event JSON.
+//!
+//! * [`render_prometheus`] renders every registered counter, gauge
+//!   and histogram plus the newest value of each health series as
+//!   Prometheus text exposition format v0.0.4 (`# HELP`/`# TYPE`
+//!   preamble per series, dotted names mapped to underscores, no
+//!   duplicate series).
+//! * [`MetricsServer`] is a std-only HTTP/1.1 GET responder serving
+//!   that rendering on a dedicated listener (`--metrics-addr`) —
+//!   non-blocking accept loop polling a stop flag, thread-per-conn,
+//!   the same shape as `serve/server.rs`. `telemetry` stays free of
+//!   any `serve` dependency.
+//! * [`TraceSpan`] + [`chrome_trace_json`] / [`write_chrome_trace`]
+//!   emit the per-step phase spans the serve session ring already
+//!   collects as a Chrome trace-event file (`--trace-out`), loadable
+//!   in Perfetto / `chrome://tracing`.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use crate::jsonx::Json;
+
+// ---------------------------------------------------------------------------
+// Prometheus text exposition v0.0.4
+// ---------------------------------------------------------------------------
+
+/// Map a dotted metric name onto the Prometheus grammar:
+/// `[a-zA-Z_:][a-zA-Z0-9_:]*` — every other byte becomes `_`.
+fn sanitize(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    for (i, c) in name.chars().enumerate() {
+        let ok = c.is_ascii_alphabetic() || c == '_' || c == ':' || (i > 0 && c.is_ascii_digit());
+        out.push(if ok { c } else { '_' });
+    }
+    out
+}
+
+fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+fn emit(
+    out: &mut String,
+    seen: &mut std::collections::BTreeSet<String>,
+    name: &str,
+    kind: &str,
+    help: &str,
+    value: String,
+) {
+    let pname = sanitize(name);
+    if !seen.insert(pname.clone()) {
+        return; // never emit a duplicate series
+    }
+    out.push_str(&format!("# HELP {pname} {help}\n# TYPE {pname} {kind}\n{pname} {value}\n"));
+}
+
+/// Render the full registry + health series as Prometheus text
+/// exposition format v0.0.4. Histograms surface as derived gauges
+/// (`_count`, `_mean_ms`, `_p50_ms`, `_p95_ms`, `_p99_ms`, `_max_ms`)
+/// rather than native histogram type — the registry's log-linear
+/// buckets are an internal detail. Each health ring contributes its
+/// newest value.
+pub fn render_prometheus() -> String {
+    let mut out = String::new();
+    let mut seen = std::collections::BTreeSet::new();
+    for c in super::counters() {
+        emit(&mut out, &mut seen, c.name(), "counter", "eva counter", format!("{}", c.get()));
+    }
+    for g in super::gauges() {
+        emit(&mut out, &mut seen, g.name(), "gauge", "eva gauge", format!("{}", g.get()));
+    }
+    for h in super::histograms() {
+        let base = h.name();
+        emit(
+            &mut out,
+            &mut seen,
+            &format!("{base}.count"),
+            "counter",
+            "eva histogram sample count",
+            format!("{}", h.count()),
+        );
+        for (suffix, v) in [
+            ("mean_ms", h.mean_ms()),
+            ("p50_ms", h.percentile_ms(50.0)),
+            ("p95_ms", h.percentile_ms(95.0)),
+            ("p99_ms", h.percentile_ms(99.0)),
+            ("max_ms", h.max_ms()),
+        ] {
+            emit(
+                &mut out,
+                &mut seen,
+                &format!("{base}.{suffix}"),
+                "gauge",
+                "eva histogram statistic (milliseconds)",
+                fmt_value(v),
+            );
+        }
+    }
+    super::health::with_global(|store| {
+        for (name, ring) in store.iter() {
+            if let Some((_, v)) = ring.last() {
+                let help = "eva optimizer-health sample (newest)";
+                emit(&mut out, &mut seen, name, "gauge", help, fmt_value(v));
+            }
+        }
+    });
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event JSON
+// ---------------------------------------------------------------------------
+
+/// One complete (`ph: "X"`) trace span.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceSpan {
+    /// Process id column in the trace viewer (serve uses session id).
+    pub pid: u64,
+    /// Thread id column (serve uses 0).
+    pub tid: u64,
+    /// Span label (phase name, e.g. `forward_backward`).
+    pub name: String,
+    /// Start timestamp in microseconds.
+    pub ts_us: u64,
+    /// Duration in microseconds.
+    pub dur_us: u64,
+}
+
+/// Serialize spans as a Chrome trace-event JSON object
+/// (`{"traceEvents": [...]}`) that Perfetto and `chrome://tracing`
+/// open directly. Every event is a complete (`ph: "X"`) span.
+pub fn chrome_trace_json(spans: &[TraceSpan]) -> String {
+    let events: Vec<Json> = spans
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("name", Json::Str(s.name.clone())),
+                ("cat", Json::Str("step".to_string())),
+                ("ph", Json::Str("X".to_string())),
+                ("ts", Json::Num(s.ts_us as f64)),
+                ("dur", Json::Num(s.dur_us as f64)),
+                ("pid", Json::Num(s.pid as f64)),
+                ("tid", Json::Num(s.tid as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+    .dump()
+}
+
+/// Write [`chrome_trace_json`] to `path`.
+pub fn write_chrome_trace(path: &std::path::Path, spans: &[TraceSpan]) -> std::io::Result<()> {
+    std::fs::write(path, chrome_trace_json(spans))
+}
+
+// ---------------------------------------------------------------------------
+// Scrape endpoint
+// ---------------------------------------------------------------------------
+
+/// A std-only HTTP GET responder serving [`render_prometheus`] — the
+/// `--metrics-addr` listener. Accept loop is non-blocking and polls a
+/// stop flag every 10 ms; each connection gets a short-lived handler
+/// thread. [`MetricsServer::stop`] (also run on drop) joins the
+/// accept thread.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9184`, port 0 for ephemeral) and
+    /// start serving scrapes.
+    pub fn start(addr: &str) -> std::io::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let handle = thread::Builder::new()
+            .name("eva-metrics-accept".to_string())
+            .spawn(move || accept_loop(listener, flag))?;
+        Ok(MetricsServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolved port when bound to port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept thread (idempotent).
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(listener: TcpListener, stop: Arc<AtomicBool>) {
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let _ = thread::Builder::new()
+                    .name("eva-metrics-conn".to_string())
+                    .spawn(move || handle_conn(stream));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 1024];
+    loop {
+        match stream.read(&mut tmp) {
+            Ok(0) => break,
+            Ok(n) => {
+                buf.extend_from_slice(&tmp[..n]);
+                if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() > 8192 {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let head = String::from_utf8_lossy(&buf);
+    let line = head.lines().next().unwrap_or("");
+    let (status, body) = if line.starts_with("GET ") {
+        ("200 OK", render_prometheus())
+    } else {
+        ("405 Method Not Allowed", "only GET is supported\n".to_string())
+    };
+    let resp = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = stream.write_all(resp.as_bytes());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sanitize_maps_dots_and_dashes() {
+        assert_eq!(sanitize("eva.health.eva-f.sm_denom.l0"), "eva_health_eva_f_sm_denom_l0");
+        assert_eq!(sanitize("train.step_us"), "train_step_us");
+    }
+
+    #[test]
+    fn prometheus_rendering_is_well_formed() {
+        let _serial = crate::backend::TEST_GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = super::super::enabled();
+        super::super::install(&super::super::TelemetryChoice::On);
+        super::super::TRAIN_STEPS.add(1);
+        super::super::health::record_global(0, &[("eva.health.eva.damping".to_string(), 0.03)]);
+        let text = render_prometheus();
+        assert!(text.contains("# TYPE train_steps counter"), "{text}");
+        assert!(text.contains("# TYPE eva_health_eva_damping gauge"), "{text}");
+        // Every series line has a HELP+TYPE preamble and appears once.
+        let mut names = std::collections::BTreeSet::new();
+        for l in text.lines() {
+            if l.starts_with('#') {
+                continue;
+            }
+            let name = l.split_whitespace().next().unwrap();
+            assert!(names.insert(name.to_string()), "duplicate series {name}");
+            assert!(text.contains(&format!("# TYPE {name} ")), "missing TYPE for {name}");
+            assert!(text.contains(&format!("# HELP {name} ")), "missing HELP for {name}");
+        }
+        super::super::health::reset_global();
+        super::super::install(if prev {
+            &super::super::TelemetryChoice::On
+        } else {
+            &super::super::TelemetryChoice::Off
+        });
+    }
+
+    #[test]
+    fn chrome_trace_round_trips() {
+        let fb = TraceSpan {
+            pid: 1,
+            tid: 0,
+            name: "forward_backward".to_string(),
+            ts_us: 0,
+            dur_us: 120,
+        };
+        let ap = TraceSpan { pid: 1, tid: 0, name: "apply".to_string(), ts_us: 120, dur_us: 40 };
+        let spans = vec![fb, ap];
+        let j = Json::parse(&chrome_trace_json(&spans)).expect("valid json");
+        let events = j.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents");
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].get_str("ph"), Some("X"));
+        assert_eq!(events[0].get_str("name"), Some("forward_backward"));
+        assert_eq!(events[1].get_f64("ts"), Some(120.0));
+        assert_eq!(events[1].get_f64("dur"), Some(40.0));
+    }
+
+    #[test]
+    fn metrics_server_serves_a_scrape() {
+        let _serial = crate::backend::TEST_GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = super::super::enabled();
+        super::super::install(&super::super::TelemetryChoice::On);
+        let mut srv = MetricsServer::start("127.0.0.1:0").expect("bind");
+        let mut conn = TcpStream::connect(srv.addr()).expect("connect");
+        conn.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.contains("version=0.0.4"), "{resp}");
+        assert!(resp.contains("# TYPE train_steps counter"), "{resp}");
+        // Non-GET is rejected.
+        let mut conn = TcpStream::connect(srv.addr()).expect("connect");
+        conn.write_all(b"POST / HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 405"), "{resp}");
+        srv.stop();
+        super::super::install(if prev {
+            &super::super::TelemetryChoice::On
+        } else {
+            &super::super::TelemetryChoice::Off
+        });
+    }
+}

@@ -1,0 +1,325 @@
+//! Second-order optimizer health probes.
+//!
+//! Each second-order optimizer records per-layer diagnostics —
+//! Sherman–Morrison denominator, update coefficient, Kronecker-vector
+//! norms, damping in effect, preconditioned-vs-raw gradient cosine
+//! and norm ratio, factor-refresh staleness — at a sampled cadence
+//! ([`every`] steps, default [`DEFAULT_EVERY`]; 0 disables). Samples
+//! flow through a **thread-local buffer**: the optimizer pushes
+//! `(name, value)` pairs on the calling thread during its step, and
+//! the owner of that step (the serve session loop, or a standalone
+//! consumer) drains them with [`take_samples`] right after
+//! `step_once` returns — the same hand-off shape as
+//! [`super::take_step_phases`]. Drained samples land in bounded
+//! [`SeriesStore`] rings: one per session, plus a process-global
+//! aggregate every train step feeds (so `eva train` and the scrape
+//! endpoint see health without a serve session).
+//!
+//! **Numerics are never touched.** Probes only *read* optimizer
+//! state and gradients on the calling thread, outside any parallel
+//! closure; enabling, disabling, or re-pacing them leaves train
+//! digests bit-identical (enforced by `rust/tests/telemetry.rs`).
+//!
+//! Metric names follow `eva.health.<alg>.<metric>[.l<layer>]`, e.g.
+//! `eva.health.eva.sm_denom.l0`; the loss series recorded by the
+//! train loop is `eva.health.train.loss`. The [`detect`] pass turns
+//! rings into rule-based anomaly flags (non-finite sample, SM
+//! denominator within 10× of the damping floor, negative
+//! preconditioned-gradient cosine, loss spike beyond k·rolling-σ).
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use super::series::SeriesStore;
+use crate::jsonx::Json;
+
+/// Default sampling cadence: probe every 10th step.
+pub const DEFAULT_EVERY: u64 = 10;
+
+/// Loss-spike rule: flag when the newest loss exceeds the rolling
+/// mean by more than this many rolling standard deviations.
+pub const LOSS_SPIKE_SIGMA: f64 = 4.0;
+
+/// Denominator-collapse rule: flag when the newest Sherman–Morrison
+/// denominator is within this factor of the damping floor γ (the
+/// denominator is γ + ‖ā‖²‖b̄‖² ≥ γ, so ≤ 10γ means the curvature
+/// term has nearly vanished).
+pub const DENOM_COLLAPSE_FACTOR: f64 = 10.0;
+
+static EVERY: AtomicU64 = AtomicU64::new(DEFAULT_EVERY);
+
+/// Set the sampling cadence: probe on steps where `step % n == 0`;
+/// `n = 0` disables probing entirely. Purely observational — never
+/// changes numerics.
+pub fn set_every(n: u64) {
+    EVERY.store(n, Ordering::Relaxed);
+}
+
+/// Current sampling cadence (0 = disabled).
+pub fn every() -> u64 {
+    EVERY.load(Ordering::Relaxed)
+}
+
+/// Whether health probes should sample on this step. One relaxed
+/// load past the telemetry-enabled branch; callers gate the (cheap,
+/// read-only) diagnostic recomputation on this.
+#[inline]
+pub fn due(step: u64) -> bool {
+    if !super::enabled() {
+        return false;
+    }
+    let n = every();
+    n > 0 && step % n == 0
+}
+
+thread_local! {
+    static SAMPLES: RefCell<Vec<(String, f64)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Push one raw named sample onto this thread's buffer. Prefer
+/// [`sample`] / [`sample_layer`], which build canonical names.
+pub fn record(name: String, value: f64) {
+    SAMPLES.with(|s| s.borrow_mut().push((name, value)));
+}
+
+/// Record a per-algorithm scalar: `eva.health.<alg>.<metric>`.
+pub fn sample(alg: &str, metric: &str, value: f64) {
+    record(format!("eva.health.{alg}.{metric}"), value);
+}
+
+/// Record a per-layer diagnostic: `eva.health.<alg>.<metric>.l<layer>`.
+pub fn sample_layer(alg: &str, metric: &str, layer: usize, value: f64) {
+    record(format!("eva.health.{alg}.{metric}.l{layer}"), value);
+}
+
+/// Drain this thread's buffered samples (empty when probes were not
+/// due). The step owner calls this right after `step_once` — same
+/// thread — and feeds a [`SeriesStore`].
+pub fn take_samples() -> Vec<(String, f64)> {
+    SAMPLES.with(|s| std::mem::take(&mut *s.borrow_mut()))
+}
+
+/// Clear this thread's buffer; called from [`super::begin_step`] so
+/// stale samples from an undrained step never leak into the next.
+pub fn clear_thread() {
+    SAMPLES.with(|s| s.borrow_mut().clear());
+}
+
+fn global() -> &'static Mutex<SeriesStore> {
+    static GLOBAL: OnceLock<Mutex<SeriesStore>> = OnceLock::new();
+    GLOBAL.get_or_init(|| Mutex::new(SeriesStore::new()))
+}
+
+/// Record drained samples into the process-global aggregate store.
+pub fn record_global(step: u64, samples: &[(String, f64)]) {
+    if samples.is_empty() {
+        return;
+    }
+    let mut store = global().lock().unwrap_or_else(|e| e.into_inner());
+    for (name, value) in samples {
+        store.record(name, step, *value);
+    }
+}
+
+/// Run `f` against the process-global aggregate store.
+pub fn with_global<R>(f: impl FnOnce(&SeriesStore) -> R) -> R {
+    let store = global().lock().unwrap_or_else(|e| e.into_inner());
+    f(&store)
+}
+
+/// Drop every ring in the process-global aggregate (tests / fresh
+/// serve boots).
+pub fn reset_global() {
+    global().lock().unwrap_or_else(|e| e.into_inner()).clear();
+}
+
+/// Rule-based anomaly scan over a store. Returns one flag object per
+/// firing rule: `{series, rule, step, detail}`.
+///
+/// Rules:
+/// * `non_finite` — the newest sample of any series is NaN/±Inf.
+/// * `denom_near_collapse` — a `sm_denom` series' newest value is
+///   within [`DENOM_COLLAPSE_FACTOR`]× of the sibling `damping`
+///   series (the γ floor): the rank-one curvature term has collapsed.
+/// * `negative_cosine` — a `precond_cosine` series' newest value is
+///   negative: the preconditioned step points *against* the gradient.
+/// * `loss_spike` — a `.loss` series with ≥ 8 points whose newest
+///   value exceeds mean + [`LOSS_SPIKE_SIGMA`]·σ of the ring.
+pub fn detect(store: &SeriesStore) -> Vec<Json> {
+    let mut flags = Vec::new();
+    for (name, ring) in store.iter() {
+        let Some((step, last)) = ring.last() else { continue };
+        if !last.is_finite() {
+            flags.push(flag(name, "non_finite", step, "newest sample is not finite"));
+            continue;
+        }
+        if let Some(prefix) = name.strip_suffix_metric("sm_denom") {
+            let gamma = store.get(&format!("{prefix}.damping")).and_then(|r| r.last());
+            if let Some((_, g)) = gamma {
+                if g.is_finite() && g > 0.0 && last <= DENOM_COLLAPSE_FACTOR * g {
+                    flags.push(flag(
+                        name,
+                        "denom_near_collapse",
+                        step,
+                        &format!("denominator {last:.3e} within {DENOM_COLLAPSE_FACTOR}x of damping {g:.3e}"),
+                    ));
+                }
+            }
+        }
+        if name.contains(".precond_cosine") && last < 0.0 {
+            flags.push(flag(
+                name,
+                "negative_cosine",
+                step,
+                "preconditioned step points against the gradient",
+            ));
+        }
+        if name.ends_with(".loss") && ring.len() >= 8 {
+            // Rolling stats over the history *excluding* the newest
+            // point — a genuine spike would otherwise inflate σ and
+            // mask itself.
+            let hist: Vec<f64> = ring.iter().map(|(_, v)| v).collect();
+            let hist = &hist[..hist.len() - 1];
+            let mean = hist.iter().sum::<f64>() / hist.len() as f64;
+            let var = hist.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / hist.len() as f64;
+            let sd = var.sqrt();
+            if sd > 0.0 && last > mean + LOSS_SPIKE_SIGMA * sd {
+                flags.push(flag(
+                    name,
+                    "loss_spike",
+                    step,
+                    &format!("loss {last:.3e} > mean {mean:.3e} + {LOSS_SPIKE_SIGMA}*sigma {sd:.3e}"),
+                ));
+            }
+        }
+    }
+    flags
+}
+
+fn flag(series: &str, rule: &str, step: u64, detail: &str) -> Json {
+    Json::obj(vec![
+        ("series", Json::Str(series.to_string())),
+        ("rule", Json::Str(rule.to_string())),
+        ("step", Json::Num(step as f64)),
+        ("detail", Json::Str(detail.to_string())),
+    ])
+}
+
+/// `{series: {...}, anomalies: [...], every: n}` — the shape both the
+/// per-session and aggregate arms of the `health` protocol command
+/// return.
+pub fn summarize(store: &SeriesStore) -> Json {
+    Json::obj(vec![
+        ("every", Json::Num(every() as f64)),
+        ("series", store.to_json()),
+        ("anomalies", Json::Arr(detect(store))),
+    ])
+}
+
+/// Strip `".{metric}"` or `".{metric}.l<k>"` from a series name,
+/// returning the algorithm prefix (used to find sibling series).
+trait MetricSuffix {
+    fn strip_suffix_metric(&self, metric: &str) -> Option<&str>;
+}
+
+impl MetricSuffix for str {
+    fn strip_suffix_metric(&self, metric: &str) -> Option<&str> {
+        let pat = format!(".{metric}");
+        match self.find(&pat) {
+            Some(i) => {
+                let rest = &self[i + pat.len()..];
+                let is_layer = rest.len() >= 3
+                    && rest.as_bytes()[0] == b'.'
+                    && rest.as_bytes()[1] == b'l'
+                    && rest[2..].bytes().all(|b| b.is_ascii_digit());
+                if rest.is_empty() || is_layer {
+                    Some(&self[..i])
+                } else {
+                    None
+                }
+            }
+            None => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cadence_gate() {
+        let _serial = crate::backend::TEST_GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let prev_tel = super::super::enabled();
+        super::super::install(&super::super::TelemetryChoice::On);
+        let prev = every();
+        set_every(5);
+        assert!(due(0) && due(10) && !due(3));
+        set_every(0);
+        assert!(!due(0) && !due(10));
+        set_every(prev);
+        super::super::install(if prev_tel {
+            &super::super::TelemetryChoice::On
+        } else {
+            &super::super::TelemetryChoice::Off
+        });
+    }
+
+    #[test]
+    fn thread_buffer_drains_once() {
+        clear_thread();
+        sample("eva", "damping", 0.03);
+        sample_layer("eva", "sm_denom", 0, 1.5);
+        let s = take_samples();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].0, "eva.health.eva.damping");
+        assert_eq!(s[1].0, "eva.health.eva.sm_denom.l0");
+        assert!(take_samples().is_empty(), "second drain must be empty");
+    }
+
+    #[test]
+    fn detect_flags_nan_and_denom_collapse() {
+        let mut store = SeriesStore::new();
+        store.record("eva.health.eva.damping", 10, 0.03);
+        // Denominator barely above gamma: collapse flag.
+        store.record("eva.health.eva.sm_denom.l0", 10, 0.05);
+        // Healthy denominator: no flag.
+        store.record("eva.health.eva.sm_denom.l1", 10, 5.0);
+        // NaN sample: non-finite flag.
+        store.record("eva.health.eva.precond_cosine.l0", 10, f64::NAN);
+        let flags = detect(&store);
+        let rules: Vec<&str> = flags.iter().filter_map(|f| f.get_str("rule")).collect();
+        assert!(rules.contains(&"denom_near_collapse"), "flags: {flags:?}");
+        assert!(rules.contains(&"non_finite"), "flags: {flags:?}");
+        let collapsed: Vec<&str> = flags
+            .iter()
+            .filter(|f| f.get_str("rule") == Some("denom_near_collapse"))
+            .filter_map(|f| f.get_str("series"))
+            .collect();
+        assert_eq!(collapsed, vec!["eva.health.eva.sm_denom.l0"]);
+    }
+
+    #[test]
+    fn detect_flags_negative_cosine_and_loss_spike() {
+        let mut store = SeriesStore::new();
+        store.record("eva.health.kfac.precond_cosine.l2", 4, -0.25);
+        for s in 0..9u64 {
+            store.record("eva.health.train.loss", s, 1.0 + 0.01 * s as f64);
+        }
+        store.record("eva.health.train.loss", 9, 50.0);
+        let flags = detect(&store);
+        let rules: Vec<&str> = flags.iter().filter_map(|f| f.get_str("rule")).collect();
+        assert!(rules.contains(&"negative_cosine"), "flags: {flags:?}");
+        assert!(rules.contains(&"loss_spike"), "flags: {flags:?}");
+    }
+
+    #[test]
+    fn metric_suffix_matching() {
+        let layered = "eva.health.eva.sm_denom.l3".strip_suffix_metric("sm_denom");
+        assert_eq!(layered, Some("eva.health.eva"));
+        let flat = "eva.health.eva.sm_denom".strip_suffix_metric("sm_denom");
+        assert_eq!(flat, Some("eva.health.eva"));
+        assert_eq!("eva.health.eva.sm_denom_min".strip_suffix_metric("sm_denom"), None);
+    }
+}

@@ -38,6 +38,10 @@ use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::time::Instant;
 
+pub mod export;
+pub mod health;
+pub mod series;
+
 // ---------------------------------------------------------------------------
 // The enabled/disabled knob (threaded like --simd)
 // ---------------------------------------------------------------------------
@@ -206,6 +210,7 @@ pub struct Histogram {
     name: &'static str,
     count: AtomicU64,
     sum_us: AtomicU64,
+    max_us: AtomicU64,
     buckets: [AtomicU64; NBUCKETS],
 }
 
@@ -240,6 +245,7 @@ impl Histogram {
             name,
             count: AtomicU64::new(0),
             sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
             buckets: [Z; NBUCKETS],
         }
     }
@@ -253,6 +259,7 @@ impl Histogram {
         }
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
         self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
     }
 
@@ -288,6 +295,11 @@ impl Histogram {
         bucket_value_us(NBUCKETS - 1) / 1000.0
     }
 
+    /// Exact maximum recorded sample in milliseconds (0 when empty).
+    pub fn max_ms(&self) -> f64 {
+        self.max_us.load(Ordering::Relaxed) as f64 / 1000.0
+    }
+
     /// The dotted metric name.
     pub fn name(&self) -> &'static str {
         self.name
@@ -296,6 +308,7 @@ impl Histogram {
     fn reset(&self) {
         self.count.store(0, Ordering::Relaxed);
         self.sum_us.store(0, Ordering::Relaxed);
+        self.max_us.store(0, Ordering::Relaxed);
         for b in &self.buckets {
             b.store(0, Ordering::Relaxed);
         }
@@ -312,9 +325,12 @@ thread_local! {
 
 /// Mark the start of a training step on this thread: clears the
 /// thread-local phase list so [`take_step_phases`] only ever sees the
-/// current step's spans. Called by `train::LoopState::step_once`.
+/// current step's spans, and the thread-local health-sample buffer so
+/// an undrained step never leaks stale probes into the next. Called
+/// by `train::LoopState::step_once`.
 pub fn begin_step() {
     STEP_PHASES.with(|p| p.borrow_mut().clear());
+    health::clear_thread();
 }
 
 /// Time a phase of the current step: runs `f`, records its wall time
@@ -401,6 +417,8 @@ pub static TENSOR_TMATVEC_FLOPS: Counter = Counter::new("tensor.tmatvec.flops");
 pub static TRAIN_STEPS: Counter = Counter::new("train.steps");
 /// Auto + explicit checkpoints written by the serve layer.
 pub static SERVE_CHECKPOINTS: Counter = Counter::new("serve.checkpoints");
+/// Stale lineage snapshots deleted by `--retain-snapshots` pruning.
+pub static SERVE_CKPT_PRUNED: Counter = Counter::new("serve.ckpt.pruned");
 /// Checkpoint-migrations completed by the cluster router (a session
 /// moved from one backend host to another).
 pub static CLUSTER_MIGRATIONS: Counter = Counter::new("cluster.migrations");
@@ -483,6 +501,7 @@ pub fn counters() -> &'static [&'static Counter] {
         &TENSOR_TMATVEC_FLOPS,
         &TRAIN_STEPS,
         &SERVE_CHECKPOINTS,
+        &SERVE_CKPT_PRUNED,
         &CLUSTER_MIGRATIONS,
         &CLUSTER_PROBE_FAILURES,
     ]
@@ -551,12 +570,14 @@ pub fn render_text() -> String {
     for h in histograms() {
         if h.count() > 0 {
             out.push_str(&format!(
-                "  {:<34} n={} mean={:.3}ms p50={:.3}ms p95={:.3}ms\n",
+                "  {:<34} n={} mean={:.3}ms p50={:.3}ms p95={:.3}ms p99={:.3}ms max={:.3}ms\n",
                 h.name(),
                 h.count(),
                 h.mean_ms(),
                 h.percentile_ms(50.0),
-                h.percentile_ms(95.0)
+                h.percentile_ms(95.0),
+                h.percentile_ms(99.0),
+                h.max_ms()
             ));
         }
     }

@@ -1,0 +1,256 @@
+//! Bounded time-series rings for optimizer-health samples.
+//!
+//! A [`Ring`] is a fixed-capacity sequence of `(step, value)` points
+//! under one dotted metric name; pushing past capacity drops the
+//! oldest point. A [`SeriesStore`] owns a bounded set of rings keyed
+//! by name — the per-session and service-aggregate containers the
+//! health layer records into. Everything here is plain data: no
+//! atomics, no clocks, no numerics impact.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::jsonx::Json;
+
+/// Default per-ring point capacity.
+pub const DEFAULT_RING_CAP: usize = 256;
+
+/// Upper bound on distinct series names one store will hold; records
+/// against new names beyond this are ignored (existing rings keep
+/// updating), so a misbehaving producer cannot grow memory without
+/// bound.
+pub const MAX_SERIES: usize = 512;
+
+/// A fixed-capacity `(step, value)` ring; push drops the oldest point.
+#[derive(Clone, Debug)]
+pub struct Ring {
+    cap: usize,
+    data: VecDeque<(u64, f64)>,
+}
+
+impl Ring {
+    /// An empty ring holding at most `cap` points (`cap` ≥ 1).
+    pub fn new(cap: usize) -> Self {
+        Ring { cap: cap.max(1), data: VecDeque::new() }
+    }
+
+    /// Append a point, dropping the oldest when full.
+    pub fn push(&mut self, step: u64, value: f64) {
+        if self.data.len() == self.cap {
+            self.data.pop_front();
+        }
+        self.data.push_back((step, value));
+    }
+
+    /// Number of points currently held.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when no points have been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Point capacity.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// The newest point, if any.
+    pub fn last(&self) -> Option<(u64, f64)> {
+        self.data.back().copied()
+    }
+
+    /// Iterate oldest → newest.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, f64)> + '_ {
+        self.data.iter().copied()
+    }
+
+    /// Minimum stored value (NaN-tolerant: NaN never wins), 0 if empty.
+    pub fn min(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|&(_, v)| v).fold(f64::INFINITY, f64::min)
+    }
+
+    /// Maximum stored value (NaN-tolerant), 0 if empty.
+    pub fn max(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|&(_, v)| v).fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Mean of the stored values (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|&(_, v)| v).sum::<f64>() / self.data.len() as f64
+    }
+
+    /// Population standard deviation of the stored values (0 when
+    /// fewer than two points).
+    pub fn stddev(&self) -> f64 {
+        if self.data.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var =
+            self.data.iter().map(|&(_, v)| (v - m) * (v - m)).sum::<f64>() / self.data.len() as f64;
+        var.sqrt()
+    }
+
+    /// Compact JSON summary: `{n, last_step, last, min, mean, max}`.
+    /// Non-finite values serialize as `null` (jsonx contract), so the
+    /// anomaly layer carries non-finiteness as explicit flags instead.
+    pub fn summary(&self) -> Json {
+        match self.last() {
+            None => Json::obj(vec![("n", Json::Num(0.0))]),
+            Some((step, value)) => Json::obj(vec![
+                ("n", Json::Num(self.len() as f64)),
+                ("last_step", Json::Num(step as f64)),
+                ("last", Json::Num(value)),
+                ("min", Json::Num(self.min())),
+                ("mean", Json::Num(self.mean())),
+                ("max", Json::Num(self.max())),
+            ]),
+        }
+    }
+}
+
+/// A bounded map of metric name → [`Ring`].
+#[derive(Clone, Debug)]
+pub struct SeriesStore {
+    ring_cap: usize,
+    rings: BTreeMap<String, Ring>,
+}
+
+impl Default for SeriesStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SeriesStore {
+    /// An empty store whose rings hold [`DEFAULT_RING_CAP`] points.
+    pub fn new() -> Self {
+        Self::with_ring_cap(DEFAULT_RING_CAP)
+    }
+
+    /// An empty store with an explicit per-ring capacity.
+    pub fn with_ring_cap(ring_cap: usize) -> Self {
+        SeriesStore { ring_cap: ring_cap.max(1), rings: BTreeMap::new() }
+    }
+
+    /// Record one point. New names past [`MAX_SERIES`] are dropped.
+    pub fn record(&mut self, name: &str, step: u64, value: f64) {
+        if let Some(r) = self.rings.get_mut(name) {
+            r.push(step, value);
+            return;
+        }
+        if self.rings.len() >= MAX_SERIES {
+            return;
+        }
+        let mut r = Ring::new(self.ring_cap);
+        r.push(step, value);
+        self.rings.insert(name.to_string(), r);
+    }
+
+    /// Look up a ring by exact name.
+    pub fn get(&self, name: &str) -> Option<&Ring> {
+        self.rings.get(name)
+    }
+
+    /// Number of distinct series.
+    pub fn len(&self) -> usize {
+        self.rings.len()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.rings.is_empty()
+    }
+
+    /// Iterate `(name, ring)` in sorted-name order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Ring)> {
+        self.rings.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Drop every ring.
+    pub fn clear(&mut self) {
+        self.rings.clear();
+    }
+
+    /// JSON summary object: name → [`Ring::summary`].
+    pub fn to_json(&self) -> Json {
+        Json::Obj(self.rings.iter().map(|(k, r)| (k.clone(), r.summary())).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_drops_oldest_at_capacity() {
+        let mut r = Ring::new(3);
+        for s in 0..5u64 {
+            r.push(s, s as f64);
+        }
+        assert_eq!(r.len(), 3);
+        let pts: Vec<_> = r.iter().collect();
+        assert_eq!(pts, vec![(2, 2.0), (3, 3.0), (4, 4.0)]);
+        assert_eq!(r.last(), Some((4, 4.0)));
+    }
+
+    #[test]
+    fn ring_preserves_step_ordering() {
+        let mut r = Ring::new(8);
+        for s in [10u64, 20, 30, 40] {
+            r.push(s, 1.0);
+        }
+        let steps: Vec<u64> = r.iter().map(|(s, _)| s).collect();
+        let mut sorted = steps.clone();
+        sorted.sort_unstable();
+        assert_eq!(steps, sorted, "points must stay in insertion (step) order");
+    }
+
+    #[test]
+    fn ring_stats() {
+        let mut r = Ring::new(8);
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            r.push(0, v);
+        }
+        assert_eq!(r.min(), 1.0);
+        assert_eq!(r.max(), 4.0);
+        assert!((r.mean() - 2.5).abs() < 1e-12);
+        assert!((r.stddev() - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn store_records_and_bounds_series_count() {
+        let mut s = SeriesStore::with_ring_cap(4);
+        for i in 0..(MAX_SERIES + 10) {
+            s.record(&format!("m.{i:04}"), 1, i as f64);
+        }
+        assert_eq!(s.len(), MAX_SERIES, "store must cap distinct series");
+        // Existing rings keep updating past the cap.
+        s.record("m.0000", 2, 99.0);
+        assert_eq!(s.get("m.0000").unwrap().last(), Some((2, 99.0)));
+        // Unknown-over-cap names are dropped silently.
+        assert!(s.get(&format!("m.{:04}", MAX_SERIES + 5)).is_none());
+    }
+
+    #[test]
+    fn store_summary_shape() {
+        let mut s = SeriesStore::new();
+        s.record("a.b", 7, 1.5);
+        let j = s.to_json();
+        let ring = j.get("a.b").expect("series present");
+        assert_eq!(ring.get_f64("n"), Some(1.0));
+        assert_eq!(ring.get_f64("last_step"), Some(7.0));
+        assert_eq!(ring.get_f64("last"), Some(1.5));
+    }
+}

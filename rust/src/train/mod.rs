@@ -189,6 +189,12 @@ impl Trainer {
         let mut lp = LoopState::new(self);
         while !lp.is_done() {
             lp.step_once(self)?;
+            // This loop owns its steps, so it drains the health
+            // samples the step buffered (the serve session layer does
+            // the same for its quanta) into the process-global rings —
+            // `eva train` feeds the scrape endpoint without a session.
+            let samples = crate::telemetry::health::take_samples();
+            crate::telemetry::health::record_global(lp.step(), &samples);
         }
         Ok(lp.report(self))
     }
@@ -387,6 +393,11 @@ impl LoopState {
         let t0 = std::time::Instant::now();
         let loss = trainer.train_step(&idx, lr, self.step)?;
         self.epoch_timer.record(t0.elapsed());
+        if crate::telemetry::health::due(self.step) {
+            // Sampled loss series for the spike-anomaly rule
+            // (read-only; numerics untouched).
+            crate::telemetry::health::sample("train", "loss", loss as f64);
+        }
         self.loss_sum += loss as f64;
         self.nsteps_in_epoch += 1;
         self.step += 1;

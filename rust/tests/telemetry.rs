@@ -211,3 +211,38 @@ fn training_digests_identical_with_telemetry_on_and_off() {
         );
     }
 }
+
+/// Health probes are read-only by construction (they recompute
+/// diagnostics from state the step already produced), so the digest
+/// contract must hold across every probe cadence — off (0), every
+/// step (1), the default (10) — and with telemetry itself off.
+#[test]
+fn training_digests_identical_across_health_cadences() {
+    use eva::telemetry::health;
+    let _serial = lock();
+    let prev_every = health::every();
+    for optimizer in ["eva", "kfac", "shampoo"] {
+        telemetry::install(&TelemetryChoice::On);
+        health::set_every(0);
+        let off = train_digest(optimizer);
+        health::set_every(1);
+        let every_step = train_digest(optimizer);
+        health::set_every(10);
+        let sampled = train_digest(optimizer);
+        telemetry::install(&TelemetryChoice::Off);
+        let no_telemetry = train_digest(optimizer);
+        telemetry::install(&TelemetryChoice::On);
+        assert_eq!(off, every_step, "{optimizer}: cadence 1 changed the weights");
+        assert_eq!(off, sampled, "{optimizer}: cadence 10 changed the weights");
+        assert_eq!(off, no_telemetry, "{optimizer}: telemetry off changed the weights");
+    }
+    health::set_every(prev_every);
+    // Cadence-1 runs filled the thread-local and global buffers with
+    // real samples; leave a clean slate for other tests.
+    health::clear_thread();
+    health::reset_global();
+    assert!(
+        health::with_global(|s| s.is_empty()),
+        "global health store must reset clean"
+    );
+}
