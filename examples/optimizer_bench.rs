@@ -1,0 +1,39 @@
+//! Cross-optimizer convergence/cost bench: trains every second-order
+//! method in the registry (Eva family, K-FAC, FOOF, Shampoo, M-FAC,
+//! MKOR, KrADagrad — with SGD as the first-order anchor) on one shared
+//! classification task and prints the convergence-vs-wall-clock-vs-
+//! memory table side by side.
+//!
+//! The same rows are persisted into `BENCH_telemetry.json` as the
+//! `optim_compare` section by `cargo bench --bench bench_snapshot`;
+//! `eva experiment optim-compare` additionally writes the CSV under
+//! `results/`.
+//!
+//! Run: `cargo run --release --example optimizer_bench [max_steps]`
+
+use eva::config::ModelArch;
+use eva::exp::compare;
+
+fn main() -> anyhow::Result<()> {
+    let max_steps: u64 =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(40);
+    println!("== optimizer bench: {} algorithms, {max_steps} shared steps (c10-small) ==\n", compare::COMPARED.len());
+    let arch = ModelArch::Classifier { hidden: vec![32] };
+    let rows = compare::collect("c10-small", &arch, max_steps, 11)?;
+    compare::print_table(&rows);
+
+    // Sanity: every optimizer actually took every step, and the
+    // curvature-carrying methods report real state.
+    for r in &rows {
+        assert_eq!(r.steps, max_steps, "{} stopped early", r.optimizer);
+        assert!(r.final_loss.is_finite(), "{} diverged", r.optimizer);
+    }
+    for name in ["mkor", "kradagrad"] {
+        let r = rows.iter().find(|r| r.optimizer == name).unwrap();
+        assert!(r.state_bytes > 0, "{name} exported no optimizer state");
+    }
+    println!(
+        "\n(expect: eva family near SGD cost; mkor/kradagrad between eva and the dense baselines; accuracy within a few points of kfac)"
+    );
+    Ok(())
+}

@@ -69,6 +69,10 @@ fn http_get(addr: std::net::SocketAddr, path: &str) -> (String, String) {
 }
 
 fn tenant(seed: u64, steps: u64) -> TrainConfig {
+    tenant_with("eva", seed, steps)
+}
+
+fn tenant_with(algo: &str, seed: u64, steps: u64) -> TrainConfig {
     let mut c = TrainConfig {
         name: format!("smoke-{seed}"),
         dataset: "c10-small".into(),
@@ -80,7 +84,7 @@ fn tenant(seed: u64, steps: u64) -> TrainConfig {
         max_steps: Some(steps),
         ..TrainConfig::default()
     };
-    c.optim.algorithm = "eva".into();
+    c.optim.algorithm = algo.into();
     c
 }
 
@@ -355,6 +359,18 @@ fn main() {
     assert_eq!(last_step, TARGET, "watch must follow C to its step target");
     println!("serve_smoke: watched tenant C live — {events} step events to step {last_step}");
 
+    // The vectorized-approximation cousins ride the same serve loop:
+    // one short tenant per new optimizer, run to the target so their
+    // health probes land in the registry before the scrape below.
+    for (algo, seed) in [("mkor", 5u64), ("kradagrad", 6u64)] {
+        let id = tcp
+            .submit(&tenant_with(algo, seed, TARGET), &format!("tenant-{algo}"), 1)
+            .expect("submit new-optimizer tenant");
+        let fin = tcp.wait_done(id, Duration::from_secs(600)).expect("wait new tenant");
+        assert_eq!(fin.get_f64("step"), Some(TARGET as f64), "{algo}: {fin:?}");
+        println!("serve_smoke: tenant-{algo} done at step {TARGET}");
+    }
+
     // The metrics command dumps the process-wide telemetry registry.
     let metrics = tcp.metrics().expect("metrics");
     let telem = metrics.get_str("telemetry").unwrap_or("?").to_string();
@@ -384,6 +400,11 @@ fn main() {
         body.contains("eva_health_eva_sm_denom_l0"),
         "scrape body missing per-layer health series"
     );
+    // The new optimizers' probes share the namespace: their
+    // Sherman–Morrison denominator series must be scraped too.
+    for series in ["eva_health_mkor_sm_denom_l0", "eva_health_kradagrad_sm_denom_l0"] {
+        assert!(body.contains(series), "scrape body missing {series}");
+    }
     std::fs::write(SCRAPE_OUT, &body).expect("persist scrape artifact");
     println!(
         "serve_smoke: scraped http://{scrape_addr}/metrics — {} bytes \u{2192} {SCRAPE_OUT}",
@@ -451,16 +472,17 @@ fn main() {
     println!("serve_smoke: trace — {} complete spans \u{2192} {TRACE_OUT}", spans.len());
 
     // Restart: a fresh service re-admits every lineage from disk.
-    // Five lineages exist — the two cancelled blockers and tenant-a
-    // must come back *terminal* (tombstones), while tenant-c and
-    // tenant-a-resumed run to the step target.
+    // Seven lineages exist — the two cancelled blockers and tenant-a
+    // must come back *terminal* (tombstones), while tenant-c,
+    // tenant-a-resumed, tenant-mkor and tenant-kradagrad run to (or
+    // already reached) the step target.
     let svc2 = Service::start(ServeConfig {
         max_sessions: 4,
         checkpoint_on_shutdown: false,
         ..serve_cfg
     });
     let ids = svc2.resume_from_dir(&ckdir_s).expect("resume dir");
-    assert_eq!(ids.len(), 5, "all five lineages must resume, got {ids:?}");
+    assert_eq!(ids.len(), 7, "all seven lineages must resume, got {ids:?}");
     println!("serve_smoke: restarted — resumed {} lineages", ids.len());
     let mut local2 = LocalClient::new(&svc2);
     let mut finished = 0;
@@ -496,7 +518,10 @@ fn main() {
             }
         }
     }
-    assert_eq!(finished, 2, "tenant-c and tenant-a-resumed must reach the target");
+    assert_eq!(
+        finished, 4,
+        "tenant-c, tenant-a-resumed, tenant-mkor and tenant-kradagrad must reach the target"
+    );
 
     // Service-level stats over the protocol.
     let stats = local2.stats().expect("stats");

@@ -10,8 +10,13 @@
 //!   1 and 2 backend hosts (two sessions per host), measuring what
 //!   the proxy layer costs end to end;
 //! * **phases** — the per-phase step breakdown per optimizer family
-//!   (eva / kfac / shampoo), read from the telemetry registry after a
-//!   short instrumented run — mean milliseconds per span.
+//!   (eva / kfac / shampoo / mkor / kradagrad), read from the
+//!   telemetry registry after a short instrumented run — mean
+//!   milliseconds per span;
+//! * **optim_compare** — the cross-optimizer convergence/cost rows
+//!   from `exp::compare` (best val accuracy, final loss, wall-clock,
+//!   ms/step, optimizer state bytes for every second-order method on
+//!   one shared task).
 //!
 //! With `EVA_BENCH_GATE=1` the run first loads the committed snapshot
 //! and **fails if any kernel's GFLOP/s regressed by more than 20%**.
@@ -30,6 +35,7 @@ use std::time::{Duration, Instant};
 use eva::backend::{self, BackendChoice, Sequential};
 use eva::cluster::{ClusterConfig, HostSpec, Router, RouterServer};
 use eva::config::{ModelArch, OptimConfig, TrainConfig};
+use eva::exp;
 use eva::jsonx::Json;
 use eva::optim::HyperParams;
 use eva::rng::Pcg64;
@@ -290,7 +296,7 @@ fn main() {
 
     println!("\n-- per-phase step breakdown per optimizer --");
     let mut phases = BTreeMap::new();
-    for optimizer in ["eva", "kfac", "shampoo"] {
+    for optimizer in ["eva", "kfac", "shampoo", "mkor", "kradagrad"] {
         let section = phase_section(optimizer);
         let steps = section
             .get("train.step_us")
@@ -305,6 +311,16 @@ fn main() {
         phases.insert(optimizer.to_string(), section);
     }
 
+    println!("\n-- cross-optimizer convergence/cost (shared c10-small task) --");
+    let arch = ModelArch::Classifier { hidden: vec![32] };
+    let compare_rows =
+        exp::compare::collect("c10-small", &arch, 24, 11).expect("optim compare runs");
+    exp::compare::print_table(&compare_rows);
+    for r in &compare_rows {
+        assert!(r.steps > 0, "{}: comparison recorded no steps", r.optimizer);
+    }
+    let optim_compare = exp::compare::rows_to_json(&compare_rows);
+
     let snapshot = Json::obj(vec![
         ("bench", Json::Str("bench_snapshot".into())),
         // A freshly measured snapshot is authoritative; only the
@@ -318,6 +334,7 @@ fn main() {
         ("serve", Json::Obj(serve)),
         ("cluster", Json::Obj(cluster)),
         ("phases", Json::Obj(phases)),
+        ("optim_compare", optim_compare),
     ]);
     let mut text = snapshot.pretty();
     text.push('\n');

@@ -221,6 +221,10 @@ USAGE:
 Unknown --options are rejected (typos used to be silently ignored).
 
 OPTIONS:
+  --optimizer ALG             training algorithm, one of: sgd adagrad adam
+                              adamw eva eva-f eva-s kfac foof foof-rank1
+                              shampoo mfac mkor kradagrad
+                              (the same registry `eva list` prints)
   --backend seq|threads[:N]   compute backend for tensor/linalg hot paths
                               (seq = single-threaded; threads = one lane per
                               hardware thread; threads:N = N lanes). Applies
@@ -317,6 +321,8 @@ EXAMPLES:
   eva train --engine pjrt:quickstart --optimizer eva --epochs 4
   eva train --preset c100-bench --optimizer shampoo --backend threads:8
   eva train --preset quickstart --optimizer eva --simd scalar   # same bits, slower
+  eva train --preset quickstart --optimizer mkor --interval 5
+  eva train --preset quickstart --optimizer kradagrad
   eva serve --backend threads:8 --max-sessions 4 --checkpoint-dir /tmp/ck
   eva experiment table5 --backend threads
   eva experiment table8 --backend threads:8 --worker-threads 2
@@ -432,6 +438,37 @@ mod tests {
         // USAGE text).
         for cmd in KNOWN_COMMANDS.iter().filter(|c| **c != "help") {
             assert!(USAGE.contains(&format!("eva {cmd}")), "USAGE missing 'eva {cmd}'");
+        }
+    }
+
+    /// `eva list`, the USAGE enumeration, and the optimizer registry
+    /// cannot drift: `list` prints `OPTIMIZER_NAMES` directly, and this
+    /// test pins the USAGE `--optimizer` enumeration to exactly that
+    /// constant (no missing names, no stale ones) with every entry
+    /// buildable through `by_name`.
+    #[test]
+    fn optimizer_registry_usage_and_list_stay_in_sync() {
+        use crate::optim::{by_name, HyperParams, OPTIMIZER_NAMES};
+        let hp = HyperParams::default();
+        let start = USAGE.find("one of:").expect("USAGE must enumerate --optimizer ALG");
+        let rel_end = USAGE[start..]
+            .find('(')
+            .expect("the --optimizer enumeration must close with a parenthetical");
+        let tokens: Vec<&str> =
+            USAGE[start + "one of:".len()..start + rel_end].split_whitespace().collect();
+        assert_eq!(
+            tokens.len(),
+            OPTIMIZER_NAMES.len(),
+            "USAGE enumerates {} optimizers, registry has {}",
+            tokens.len(),
+            OPTIMIZER_NAMES.len()
+        );
+        for t in &tokens {
+            assert!(OPTIMIZER_NAMES.contains(t), "USAGE lists '{t}' but the registry doesn't");
+        }
+        for n in OPTIMIZER_NAMES {
+            assert!(tokens.contains(n), "USAGE enumeration is missing '{n}'");
+            by_name(n, &hp).unwrap_or_else(|e| panic!("registry name '{n}' doesn't build: {e}"));
         }
     }
 }

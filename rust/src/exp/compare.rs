@@ -1,0 +1,209 @@
+//! Cross-optimizer convergence/cost harness (`optim-compare`).
+//!
+//! Trains every second-order algorithm in the registry — the Eva
+//! family, the dense baselines it approximates, and the
+//! vectorized-approximation cousins (MKOR, KrADagrad) — on one shared
+//! task, and reports convergence vs wall-clock vs memory side by
+//! side: best validation accuracy, final loss, total time, mean
+//! ms/step, and optimizer state bytes. The same rows feed three
+//! surfaces: the `eva experiment optim-compare` table + CSV, the
+//! `optimizer_bench` example, and the `optim_compare` section of
+//! `BENCH_telemetry.json` (via `cargo bench --bench bench_snapshot`).
+
+use anyhow::Result;
+
+use super::{cfg, default_lr, TablePrinter};
+use crate::config::ModelArch;
+use crate::jsonx::Json;
+use crate::train::{Metrics, Trainer};
+
+/// Every second-order method the registry knows, paper order: Eva
+/// variants first, then the dense/approximate baselines they are
+/// measured against. SGD rides along as the first-order anchor.
+pub const COMPARED: &[&str] = &[
+    "sgd", "eva", "eva-f", "eva-s", "kfac", "foof", "foof-rank1", "shampoo", "mfac",
+    "mkor", "kradagrad",
+];
+
+/// One optimizer's line in the comparison table.
+#[derive(Debug, Clone)]
+pub struct CompareRow {
+    pub optimizer: String,
+    pub best_val_acc: f32,
+    pub final_loss: f32,
+    pub total_time_s: f64,
+    pub mean_step_ms: f64,
+    pub state_bytes: usize,
+    pub steps: u64,
+}
+
+/// Train each optimizer in [`COMPARED`] for `max_steps` steps on the
+/// shared task and collect one [`CompareRow`] per optimizer.
+///
+/// All runs share the dataset, architecture, seed, batch size and LR
+/// schedule; only the algorithm and its family-default LR differ
+/// (the paper's "same hyper-parameters for fairness" setup).
+pub fn collect(
+    dataset: &str,
+    arch: &ModelArch,
+    max_steps: u64,
+    seed: u64,
+) -> Result<Vec<CompareRow>> {
+    let mut rows = Vec::with_capacity(COMPARED.len());
+    for opt in COMPARED {
+        let mut c = cfg("optim-compare", dataset, arch.clone(), opt, 1, default_lr(opt), seed);
+        c.max_steps = Some(max_steps);
+        let mut t = Trainer::from_config(&c)?;
+        let r = t.run()?;
+        rows.push(CompareRow {
+            optimizer: (*opt).into(),
+            best_val_acc: r.best_val_acc,
+            final_loss: r.final_loss,
+            total_time_s: r.total_time_s,
+            mean_step_ms: r.mean_step_ms,
+            state_bytes: r.optimizer_state_bytes,
+            steps: r.steps,
+        });
+    }
+    Ok(rows)
+}
+
+/// Print the comparison as a fixed-width table (times relative to the
+/// SGD anchor when present).
+pub fn print_table(rows: &[CompareRow]) {
+    let sgd_ms = rows
+        .iter()
+        .find(|r| r.optimizer == "sgd")
+        .map(|r| r.mean_step_ms)
+        .filter(|&m| m > 0.0);
+    let tp = TablePrinter::new(
+        &["optimizer", "best acc", "final loss", "time(s)", "ms/step", "rel t", "state KiB"],
+        &[10, 8, 10, 8, 8, 6, 9],
+    );
+    for r in rows {
+        let rel = match sgd_ms {
+            Some(base) => format!("{:.2}x", r.mean_step_ms / base),
+            None => "-".into(),
+        };
+        tp.row(&[
+            r.optimizer.clone(),
+            format!("{:.2}", 100.0 * r.best_val_acc),
+            format!("{:.4}", r.final_loss),
+            format!("{:.2}", r.total_time_s),
+            format!("{:.3}", r.mean_step_ms),
+            rel,
+            format!("{:.1}", r.state_bytes as f64 / 1024.0),
+        ]);
+    }
+}
+
+/// The `optim_compare` JSON section persisted into
+/// `BENCH_telemetry.json`: one object per optimizer, keyed by name.
+pub fn rows_to_json(rows: &[CompareRow]) -> Json {
+    Json::obj(
+        rows.iter()
+            .map(|r| {
+                (
+                    r.optimizer.as_str(),
+                    Json::obj(vec![
+                        ("best_val_acc", Json::Num(r.best_val_acc as f64)),
+                        ("final_loss", Json::Num(r.final_loss as f64)),
+                        ("total_time_s", Json::Num(r.total_time_s)),
+                        ("mean_step_ms", Json::Num(r.mean_step_ms)),
+                        ("state_bytes", Json::Num(r.state_bytes as f64)),
+                        ("steps", Json::Num(r.steps as f64)),
+                    ]),
+                )
+            })
+            .collect::<Vec<_>>(),
+    )
+}
+
+/// `eva experiment optim-compare` — the runnable comparison: short
+/// shared run over every second-order optimizer, table to stdout, CSV
+/// under `results/`.
+pub fn optim_compare() -> Result<()> {
+    println!("optim-compare — convergence vs wall-clock vs memory, all second-order methods");
+    println!("(c10-small, one hidden layer, shared seed/schedule; interval-10 regime for dense baselines)\n");
+    let arch = ModelArch::Classifier { hidden: vec![32] };
+    let rows = collect("c10-small", &arch, 40, 11)?;
+    print_table(&rows);
+    let mut csv = Metrics::new(
+        "results/optim_compare.csv",
+        "optimizer,best_val_acc,final_loss,total_time_s,mean_step_ms,state_bytes,steps",
+    );
+    for r in &rows {
+        csv.row(&[
+            r.optimizer.clone(),
+            format!("{:.4}", r.best_val_acc),
+            format!("{:.4}", r.final_loss),
+            format!("{:.3}", r.total_time_s),
+            format!("{:.3}", r.mean_step_ms),
+            r.state_bytes.to_string(),
+            r.steps.to_string(),
+        ]);
+    }
+    csv.flush()?;
+    println!("\n(expect: eva family ≈ SGD cost at second-order accuracy; mkor/kradagrad between eva and the dense baselines)  csv: results/optim_compare.csv");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim;
+
+    /// Every compared optimizer must exist in the registry — the
+    /// harness cannot silently drift from `OPTIMIZER_NAMES`.
+    #[test]
+    fn compared_optimizers_are_registered() {
+        for opt in COMPARED {
+            assert!(
+                optim::OPTIMIZER_NAMES.contains(opt),
+                "{opt} not in optimizer registry"
+            );
+            optim::by_name(opt, &optim::HyperParams::default())
+                .unwrap_or_else(|e| panic!("{opt}: {e}"));
+        }
+        // The harness covers the whole registry except the first-order
+        // diagonal methods (adagrad/adam/adamw keep no curvature
+        // factors to compare).
+        for name in optim::OPTIMIZER_NAMES {
+            let diag = matches!(*name, "adagrad" | "adam" | "adamw");
+            assert_eq!(
+                !diag,
+                COMPARED.contains(name),
+                "{name} coverage drifted between registry and harness"
+            );
+        }
+    }
+
+    /// The harness runs end to end on a miniature task and produces
+    /// one well-formed row per optimizer, including the new
+    /// vectorized-approximation cousins.
+    #[test]
+    fn collect_produces_complete_rows() {
+        let arch = ModelArch::Classifier { hidden: vec![8] };
+        let rows = collect("c10-small", &arch, 3, 5).unwrap();
+        assert_eq!(rows.len(), COMPARED.len());
+        for r in &rows {
+            assert_eq!(r.steps, 3, "{}", r.optimizer);
+            assert!(r.final_loss.is_finite(), "{} loss", r.optimizer);
+            assert!(r.mean_step_ms >= 0.0, "{} step time", r.optimizer);
+        }
+        // Curvature-carrying methods must report more state than SGD's
+        // bare momentum.
+        let sgd = rows.iter().find(|r| r.optimizer == "sgd").unwrap().state_bytes;
+        for name in ["mkor", "kradagrad", "kfac", "shampoo"] {
+            let r = rows.iter().find(|r| r.optimizer == name).unwrap();
+            assert!(
+                r.state_bytes > sgd,
+                "{name} state {} <= sgd {sgd}",
+                r.state_bytes
+            );
+        }
+        let j = rows_to_json(&rows);
+        assert!(j.get("mkor").and_then(|o| o.get_f64("state_bytes")).unwrap() > 0.0);
+        assert!(j.get("kradagrad").and_then(|o| o.get_f64("steps")).unwrap() > 0.0);
+    }
+}

@@ -21,8 +21,10 @@
 //! | `fig7` | hyper-parameter study | [`hyper`] |
 //! | `table9` | Eva ablations | [`convergence`] |
 //! | `fig8` | Eva-f/FOOF, Eva-s/Shampoo | [`convergence`] |
+//! | `optim-compare` | all second-order methods, cost vs convergence | [`compare`] |
 //! | `validate` | PJRT vs native cross-check | [`validate`] |
 
+pub mod compare;
 pub mod complexity;
 pub mod convergence;
 pub mod distributed;
@@ -39,7 +41,7 @@ use crate::train::{Report, Trainer};
 /// All experiment ids, in paper order.
 pub const ALL: &[&str] = &[
     "table1", "fig3", "fig4", "table4", "table5", "table6", "table7", "table8", "fig5",
-    "fig6", "fig7", "table9", "fig8", "table10", "validate",
+    "fig6", "fig7", "table9", "fig8", "table10", "optim-compare", "validate",
 ];
 
 /// Run one experiment by id (or `all`).
@@ -59,6 +61,7 @@ pub fn run(id: &str) -> Result<()> {
         "table9" => convergence::table9(),
         "fig8" => convergence::fig8(),
         "table10" => efficiency::table10(),
+        "optim-compare" => compare::optim_compare(),
         "validate" => validate::run(),
         "all" => {
             for id in ALL {

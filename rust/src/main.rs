@@ -415,7 +415,7 @@ fn health(cli: &Cli) -> Result<()> {
 
 fn list() -> Result<()> {
     println!("datasets:    c10-like c100-like c10-small c100-small mnist-like fmnist-like faces-like curves");
-    println!("optimizers:  sgd adagrad adam adamw eva eva-f eva-s kfac foof foof-rank1 shampoo mfac");
+    println!("optimizers:  {}", eva::optim::OPTIMIZER_NAMES.join(" "));
     println!(
         "backends:    seq threads threads:N   (current: {}, hardware: {})",
         eva::backend::global().label(),

@@ -1,0 +1,442 @@
+//! KrADagrad (Mehta et al., arXiv 2305.19416) — Kronecker
+//! approximation-domination preconditioning, the Shampoo alternative
+//! that never inverts a factor.
+//!
+//! Shampoo accumulates `M₁ = Σ GGᵀ`, `M₂ = Σ GᵀG` and pays an inverse
+//! p-th root per refresh — the ill-conditioned operation KrADagrad is
+//! built to avoid. Here the *inverse* factors are the maintained
+//! objects: per layer keep `L⁻¹` (d_out²) and `R⁻¹` (d_in²), start
+//! them at `(1/γ)·I`, and **downdate** them every step with one exact
+//! Sherman–Morrison application per side,
+//!
+//! ```text
+//! L ← L + uuᵀ   ⇒   L⁻¹ ← L⁻¹ − (L⁻¹u)(L⁻¹u)ᵀ / (1 + uᵀL⁻¹u)
+//! ```
+//!
+//! so `L⁻¹` always *dominates* (stays below, in the PSD order) the
+//! inverse of the true accumulation — the paper's approximation-
+//! domination invariant — and the denominator is ≥ 1 by construction.
+//! The rank-1 observations are deterministic gradient sketches in the
+//! spirit of the paper's rank-1 KrAD updates: `v̂` = normalized column
+//! means of `G`, `u = G v̂` (so `uuᵀ` sketches `GGᵀ`), then
+//! `û = u/‖u‖`, `v = Gᵀ û` for the right side. The preconditioner is
+//! `(L⁻¹)^{1/2} G (R⁻¹)^{1/2}` — a *positive* power of a maintained
+//! SPD matrix ([`spd_power`] at γ = 0), cached and refreshed only
+//! every `update_interval` steps like Shampoo's roots, with
+//! SGD-magnitude grafting per layer.
+//!
+//! O(d²) per-step downdates + O(d³/T) amortized root refreshes, O(4d²)
+//! state per layer — the factorization shape none of the other eleven
+//! optimizers exercise (maintained inverses + positive roots).
+
+use super::{
+    decayed_grads, HyperParams, MomentumState, OptState, Optimizer, StateBuf, StateReader,
+    StepCtx, Update,
+};
+use crate::linalg::spd_power;
+use crate::nn::StatsMode;
+use crate::tensor::{dot, matmul, Tensor};
+
+pub struct KrAdagrad {
+    hp: HyperParams,
+    /// Maintained inverse left accumulator per layer, d_out × d_out.
+    l_inv: Vec<Tensor>,
+    /// Maintained inverse right accumulator per layer, d_in × d_in.
+    r_inv: Vec<Tensor>,
+    /// Cached square roots of the maintained inverses (refreshed every
+    /// `update_interval` steps).
+    l_half: Vec<Tensor>,
+    r_half: Vec<Tensor>,
+    /// Smallest Sherman–Morrison downdate denominator at the latest
+    /// accumulate, per layer (health probe only; 0 = none yet, not
+    /// exported — restores re-observe it on the next step).
+    last_denom: Vec<f32>,
+    momentum: MomentumState,
+    initialized: bool,
+    roots_ready: bool,
+    pub use_grafting: bool,
+}
+
+/// Sherman–Morrison downdate of the maintained inverse `m` for the
+/// rank-1 accumulation `+uuᵀ` (u unnormalized); returns the
+/// denominator (≥ 1 since `m` is SPD), or 1.0 when the observation is
+/// too small to use. Matvec/dot/outer run on the `f32x8` kernels via
+/// `tensor` — bit-identical across backends and ISA paths — and the
+/// self outer product keeps `m` exactly symmetric.
+fn rank1_downdate(m: &mut Tensor, u: &[f32]) -> f32 {
+    if dot(u, u) < 1e-12 {
+        return 1.0;
+    }
+    let w = m.matvec(u);
+    let denom = 1.0 + dot(u, &w);
+    m.add_outer(-1.0 / denom, &w, &w);
+    denom
+}
+
+impl KrAdagrad {
+    pub fn new(hp: HyperParams) -> Self {
+        KrAdagrad {
+            hp,
+            l_inv: Vec::new(),
+            r_inv: Vec::new(),
+            l_half: Vec::new(),
+            r_half: Vec::new(),
+            last_denom: Vec::new(),
+            momentum: MomentumState::new(),
+            initialized: false,
+            roots_ready: false,
+            use_grafting: true,
+        }
+    }
+
+    /// True on steps where the cached roots are recomputed.
+    pub fn is_refresh_step(&self, step: u64) -> bool {
+        step % self.hp.update_interval.max(1) as u64 == 0
+    }
+
+    fn init_factors(&mut self, grads: &[Tensor]) {
+        let inv_g = 1.0 / self.hp.damping;
+        let eye = |d: usize| {
+            let mut m = Tensor::eye(d);
+            m.scale(inv_g);
+            m
+        };
+        self.l_inv = grads.iter().map(|g| eye(g.rows())).collect();
+        self.r_inv = grads.iter().map(|g| eye(g.cols())).collect();
+        self.l_half = grads.iter().map(|_| Tensor::zeros(0, 0)).collect();
+        self.r_half = grads.iter().map(|_| Tensor::zeros(0, 0)).collect();
+        self.last_denom = vec![0.0; grads.len()];
+        self.initialized = true;
+    }
+
+    /// Per-step rank-1 downdates of both maintained inverses from the
+    /// deterministic gradient sketches.
+    fn accumulate(&mut self, grads: &[Tensor]) {
+        for (l, g) in grads.iter().enumerate() {
+            let sketch = g.mean_rows();
+            let n2 = dot(&sketch, &sketch);
+            if n2 < 1e-12 {
+                continue;
+            }
+            let inv_norm = 1.0 / n2.sqrt();
+            let vhat: Vec<f32> = sketch.iter().map(|x| x * inv_norm).collect();
+            let u = g.matvec(&vhat);
+            let dl = rank1_downdate(&mut self.l_inv[l], &u);
+            let un2 = dot(&u, &u);
+            let dr = if un2 < 1e-12 {
+                dl
+            } else {
+                let inv_un = 1.0 / un2.sqrt();
+                let uhat: Vec<f32> = u.iter().map(|x| x * inv_un).collect();
+                let v = g.tmatvec(&uhat);
+                rank1_downdate(&mut self.r_inv[l], &v)
+            };
+            self.last_denom[l] = dl.min(dr);
+        }
+    }
+
+    /// Recompute the cached positive roots `(L⁻¹)^{1/2}`, `(R⁻¹)^{1/2}`.
+    /// Per-layer eigensolves are independent — fan them across the
+    /// compute backend (γ = 0: the maintained matrix is already damped,
+    /// and a positive power of an SPD matrix needs no extra shift).
+    fn refresh_roots(&mut self) {
+        let bk = crate::backend::current();
+        let (l_inv, r_inv) = (&self.l_inv, &self.r_inv);
+        let roots = crate::backend::par_map(&*bk, l_inv.len(), |l| {
+            (spd_power(&l_inv[l], 0.0, 0.5), spd_power(&r_inv[l], 0.0, 0.5))
+        });
+        for (l, (lh, rh)) in roots.into_iter().enumerate() {
+            self.l_half[l] = lh;
+            self.r_half[l] = rh;
+        }
+        self.roots_ready = true;
+    }
+}
+
+impl Optimizer for KrAdagrad {
+    fn name(&self) -> &'static str {
+        "kradagrad"
+    }
+
+    fn stats_mode(&self) -> StatsMode {
+        StatsMode::None // statistics come from G itself.
+    }
+
+    fn step(&mut self, ctx: &StepCtx) -> Update {
+        use crate::telemetry as tm;
+        let grads = decayed_grads(ctx, self.hp.weight_decay);
+        if !self.initialized {
+            self.init_factors(&grads);
+        }
+        // Downdates land every step (cheap matvecs); the eigensolve
+        // roots refresh on the interval, staying stale in between —
+        // the same staleness regime as Shampoo@T.
+        tm::time_phase("accumulate", &tm::OPTIM_KRADAGRAD_ACCUMULATE_US, || {
+            self.accumulate(&grads)
+        });
+        if self.is_refresh_step(ctx.step) || !self.roots_ready {
+            tm::time_phase("refresh", &tm::OPTIM_KRADAGRAD_REFRESH_US, || self.refresh_roots());
+        }
+        let bk = crate::backend::current();
+        let (l_half, r_half) = (&self.l_half, &self.r_half);
+        let pre: Vec<Tensor> =
+            tm::time_phase("precondition", &tm::OPTIM_KRADAGRAD_PRECONDITION_US, || {
+                crate::backend::par_map(&*bk, grads.len(), |l| {
+                    matmul(&matmul(&l_half[l], &grads[l]), &r_half[l])
+                })
+            });
+        if tm::health::due(ctx.step) {
+            // Read-only sampled health probe (never changes numerics).
+            tm::health::sample("kradagrad", "damping", self.hp.damping as f64);
+            tm::health::sample(
+                "kradagrad",
+                "root_staleness",
+                (ctx.step % self.hp.update_interval.max(1) as u64) as f64,
+            );
+            for (l, g) in grads.iter().enumerate() {
+                if let Some(&d) = self.last_denom.get(l) {
+                    if d > 0.0 {
+                        tm::health::sample_layer("kradagrad", "sm_denom", l, d as f64);
+                    }
+                }
+                let (pn, gn) = (pre[l].norm(), g.norm());
+                if pn > 0.0 && gn > 0.0 {
+                    let cos = pre[l].dot(g) / (pn * gn);
+                    tm::health::sample_layer("kradagrad", "precond_cosine", l, cos as f64);
+                    tm::health::sample_layer(
+                        "kradagrad",
+                        "precond_norm_ratio",
+                        l,
+                        (pn / gn) as f64,
+                    );
+                }
+            }
+        }
+        tm::time_phase("apply", &tm::OPTIM_KRADAGRAD_APPLY_US, || {
+            let mut pre = pre;
+            if self.use_grafting {
+                for (p, g) in pre.iter_mut().zip(&grads) {
+                    let pn = p.norm_sq();
+                    if pn > 1e-24 {
+                        p.scale((g.norm_sq() / pn).sqrt());
+                    }
+                }
+            }
+            self.momentum.apply(self.hp.momentum, ctx.lr, pre, ctx.bias_grads.to_vec())
+        })
+    }
+
+    fn state_bytes(&self) -> usize {
+        let f: usize = self
+            .l_inv
+            .iter()
+            .chain(&self.r_inv)
+            .chain(&self.l_half)
+            .chain(&self.r_half)
+            .map(|t| t.len())
+            .sum();
+        4 * f + self.momentum.state_bytes()
+    }
+
+    fn export_state(&self) -> OptState {
+        let mut st = OptState::new(self.name());
+        st.scalars.push(self.initialized as u64);
+        st.scalars.push(self.roots_ready as u64);
+        st.scalars.push(self.l_inv.len() as u64);
+        for (i, t) in self.l_inv.iter().enumerate() {
+            st.bufs.push(StateBuf::tensor(format!("kr.l{i}"), t));
+        }
+        for (i, t) in self.r_inv.iter().enumerate() {
+            st.bufs.push(StateBuf::tensor(format!("kr.r{i}"), t));
+        }
+        for (i, t) in self.l_half.iter().enumerate() {
+            st.bufs.push(StateBuf::tensor(format!("kr.lh{i}"), t));
+        }
+        for (i, t) in self.r_half.iter().enumerate() {
+            st.bufs.push(StateBuf::tensor(format!("kr.rh{i}"), t));
+        }
+        self.momentum.export_into(&mut st);
+        st
+    }
+
+    fn import_state(&mut self, st: &OptState) -> Result<(), String> {
+        let mut r = StateReader::open(st, self.name())?;
+        self.initialized = r.flag()?;
+        self.roots_ready = r.flag()?;
+        let n = r.scalar()? as usize;
+        let square = |t: Tensor, slot: &str| -> Result<Tensor, String> {
+            if t.rows() != t.cols() {
+                return Err(format!(
+                    "kradagrad: factor '{slot}' is {}×{}, expected square",
+                    t.rows(),
+                    t.cols()
+                ));
+            }
+            Ok(t)
+        };
+        let mut sets: Vec<Vec<Tensor>> = Vec::with_capacity(4);
+        for prefix in ["kr.l", "kr.r", "kr.lh", "kr.rh"] {
+            let mut out = Vec::with_capacity(n);
+            for i in 0..n {
+                let slot = format!("{prefix}{i}");
+                out.push(square(r.tensor(&slot)?, &slot)?);
+            }
+            sets.push(out);
+        }
+        self.r_half = sets.pop().unwrap();
+        self.l_half = sets.pop().unwrap();
+        self.r_inv = sets.pop().unwrap();
+        self.l_inv = sets.pop().unwrap();
+        self.last_denom = vec![0.0; n];
+        self.momentum = MomentumState::import_from(&mut r)?;
+        r.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::spd_inverse;
+    use crate::testing::{check, tensors_close, Gen};
+
+    fn plain_hp() -> HyperParams {
+        HyperParams { momentum: 0.0, weight_decay: 0.0, ..HyperParams::default() }
+    }
+
+    fn ctx<'a>(
+        params: &'a [Tensor],
+        grads: &'a [Tensor],
+        bias: &'a [Vec<f32>],
+        step: u64,
+    ) -> StepCtx<'a> {
+        StepCtx { params, grads, bias_grads: bias, stats: &[], lr: 1.0, step }
+    }
+
+    /// One downdate equals the dense inverse of the accumulation: after
+    /// a single step, `L⁻¹ == (γI + uuᵀ)⁻¹` with `u = G v̂` computed the
+    /// same way the optimizer computes it.
+    #[test]
+    fn downdate_matches_dense_inverse() {
+        // Large damping keeps inverse entries O(1) so the absolute
+        // tolerance of tensors_close is meaningful.
+        let hp = HyperParams { damping: 0.3, ..plain_hp() };
+        let gamma = hp.damping;
+        let mut g = Gen::new(11);
+        let grad = g.normal_tensor(4, 3);
+        let mut opt = KrAdagrad::new(hp);
+        let params = vec![Tensor::zeros(4, 3)];
+        let grads = vec![grad.clone()];
+        let bias = vec![vec![]];
+        let _ = opt.step(&ctx(&params, &grads, &bias, 0));
+        // Reproduce the sketch.
+        let sketch = grad.mean_rows();
+        let n = dot(&sketch, &sketch).sqrt();
+        let vhat: Vec<f32> = sketch.iter().map(|x| x / n).collect();
+        let u = grad.matvec(&vhat);
+        let mut dense = Tensor::eye(4);
+        dense.scale(gamma);
+        dense.add_outer(1.0, &u, &u);
+        let dinv = spd_inverse(&dense).unwrap();
+        tensors_close(&opt.l_inv[0], &dinv, 2e-2, "kradagrad L⁻¹ vs dense").unwrap();
+    }
+
+    /// pᵀg > 0 — positive roots of an SPD maintained inverse keep
+    /// descent directions.
+    #[test]
+    fn prop_positive_definite() {
+        check("kradagrad pᵀg > 0", 10, |g: &mut Gen| {
+            let mut opt = KrAdagrad::new(plain_hp());
+            opt.use_grafting = false;
+            let (r, c) = (g.usize_in(2, 6), g.usize_in(2, 6));
+            let params = vec![Tensor::zeros(r, c)];
+            let bias = vec![vec![]];
+            let mut last = 0.0;
+            for step in 0..3u64 {
+                let grads = vec![g.normal_tensor(r, c)];
+                let u = opt.step(&ctx(&params, &grads, &bias, step));
+                last = -u.deltas[0].dot(&grads[0]);
+            }
+            if last > 0.0 {
+                Ok(())
+            } else {
+                Err(format!("pᵀg = {last}"))
+            }
+        });
+    }
+
+    /// Approximation domination: accumulating can only shrink the
+    /// maintained inverse in the PSD order — xᵀL⁻¹x never increases.
+    #[test]
+    fn prop_downdates_are_monotone() {
+        check("kradagrad domination", 15, |g: &mut Gen| {
+            let d = g.usize_in(2, 6);
+            let mut m = Tensor::eye(d);
+            m.scale(1.0 / g.f32_in(0.01, 0.5));
+            let x = g.normal_vec(d);
+            let mut prev = dot(&x, &m.matvec(&x));
+            for _ in 0..5 {
+                let denom = rank1_downdate(&mut m, &g.normal_vec(d));
+                if denom < 1.0 - 1e-6 {
+                    return Err(format!("denom {denom} < 1"));
+                }
+                let cur = dot(&x, &m.matvec(&x));
+                if cur > prev * (1.0 + 1e-4) {
+                    return Err(format!("xᵀL⁻¹x grew: {prev} → {cur}"));
+                }
+                prev = cur;
+            }
+            Ok(())
+        });
+    }
+
+    /// Interval > 1 keeps the cached roots stale between refreshes
+    /// while the downdates keep landing — Shampoo@T's regime.
+    #[test]
+    fn interval_caches_roots() {
+        let mut hp = plain_hp();
+        hp.update_interval = 10;
+        let mut opt = KrAdagrad::new(hp);
+        let params = vec![Tensor::zeros(2, 2)];
+        let grads = vec![Tensor::from_rows(&[&[1.0, 0.5], &[0.25, 2.0]])];
+        let bias = vec![vec![]];
+        let _ = opt.step(&ctx(&params, &grads, &bias, 0));
+        let roots_after_0 = opt.l_half[0].clone();
+        let inv_after_0 = opt.l_inv[0].clone();
+        let _ = opt.step(&ctx(&params, &grads, &bias, 1));
+        assert_eq!(opt.l_half[0], roots_after_0); // roots stale
+        assert_ne!(opt.l_inv[0], inv_after_0); // downdates landed
+        let _ = opt.step(&ctx(&params, &grads, &bias, 10));
+        assert_ne!(opt.l_half[0], roots_after_0); // refreshed
+    }
+
+    /// Grafting pins the update magnitude to the gradient's (per
+    /// layer), like Shampoo/Eva-s.
+    #[test]
+    fn grafting_matches_gradient_magnitude() {
+        let mut opt = KrAdagrad::new(plain_hp());
+        let params = vec![Tensor::zeros(3, 4)];
+        let grads = vec![Tensor::full(3, 4, 0.3)];
+        let bias = vec![vec![]];
+        let u = opt.step(&ctx(&params, &grads, &bias, 0));
+        let (dn, gn) = (u.deltas[0].norm(), grads[0].norm());
+        assert!((dn - gn).abs() / gn < 1e-5, "‖Δ‖ {dn} vs ‖g‖ {gn}");
+    }
+
+    #[test]
+    fn import_rejects_non_square_factor() {
+        let hp = plain_hp();
+        let mut opt = KrAdagrad::new(hp.clone());
+        let params = vec![Tensor::zeros(2, 3)];
+        let grads = vec![Tensor::full(2, 3, 0.1)];
+        let bias = vec![vec![]];
+        let _ = opt.step(&ctx(&params, &grads, &bias, 0));
+        let mut st = opt.export_state();
+        let b = &mut st.bufs[0];
+        assert_eq!(b.name, "kr.l0");
+        b.rows = 1;
+        b.cols = b.data.len();
+        let mut fresh = KrAdagrad::new(hp);
+        let err = fresh.import_state(&st).unwrap_err();
+        assert!(err.contains("square"), "{err}");
+    }
+}

@@ -1,0 +1,441 @@
+//! MKOR (Mozaffari et al., arXiv 2306.01685) — momentum-enabled
+//! Kronecker-factored optimizer using **rank-1 inverse updates**.
+//!
+//! Where K-FAC rebuilds `(Q+γI)⁻¹`/`(R+γI)⁻¹` from scratch every
+//! refresh (the O(d³) Jacobi/Cholesky cost of Table 5), MKOR never
+//! materializes the factors at all: it maintains the *inverses*
+//! directly and folds each new rank-1 observation in with one
+//! Sherman–Morrison update — the same identity Eva's Eq. 12 exploits,
+//! applied incrementally:
+//!
+//! ```text
+//! A ← A + ρ v̂ v̂ᵀ   ⇒   A⁻¹ ← A⁻¹ − ρ (A⁻¹v̂)(A⁻¹v̂)ᵀ / (1 + ρ v̂ᵀA⁻¹v̂)
+//! ```
+//!
+//! one matvec + one outer product per factor per refresh — O(d²), the
+//! same order as reading the gradient. The observations are Eva's
+//! Kronecker vectors (Eq. 10): `v̂ = ā/‖ā‖` for the input factor,
+//! `û = b̄/‖b̄‖` for the output factor, each weighted by the
+//! running-average coefficient ξ. Factors start at the damped identity
+//! `(1/√γ)·I` per side (so the product carries the 1/γ scale of
+//! K-FAC's split damping) and the update is an exact inverse of the
+//! monotone accumulation `√γ·I + ξ·Σ v̂v̂ᵀ`, which keeps every
+//! Sherman–Morrison denominator ≥ 1 — the update can never collapse,
+//! unlike a decayed formulation whose inverse grows as (1/ξ)ᵗ along
+//! unobserved directions.
+//!
+//! `update_interval` gates the rank-1 refreshes exactly like K-FAC@T:
+//! on non-refresh steps the stale inverses precondition the fresh
+//! gradient and the backward pass captures no statistics at all
+//! ([`Optimizer::stats_mode_at`] → `None`); on refresh steps it
+//! captures KVs only (O(d) — never the O(d²) full factors).
+
+use super::{
+    decayed_grads, kl_clip_factor, HyperParams, MomentumState, OptState, Optimizer, StateBuf,
+    StateReader, StepCtx, Update,
+};
+use crate::nn::StatsMode;
+use crate::tensor::{dot, matmul, Tensor};
+
+pub struct Mkor {
+    hp: HyperParams,
+    /// Maintained inverse input factor per layer, `(√γ·I + ξΣv̂v̂ᵀ)⁻¹`,
+    /// shape d_in × d_in.
+    a_inv: Vec<Tensor>,
+    /// Maintained inverse output factor per layer, d_out × d_out.
+    b_inv: Vec<Tensor>,
+    /// Smallest Sherman–Morrison denominator seen at the most recent
+    /// factor update, per layer (health probe only; 0 = no update yet,
+    /// not exported — restores re-observe it at the next refresh).
+    last_denom: Vec<f32>,
+    momentum: MomentumState,
+    initialized: bool,
+}
+
+/// Fold `ρ·v̂v̂ᵀ` (v̂ = v/‖v‖) into the maintained inverse `m` via
+/// Sherman–Morrison; returns the denominator (≥ 1), or 1.0 when the
+/// observation is too small to use. The matvec, dots and the outer
+/// product all run on the `f32x8` kernels via `tensor`, so a factor
+/// update is bit-identical across backends and ISA paths; the outer
+/// product of `w` with itself keeps `m` exactly symmetric.
+fn rank1_accumulate(m: &mut Tensor, v: &[f32], rho: f32) -> f32 {
+    let n2 = dot(v, v);
+    if n2 < 1e-12 || rho <= 0.0 {
+        return 1.0;
+    }
+    let inv_norm = 1.0 / n2.sqrt();
+    let vhat: Vec<f32> = v.iter().map(|x| x * inv_norm).collect();
+    let w = m.matvec(&vhat);
+    let denom = 1.0 + rho * dot(&vhat, &w);
+    m.add_outer(-rho / denom, &w, &w);
+    denom
+}
+
+impl Mkor {
+    pub fn new(hp: HyperParams) -> Self {
+        Mkor {
+            hp,
+            a_inv: Vec::new(),
+            b_inv: Vec::new(),
+            last_denom: Vec::new(),
+            momentum: MomentumState::new(),
+            initialized: false,
+        }
+    }
+
+    /// True on steps where the rank-1 factor updates run.
+    pub fn is_refresh_step(&self, step: u64) -> bool {
+        step % self.hp.update_interval.max(1) as u64 == 0
+    }
+
+    /// Lazily shape the inverse factors to the damped identity
+    /// `(1/√γ)·I` per side.
+    fn init_factors(&mut self, grads: &[Tensor]) {
+        let inv_g = 1.0 / self.hp.damping.sqrt();
+        self.a_inv = grads
+            .iter()
+            .map(|g| {
+                let mut m = Tensor::eye(g.cols());
+                m.scale(inv_g);
+                m
+            })
+            .collect();
+        self.b_inv = grads
+            .iter()
+            .map(|g| {
+                let mut m = Tensor::eye(g.rows());
+                m.scale(inv_g);
+                m
+            })
+            .collect();
+        self.last_denom = vec![0.0; grads.len()];
+        self.initialized = true;
+    }
+
+    /// One rank-1 Sherman–Morrison refresh per factor from this step's
+    /// Kronecker vectors. Layers whose stats were not captured (empty
+    /// KVs) are skipped.
+    fn update_factors(&mut self, ctx: &StepCtx) {
+        let rho = self.hp.running_avg;
+        for (l, s) in ctx.stats.iter().enumerate().take(self.a_inv.len()) {
+            if s.a_mean.is_empty() {
+                continue;
+            }
+            let da = rank1_accumulate(&mut self.a_inv[l], &s.a_mean, rho);
+            let db = rank1_accumulate(&mut self.b_inv[l], &s.b_mean, rho);
+            self.last_denom[l] = da.min(db);
+        }
+    }
+
+    /// Sampled read-only health probe: Sherman–Morrison denominator of
+    /// the latest factor update, factor staleness, and the
+    /// preconditioned-vs-raw geometry every second-order optimizer
+    /// reports. Never touches optimizer state or numerics.
+    fn record_health(&self, grads: &[Tensor], pre: &[Tensor], gamma: f32, step: u64) {
+        use crate::telemetry::health;
+        health::sample("mkor", "damping", gamma as f64);
+        health::sample(
+            "mkor",
+            "factor_staleness",
+            (step % self.hp.update_interval.max(1) as u64) as f64,
+        );
+        for l in 0..grads.len() {
+            if let Some(&d) = self.last_denom.get(l) {
+                if d > 0.0 {
+                    health::sample_layer("mkor", "sm_denom", l, d as f64);
+                }
+            }
+            let (pn, gn) = (pre[l].norm(), grads[l].norm());
+            if pn > 0.0 && gn > 0.0 {
+                let cos = pre[l].dot(&grads[l]) / (pn * gn);
+                health::sample_layer("mkor", "precond_cosine", l, cos as f64);
+                health::sample_layer("mkor", "precond_norm_ratio", l, (pn / gn) as f64);
+            }
+        }
+    }
+}
+
+impl Optimizer for Mkor {
+    fn name(&self) -> &'static str {
+        "mkor"
+    }
+
+    /// Worst-case requirement (refresh steps): KVs only — MKOR never
+    /// needs the O(d²) full factors.
+    fn stats_mode(&self) -> StatsMode {
+        StatsMode::KvOnly
+    }
+
+    /// KVs only on refresh steps; stale inverses in between.
+    fn stats_mode_at(&self, step: u64) -> StatsMode {
+        if self.is_refresh_step(step) {
+            StatsMode::KvOnly
+        } else {
+            StatsMode::None
+        }
+    }
+
+    fn step(&mut self, ctx: &StepCtx) -> Update {
+        use crate::telemetry as tm;
+        let gamma = self.hp.damping;
+        let grads = decayed_grads(ctx, self.hp.weight_decay);
+        if !self.initialized {
+            self.init_factors(&grads);
+        }
+        if self.is_refresh_step(ctx.step) {
+            tm::time_phase("factor_update", &tm::OPTIM_MKOR_FACTOR_UPDATE_US, || {
+                self.update_factors(ctx)
+            });
+        }
+        // Layers are independent — fan `B⁻¹ G A⁻¹` across the compute
+        // backend (identical per-layer arithmetic on every carve).
+        let bk = crate::backend::current();
+        let (a_inv, b_inv) = (&self.a_inv, &self.b_inv);
+        let pre: Vec<Tensor> = tm::time_phase("precondition", &tm::OPTIM_MKOR_PRECONDITION_US, || {
+            crate::backend::par_map(&*bk, grads.len(), |l| {
+                matmul(&matmul(&b_inv[l], &grads[l]), &a_inv[l])
+            })
+        });
+        if tm::health::due(ctx.step) {
+            self.record_health(&grads, &pre, gamma, ctx.step);
+        }
+        tm::time_phase("apply", &tm::OPTIM_MKOR_APPLY_US, || {
+            let mut pre = pre;
+            let pg = super::pg_inner(&pre, &grads);
+            let nu = kl_clip_factor(self.hp.kl_clip, ctx.lr, pg);
+            if nu < 1.0 {
+                for p in &mut pre {
+                    p.scale(nu);
+                }
+            }
+            self.momentum.apply(self.hp.momentum, ctx.lr, pre, ctx.bias_grads.to_vec())
+        })
+    }
+
+    fn state_bytes(&self) -> usize {
+        let f: usize = self.a_inv.iter().chain(&self.b_inv).map(|t| t.len()).sum();
+        4 * f + self.momentum.state_bytes()
+    }
+
+    fn export_state(&self) -> OptState {
+        let mut st = OptState::new(self.name());
+        st.scalars.push(self.initialized as u64);
+        st.scalars.push(self.a_inv.len() as u64);
+        for (i, t) in self.a_inv.iter().enumerate() {
+            st.bufs.push(StateBuf::tensor(format!("mk.a{i}"), t));
+        }
+        for (i, t) in self.b_inv.iter().enumerate() {
+            st.bufs.push(StateBuf::tensor(format!("mk.b{i}"), t));
+        }
+        self.momentum.export_into(&mut st);
+        st
+    }
+
+    fn import_state(&mut self, st: &OptState) -> Result<(), String> {
+        let mut r = StateReader::open(st, self.name())?;
+        self.initialized = r.flag()?;
+        let n = r.scalar()? as usize;
+        let square = |t: Tensor, slot: &str| -> Result<Tensor, String> {
+            if t.rows() != t.cols() {
+                return Err(format!(
+                    "mkor: factor '{slot}' is {}×{}, expected square",
+                    t.rows(),
+                    t.cols()
+                ));
+            }
+            Ok(t)
+        };
+        let mut a_inv = Vec::with_capacity(n);
+        for i in 0..n {
+            a_inv.push(square(r.tensor(&format!("mk.a{i}"))?, &format!("mk.a{i}"))?);
+        }
+        let mut b_inv = Vec::with_capacity(n);
+        for i in 0..n {
+            b_inv.push(square(r.tensor(&format!("mk.b{i}"))?, &format!("mk.b{i}"))?);
+        }
+        self.a_inv = a_inv;
+        self.b_inv = b_inv;
+        self.last_denom = vec![0.0; n];
+        self.momentum = MomentumState::import_from(&mut r)?;
+        r.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::spd_inverse;
+    use crate::nn::LayerStats;
+    use crate::testing::{check, tensors_close, Gen};
+
+    fn hp_plain() -> HyperParams {
+        HyperParams {
+            momentum: 0.0,
+            weight_decay: 0.0,
+            kl_clip: 1e9, // effectively off
+            ..HyperParams::default()
+        }
+    }
+
+    fn stats_for(a: &[f32], b: &[f32]) -> LayerStats {
+        LayerStats { a_mean: a.to_vec(), b_mean: b.to_vec(), aat: None, bbt: None }
+    }
+
+    fn ctx<'a>(
+        params: &'a [Tensor],
+        grads: &'a [Tensor],
+        bias: &'a [Vec<f32>],
+        stats: &'a [LayerStats],
+        step: u64,
+    ) -> StepCtx<'a> {
+        StepCtx { params, grads, bias_grads: bias, stats, lr: 0.1, step }
+    }
+
+    /// The maintained inverse equals the dense inverse of the monotone
+    /// accumulation `√γ·I + ξ Σ v̂ⱼv̂ⱼᵀ` after a sequence of updates —
+    /// the Sherman–Morrison recursion end to end.
+    #[test]
+    fn prop_inverse_matches_dense_accumulation() {
+        check("mkor A⁻¹ == dense", 15, |g: &mut Gen| {
+            let d = g.usize_in(2, 6);
+            let rho = g.f32_in(0.3, 1.0);
+            let gamma = g.f32_in(0.05, 0.5);
+            let mut m = Tensor::eye(d);
+            m.scale(1.0 / gamma.sqrt());
+            let mut dense = Tensor::eye(d);
+            dense.scale(gamma.sqrt());
+            for _ in 0..g.usize_in(1, 5) {
+                let v = g.normal_vec(d);
+                let denom = rank1_accumulate(&mut m, &v, rho);
+                if denom <= 1.0 {
+                    continue; // skipped (degenerate observation)
+                }
+                let n = dot(&v, &v).sqrt();
+                let vhat: Vec<f32> = v.iter().map(|x| x / n).collect();
+                dense.add_outer(rho, &vhat, &vhat);
+            }
+            let dinv = spd_inverse(&dense).map_err(|e| e)?;
+            tensors_close(&m, &dinv, 2e-2, "mkor inverse vs dense")
+        });
+    }
+
+    /// Before any KV lands (zero-norm observation), the factors stay at
+    /// the damped identity and the step reduces to (1/γ)·SGD direction.
+    #[test]
+    fn identity_factors_give_sgd_direction() {
+        let mut opt = Mkor::new(hp_plain());
+        let params = vec![Tensor::zeros(3, 4)];
+        let grads = vec![Tensor::from_rows(&[
+            &[1.0, -2.0, 0.5, 0.0],
+            &[0.0, 1.0, 0.0, -1.0],
+            &[2.0, 0.0, 0.25, 0.5],
+        ])];
+        let bias = vec![vec![]];
+        let stats = vec![stats_for(&[0.0; 4], &[0.0; 3])];
+        let u = opt.step(&ctx(&params, &grads, &bias, &stats, 0));
+        let d = &u.deltas[0];
+        let cos = -d.dot(&grads[0]) / (d.norm() * grads[0].norm());
+        assert!((cos - 1.0).abs() < 1e-5, "cos {cos}");
+        // Scale: (1/√γ)² per side pair = 1/γ overall, times lr.
+        let expect = 0.1 / hp_plain().damping;
+        let ratio = d.norm() / grads[0].norm();
+        assert!((ratio - expect).abs() / expect < 1e-4, "ratio {ratio} vs {expect}");
+    }
+
+    /// pᵀg > 0 — the maintained inverse stays positive definite.
+    #[test]
+    fn prop_positive_definite() {
+        check("mkor pᵀg > 0", 15, |g: &mut Gen| {
+            let (r, c) = (g.usize_in(2, 6), g.usize_in(2, 6));
+            let mut opt = Mkor::new(hp_plain());
+            let params = vec![Tensor::zeros(r, c)];
+            let bias = vec![vec![]];
+            let mut last = 0.0;
+            for step in 0..3u64 {
+                let grads = vec![g.normal_tensor(r, c)];
+                let stats = vec![stats_for(&g.normal_vec(c), &g.normal_vec(r))];
+                let u = opt.step(&ctx(&params, &grads, &bias, &stats, step));
+                last = -u.deltas[0].dot(&grads[0]);
+            }
+            if last > 0.0 {
+                Ok(())
+            } else {
+                Err(format!("pᵀg = {last}"))
+            }
+        });
+    }
+
+    /// Interval > 1 skips the rank-1 refresh between refresh steps and
+    /// requests no statistics there — the K-FAC@T staleness regime.
+    #[test]
+    fn interval_skips_factor_updates() {
+        let mut hp = hp_plain();
+        hp.update_interval = 10;
+        let mut opt = Mkor::new(hp);
+        assert_eq!(opt.stats_mode_at(0), StatsMode::KvOnly);
+        assert_eq!(opt.stats_mode_at(3), StatsMode::None);
+        let params = vec![Tensor::zeros(2, 2)];
+        let grads = vec![Tensor::from_rows(&[&[1.0, 0.5], &[0.25, 2.0]])];
+        let bias = vec![vec![]];
+        let stats = vec![stats_for(&[1.0, 0.5], &[0.5, 1.0])];
+        let _ = opt.step(&ctx(&params, &grads, &bias, &stats, 0));
+        let after0 = opt.a_inv[0].clone();
+        // Non-refresh step: no stats captured, factors untouched.
+        let _ = opt.step(&ctx(&params, &grads, &bias, &[], 1));
+        assert_eq!(opt.a_inv[0], after0);
+        let stats2 = vec![stats_for(&[0.5, 1.5], &[1.0, -0.5])];
+        let _ = opt.step(&ctx(&params, &grads, &bias, &stats2, 10));
+        assert_ne!(opt.a_inv[0], after0);
+    }
+
+    /// Every Sherman–Morrison denominator of the accumulation form is
+    /// ≥ 1 — the stability property the health probe watches.
+    #[test]
+    fn prop_sm_denominator_at_least_one() {
+        check("mkor denom ≥ 1", 20, |g: &mut Gen| {
+            let d = g.usize_in(2, 8);
+            let mut m = Tensor::eye(d);
+            m.scale(1.0 / g.f32_in(0.01, 1.0).sqrt());
+            for _ in 0..6 {
+                let denom = rank1_accumulate(&mut m, &g.normal_vec(d), g.f32_in(0.1, 1.0));
+                if denom < 1.0 - 1e-6 {
+                    return Err(format!("denom {denom} < 1"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn state_accounts_factors_and_momentum() {
+        let mut opt = Mkor::new(hp_plain());
+        let params = vec![Tensor::zeros(3, 5)];
+        let grads = vec![Tensor::full(3, 5, 0.1)];
+        let bias = vec![vec![0.0; 3]];
+        let stats = vec![stats_for(&[0.1, 0.2, 0.3, 0.4, 0.5], &[0.5, 0.1, -0.2])];
+        let _ = opt.step(&ctx(&params, &grads, &bias, &stats, 0));
+        // a_inv 25 + b_inv 9 + momentum (15 w + 3 b).
+        assert_eq!(opt.state_bytes(), 4 * (25 + 9 + 15 + 3));
+    }
+
+    #[test]
+    fn import_rejects_non_square_factor() {
+        let hp = hp_plain();
+        let mut opt = Mkor::new(hp.clone());
+        let params = vec![Tensor::zeros(2, 3)];
+        let grads = vec![Tensor::full(2, 3, 0.1)];
+        let bias = vec![vec![]];
+        let stats = vec![stats_for(&[0.1, 0.2, 0.3], &[0.4, 0.5])];
+        let _ = opt.step(&ctx(&params, &grads, &bias, &stats, 0));
+        let mut st = opt.export_state();
+        // A consistent (len == rows×cols) but non-square factor must be
+        // rejected at import, not detonate in a later matmul.
+        let b = &mut st.bufs[0];
+        assert_eq!(b.name, "mk.a0");
+        b.rows = 1;
+        b.cols = b.data.len();
+        let mut fresh = Mkor::new(hp);
+        let err = fresh.import_state(&st).unwrap_err();
+        assert!(err.contains("square"), "{err}");
+    }
+}

@@ -12,6 +12,8 @@
 //! | [`foof`] | FOOF (+rank-1 variant, Fig. 3) | Eq. 6 | right KF |
 //! | [`shampoo`] | Shampoo | Eq. 8 | inverse 2k-th roots |
 //! | [`mfac`] | M-FAC | §2.2 | matrix-free Woodbury |
+//! | [`mkor`] | MKOR (2306.01685) | Eq. 12 (SM) | rank-1 inverse KFs |
+//! | [`kradagrad`] | KrADagrad (2305.19416) | Eq. 8/12 | downdated inverse roots |
 //!
 //! All optimizers implement [`Optimizer`]: given gradients + curvature
 //! statistics they produce parameter deltas, report how many bytes of
@@ -27,7 +29,9 @@ pub mod eva_f;
 pub mod eva_s;
 pub mod foof;
 pub mod kfac;
+pub mod kradagrad;
 pub mod mfac;
+pub mod mkor;
 pub mod sgd;
 pub mod shampoo;
 
@@ -38,7 +42,9 @@ pub use eva_f::EvaF;
 pub use eva_s::EvaS;
 pub use foof::Foof;
 pub use kfac::Kfac;
+pub use kradagrad::KrAdagrad;
 pub use mfac::MFac;
+pub use mkor::Mkor;
 pub use sgd::Sgd;
 pub use shampoo::Shampoo;
 
@@ -328,10 +334,27 @@ impl<'a> StateReader<'a> {
     }
 }
 
-/// Build an optimizer by config name.
-///
-/// Recognized: `sgd`, `adagrad`, `adam`, `adamw`, `eva`, `eva-f`,
-/// `eva-s`, `kfac`, `foof`, `foof-rank1`, `shampoo`, `mfac`.
+/// Every name [`by_name`] recognizes, in display order. `eva list`,
+/// the USAGE text, and the registry-sync tests all consume this single
+/// constant, so the three surfaces cannot drift from the registry.
+pub const OPTIMIZER_NAMES: &[&str] = &[
+    "sgd",
+    "adagrad",
+    "adam",
+    "adamw",
+    "eva",
+    "eva-f",
+    "eva-s",
+    "kfac",
+    "foof",
+    "foof-rank1",
+    "shampoo",
+    "mfac",
+    "mkor",
+    "kradagrad",
+];
+
+/// Build an optimizer by config name (see [`OPTIMIZER_NAMES`]).
 pub fn by_name(name: &str, hp: &HyperParams) -> Result<Box<dyn Optimizer>, String> {
     let hp = hp.clone();
     Ok(match name {
@@ -350,6 +373,8 @@ pub fn by_name(name: &str, hp: &HyperParams) -> Result<Box<dyn Optimizer>, Strin
         "foof-rank1" => Box::new(Foof::new(hp, true)),
         "shampoo" => Box::new(Shampoo::new(hp)),
         "mfac" => Box::new(MFac::new(hp)),
+        "mkor" => Box::new(Mkor::new(hp)),
+        "kradagrad" => Box::new(KrAdagrad::new(hp)),
         other => return Err(format!("unknown optimizer '{other}'")),
     })
 }
@@ -493,14 +518,33 @@ mod tests {
     #[test]
     fn by_name_builds_all() {
         let hp = HyperParams::default();
-        for n in [
-            "sgd", "adagrad", "adam", "adamw", "eva", "eva-f", "eva-s", "kfac", "foof",
-            "foof-rank1", "shampoo", "mfac",
-        ] {
+        for n in OPTIMIZER_NAMES {
             let opt = by_name(n, &hp).unwrap();
             assert!(!opt.name().is_empty());
         }
         assert!(by_name("newton", &hp).is_err());
+    }
+
+    /// The registry constant and `by_name` cannot drift: every listed
+    /// name builds an optimizer whose display name matches the config
+    /// string (modulo the adamw/foof-rank1 aliases), there are no
+    /// duplicates, and names are non-empty lowercase tokens.
+    #[test]
+    fn optimizer_names_match_registry() {
+        let hp = HyperParams::default();
+        let mut seen = std::collections::HashSet::new();
+        for n in OPTIMIZER_NAMES {
+            assert!(seen.insert(*n), "duplicate registry entry '{n}'");
+            assert!(!n.is_empty() && *n == n.to_lowercase(), "bad token '{n}'");
+            let opt = by_name(n, &hp).unwrap_or_else(|e| panic!("{n}: {e}"));
+            // Aliases map onto a base algorithm; everything else must
+            // round-trip its own name so OptState algo tags line up.
+            match *n {
+                "adamw" => assert_eq!(opt.name(), "adamw"),
+                "foof-rank1" => assert_eq!(opt.name(), "foof-rank1"),
+                _ => assert_eq!(opt.name(), *n, "registry name drifted"),
+            }
+        }
     }
 
     #[test]
@@ -540,6 +584,67 @@ mod tests {
         assert!(r2.finish().is_err());
     }
 
+    /// Negative-path coverage through real optimizer `import_state`
+    /// implementations: a snapshot with live buffers that is corrupted
+    /// in every way a torn/mislabeled checkpoint can be must come back
+    /// as a clean `Err`, never a panic or silent state corruption.
+    #[test]
+    fn import_state_rejects_corrupted_snapshots() {
+        use crate::nn::LayerStats;
+        let hp = HyperParams::default();
+        for n in ["eva", "kfac", "shampoo", "mfac", "mkor", "kradagrad"] {
+            // One real step so every state family has live buffers.
+            let mut opt = by_name(n, &hp).unwrap();
+            let params = vec![Tensor::zeros(3, 4)];
+            let grads = vec![Tensor::full(3, 4, 0.1)];
+            let bias = vec![vec![0.0; 3]];
+            let stats = vec![LayerStats {
+                a_mean: vec![0.1, 0.2, 0.3, 0.4],
+                b_mean: vec![0.5, 0.1, -0.2],
+                aat: Some(Tensor::eye(4)),
+                bbt: Some(Tensor::eye(3)),
+            }];
+            let ctx = StepCtx {
+                params: &params,
+                grads: &grads,
+                bias_grads: &bias,
+                stats: &stats,
+                lr: 0.1,
+                step: 0,
+            };
+            let _ = opt.step(&ctx);
+            let st = opt.export_state();
+            assert!(!st.bufs.is_empty(), "{n}: stepped state must hold buffers");
+            let fresh = || by_name(n, &hp).unwrap();
+
+            // Wrong algorithm tag.
+            let mut wrong = st.clone();
+            wrong.algo = "newton".into();
+            assert!(fresh().import_state(&wrong).is_err(), "{n}: wrong algo accepted");
+
+            // Future layout version.
+            let mut future = st.clone();
+            future.version = OPT_STATE_VERSION + 1;
+            let err = fresh().import_state(&future).unwrap_err();
+            assert!(err.contains("version"), "{n}: {err}");
+
+            // Truncated buffer list (torn write lost the tail).
+            let mut short = st.clone();
+            short.bufs.pop();
+            assert!(fresh().import_state(&short).is_err(), "{n}: truncated bufs accepted");
+
+            // Truncated scalar list.
+            let mut bare = st.clone();
+            bare.scalars.clear();
+            assert!(fresh().import_state(&bare).is_err(), "{n}: truncated scalars accepted");
+
+            // Payload length disagrees with the declared shape.
+            let mut torn = st.clone();
+            torn.bufs[0].data.pop();
+            assert!(fresh().import_state(&torn).is_err(), "{n}: torn buffer accepted");
+        }
+    }
+
     #[test]
     fn export_import_all_optimizers_positionally() {
         // Smoke the trait surface for the whole zoo: export on a fresh
@@ -547,10 +652,8 @@ mod tests {
         // snapshots must match (deep round-trip tests with real steps
         // live in tests/serve_checkpoint.rs).
         let hp = HyperParams::default();
-        for n in [
-            "sgd", "adagrad", "adam", "adamw", "eva", "eva-f", "eva-s", "kfac", "foof",
-            "foof-rank1", "shampoo", "mfac",
-        ] {
+        for n in OPTIMIZER_NAMES {
+            let n = *n;
             let opt = by_name(n, &hp).unwrap();
             let st = opt.export_state();
             assert_eq!(st.algo, opt.name(), "{n}");

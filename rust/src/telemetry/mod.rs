@@ -468,6 +468,24 @@ pub static OPTIM_SHAMPOO_PRECONDITION_US: Histogram =
     Histogram::new("optim.shampoo.precondition_us");
 /// Shampoo grafting + momentum apply.
 pub static OPTIM_SHAMPOO_APPLY_US: Histogram = Histogram::new("optim.shampoo.apply_us");
+/// MKOR rank-1 Sherman–Morrison inverse-factor updates.
+pub static OPTIM_MKOR_FACTOR_UPDATE_US: Histogram =
+    Histogram::new("optim.mkor.factor_update_us");
+/// MKOR `B⁻¹ G A⁻¹` preconditioning products.
+pub static OPTIM_MKOR_PRECONDITION_US: Histogram = Histogram::new("optim.mkor.precondition_us");
+/// MKOR KL clip + momentum apply.
+pub static OPTIM_MKOR_APPLY_US: Histogram = Histogram::new("optim.mkor.apply_us");
+/// KrADagrad per-step rank-1 inverse downdates.
+pub static OPTIM_KRADAGRAD_ACCUMULATE_US: Histogram =
+    Histogram::new("optim.kradagrad.accumulate_us");
+/// KrADagrad cached-root refresh (`spd_power` of the maintained inverses).
+pub static OPTIM_KRADAGRAD_REFRESH_US: Histogram =
+    Histogram::new("optim.kradagrad.refresh_us");
+/// KrADagrad `(L⁻¹)^½ G (R⁻¹)^½` preconditioning products.
+pub static OPTIM_KRADAGRAD_PRECONDITION_US: Histogram =
+    Histogram::new("optim.kradagrad.precondition_us");
+/// KrADagrad grafting + momentum apply.
+pub static OPTIM_KRADAGRAD_APPLY_US: Histogram = Histogram::new("optim.kradagrad.apply_us");
 /// Scheduler lane re-carves (`split_weighted` + sub-pool build).
 pub static SERVE_SCHED_CARVE_US: Histogram = Histogram::new("serve.sched.carve_us");
 /// One scheduler round's fan-out: every runnable session's quantum.
@@ -531,6 +549,13 @@ pub fn histograms() -> &'static [&'static Histogram] {
         &OPTIM_SHAMPOO_REFRESH_US,
         &OPTIM_SHAMPOO_PRECONDITION_US,
         &OPTIM_SHAMPOO_APPLY_US,
+        &OPTIM_MKOR_FACTOR_UPDATE_US,
+        &OPTIM_MKOR_PRECONDITION_US,
+        &OPTIM_MKOR_APPLY_US,
+        &OPTIM_KRADAGRAD_ACCUMULATE_US,
+        &OPTIM_KRADAGRAD_REFRESH_US,
+        &OPTIM_KRADAGRAD_PRECONDITION_US,
+        &OPTIM_KRADAGRAD_APPLY_US,
         &SERVE_SCHED_CARVE_US,
         &SERVE_SCHED_QUANTUM_US,
         &SERVE_SCHED_CHECKPOINT_IO_US,

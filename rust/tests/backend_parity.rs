@@ -262,6 +262,58 @@ fn full_kfac_step_parity() {
     }
 }
 
+/// A short native training run under the installed global backend;
+/// returns the FNV digest of the exact final weight/bias bits. Same
+/// recipe as `tests/simd_parity.rs` so the two parity suites pin the
+/// identical trajectory from both axes of the determinism contract.
+fn train_digest(optimizer: &str) -> u64 {
+    use eva::config::{ModelArch, OptimConfig, TrainConfig};
+    use eva::train::Trainer;
+    let mut hp = HyperParams::default();
+    hp.update_interval = 2;
+    hp.shampoo_block = 32;
+    let cfg = TrainConfig {
+        name: format!("backend-parity-{optimizer}"),
+        dataset: "c10-small".into(),
+        seed: 7,
+        arch: ModelArch::Classifier { hidden: vec![16] },
+        optim: OptimConfig { algorithm: optimizer.into(), hp },
+        engine: eva::config::Engine::Native,
+        epochs: 1,
+        batch_size: 32,
+        base_lr: 0.05,
+        lr_schedule: eva::config::LrSchedule::Cosine,
+        warmup_steps: 0,
+        max_steps: Some(4),
+        eval_every: 1,
+        backend: None,
+        worker_threads: None,
+        simd: None,
+        telemetry: None,
+    };
+    let mut t = Trainer::from_config(&cfg).unwrap();
+    t.run().unwrap();
+    eva::serve::model_digest(t.model().expect("native engine"))
+}
+
+/// A full train run per optimizer family — including the
+/// vectorized-approximation cousins mkor and kradagrad — produces
+/// bit-identical weights under seq, threads:2 and threads:6.
+#[test]
+fn full_train_digests_bit_identical_across_backends() {
+    let _serial = GLOBAL_BACKEND.lock().unwrap_or_else(|e| e.into_inner());
+    for optimizer in ["eva", "kfac", "shampoo", "mkor", "kradagrad"] {
+        let seq = with_global(BackendChoice::Sequential, || train_digest(optimizer));
+        for lanes in [2usize, 6] {
+            let par = with_global(BackendChoice::Threaded(lanes), || train_digest(optimizer));
+            assert_eq!(
+                seq, par,
+                "{optimizer}: weights diverge between seq and threads:{lanes}"
+            );
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Elementwise / reduction parity through the global dispatcher
 // ---------------------------------------------------------------------------

@@ -66,6 +66,7 @@ fn digest_resumed(c: &TrainConfig, k: usize) -> u64 {
 fn checkpoint_roundtrip_is_bit_identical_for_every_optimizer() {
     for optimizer in [
         "sgd", "adam", "adagrad", "kfac", "foof", "shampoo", "mfac", "eva", "eva-f", "eva-s",
+        "mkor", "kradagrad",
     ] {
         let c = cfg(optimizer, 10, 1);
         let full = digest_uninterrupted(&c);
@@ -86,7 +87,10 @@ fn checkpoint_mid_interval_preserves_stale_preconditioners() {
     // Interval-based optimizers cache inverses/roots between refreshes;
     // a snapshot taken mid-interval must carry the *stale* cache, not
     // recompute it, or the resumed trajectory diverges.
-    for optimizer in ["kfac", "foof", "shampoo"] {
+    // mkor refreshes its inverse Kronecker factors and kradagrad its
+    // cached inverse roots on the same interval schedule — both must
+    // survive a mid-interval snapshot with the stale state intact.
+    for optimizer in ["kfac", "foof", "shampoo", "mkor", "kradagrad"] {
         let c = cfg(optimizer, 9, 4); // refreshes at steps 0, 4, 8
         let full = digest_uninterrupted(&c);
         for k in [2usize, 5, 6] {

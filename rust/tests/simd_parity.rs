@@ -220,7 +220,7 @@ fn train_digest(optimizer: &str) -> u64 {
 #[test]
 fn train_step_digests_scalar_vs_auto() {
     let _serial = GLOBAL_KNOBS.lock().unwrap_or_else(|e| e.into_inner());
-    for optimizer in ["eva", "kfac", "shampoo"] {
+    for optimizer in ["eva", "kfac", "shampoo", "mkor", "kradagrad"] {
         let scalar = with_isa(Isa::Scalar, || train_digest(optimizer));
         let best = with_isa(simd::detect_best(), || train_digest(optimizer));
         assert_eq!(

@@ -199,7 +199,7 @@ fn train_digest(optimizer: &str) -> u64 {
 #[test]
 fn training_digests_identical_with_telemetry_on_and_off() {
     let _serial = lock();
-    for optimizer in ["eva", "kfac", "shampoo"] {
+    for optimizer in ["eva", "kfac", "shampoo", "mkor", "kradagrad"] {
         telemetry::install(&TelemetryChoice::On);
         let on = train_digest(optimizer);
         telemetry::install(&TelemetryChoice::Off);
@@ -221,7 +221,7 @@ fn training_digests_identical_across_health_cadences() {
     use eva::telemetry::health;
     let _serial = lock();
     let prev_every = health::every();
-    for optimizer in ["eva", "kfac", "shampoo"] {
+    for optimizer in ["eva", "kfac", "shampoo", "mkor", "kradagrad"] {
         telemetry::install(&TelemetryChoice::On);
         health::set_every(0);
         let off = train_digest(optimizer);
