@@ -350,7 +350,11 @@ const CHUNKS_PER_THREAD: usize = 4;
 #[derive(Clone, Copy)]
 pub(crate) struct SendPtr<T>(pub *mut T);
 
+// SAFETY: SendPtr is a bare pointer moved across threads; the struct
+// docs above are the contract — users index disjoint chunks only.
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: same contract as Send — shared references only hand out the
+// pointer, every dereference is a separate unsafe site.
 unsafe impl<T> Sync for SendPtr<T> {}
 
 /// Run `body` over balanced sub-ranges of `0..n`, at most one range
@@ -396,7 +400,8 @@ where
     let slots = SendPtr(out.as_mut_ptr());
     backend.par_for(n, &|i| {
         let v = f(i);
-        // Disjoint slot per chunk index; overwrites the pre-filled None.
+        // SAFETY: disjoint slot per chunk index (i < n = capacity);
+        // overwrites the pre-filled None.
         unsafe { *slots.0.add(i) = Some(v) };
     });
     out.into_iter()
@@ -428,6 +433,7 @@ pub fn par_reduce_sum(
     backend.par_for(parts, &|p| {
         let lo = p * chunk;
         let hi = (lo + chunk).min(n);
+        // SAFETY: one disjoint slot per part index (p < parts = len).
         unsafe { *slots.0.add(p) = partial(lo..hi) };
     });
     partials.iter().sum()

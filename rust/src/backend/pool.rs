@@ -315,11 +315,12 @@ impl WorkerPool {
             v.push(self.id);
             v
         });
-        // Erase the borrow lifetimes: sound because this frame blocks
-        // until `remaining == 0`, i.e. until no thread can still hold
-        // or claim a reference to `body` or `ctx`.
-        let body_static: &'static (dyn Fn(usize) + Sync) =
-            unsafe { std::mem::transmute(body) };
+        // SAFETY: erase the borrow lifetimes — sound because this frame
+        // blocks until `remaining == 0`, i.e. until no thread can still
+        // hold or claim a reference to `body` or `ctx`.
+        let body_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(body) };
+        // SAFETY: same lifetime-erasure argument as `body_static`; the
+        // vec outlives the job because this frame owns it.
         let ctx_static: &'static [u64] = unsafe { std::mem::transmute(ctx.as_slice()) };
         let _inject = lock(&self.inject);
         let epoch = {
@@ -467,15 +468,18 @@ mod tests {
         let pool = Arc::new(WorkerPool::new(4));
         let total = Arc::new(AtomicUsize::new(0));
         let mut joins = Vec::new();
-        for _ in 0..4 {
+        for k in 0..4 {
             let (p, t) = (Arc::clone(&pool), Arc::clone(&total));
-            joins.push(std::thread::spawn(move || {
+            // Named like every other spawn site; joined below so the
+            // assertion sees all 4 injectors' work.
+            let b = std::thread::Builder::new().name(format!("test-inject-{k}"));
+            joins.push(b.spawn(move || {
                 for _ in 0..20 {
                     p.run(8, &|_| {
                         t.fetch_add(1, Ordering::Relaxed);
                     });
                 }
-            }));
+            }).expect("spawn test injector"));
         }
         for j in joins {
             j.join().unwrap();
@@ -511,7 +515,8 @@ mod tests {
             let ptr = out.as_mut_ptr() as usize;
             let n = out.len();
             pool.run(n, &move |i| {
-                // Disjoint element writes via the raw pointer.
+                // SAFETY: disjoint element writes via the raw pointer
+                // (i < n = out.len(), one chunk per element).
                 unsafe { *(ptr as *mut usize).add(i) = base + i };
             });
         }

@@ -110,8 +110,18 @@ pub const GLOBAL_OPTIONS: &[&str] = &["backend", "worker-threads", "simd", "tele
 /// only; the parser also accepts `""`/`--help`/`-h` as `help`). Tests
 /// iterate this to keep [`USAGE`] and [`Cli::reject_unknown`] in sync
 /// instead of hand-maintaining a second list.
-pub const KNOWN_COMMANDS: &[&str] =
-    &["train", "serve", "router", "health", "experiment", "validate", "list", "info", "help"];
+pub const KNOWN_COMMANDS: &[&str] = &[
+    "train",
+    "serve",
+    "router",
+    "health",
+    "lint",
+    "experiment",
+    "validate",
+    "list",
+    "info",
+    "help",
+];
 
 /// Per-command accepted options and flags.
 pub struct CommandSpec {
@@ -184,6 +194,7 @@ pub fn known_options(command: &str) -> Option<CommandSpec> {
             &[],
         ),
         "health" => spec(&["addr", "session"], &[]),
+        "lint" => spec(&["format"], &["fix-list"]),
         "experiment" | "validate" | "list" | "info" => spec(&[], &[]),
         "" | "help" | "--help" | "-h" => spec(&[], &[]),
         _ => None,
@@ -213,6 +224,9 @@ USAGE:
                               optimizer-health report from a serve/router
                               control plane: per-layer second-order
                               diagnostics + anomaly flags
+  eva lint [PATHS...] [--fix-list] [--format text|json]
+                              repo-invariant static analysis (rules L1-L6,
+                              see docs/LINTS.md); exits nonzero on violations
   eva experiment <id|all>     regenerate a paper table/figure (see DESIGN.md §5)
   eva validate                cross-check PJRT artifacts vs native numerics
   eva list                    list datasets, optimizers, experiments, artifacts
@@ -309,6 +323,15 @@ ROUTER OPTIONS (multi-host cluster front door; see docs/ARCHITECTURE.md):
   --request-timeout-ms N      proxied client-request budget (default 5000)
   --auto-migrate on|off       rescue sessions off down hosts from their newest
                               loadable checkpoint (default on)
+
+LINT OPTIONS (static analysis; the CI `lint` job runs this blocking):
+  PATHS...                    files/directories to lint (default: the whole
+                              rust/src tree)
+  --format text|json          report format (default text; json is what CI
+                              uploads as an artifact on failure)
+  --fix-list                  print a per-finding worklist with the exact
+                              `// eva-lint: allow(<rule>) -- <reason>`
+                              suppression syntax (reason mandatory)
 
 HEALTH OPTIONS (optimizer-health report; speaks to serve or router):
   --addr HOST:PORT            control plane to query (default 127.0.0.1:7931)

@@ -144,7 +144,13 @@ mod tests {
         // A listener that accepts and then says nothing.
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
-        let hold = std::thread::spawn(move || listener.accept().map(|(s, _)| s));
+        // Named like every other spawn site; joined at the end of the
+        // test (after the client gave up) so the accepted socket — and
+        // with it the listener — is dropped deterministically.
+        let hold = std::thread::Builder::new()
+            .name("test-silent-peer".into())
+            .spawn(move || listener.accept().map(|(s, _)| s))
+            .expect("spawn silent-peer holder");
         let t0 = Instant::now();
         let res = request(
             &addr,

@@ -139,6 +139,16 @@ fn fields(pairs: Vec<(&str, Json)>) -> Fields {
     pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect()
 }
 
+/// Poison-tolerant lock. A panic on some other thread while it held
+/// the registry or placement table must not cascade into every
+/// request path — the maps hold plain data that is never left
+/// half-updated across an unwind point, so routing on the recovered
+/// view is safe. This keeps `.unwrap()` out of the request paths
+/// (lint rule L5).
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 impl Router {
     /// Build the registry and, when `probe_interval_ms > 0`, start
     /// the background probe thread. Hosts start `Up` (optimistically
@@ -172,7 +182,7 @@ impl Router {
         let interval = router.inner.cfg.probe_interval_ms;
         if interval > 0 {
             let r = router.clone();
-            let handle = std::thread::Builder::new()
+            let spawned = std::thread::Builder::new()
                 .name("eva-router-probe".into())
                 .spawn(move || {
                     while !r.is_stopped() {
@@ -183,9 +193,16 @@ impl Router {
                             std::thread::sleep(Duration::from_millis(10));
                         }
                     }
-                })
-                .expect("spawn probe thread");
-            *router.inner.probe.lock().unwrap() = Some(handle);
+                });
+            match spawned {
+                Ok(handle) => *lock(&router.inner.probe) = Some(handle),
+                // A router without probes still routes; degrading to
+                // manual `probe_once` beats refusing to start.
+                Err(e) => eprintln!(
+                    "eva-router: could not start the probe thread ({e}); \
+                     background health probing is disabled"
+                ),
+            }
         }
         router
     }
@@ -205,7 +222,7 @@ impl Router {
     /// router is control plane only.
     pub fn shutdown(&self) {
         self.inner.stop.store(true, Ordering::Relaxed);
-        let handle = self.inner.probe.lock().unwrap().take();
+        let handle = lock(&self.inner.probe).take();
         if let Some(h) = handle {
             let _ = h.join();
         }
@@ -213,20 +230,17 @@ impl Router {
 
     /// A session's current placement (tests and the watch proxy).
     pub fn placement(&self, id: u64) -> Option<Placement> {
-        self.inner.placements.lock().unwrap().get(&id).cloned()
+        lock(&self.inner.placements).get(&id).cloned()
     }
 
     /// A host's control-plane address by registry index.
     pub fn host_addr(&self, idx: usize) -> Option<String> {
-        self.inner.hosts.lock().unwrap().get(idx).map(|h| h.addr.clone())
+        lock(&self.inner.hosts).get(idx).map(|h| h.addr.clone())
     }
 
     /// Registry snapshot, configured order.
     pub fn hosts(&self) -> Vec<HostView> {
-        self.inner
-            .hosts
-            .lock()
-            .unwrap()
+        lock(&self.inner.hosts)
             .iter()
             .map(|h| HostView {
                 addr: h.addr.clone(),
@@ -253,7 +267,7 @@ impl Router {
         let probe_req = Json::obj(vec![("cmd", Json::Str("stats".into()))]);
         let timeout = Duration::from_millis(self.inner.cfg.probe_timeout_ms);
         let addrs: Vec<(usize, String)> = {
-            let hosts = self.inner.hosts.lock().unwrap();
+            let hosts = lock(&self.inner.hosts);
             hosts.iter().enumerate().map(|(i, h)| (i, h.addr.clone())).collect()
         };
         // Probe off-lock: a wedged host must not freeze the registry.
@@ -263,7 +277,7 @@ impl Router {
             .collect();
         let mut down_hosts = Vec::new();
         {
-            let mut hosts = self.inner.hosts.lock().unwrap();
+            let mut hosts = lock(&self.inner.hosts);
             for (i, res) in results {
                 let Some(h) = hosts.get_mut(i) else { continue };
                 match res {
@@ -362,10 +376,7 @@ impl Router {
 
     /// Hosts new sessions may be placed on: `Up` and not draining.
     fn placeable(&self, exclude: Option<usize>) -> Vec<(usize, String)> {
-        self.inner
-            .hosts
-            .lock()
-            .unwrap()
+        lock(&self.inner.hosts)
             .iter()
             .enumerate()
             .filter(|(i, h)| {
@@ -428,7 +439,7 @@ impl Router {
                     })
                     .unwrap_or_default();
                     let cid = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
-                    self.inner.placements.lock().unwrap().insert(
+                    lock(&self.inner.placements).insert(
                         cid,
                         Placement {
                             host: *idx,
@@ -501,9 +512,9 @@ impl Router {
     /// restart.
     pub fn drain(&self, host_addr: &str) -> Result<(usize, usize), String> {
         let idx = self.host_index(host_addr)?;
-        self.inner.hosts.lock().unwrap()[idx].draining = true;
+        lock(&self.inner.hosts)[idx].draining = true;
         let victims: Vec<u64> = {
-            let placements = self.inner.placements.lock().unwrap();
+            let placements = lock(&self.inner.placements);
             placements
                 .iter()
                 .filter(|(_, p)| p.host == idx && !p.migrating)
@@ -524,15 +535,12 @@ impl Router {
     /// Re-admit a drained host to placement.
     pub fn undrain(&self, host_addr: &str) -> Result<(), String> {
         let idx = self.host_index(host_addr)?;
-        self.inner.hosts.lock().unwrap()[idx].draining = false;
+        lock(&self.inner.hosts)[idx].draining = false;
         Ok(())
     }
 
     fn host_index(&self, addr: &str) -> Result<usize, String> {
-        self.inner
-            .hosts
-            .lock()
-            .unwrap()
+        lock(&self.inner.hosts)
             .iter()
             .position(|h| h.addr == addr)
             .ok_or_else(|| format!("unknown host '{addr}'"))
@@ -545,7 +553,7 @@ impl Router {
     /// cancel are recomputed, not lost: restore is bit-identical.
     pub fn migrate(&self, cid: u64) -> Result<(), String> {
         let (src_idx, remote_id, stem) = {
-            let mut placements = self.inner.placements.lock().unwrap();
+            let mut placements = lock(&self.inner.placements);
             let p = placements
                 .get_mut(&cid)
                 .ok_or_else(|| format!("unknown session {cid}"))?;
@@ -557,7 +565,7 @@ impl Router {
         };
         let result = self.migrate_live(cid, src_idx, remote_id, &stem);
         if result.is_err() {
-            if let Some(p) = self.inner.placements.lock().unwrap().get_mut(&cid) {
+            if let Some(p) = lock(&self.inner.placements).get_mut(&cid) {
                 p.migrating = false;
             }
         }
@@ -637,7 +645,7 @@ impl Router {
                             timeout,
                         );
                     }
-                    if let Some(p) = self.inner.placements.lock().unwrap().get_mut(&cid) {
+                    if let Some(p) = lock(&self.inner.placements).get_mut(&cid) {
                         p.host = *tgt_idx;
                         p.remote_id = new_remote;
                         p.migrating = false;
@@ -659,14 +667,14 @@ impl Router {
     /// probe pass, and live again if the host returns.
     fn rescue_host(&self, idx: usize) -> (usize, usize) {
         let dir = {
-            let hosts = self.inner.hosts.lock().unwrap();
+            let hosts = lock(&self.inner.hosts);
             match hosts.get(idx) {
                 Some(h) => h.checkpoint_dir.clone(),
                 None => return (0, 0),
             }
         };
         let victims: Vec<(u64, String)> = {
-            let mut placements = self.inner.placements.lock().unwrap();
+            let mut placements = lock(&self.inner.placements);
             placements
                 .iter_mut()
                 .filter(|(_, p)| p.host == idx && !p.migrating)
@@ -693,7 +701,7 @@ impl Router {
                 Ok(()) => rescued += 1,
                 Err(_) => {
                     failed += 1;
-                    if let Some(p) = self.inner.placements.lock().unwrap().get_mut(&cid) {
+                    if let Some(p) = lock(&self.inner.placements).get_mut(&cid) {
                         p.migrating = false;
                     }
                 }
@@ -728,7 +736,7 @@ impl Router {
         let stats_req = Json::obj(vec![("cmd", Json::Str("stats".into()))]);
         let timeout = self.request_timeout();
         let addrs: Vec<(usize, String)> = {
-            let hosts = self.inner.hosts.lock().unwrap();
+            let hosts = lock(&self.inner.hosts);
             hosts.iter().enumerate().map(|(i, h)| (i, h.addr.clone())).collect()
         };
         const SUMMED: &[&str] = &[
@@ -755,7 +763,9 @@ impl Router {
                     reachable += 1;
                     for key in SUMMED {
                         if let Some(v) = resp.get_f64(key) {
-                            *sums.get_mut(key).unwrap() += v;
+                            if let Some(slot) = sums.get_mut(key) {
+                                *slot += v;
+                            }
                         }
                     }
                     if let Some(sessions) = resp.get("sessions").and_then(|s| s.as_arr()) {
@@ -780,7 +790,7 @@ impl Router {
             }
         }
         // Re-key each placed session's state under its cluster id.
-        let placements = self.inner.placements.lock().unwrap().clone();
+        let placements = lock(&self.inner.placements).clone();
         let mut sessions = Vec::new();
         for (cid, p) in &placements {
             let found = host_sessions.get(&p.host).and_then(|list| {
@@ -843,7 +853,7 @@ impl Router {
         let metrics_req = Json::obj(vec![("cmd", Json::Str("metrics".into()))]);
         let timeout = self.request_timeout();
         let addrs: Vec<String> = {
-            let hosts = self.inner.hosts.lock().unwrap();
+            let hosts = lock(&self.inner.hosts);
             hosts.iter().map(|h| h.addr.clone()).collect()
         };
         let mut per_host = Vec::new();
@@ -893,7 +903,7 @@ impl Router {
         let health_req = Json::obj(vec![("cmd", Json::Str("health".into()))]);
         let timeout = self.request_timeout();
         let addrs: Vec<String> = {
-            let hosts = self.inner.hosts.lock().unwrap();
+            let hosts = lock(&self.inner.hosts);
             hosts.iter().map(|h| h.addr.clone()).collect()
         };
         let mut anomalies: Vec<Json> =

@@ -31,6 +31,18 @@
 //! See `examples/` for runnable scenarios and `eva experiment <id>` for
 //! the paper's tables/figures.
 
+// Curated clippy posture for the `-D warnings` CI job. Each allow is
+// a deliberate repo-wide idiom, not an unreviewed escape hatch — new
+// allows belong here (crate-level, with a reason), never inline.
+#![allow(clippy::too_many_arguments)] // kernel entrypoints mirror BLAS-style signatures
+#![allow(clippy::type_complexity)] // backend closures carry their full lifetime story
+#![allow(clippy::needless_range_loop)] // index loops keep reduction order explicit (KERNELS.md)
+#![allow(clippy::manual_memcpy)] // explicit element loops document ordering in hot paths
+#![allow(clippy::new_without_default)] // constructors take config; Default would hide it
+#![allow(clippy::many_single_char_names)] // math code mirrors the paper's notation (ā, b̄, γ…)
+#![allow(clippy::large_enum_variant)] // protocol enums trade size for a flat match surface
+#![allow(clippy::comparison_chain)] // three-way numeric branches read better than cmp() here
+
 pub mod backend;
 pub mod cli;
 pub mod cluster;
@@ -40,6 +52,7 @@ pub mod data;
 pub mod exp;
 pub mod jsonx;
 pub mod linalg;
+pub mod lint;
 pub mod nn;
 pub mod optim;
 pub mod rng;

@@ -1,0 +1,363 @@
+//! A comment/string-aware line scanner for the repo linter.
+//!
+//! Full Rust parsing is out of scope (and would drag in a grammar the
+//! vendored-offline build can't afford); the rules in
+//! [`crate::lint::rules`] only need to know, per line, *what is code
+//! and what is not*. This module produces exactly that: for every
+//! source line, the code with comments removed and literal contents
+//! blanked (so needle scans can't be fooled by a string or a comment
+//! that merely *mentions* `unsafe` or `_mm256_fmadd_ps`), the comment
+//! text (so `// SAFETY:` and `// eva-lint: allow(..)` markers can be
+//! read), and whether the line sits inside a `#[cfg(test)]` /
+//! `#[test]` region (so rules that exempt test code can tell).
+//!
+//! Handled token forms: `//` line comments (incl. `///` / `//!`
+//! doc comments), nested `/* */` block comments, `"…"` strings with
+//! escapes, `r"…"` / `r#"…"#` raw strings (any hash depth), byte
+//! variants (`b"`, `br#"`), char literals, and the `'a` lifetime
+//! ambiguity (a `'` followed by an identifier with no closing quote
+//! is a lifetime, not an unterminated char).
+//!
+//! The `#[cfg(test)]` region tracker is a brace-counting heuristic:
+//! the attribute arms a pending flag and the next `{` opens a region
+//! that ends when its brace closes. That is exact for the repo's
+//! `#[cfg(test)] mod tests { … }` idiom and for `#[test] fn … { … }`
+//! items in fixtures.
+
+/// One source line, split into its code and comment parts.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    /// Code with comments stripped and string/char literal *contents*
+    /// blanked to spaces (delimiters kept). Needle scans over this
+    /// cannot match inside literals or comments.
+    pub code: String,
+    /// Code with comments stripped but literal contents intact —
+    /// used where the rule needs the literal value itself (e.g. the
+    /// metric name in `Counter::new("train.steps")`).
+    pub text: String,
+    /// Concatenated comment text on this line, without the `//`,
+    /// `/*`, `*/` delimiters. Block-comment interiors land on each
+    /// line they span.
+    pub comment: String,
+    /// True when the line is inside a `#[cfg(test)]`- or
+    /// `#[test]`-gated brace region (including the attribute line).
+    pub in_test: bool,
+}
+
+/// Lexer state that survives newlines.
+enum Mode {
+    Normal,
+    /// Nested block comment, with current depth.
+    Block(u32),
+    /// Inside a `"…"` string literal.
+    Str,
+    /// Inside a raw string, closed by `"` plus this many `#`s.
+    RawStr(u32),
+}
+
+/// Scan `src` into per-line code/comment views. Never fails: on
+/// malformed input (unterminated literal, stray quote) it degrades to
+/// treating the remainder as literal content, which only makes the
+/// rules *less* likely to fire — a lint pass must not panic on the
+/// code it is judging.
+pub fn lex(src: &str) -> Vec<Line> {
+    let bytes: Vec<char> = src.chars().collect();
+    let mut lines: Vec<Line> = Vec::new();
+    let mut cur = Line::default();
+    let mut mode = Mode::Normal;
+    let mut i = 0usize;
+
+    // Closes out the current line buffer on '\n'.
+    macro_rules! newline {
+        () => {{
+            lines.push(std::mem::take(&mut cur));
+        }};
+    }
+
+    while i < bytes.len() {
+        let c = bytes[i];
+        match mode {
+            Mode::Normal => {
+                if c == '\n' {
+                    newline!();
+                    i += 1;
+                } else if c == '/' && bytes.get(i + 1) == Some(&'/') {
+                    // Line comment: consume to end of line.
+                    let mut j = i + 2;
+                    while j < bytes.len() && bytes[j] != '\n' {
+                        cur.comment.push(bytes[j]);
+                        j += 1;
+                    }
+                    i = j;
+                } else if c == '/' && bytes.get(i + 1) == Some(&'*') {
+                    mode = Mode::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    cur.text.push('"');
+                    mode = Mode::Str;
+                    i += 1;
+                } else if c == 'r'
+                    && !prev_is_ident(&bytes, i)
+                    && raw_str_hashes(&bytes, i + 1).is_some()
+                {
+                    // r"…" / r#"…"# (prev_is_ident rejects identifiers
+                    // merely ending in r, e.g. `var"` can't occur).
+                    let hashes = raw_str_hashes(&bytes, i + 1).unwrap_or(0);
+                    cur.code.push('r');
+                    cur.text.push('r');
+                    for _ in 0..hashes {
+                        cur.code.push('#');
+                        cur.text.push('#');
+                    }
+                    cur.code.push('"');
+                    cur.text.push('"');
+                    mode = Mode::RawStr(hashes);
+                    i += 1 + hashes as usize + 1;
+                } else if c == 'b'
+                    && !prev_is_ident(&bytes, i)
+                    && (bytes.get(i + 1) == Some(&'"')
+                        || (bytes.get(i + 1) == Some(&'r')
+                            && raw_str_hashes(&bytes, i + 2).is_some()))
+                {
+                    // Byte string prefix: emit the 'b' and let the
+                    // next iteration handle the `"` / `r…"` part.
+                    cur.code.push('b');
+                    cur.text.push('b');
+                    i += 1;
+                } else if c == '\'' {
+                    // Char literal or lifetime.
+                    match char_literal_len(&bytes, i) {
+                        Some(len) => {
+                            // Blank the interior, keep the quotes.
+                            cur.code.push('\'');
+                            cur.text.push('\'');
+                            for _ in 0..len.saturating_sub(2) {
+                                cur.code.push(' ');
+                                cur.text.push(' ');
+                            }
+                            cur.code.push('\'');
+                            cur.text.push('\'');
+                            i += len;
+                        }
+                        None => {
+                            // Lifetime: pass through as code.
+                            cur.code.push('\'');
+                            cur.text.push('\'');
+                            i += 1;
+                        }
+                    }
+                } else {
+                    cur.code.push(c);
+                    cur.text.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Block(depth) => {
+                if c == '\n' {
+                    newline!();
+                    i += 1;
+                } else if c == '*' && bytes.get(i + 1) == Some(&'/') {
+                    mode = if depth == 1 { Mode::Normal } else { Mode::Block(depth - 1) };
+                    i += 2;
+                } else if c == '/' && bytes.get(i + 1) == Some(&'*') {
+                    mode = Mode::Block(depth + 1);
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' && i + 1 < bytes.len() {
+                    // Escape: blank both chars (covers \" and \\).
+                    cur.code.push(' ');
+                    cur.text.push(bytes[i]);
+                    cur.text.push(bytes[i + 1]);
+                    cur.code.push(' ');
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    cur.text.push('"');
+                    mode = Mode::Normal;
+                    i += 1;
+                } else if c == '\n' {
+                    newline!();
+                    i += 1;
+                } else {
+                    cur.code.push(' ');
+                    cur.text.push(c);
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if c == '"' && hashes_follow(&bytes, i + 1, hashes) {
+                    cur.code.push('"');
+                    cur.text.push('"');
+                    for _ in 0..hashes {
+                        cur.code.push('#');
+                        cur.text.push('#');
+                    }
+                    mode = Mode::Normal;
+                    i += 1 + hashes as usize;
+                } else if c == '\n' {
+                    newline!();
+                    i += 1;
+                } else {
+                    cur.code.push(' ');
+                    cur.text.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    // Final line without trailing newline.
+    if !cur.code.is_empty() || !cur.comment.is_empty() || !cur.text.is_empty() {
+        lines.push(cur);
+    }
+
+    mark_test_regions(&mut lines);
+    lines
+}
+
+/// True when the char before `i` can end an identifier (so `bytes[i]`
+/// is a suffix of a name, not a prefix like `r"` / `b"`).
+fn prev_is_ident(bytes: &[char], i: usize) -> bool {
+    i > 0 && (bytes[i - 1].is_alphanumeric() || bytes[i - 1] == '_')
+}
+
+/// At a potential raw-string start (just past the `r`): counts the
+/// `#`s and requires a `"` after them. `None` → not a raw string.
+fn raw_str_hashes(bytes: &[char], mut j: usize) -> Option<u32> {
+    let mut hashes = 0u32;
+    while bytes.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if bytes.get(j) == Some(&'"') {
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+/// True when `count` `#`s start at `j` (raw-string terminator check).
+fn hashes_follow(bytes: &[char], j: usize, count: u32) -> bool {
+    (0..count as usize).all(|k| bytes.get(j + k) == Some(&'#'))
+}
+
+/// Length (in chars, quotes included) of the char literal starting at
+/// the `'` at position `i`, or `None` when it is a lifetime.
+fn char_literal_len(bytes: &[char], i: usize) -> Option<usize> {
+    match bytes.get(i + 1) {
+        // '\n', '\'', '\\', '\u{…}' — skip the escaped char (so the
+        // quote in '\'' is not mistaken for the terminator), then
+        // scan to the closing quote.
+        Some('\\') => {
+            let mut j = i + 3;
+            while j < bytes.len() && bytes[j] != '\'' && bytes[j] != '\n' {
+                j += 1;
+            }
+            if bytes.get(j) == Some(&'\'') {
+                Some(j - i + 1)
+            } else {
+                None
+            }
+        }
+        // 'x' — exactly one char then a quote; otherwise a lifetime
+        // ('a in Foo<'a> has no closing quote in reach).
+        Some(_) => {
+            if bytes.get(i + 2) == Some(&'\'') {
+                Some(3)
+            } else {
+                None
+            }
+        }
+        None => None,
+    }
+}
+
+/// Brace-counting `#[cfg(test)]` / `#[test]` region marker (see the
+/// module docs for the heuristic's contract).
+fn mark_test_regions(lines: &mut [Line]) {
+    let mut depth: i64 = 0;
+    // Depth at which the innermost test region opened; regions nest
+    // trivially (a #[test] fn inside #[cfg(test)] mod) so tracking
+    // the outermost open is enough.
+    let mut region_open_depth: Option<i64> = None;
+    let mut pending = false;
+    for line in lines.iter_mut() {
+        if line.code.contains("#[cfg(test)]") || line.code.contains("#[test]") {
+            pending = true;
+        }
+        if pending || region_open_depth.is_some() {
+            line.in_test = true;
+        }
+        let mut line_is_test = false;
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    if pending && region_open_depth.is_none() {
+                        region_open_depth = Some(depth);
+                        pending = false;
+                        line_is_test = true;
+                    }
+                }
+                '}' => {
+                    if region_open_depth == Some(depth) {
+                        region_open_depth = None;
+                        line_is_test = true;
+                    }
+                    depth -= 1;
+                }
+                _ => {}
+            }
+        }
+        if line_is_test {
+            line.in_test = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_stripped_from_code() {
+        let lines = lex("let x = \"unsafe\"; // unsafe here\nunsafe {}\n");
+        assert!(!lines[0].code.contains("unsafe"), "{:?}", lines[0].code);
+        assert!(lines[0].text.contains("\"unsafe\""));
+        assert!(lines[0].comment.contains("unsafe here"));
+        assert!(lines[1].code.contains("unsafe"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let lines = lex("/* a /* b */ still */ code();\n/* open\nmul_add\n*/ let y = 1;\n");
+        assert!(lines[0].code.contains("code()"));
+        assert!(lines[0].comment.contains("a"));
+        assert!(!lines[2].code.contains("mul_add"));
+        assert!(lines[2].comment.contains("mul_add"));
+        assert!(lines[3].code.contains("let y"));
+    }
+
+    #[test]
+    fn raw_strings_and_chars_blank_their_interiors() {
+        let src = "let s = r#\"unsafe \" inner\"#; let c = '\\''; let l: &'static str = s;\n";
+        let lines = lex(src);
+        assert!(!lines[0].code.contains("unsafe"));
+        assert!(lines[0].text.contains("unsafe \" inner"));
+        assert!(lines[0].code.contains("&'static str"), "{:?}", lines[0].code);
+    }
+
+    #[test]
+    fn cfg_test_region_is_marked_by_braces() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n  fn b() {}\n}\nfn c() {}\n";
+        let lines = lex(src);
+        assert!(!lines[0].in_test);
+        assert!(lines[1].in_test && lines[2].in_test && lines[3].in_test && lines[4].in_test);
+        assert!(!lines[5].in_test);
+    }
+}

@@ -1,0 +1,403 @@
+//! `eva lint` — the repo-invariant static-analysis pass.
+//!
+//! The determinism contract (`docs/KERNELS.md`), the threading
+//! substrate, the serve protocol's no-panic promise and the telemetry
+//! catalog are all written down in prose; until this pass they were
+//! enforced only by runtime parity tests and reviewer memory. This
+//! module machine-checks them: a std-only lexer ([`lexer`]) feeds six
+//! syntactic rules ([`rules`]), each with a stable ID (L1–L6),
+//! `file:line` diagnostics, and an inline suppression escape hatch:
+//!
+//! ```text
+//! // eva-lint: allow(L5) -- boot-time spawn, no connection exists yet
+//! ```
+//!
+//! The suppression applies to the line it trails, or — as a
+//! standalone comment — to the next code line. The reason after `--`
+//! is mandatory and itself linted (rule L0), as is the rule ID.
+//!
+//! Entry points: [`lint_tree`] (walk a source root), [`lint_paths`]
+//! (explicit file/dir list), [`lint_source`] (one in-memory file —
+//! what the fixture tests drive). Output shaping for the CLI lives in
+//! [`render_text`] / [`render_json`] / [`render_fix_list`]; the JSON
+//! form is what CI uploads on failure.
+//!
+//! The rule catalog for humans is `docs/LINTS.md`.
+
+pub mod lexer;
+pub mod rules;
+
+use anyhow::{bail, Context, Result};
+use crate::jsonx::Json;
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+pub use rules::RULES;
+
+/// One finding. `file` is the source-root-relative path with `/`
+/// separators (stable across platforms for golden tests), `line` is
+/// 1-based.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+/// Where to lint and against which documentation.
+pub struct LintConfig {
+    /// Root of the Rust sources; rule scopes (`simd/`, `serve/…`) are
+    /// matched against paths relative to this.
+    pub src_root: PathBuf,
+    /// The metric catalog document (`docs/ARCHITECTURE.md`). `None`
+    /// skips L6 — firing it blind would flag every metric.
+    pub doc_catalog: Option<PathBuf>,
+}
+
+/// The set of documented metric names, parsed from ARCHITECTURE.md.
+///
+/// The parser is deliberately generous about *where* a name may
+/// appear — inline backticks, fenced code blocks, the span-hierarchy
+/// diagram — and strict about *shape*: a lowercase dotted token, with
+/// `{a,b}` brace groups expanded (`train.{data,apply}_us` →
+/// `train.data_us`, `train.apply_us`). Extra tokens the scan picks up
+/// ("e.g", file names) are harmless: the catalog is only ever used as
+/// a membership check for names the code actually declares.
+pub struct MetricCatalog {
+    names: BTreeSet<String>,
+}
+
+impl MetricCatalog {
+    pub fn parse(doc: &str) -> MetricCatalog {
+        let mut names = BTreeSet::new();
+        for raw in tokens(doc) {
+            for expanded in expand_braces(&raw) {
+                let t = expanded.trim_matches(|c| c == '.' || c == ',');
+                if t.contains('.') {
+                    names.insert(t.to_string());
+                }
+            }
+        }
+        MetricCatalog { names }
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.names.contains(name)
+    }
+}
+
+/// Maximal runs of metric-name characters, anywhere in the document.
+fn tokens(doc: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for c in doc.chars() {
+        if c.is_ascii_lowercase() || c.is_ascii_digit() || "._{},".contains(c) {
+            cur.push(c);
+        } else if !cur.is_empty() {
+            out.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Expand the first `{a,b,…}` group and recurse; unbalanced braces
+/// yield the token unexpanded (it then simply never matches).
+fn expand_braces(tok: &str) -> Vec<String> {
+    let Some(open) = tok.find('{') else { return vec![tok.to_string()] };
+    let Some(close_rel) = tok[open..].find('}') else { return vec![tok.to_string()] };
+    let close = open + close_rel;
+    let (head, tail) = (&tok[..open], &tok[close + 1..]);
+    let mut out = Vec::new();
+    for alt in tok[open + 1..close].split(',') {
+        out.extend(expand_braces(&format!("{head}{alt}{tail}")));
+    }
+    out
+}
+
+/// A parsed `// eva-lint: allow(..) -- reason` comment.
+struct Suppression {
+    rules: Vec<String>,
+    /// Line the suppression *applies to* (1-based).
+    target: usize,
+}
+
+const MARKER: &str = "eva-lint:";
+
+/// Scan lexed lines for suppression comments. Returns the valid
+/// suppressions plus L0 diagnostics for malformed ones.
+fn collect_suppressions(lines: &[lexer::Line]) -> (Vec<Suppression>, Vec<rules::RawDiag>) {
+    let mut sups = Vec::new();
+    let mut diags = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        // The marker must *lead* the comment (after doc sigils and
+        // whitespace) — prose that merely mentions the syntax, like
+        // this comment right here, is not a suppression.
+        let head = line.comment.trim_start_matches(['/', '!', '*', ' ', '\t']);
+        let Some(body) = head.strip_prefix(MARKER).map(str::trim) else { continue };
+        match parse_allow(body) {
+            Ok(rule_ids) => {
+                // Trailing comment → same line; standalone comment →
+                // the next line that carries code.
+                let target = if line.code.trim().is_empty() {
+                    match lines[i + 1..].iter().position(|l| !l.code.trim().is_empty()) {
+                        Some(off) => i + 1 + off + 1,
+                        None => i + 1,
+                    }
+                } else {
+                    i + 1
+                };
+                sups.push(Suppression { rules: rule_ids, target });
+            }
+            Err(why) => diags.push(rules::RawDiag {
+                rule: "L0",
+                line: i + 1,
+                message: format!("malformed eva-lint suppression: {why}"),
+            }),
+        }
+    }
+    (sups, diags)
+}
+
+/// Parse `allow(L1, L2) -- reason`, validating rule IDs and the
+/// mandatory non-empty reason.
+fn parse_allow(body: &str) -> std::result::Result<Vec<String>, String> {
+    let rest = body
+        .strip_prefix("allow(")
+        .ok_or_else(|| "expected `allow(<rule>[, <rule>…]) -- <reason>`".to_string())?;
+    let close = rest.find(')').ok_or_else(|| "unclosed `allow(`".to_string())?;
+    let ids: Vec<String> =
+        rest[..close].split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+    if ids.is_empty() {
+        return Err("no rule IDs inside `allow(..)`".to_string());
+    }
+    for id in &ids {
+        if !rules::known_rule(id) {
+            return Err(format!("unknown rule `{id}`"));
+        }
+    }
+    let after = rest[close + 1..].trim();
+    let reason = after.strip_prefix("--").map(str::trim).unwrap_or("");
+    if reason.is_empty() {
+        return Err("missing reason: append ` -- <why this is sound>`".to_string());
+    }
+    Ok(ids)
+}
+
+/// Lint one in-memory file. `rel` must be `/`-separated and relative
+/// to the (virtual) source root — rule scopes key off it.
+pub fn lint_source(rel: &str, src: &str, catalog: Option<&MetricCatalog>) -> Vec<Diagnostic> {
+    let lines = lexer::lex(src);
+    let (sups, mut raw) = collect_suppressions(&lines);
+    raw.extend(rules::check(rel, &lines, catalog));
+    let mut out: Vec<Diagnostic> = raw
+        .into_iter()
+        .filter(|d| {
+            // L0 (malformed suppression) is itself suppressible only
+            // by a *valid* suppression, which cannot exist on the
+            // same comment — so the filter is uniform.
+            !sups.iter().any(|s| s.target == d.line && s.rules.iter().any(|r| r == d.rule))
+        })
+        .map(|d| Diagnostic {
+            rule: d.rule,
+            file: rel.to_string(),
+            line: d.line,
+            message: d.message,
+        })
+        .collect();
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted for stable
+/// diagnostic order.
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("read_dir {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Path of `file` relative to `root`, `/`-separated; falls back to
+/// the path as given when it does not sit under the root (the rules
+/// then match on whatever suffix structure it has).
+fn rel_path(root: &Path, file: &Path) -> String {
+    let p = file.strip_prefix(root).unwrap_or(file);
+    p.components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+fn load_catalog(cfg: &LintConfig) -> Result<Option<MetricCatalog>> {
+    match &cfg.doc_catalog {
+        Some(doc) => {
+            let text = std::fs::read_to_string(doc)
+                .with_context(|| format!("metric catalog {}", doc.display()))?;
+            Ok(Some(MetricCatalog::parse(&text)))
+        }
+        None => Ok(None),
+    }
+}
+
+/// Lint every `.rs` file under the configured source root.
+pub fn lint_tree(cfg: &LintConfig) -> Result<Vec<Diagnostic>> {
+    lint_paths(cfg, std::slice::from_ref(&cfg.src_root))
+}
+
+/// Lint an explicit list of files and/or directories.
+pub fn lint_paths(cfg: &LintConfig, paths: &[PathBuf]) -> Result<Vec<Diagnostic>> {
+    let catalog = load_catalog(cfg)?;
+    let mut files = Vec::new();
+    for p in paths {
+        if p.is_dir() {
+            rs_files(p, &mut files)?;
+        } else if p.is_file() {
+            files.push(p.clone());
+        } else {
+            bail!("lint path not found: {}", p.display());
+        }
+    }
+    let mut out = Vec::new();
+    for file in files {
+        let src = std::fs::read_to_string(&file)
+            .with_context(|| format!("read {}", file.display()))?;
+        let rel = rel_path(&cfg.src_root, &file);
+        out.extend(lint_source(&rel, &src, catalog.as_ref()));
+    }
+    out.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(out)
+}
+
+/// Human-readable report: one `file:line: [Lx] message` per finding,
+/// plus a summary line.
+pub fn render_text(diags: &[Diagnostic]) -> String {
+    let mut s = String::new();
+    for d in diags {
+        s.push_str(&format!("{}:{}: [{}] {}\n", d.file, d.line, d.rule, d.message));
+    }
+    if diags.is_empty() {
+        s.push_str("eva lint: clean\n");
+    } else {
+        s.push_str(&format!("eva lint: {} violation(s)\n", diags.len()));
+    }
+    s
+}
+
+/// Machine-readable report for CI: `{"violations": N, "rules": {...},
+/// "diagnostics": [{rule,file,line,message}…]}`.
+pub fn render_json(diags: &[Diagnostic]) -> String {
+    let items: Vec<Json> = diags
+        .iter()
+        .map(|d| {
+            Json::obj(vec![
+                ("rule", Json::Str(d.rule.to_string())),
+                ("file", Json::Str(d.file.clone())),
+                ("line", Json::Num(d.line as f64)),
+                ("message", Json::Str(d.message.clone())),
+            ])
+        })
+        .collect();
+    let rule_docs: Vec<Json> = RULES
+        .iter()
+        .map(|(id, doc)| {
+            Json::obj(vec![
+                ("id", Json::Str(id.to_string())),
+                ("invariant", Json::Str(doc.to_string())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("violations", Json::Num(diags.len() as f64)),
+        ("rules", Json::Arr(rule_docs)),
+        ("diagnostics", Json::Arr(items)),
+    ])
+    .pretty()
+}
+
+/// `--fix-list`: a terse per-finding worklist — the suppression
+/// comment to add if (and only if) the code is right and the rule is
+/// wrong about it, as a reminder that the reason is mandatory.
+pub fn render_fix_list(diags: &[Diagnostic]) -> String {
+    let mut s = String::new();
+    for d in diags {
+        s.push_str(&format!(
+            "{}:{}: fix the {} violation, or annotate:\n    // eva-lint: allow({}) -- <reason>\n",
+            d.file, d.line, d.rule, d.rule
+        ));
+    }
+    if diags.is_empty() {
+        s.push_str("nothing to fix\n");
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn brace_expansion_covers_nested_groups() {
+        let cat = MetricCatalog::parse(
+            "`simd.{dot8,axpy8}.{calls,flops}` and `train.steps`, plus\n\
+             ```\ntrain.step_us  whole step\n```\n",
+        );
+        for n in
+            ["simd.dot8.calls", "simd.axpy8.flops", "train.steps", "train.step_us"]
+        {
+            assert!(cat.contains(n), "missing {n}");
+        }
+        assert!(!cat.contains("simd.dot8"));
+        assert!(!cat.contains("made.up"));
+    }
+
+    #[test]
+    fn suppression_needs_known_rule_and_reason() {
+        assert!(parse_allow("allow(L1) -- fused on purpose in this one test").is_ok());
+        assert!(parse_allow("allow(L1, L5) -- two rules, one reason").is_ok());
+        assert!(parse_allow("allow(L1)").is_err());
+        assert!(parse_allow("allow(L1) -- ").is_err());
+        assert!(parse_allow("allow(L99) -- no such rule").is_err());
+        assert!(parse_allow("allow() -- empty").is_err());
+    }
+
+    #[test]
+    fn trailing_and_standalone_suppressions_bind_correctly() {
+        // Trailing: same line. Standalone: next code line.
+        let src = "\
+let a = x.unwrap(); // eva-lint: allow(L5) -- startup path, no client yet\n\
+// eva-lint: allow(L5) -- second startup path\n\
+let b = y.unwrap();\n\
+let c = z.unwrap();\n";
+        let diags = lint_source("serve/service.rs", src, None);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].line, 4);
+        assert_eq!(diags[0].rule, "L5");
+    }
+
+    #[test]
+    fn malformed_suppression_fires_l0_and_does_not_suppress() {
+        let src = "let b = y.unwrap(); // eva-lint: allow(L5)\n";
+        let diags = lint_source("serve/service.rs", src, None);
+        let rules_hit: Vec<&str> = diags.iter().map(|d| d.rule).collect();
+        assert_eq!(rules_hit, vec!["L0", "L5"], "{diags:?}");
+    }
+
+    #[test]
+    fn unwrap_or_is_not_an_unwrap() {
+        let src = "let a = x.unwrap_or(0);\nlet b = y.unwrap_or_else(|| 0);\n";
+        assert!(lint_source("serve/service.rs", src, None).is_empty());
+    }
+}

@@ -1,0 +1,340 @@
+//! The six repo-invariant rules (L1–L6).
+//!
+//! Each rule encodes an invariant the codebase already states in
+//! prose — `docs/KERNELS.md`'s determinism contract, the PR-2
+//! threading substrate, the serve wire protocol's no-panic promise —
+//! as a mechanical check over the [`crate::lint::lexer`] line views.
+//! Rules are deliberately *syntactic*: no type information, no borrow
+//! analysis. Where that makes a rule stricter than the prose (L4 bans
+//! the hashed collections outright in ordering-sensitive modules
+//! instead of proving an iteration feeds an accumulator), the inline
+//! `// eva-lint: allow(Lx) -- reason` escape hatch carries the
+//! justification into the diff where a reviewer sees it.
+//!
+//! `docs/LINTS.md` is the user-facing catalog; keep the two in sync.
+
+use super::lexer::Line;
+use super::MetricCatalog;
+
+/// One rule violation, pre-suppression. `line` is 1-based.
+pub struct RawDiag {
+    pub rule: &'static str,
+    pub line: usize,
+    pub message: String,
+}
+
+/// Rule IDs with their one-line invariant, in catalog order. The
+/// engine validates `allow(..)` IDs against this list; `docs/LINTS.md`
+/// and the `rules` array in `--format json` output mirror it.
+pub const RULES: &[(&str, &str)] = &[
+    ("L0", "eva-lint suppression comments must name a known rule and carry a non-empty reason"),
+    ("L1", "no FMA in simd/, tensor/, linalg/, optim/ — the KERNELS.md determinism contract"),
+    ("L2", "threads only via named thread::Builder, only in allow-listed substrate files"),
+    ("L3", "every `unsafe` must be immediately preceded by a SAFETY comment"),
+    ("L4", "no HashMap/HashSet in ordering-sensitive modules (optim/, telemetry/, checkpoint)"),
+    ("L5", "no .unwrap()/.expect() in request paths — a panic kills the connection thread"),
+    ("L6", "metric names must appear in the docs/ARCHITECTURE.md catalog"),
+];
+
+/// True when `id` is a rule the engine knows (valid in `allow(..)`).
+pub fn known_rule(id: &str) -> bool {
+    RULES.iter().any(|(r, _)| *r == id)
+}
+
+/// Files allowed to create threads (L2). Everything else must hand
+/// work to `backend::` — the single-dispatch-layer invariant.
+const SPAWN_ALLOWLIST: &[&str] = &[
+    "backend/pool.rs",
+    "serve/server.rs",
+    "serve/service.rs",
+    "serve/signal.rs",
+    "cluster/router.rs",
+    "cluster/server.rs",
+    "cluster/net.rs",
+    "telemetry/export.rs",
+];
+
+/// Module prefixes where FMA contraction would fork the bit-identity
+/// contract (L1).
+const FMA_SCOPE: &[&str] = &["simd/", "tensor/", "linalg/", "optim/"];
+
+/// FMA needles: the std fused op plus the x86 fused intrinsics.
+const FMA_NEEDLES: &[&str] =
+    &["mul_add", "_mm256_fmadd_ps", "_mm_fmadd_ps", "_mm256_fmsub_ps", "_mm_fmsub_ps"];
+
+/// Module scope where hashed-collection iteration order could leak
+/// into numerics or serialized bytes (L4).
+const ORDER_SCOPE: &[&str] = &["optim/", "telemetry/", "serve/checkpoint.rs"];
+
+/// Request-handling files where a panic drops the client with no
+/// wire-level error (L5).
+const REQUEST_PATHS: &[&str] =
+    &["serve/protocol.rs", "serve/service.rs", "cluster/router.rs", "cluster/server.rs"];
+
+/// True when `rel` (slash-separated, relative to the source root)
+/// falls under any of `scopes` (`"x/"` prefix or exact file match).
+fn in_scope(rel: &str, scopes: &[&str]) -> bool {
+    scopes.iter().any(|s| if s.ends_with('/') { rel.starts_with(s) } else { rel == *s })
+}
+
+/// Token-boundary `contains`: `needle` in `hay` with no identifier
+/// character on either side, so `mul_add` does not match
+/// `mul_add_estimate` and `unsafe` does not match `unsafe_cell`.
+fn has_token(hay: &str, needle: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = hay[from..].find(needle) {
+        let start = from + pos;
+        let end = start + needle.len();
+        let left_ok = start == 0
+            || !hay[..start].chars().next_back().is_some_and(|c| c.is_alphanumeric() || c == '_');
+        let right_ok =
+            !hay[end..].chars().next().is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if left_ok && right_ok {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+/// Run every rule over one file. `rel` is the path relative to the
+/// source root (always `/`-separated); `catalog` is the parsed
+/// ARCHITECTURE.md metric list, absent when no doc was found (L6 is
+/// skipped rather than fired blind).
+pub fn check(rel: &str, lines: &[Line], catalog: Option<&MetricCatalog>) -> Vec<RawDiag> {
+    let mut out = Vec::new();
+    l1_no_fma(rel, lines, &mut out);
+    l2_thread_spawn(rel, lines, &mut out);
+    l3_safety_comments(lines, &mut out);
+    l4_hashed_order(rel, lines, &mut out);
+    l5_no_unwrap(rel, lines, &mut out);
+    if let Some(cat) = catalog {
+        l6_metric_catalog(lines, cat, &mut out);
+    }
+    out
+}
+
+/// L1 — the no-FMA rule. Applies to test code too: a fused reference
+/// value in a test would "pass" on exactly the hardware the contract
+/// exists to make irrelevant.
+fn l1_no_fma(rel: &str, lines: &[Line], out: &mut Vec<RawDiag>) {
+    if !in_scope(rel, FMA_SCOPE) {
+        return;
+    }
+    for (i, line) in lines.iter().enumerate() {
+        for needle in FMA_NEEDLES {
+            if has_token(&line.code, needle) {
+                out.push(RawDiag {
+                    rule: "L1",
+                    line: i + 1,
+                    message: format!(
+                        "`{needle}` fuses the multiply-add rounding step; KERNELS.md requires \
+                         separate mul/add so results are bit-identical across ISAs"
+                    ),
+                });
+                break;
+            }
+        }
+    }
+}
+
+/// L2 — thread creation discipline. Two needles with different
+/// scopes: bare `thread::spawn` is flagged *everywhere* (threads must
+/// be named via `thread::Builder` so panics and profiles are
+/// attributable), and `.spawn(` — the Builder form — is flagged
+/// outside the substrate allow-list.
+fn l2_thread_spawn(rel: &str, lines: &[Line], out: &mut Vec<RawDiag>) {
+    let allowed = in_scope(rel, SPAWN_ALLOWLIST);
+    for (i, line) in lines.iter().enumerate() {
+        if line.code.contains("thread::spawn") {
+            out.push(RawDiag {
+                rule: "L2",
+                line: i + 1,
+                message: "bare `thread::spawn` creates an unnamed thread; use a named \
+                          `thread::Builder` (and document the join-or-detach decision)"
+                    .to_string(),
+            });
+        } else if line.code.contains(".spawn(") && !allowed {
+            out.push(RawDiag {
+                rule: "L2",
+                line: i + 1,
+                message: format!(
+                    "thread creation outside the substrate allow-list ({rel}); route work \
+                     through `backend::` instead of spawning here"
+                ),
+            });
+        }
+    }
+}
+
+/// L3 — SAFETY comments. A line whose *code* contains the `unsafe`
+/// keyword must carry the justification on the same line's comment or
+/// in the contiguous run of comment/attribute lines directly above it
+/// (doc comments with a `# Safety` section count — that is the
+/// rustdoc-facing spelling of the same contract).
+fn l3_safety_comments(lines: &[Line], out: &mut Vec<RawDiag>) {
+    for (i, line) in lines.iter().enumerate() {
+        if !has_token(&line.code, "unsafe") {
+            continue;
+        }
+        if comment_has_safety(&line.comment) {
+            continue;
+        }
+        // Walk up through comment-only and attribute-only lines.
+        let mut ok = false;
+        let mut j = i;
+        while j > 0 {
+            j -= 1;
+            let above = &lines[j];
+            let code = above.code.trim();
+            let is_attr_or_blank = code.is_empty() || code.starts_with("#[");
+            if !is_attr_or_blank && above.comment.is_empty() {
+                break;
+            }
+            if !is_attr_or_blank {
+                // Trailing comment on a code line ends the run, but
+                // its comment still counts (e.g. `foo(); // SAFETY:`
+                // does not — only a comment above pure-comment run —
+                // so check then stop).
+                ok = comment_has_safety(&above.comment);
+                break;
+            }
+            if comment_has_safety(&above.comment) {
+                ok = true;
+                break;
+            }
+            if code.is_empty() && above.comment.is_empty() {
+                break; // blank line ends the run
+            }
+        }
+        if !ok {
+            out.push(RawDiag {
+                rule: "L3",
+                line: i + 1,
+                message: "`unsafe` without an immediately preceding `// SAFETY:` comment \
+                          stating why the contract holds"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// True when a comment run line states the safety contract.
+fn comment_has_safety(comment: &str) -> bool {
+    comment.contains("SAFETY") || comment.contains("# Safety")
+}
+
+/// L4 — hashed collections in ordering-sensitive modules. Syntactic
+/// and strict (see module docs): the *type name* is the needle.
+fn l4_hashed_order(rel: &str, lines: &[Line], out: &mut Vec<RawDiag>) {
+    if !in_scope(rel, ORDER_SCOPE) {
+        return;
+    }
+    for (i, line) in lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for needle in ["HashMap", "HashSet"] {
+            if has_token(&line.code, needle) {
+                out.push(RawDiag {
+                    rule: "L4",
+                    line: i + 1,
+                    message: format!(
+                        "`{needle}` iteration order is nondeterministic and this module feeds \
+                         digests/serialized state; use BTreeMap/BTreeSet or sort before iterating"
+                    ),
+                });
+                break;
+            }
+        }
+    }
+}
+
+/// L5 — no panicking extractors in request-handling paths. The
+/// needles include their opening delimiter so `unwrap_or(…)` /
+/// `unwrap_or_else(…)` / `unwrap_or_default()` never match.
+fn l5_no_unwrap(rel: &str, lines: &[Line], out: &mut Vec<RawDiag>) {
+    if !in_scope(rel, REQUEST_PATHS) {
+        return;
+    }
+    for (i, line) in lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for needle in [".unwrap()", ".expect("] {
+            if line.code.contains(needle) {
+                out.push(RawDiag {
+                    rule: "L5",
+                    line: i + 1,
+                    message: format!(
+                        "`{needle}` in a request-handling path: a panic here kills the \
+                         connection thread (and can poison a registry lock) with no wire-level \
+                         error; return an Err response instead"
+                    ),
+                });
+                break;
+            }
+        }
+    }
+}
+
+/// L6 — metric-name drift. Every literal passed to
+/// `Counter::new(` / `Gauge::new(` / `Histogram::new(` outside test
+/// code must appear in the documented catalog.
+fn l6_metric_catalog(lines: &[Line], catalog: &MetricCatalog, out: &mut Vec<RawDiag>) {
+    for (i, line) in lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        // Find the ctor in `code` (literal contents blanked, so a
+        // string that merely mentions `Counter::new(` cannot match),
+        // then read the name from `text` at the same offset — the two
+        // views are position-aligned by construction.
+        for ctor in ["Counter::new(", "Gauge::new(", "Histogram::new("] {
+            if let Some(pos) = line.code.find(ctor) {
+                if let Some(name) = first_string_literal(&line.text[pos + ctor.len()..]) {
+                    if !catalog.contains(&name) {
+                        out.push(RawDiag {
+                            rule: "L6",
+                            line: i + 1,
+                            message: format!(
+                                "metric `{name}` is not in the docs/ARCHITECTURE.md catalog; \
+                                 document it (or fix the name drift)"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The content of the first `"…"` literal in `s`, if any. Metric
+/// names are plain dotted identifiers, so no escape handling needed.
+fn first_string_literal(s: &str) -> Option<String> {
+    let open = s.find('"')?;
+    let rest = &s[open + 1..];
+    let close = rest.find('"')?;
+    Some(rest[..close].to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_boundaries_respected() {
+        assert!(has_token("x.mul_add(y, z)", "mul_add"));
+        assert!(!has_token("mul_add_estimate(y)", "mul_add"));
+        assert!(!has_token("let unsafe_cell = 1;", "unsafe"));
+        assert!(has_token("unsafe { }", "unsafe"));
+    }
+
+    #[test]
+    fn scope_matching_handles_prefix_and_exact() {
+        assert!(in_scope("simd/vec.rs", FMA_SCOPE));
+        assert!(!in_scope("serve/protocol.rs", FMA_SCOPE));
+        assert!(in_scope("serve/checkpoint.rs", ORDER_SCOPE));
+        assert!(!in_scope("serve/service.rs", ORDER_SCOPE));
+    }
+}

@@ -1,5 +1,11 @@
 //! `eva` — launcher binary: training runs, experiments, validation.
 
+// The binary shares the library's curated clippy posture (see
+// rust/src/lib.rs — crate-level attributes don't cross the lib/bin
+// boundary, so the subset that can fire here is restated).
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::large_enum_variant)]
+
 use anyhow::{anyhow, Result};
 
 use eva::cli::{Cli, USAGE};
@@ -61,6 +67,7 @@ fn run(args: &[String]) -> Result<()> {
         "serve" => serve(&cli),
         "router" => router(&cli),
         "health" => health(&cli),
+        "lint" => lint(&cli),
         "experiment" => {
             let id = cli
                 .positional
@@ -411,6 +418,55 @@ fn health(cli: &Cli) -> Result<()> {
         eprintln!("health: {n_anomalies} anomaly flag(s) raised");
     }
     Ok(())
+}
+
+/// `eva lint` — the repo-invariant static-analysis pass (rules
+/// L1–L6, `docs/LINTS.md`). Lints the whole `rust/src` tree by
+/// default, or the given files/directories; exits nonzero when any
+/// violation survives suppression, so CI can run it blocking.
+fn lint(cli: &Cli) -> Result<()> {
+    use eva::lint::{lint_paths, lint_tree, render_fix_list, render_json, render_text, LintConfig};
+    use std::path::PathBuf;
+
+    // Locate the source root and the metric catalog relative to the
+    // working directory — works from the repo root and from rust/.
+    let src_root = ["rust/src", "src"]
+        .iter()
+        .map(PathBuf::from)
+        .find(|p| p.join("lint").is_dir())
+        .ok_or_else(|| {
+            anyhow!("cannot find the rust/src tree from {:?}", std::env::current_dir())
+        })?;
+    let doc_catalog = ["docs/ARCHITECTURE.md", "../docs/ARCHITECTURE.md"]
+        .iter()
+        .map(PathBuf::from)
+        .find(|p| p.is_file());
+    if doc_catalog.is_none() {
+        eprintln!("lint: docs/ARCHITECTURE.md not found — skipping the L6 metric-catalog rule");
+    }
+    let cfg = LintConfig { src_root, doc_catalog };
+    let diags = if cli.positional.is_empty() {
+        lint_tree(&cfg)?
+    } else {
+        let paths: Vec<PathBuf> = cli.positional.iter().map(PathBuf::from).collect();
+        lint_paths(&cfg, &paths)?
+    };
+    let format = cli.opt_or("format", "text");
+    match format.as_str() {
+        "json" => print!("{}", render_json(&diags)),
+        "text" => {
+            print!("{}", render_text(&diags));
+            if cli.has_flag("fix-list") && !diags.is_empty() {
+                print!("\n{}", render_fix_list(&diags));
+            }
+        }
+        other => return Err(anyhow!("--format: 'text' or 'json', not '{other}'")),
+    }
+    if diags.is_empty() {
+        Ok(())
+    } else {
+        Err(anyhow!("{} lint violation(s)", diags.len()))
+    }
 }
 
 fn list() -> Result<()> {

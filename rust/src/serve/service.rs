@@ -304,6 +304,7 @@ impl Service {
         let handle = std::thread::Builder::new()
             .name("eva-serve-sched".into())
             .spawn(move || scheduler::run(for_thread))
+            // eva-lint: allow(L5) -- boot-time spawn: the scheduler is mandatory and no connection exists yet
             .expect("spawn scheduler thread");
         *inner.sched_handle.lock().unwrap_or_else(|e| e.into_inner()) = Some(handle);
         let svc = Service { inner };

@@ -48,6 +48,8 @@ mod sys {
 
     pub(super) fn install() {
         let handler = on_term as extern "C" fn(i32) as usize;
+        // SAFETY: signal(2) with a valid extern "C" handler address;
+        // the handler is async-signal-safe (one relaxed atomic store).
         unsafe {
             signal(SIGTERM, handler);
             signal(SIGINT, handler);
@@ -55,6 +57,7 @@ mod sys {
     }
 
     pub(super) fn raise_term() {
+        // SAFETY: raise(3) with a constant, valid signal number.
         unsafe {
             raise(SIGTERM);
         }

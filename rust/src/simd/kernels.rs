@@ -24,6 +24,8 @@ use super::{active, Isa};
 /// [`F32x8::hsum`] bracketing; the `< 8` remainder accumulates
 /// left-to-right on the scalar tail. The tree is a pure function of
 /// the length — never of the ISA, backend, or thread count.
+// SAFETY: the caller instantiates `V` only for an ISA it has proved
+// active (SimdVec contract); loads stay inside both slices (blocks come from the min length).
 #[inline(always)]
 unsafe fn dot_body<V: SimdVec>(a: &[f32], b: &[f32]) -> f32 {
     let n = a.len().min(b.len());
@@ -49,6 +51,8 @@ unsafe fn dot_body<V: SimdVec>(a: &[f32], b: &[f32]) -> f32 {
 
 /// `y[i] += alpha * x[i]` — elementwise, so any blocking is
 /// arithmetic-neutral; vectorization never changes a bit.
+// SAFETY: the caller instantiates `V` only for an ISA it has proved
+// active (SimdVec contract); loads/stores stay inside both slices (blocks come from the min length).
 #[inline(always)]
 unsafe fn axpy_body<V: SimdVec>(alpha: f32, x: &[f32], y: &mut [f32]) {
     let n = y.len().min(x.len());
@@ -66,6 +70,8 @@ unsafe fn axpy_body<V: SimdVec>(alpha: f32, x: &[f32], y: &mut [f32]) {
 }
 
 /// `y[i] *= s` — elementwise.
+// SAFETY: the caller instantiates `V` only for an ISA it has proved
+// active (SimdVec contract); loads/stores stay inside `y` (blocks come from its length).
 #[inline(always)]
 unsafe fn scale_body<V: SimdVec>(y: &mut [f32], s: f32) {
     let n = y.len();
@@ -88,6 +94,8 @@ unsafe fn scale_body<V: SimdVec>(y: &mut [f32], s: f32) {
 /// skip their sweep on every path alike. Elementwise per `(k, j)` with
 /// k ascending per element — bit-identical to the repeated-axpy loop
 /// it fuses, on every path.
+// SAFETY: the caller instantiates `V` only for an ISA it has proved
+// active (SimdVec contract); row pointers stay inside `crow`/`b` (blocks and `kk` come from their lengths).
 #[inline(always)]
 unsafe fn row_mac_body<V: SimdVec>(crow: &mut [f32], a: &[f32], astride: usize, b: &[f32]) {
     let n = crow.len();
@@ -118,6 +126,8 @@ unsafe fn row_mac_body<V: SimdVec>(crow: &mut [f32], a: &[f32], astride: usize, 
 /// `bt_j = bt[j·k..(j+1)·k]`, `k = arow.len()` — every dot runs
 /// [`dot_body`]'s fixed tree, all `crow.len()` of them inside a single
 /// ISA dispatch.
+// SAFETY: the caller instantiates `V` only for an ISA it has proved
+// active (SimdVec contract); each dot runs over in-bounds subslices of `bt`.
 #[inline(always)]
 unsafe fn row_dots_body<V: SimdVec>(crow: &mut [f32], arow: &[f32], bt: &[f32]) {
     let k = arow.len();
@@ -128,6 +138,8 @@ unsafe fn row_dots_body<V: SimdVec>(crow: &mut [f32], arow: &[f32], bt: &[f32]) 
 
 /// `y[i] = beta*y[i] + alpha*x[i]` — elementwise, two independent
 /// rounded multiplies then one rounded add on every path.
+// SAFETY: the caller instantiates `V` only for an ISA it has proved
+// active (SimdVec contract); loads/stores stay inside both slices (blocks come from the min length).
 #[inline(always)]
 unsafe fn blend_body<V: SimdVec>(y: &mut [f32], beta: f32, alpha: f32, x: &[f32]) {
     let n = y.len().min(x.len());
@@ -152,6 +164,8 @@ unsafe fn blend_body<V: SimdVec>(y: &mut [f32], beta: f32, alpha: f32, x: &[f32]
 
 macro_rules! avx2_entry {
     ($name:ident, ($($arg:ident : $ty:ty),*) -> $ret:ty, $body:ident) => {
+        // SAFETY: callable only from the dispatch arms below, which
+        // take it only when active() returned Avx2 (runtime probe).
         #[cfg(target_arch = "x86_64")]
         #[target_feature(enable = "avx2")]
         unsafe fn $name($($arg: $ty),*) -> $ret {
@@ -172,26 +186,32 @@ avx2_entry!(
 avx2_entry!(row_dots_avx2, (crow: &mut [f32], arow: &[f32], bt: &[f32]) -> (), row_dots_body);
 
 // SSE2 is baseline on x86_64 — no target_feature gate needed.
+// SAFETY: SSE2 is unconditionally available on x86_64.
 #[cfg(target_arch = "x86_64")]
 unsafe fn dot_sse2(a: &[f32], b: &[f32]) -> f32 {
     dot_body::<Sse2Vec>(a, b)
 }
+// SAFETY: SSE2 is unconditionally available on x86_64.
 #[cfg(target_arch = "x86_64")]
 unsafe fn axpy_sse2(alpha: f32, x: &[f32], y: &mut [f32]) {
     axpy_body::<Sse2Vec>(alpha, x, y)
 }
+// SAFETY: SSE2 is unconditionally available on x86_64.
 #[cfg(target_arch = "x86_64")]
 unsafe fn scale_sse2(y: &mut [f32], s: f32) {
     scale_body::<Sse2Vec>(y, s)
 }
+// SAFETY: SSE2 is unconditionally available on x86_64.
 #[cfg(target_arch = "x86_64")]
 unsafe fn blend_sse2(y: &mut [f32], beta: f32, alpha: f32, x: &[f32]) {
     blend_body::<Sse2Vec>(y, beta, alpha, x)
 }
+// SAFETY: SSE2 is unconditionally available on x86_64.
 #[cfg(target_arch = "x86_64")]
 unsafe fn row_mac_sse2(crow: &mut [f32], a: &[f32], astride: usize, b: &[f32]) {
     row_mac_body::<Sse2Vec>(crow, a, astride, b)
 }
+// SAFETY: SSE2 is unconditionally available on x86_64.
 #[cfg(target_arch = "x86_64")]
 unsafe fn row_dots_sse2(crow: &mut [f32], arow: &[f32], bt: &[f32]) {
     row_dots_body::<Sse2Vec>(crow, arow, bt)

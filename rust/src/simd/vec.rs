@@ -109,33 +109,59 @@ impl F32x8 {
 /// `kernels.rs` uphold that via [`crate::simd::active`].
 pub(crate) trait SimdVec: Copy {
     /// All lanes zero.
+    ///
+    /// # Safety
+    /// The implementing ISA must be active (see the trait docs).
     unsafe fn zero() -> Self;
     /// All lanes set to `v`.
+    ///
+    /// # Safety
+    /// The implementing ISA must be active (see the trait docs).
     unsafe fn splat(v: f32) -> Self;
     /// Unaligned load of 8 consecutive `f32`s starting at `p`.
+    ///
+    /// # Safety
+    /// ISA active, and `p` must be valid for reading 8 `f32`s.
     unsafe fn load(p: *const f32) -> Self;
     /// Unaligned store of the 8 lanes starting at `p`.
+    ///
+    /// # Safety
+    /// ISA active, and `p` must be valid for writing 8 `f32`s.
     unsafe fn store(self, p: *mut f32);
     /// Lane-wise addition.
+    ///
+    /// # Safety
+    /// The implementing ISA must be active (see the trait docs).
     unsafe fn add(self, o: Self) -> Self;
     /// Lane-wise multiplication.
+    ///
+    /// # Safety
+    /// The implementing ISA must be active (see the trait docs).
     unsafe fn mul(self, o: Self) -> Self;
     /// The canonical horizontal sum (same bracketing as [`F32x8::hsum`]).
+    ///
+    /// # Safety
+    /// The implementing ISA must be active (see the trait docs).
     unsafe fn hsum(self) -> f32;
 }
 
 /// The scalar fallback *is* the reference value.
 impl SimdVec for F32x8 {
+    // SAFETY: plain scalar code with no ISA requirement; `unsafe` only
+    // to match the trait signature.
     #[inline(always)]
     unsafe fn zero() -> Self {
         F32x8::zero()
     }
 
+    // SAFETY: plain scalar code with no ISA requirement.
     #[inline(always)]
     unsafe fn splat(v: f32) -> Self {
         F32x8::splat(v)
     }
 
+    // SAFETY: the trait contract makes the caller pass a pointer valid
+    // for reading 8 f32s; no ISA requirement.
     #[inline(always)]
     unsafe fn load(p: *const f32) -> Self {
         let mut a = [0.0f32; 8];
@@ -143,21 +169,26 @@ impl SimdVec for F32x8 {
         F32x8(a)
     }
 
+    // SAFETY: the trait contract makes the caller pass a pointer valid
+    // for writing 8 f32s; no ISA requirement.
     #[inline(always)]
     unsafe fn store(self, p: *mut f32) {
         std::ptr::copy_nonoverlapping(self.0.as_ptr(), p, 8);
     }
 
+    // SAFETY: plain scalar code with no ISA requirement.
     #[inline(always)]
     unsafe fn add(self, o: Self) -> Self {
         F32x8::add(self, o)
     }
 
+    // SAFETY: plain scalar code with no ISA requirement.
     #[inline(always)]
     unsafe fn mul(self, o: Self) -> Self {
         F32x8::mul(self, o)
     }
 
+    // SAFETY: plain scalar code with no ISA requirement.
     #[inline(always)]
     unsafe fn hsum(self) -> f32 {
         F32x8::hsum(self)
@@ -193,38 +224,47 @@ pub(crate) mod x86 {
     pub(crate) struct Sse2Vec(__m128, __m128);
 
     impl SimdVec for Sse2Vec {
+        // SAFETY: SSE2 is unconditionally available on x86_64.
         #[inline(always)]
         unsafe fn zero() -> Self {
             Sse2Vec(_mm_setzero_ps(), _mm_setzero_ps())
         }
 
+        // SAFETY: SSE2 is unconditionally available on x86_64.
         #[inline(always)]
         unsafe fn splat(v: f32) -> Self {
             let s = _mm_set1_ps(v);
             Sse2Vec(s, s)
         }
 
+        // SAFETY: SSE2 is baseline; the trait contract makes the
+        // caller pass a pointer valid for reading 8 f32s.
         #[inline(always)]
         unsafe fn load(p: *const f32) -> Self {
             Sse2Vec(_mm_loadu_ps(p), _mm_loadu_ps(p.add(4)))
         }
 
+        // SAFETY: SSE2 is baseline; the trait contract makes the
+        // caller pass a pointer valid for writing 8 f32s.
         #[inline(always)]
         unsafe fn store(self, p: *mut f32) {
             _mm_storeu_ps(p, self.0);
             _mm_storeu_ps(p.add(4), self.1);
         }
 
+        // SAFETY: SSE2 is unconditionally available on x86_64.
         #[inline(always)]
         unsafe fn add(self, o: Self) -> Self {
             Sse2Vec(_mm_add_ps(self.0, o.0), _mm_add_ps(self.1, o.1))
         }
 
+        // SAFETY: SSE2 is unconditionally available on x86_64.
         #[inline(always)]
         unsafe fn mul(self, o: Self) -> Self {
             Sse2Vec(_mm_mul_ps(self.0, o.0), _mm_mul_ps(self.1, o.1))
         }
 
+        // SAFETY: SSE2 is unconditionally available on x86_64.
         #[inline(always)]
         unsafe fn hsum(self) -> f32 {
             // l_j + l_{j+4}, then the shared 4-lane fold.
@@ -238,31 +278,40 @@ pub(crate) mod x86 {
     pub(crate) struct Avx2Vec(__m256);
 
     impl SimdVec for Avx2Vec {
+        // SAFETY: per the trait contract the caller (the kernels.rs
+        // dispatcher) proved AVX2 via the runtime probe.
         #[inline(always)]
         unsafe fn zero() -> Self {
             Avx2Vec(_mm256_setzero_ps())
         }
 
+        // SAFETY: AVX2 proved by the caller (trait contract).
         #[inline(always)]
         unsafe fn splat(v: f32) -> Self {
             Avx2Vec(_mm256_set1_ps(v))
         }
 
+        // SAFETY: AVX2 proved by the caller; the trait contract makes
+        // it pass a pointer valid for reading 8 f32s.
         #[inline(always)]
         unsafe fn load(p: *const f32) -> Self {
             Avx2Vec(_mm256_loadu_ps(p))
         }
 
+        // SAFETY: AVX2 proved by the caller; the trait contract makes
+        // it pass a pointer valid for writing 8 f32s.
         #[inline(always)]
         unsafe fn store(self, p: *mut f32) {
             _mm256_storeu_ps(p, self.0);
         }
 
+        // SAFETY: AVX2 proved by the caller (trait contract).
         #[inline(always)]
         unsafe fn add(self, o: Self) -> Self {
             Avx2Vec(_mm256_add_ps(self.0, o.0))
         }
 
+        // SAFETY: AVX2 proved by the caller (trait contract).
         #[inline(always)]
         unsafe fn mul(self, o: Self) -> Self {
             // Deliberately not _mm256_fmadd_ps anywhere: fusing would
@@ -270,6 +319,7 @@ pub(crate) mod x86 {
             Avx2Vec(_mm256_mul_ps(self.0, o.0))
         }
 
+        // SAFETY: AVX2 proved by the caller (trait contract).
         #[inline(always)]
         unsafe fn hsum(self) -> f32 {
             let lo = _mm256_castps256_ps128(self.0);
@@ -315,7 +365,7 @@ mod tests {
         let reference = ra.mul(rb).add(F32x8::splat(0.5));
         let ref_sum = reference.hsum();
 
-        // SSE2 is baseline on x86_64 — always safe to run.
+        // SAFETY: SSE2 is baseline on x86_64 — always safe to run.
         unsafe {
             let va = x86::Sse2Vec::load(a.as_ptr());
             let vb = x86::Sse2Vec::load(b.as_ptr());
@@ -326,6 +376,7 @@ mod tests {
             assert_eq!(v.hsum().to_bits(), ref_sum.to_bits());
         }
         if crate::simd::is_available(crate::simd::Isa::Avx2) {
+            // SAFETY: the probe on the line above proved AVX2.
             unsafe {
                 let va = x86::Avx2Vec::load(a.as_ptr());
                 let vb = x86::Avx2Vec::load(b.as_ptr());

@@ -1,0 +1,143 @@
+//! `eva lint` fixture + self-check suite.
+//!
+//! Each rule has a fixture file under `tests/lint_fixtures/src/` laid
+//! out like the real source tree (rule scopes key off the relative
+//! path) and a golden expectation under `expected/` holding the
+//! `{file, line, rule}` projection of every diagnostic. Messages are
+//! asserted non-empty but not pinned — they are prose, and pinning
+//! them would turn every wording tweak into a golden churn.
+//!
+//! The last test lints the real `rust/src` tree against
+//! `docs/ARCHITECTURE.md` and requires zero findings: the linter's
+//! own repo must be clean (CI runs the same check as a blocking job).
+
+use std::path::{Path, PathBuf};
+
+use eva::jsonx::Json;
+use eva::lint::{self, Diagnostic, LintConfig, MetricCatalog};
+
+fn fixture_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests").join("lint_fixtures")
+}
+
+fn lint_fixture(rel: &str, catalog: Option<&MetricCatalog>) -> Vec<Diagnostic> {
+    let path = fixture_root().join("src").join(rel);
+    let src = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read fixture {}: {e}", path.display()));
+    lint::lint_source(rel, &src, catalog)
+}
+
+fn golden(name: &str) -> Json {
+    let path = fixture_root().join("expected").join(name);
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read golden {}: {e}", path.display()));
+    Json::parse(&text).unwrap_or_else(|e| panic!("parse golden {name}: {e}"))
+}
+
+fn fixture_catalog() -> MetricCatalog {
+    let text = std::fs::read_to_string(fixture_root().join("catalog.md")).expect("catalog.md");
+    MetricCatalog::parse(&text)
+}
+
+/// The `{file, line, rule}` projection compared against goldens.
+fn project(diags: &[Diagnostic]) -> Json {
+    Json::Arr(
+        diags
+            .iter()
+            .map(|d| {
+                Json::obj(vec![
+                    ("file", Json::Str(d.file.clone())),
+                    ("line", Json::Num(d.line as f64)),
+                    ("rule", Json::Str(d.rule.to_string())),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn check_fixture(rel: &str, golden_name: &str, catalog: Option<&MetricCatalog>) {
+    let diags = lint_fixture(rel, catalog);
+    for d in &diags {
+        assert!(!d.message.is_empty(), "{d:?} carries no message");
+        assert_eq!(d.file, rel, "diagnostics carry the source-root-relative path");
+    }
+    assert_eq!(project(&diags), golden(golden_name), "got:\n{}", lint::render_text(&diags));
+}
+
+#[test]
+fn l1_fma_fires_and_respects_reasoned_suppression() {
+    check_fixture("simd/fma.rs", "simd__fma.json", None);
+}
+
+#[test]
+fn l2_thread_spawn_fires_outside_the_allowlist() {
+    check_fixture("data/loader.rs", "data__loader.json", None);
+}
+
+#[test]
+fn l3_safety_comment_walkup_accepts_every_documented_form() {
+    check_fixture("backend/raw.rs", "backend__raw.json", None);
+}
+
+#[test]
+fn l4_hashed_collections_fire_outside_test_code() {
+    check_fixture("optim/table.rs", "optim__table.json", None);
+}
+
+#[test]
+fn l5_unwrap_fires_but_unwrap_or_and_tests_do_not() {
+    check_fixture("serve/service.rs", "serve__service.json", None);
+}
+
+#[test]
+fn l6_metric_names_check_against_the_catalog() {
+    check_fixture("telemetry/counters.rs", "telemetry__counters.json", Some(&fixture_catalog()));
+}
+
+#[test]
+fn l0_malformed_suppressions_fire_and_do_not_suppress() {
+    check_fixture("serve/protocol.rs", "serve__protocol.json", None);
+}
+
+#[test]
+fn tree_walk_aggregates_every_fixture_in_stable_order() {
+    let cfg = LintConfig {
+        src_root: fixture_root().join("src"),
+        doc_catalog: Some(fixture_root().join("catalog.md")),
+    };
+    let diags = lint::lint_tree(&cfg).expect("walk the fixture tree");
+    assert_eq!(diags.len(), 16, "got:\n{}", lint::render_text(&diags));
+    let mut sorted = diags.clone();
+    sorted.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    assert_eq!(diags, sorted, "diagnostics arrive sorted by (file, line, rule)");
+}
+
+#[test]
+fn json_render_parses_and_carries_the_rule_catalog() {
+    let diags = lint_fixture("serve/protocol.rs", None);
+    let parsed = Json::parse(&lint::render_json(&diags)).expect("render_json emits valid JSON");
+    assert_eq!(parsed.get_f64("violations"), Some(diags.len() as f64));
+    let rules = parsed.get("rules").and_then(|r| r.as_arr()).expect("rules array");
+    assert_eq!(rules.len(), lint::RULES.len());
+    let items = parsed.get("diagnostics").and_then(|d| d.as_arr()).expect("diagnostics array");
+    assert_eq!(items.len(), diags.len());
+}
+
+#[test]
+fn fix_list_prints_the_suppression_recipe() {
+    let diags = lint_fixture("simd/fma.rs", None);
+    let s = lint::render_fix_list(&diags);
+    assert!(s.contains("eva-lint: allow(L1) -- <reason>"), "{s}");
+    assert_eq!(lint::render_fix_list(&[]).trim(), "nothing to fix");
+}
+
+#[test]
+fn the_real_tree_is_clean() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let cfg = LintConfig {
+        src_root: manifest.join("src"),
+        doc_catalog: Some(manifest.join("..").join("docs").join("ARCHITECTURE.md")),
+    };
+    let diags = lint::lint_tree(&cfg).expect("lint the real tree");
+    assert!(diags.is_empty(), "the repo must lint clean:\n{}", lint::render_text(&diags));
+}

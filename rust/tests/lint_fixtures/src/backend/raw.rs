@@ -1,0 +1,40 @@
+//! L3 fixture: SAFETY discipline around `unsafe`.
+
+pub fn missing(p: *const f32) -> f32 {
+    unsafe { *p }
+}
+
+/// Reads one float.
+///
+/// # Safety
+/// `p` must be valid for reads.
+pub unsafe fn doc_safety(p: *const f32) -> f32 {
+    *p
+}
+
+pub fn same_line(p: *const f32) -> f32 {
+    unsafe { *p } // SAFETY: fixture — the caller checked the pointer
+}
+
+pub fn above(p: *const f32) -> f32 {
+    // SAFETY: fixture — the caller checked alignment and provenance.
+    unsafe { *p }
+}
+
+pub fn above_with_attr(p: *const f32) -> f32 {
+    // SAFETY: fixture — the attribute between comment and keyword is skipped.
+    #[allow(unused_unsafe)]
+    unsafe {
+        *p
+    }
+}
+
+pub fn suppressed(p: *const f32) -> f32 {
+    // eva-lint: allow(L3) -- fixture: contract stated in the module docs
+    unsafe { *p }
+}
+
+pub fn only_mentioned() -> &'static str {
+    // The word unsafe in a comment or literal must not fire.
+    "unsafe"
+}

@@ -1,0 +1,18 @@
+//! L2 fixture: thread creation outside the substrate allow-list
+//! (`data/` is not on it).
+
+pub fn bare() {
+    std::thread::spawn(|| {}).join().ok();
+}
+
+pub fn builder_outside() {
+    std::thread::Builder::new()
+        .name("fixture".into())
+        .spawn(|| {})
+        .ok();
+}
+
+pub fn suppressed() {
+    // eva-lint: allow(L2) -- fixture: pretend this is a sanctioned one-off
+    std::thread::spawn(|| {}).join().ok();
+}

@@ -1,0 +1,20 @@
+//! L4 fixture: hashed collections in an ordering-sensitive module.
+
+use std::collections::HashMap;
+
+pub fn build() -> HashMap<String, f32> {
+    HashMap::new()
+}
+
+pub fn suppressed() {
+    // eva-lint: allow(L4) -- fixture: insertion-only map, never iterated
+    let _m: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_is_exempt() {
+        let _m = std::collections::HashMap::<u32, u32>::new();
+    }
+}

@@ -1,0 +1,14 @@
+//! L0 fixture: malformed suppression comments — each fires L0 *and*
+//! leaves the underlying violation unsuppressed.
+
+pub fn reasonless(v: Option<u32>) -> u32 {
+    v.unwrap() // eva-lint: allow(L5)
+}
+
+pub fn unknown_rule(v: Option<u32>) -> u32 {
+    v.unwrap() // eva-lint: allow(L99) -- no such rule
+}
+
+pub fn empty_reason(v: Option<u32>) -> u32 {
+    v.unwrap() // eva-lint: allow(L5) --
+}

@@ -1,0 +1,29 @@
+//! L5 fixture: panicking extractors in a request-handling path.
+
+pub fn handle(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+pub fn handle_expect(v: Option<u32>) -> u32 {
+    v.expect("fixture")
+}
+
+pub fn fine(v: Option<u32>) -> u32 {
+    v.unwrap_or(0)
+}
+
+pub fn also_fine(v: Option<u32>) -> u32 {
+    v.unwrap_or_else(|| 0)
+}
+
+pub fn suppressed(v: Option<u32>) -> u32 {
+    v.unwrap() // eva-lint: allow(L5) -- fixture: input proven Some by the caller
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_unwrap() {
+        assert_eq!(Some(3).unwrap(), 3);
+    }
+}

@@ -1,0 +1,27 @@
+//! L1 fixture: fused multiply-add inside a determinism-scoped module.
+
+pub fn fused(a: f32, b: f32, c: f32) -> f32 {
+    a.mul_add(b, c)
+}
+
+pub fn fused_allowed(a: f32, b: f32, c: f32) -> f32 {
+    // eva-lint: allow(L1) -- fixture: demonstrates the reasoned escape hatch
+    a.mul_add(b, c)
+}
+
+pub fn separate(a: f32, b: f32, c: f32) -> f32 {
+    a * b + c
+}
+
+pub fn not_fma(x: f32) -> f32 {
+    mul_add_estimate(x)
+}
+
+fn mul_add_estimate(x: f32) -> f32 {
+    x
+}
+
+pub fn only_mentioned() -> &'static str {
+    // A string or comment that mentions mul_add must not fire.
+    "mul_add"
+}

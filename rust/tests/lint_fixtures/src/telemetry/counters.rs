@@ -1,0 +1,21 @@
+//! L6 fixture: metric names against the documented catalog
+//! (`catalog.md` next to this fixture tree).
+
+use crate::telemetry::{Counter, Gauge};
+
+pub fn documented() -> Counter {
+    Counter::new("fixture.requests.count")
+}
+
+pub fn documented_via_braces() -> Counter {
+    Counter::new("fixture.errors.count")
+}
+
+pub fn undocumented() -> Counter {
+    Counter::new("fixture.surprise.count")
+}
+
+pub fn suppressed() -> Gauge {
+    // eva-lint: allow(L6) -- fixture: experimental gauge, intentionally undocumented
+    Gauge::new("fixture.experimental.depth")
+}
